@@ -1,0 +1,73 @@
+//! Porter's learning loop (Fig. 6): the first invocation of each
+//! function runs DRAM-first while profiled; the tuner turns the profile
+//! into a placement hint; subsequent invocations place by hint and keep
+//! latency near the all-DRAM level while using a fraction of the DRAM.
+//!
+//! Run with: `cargo run --release --example porter_learning`
+
+use std::sync::Arc;
+
+use porter::config::Config;
+use porter::porter::slo::SloTracker;
+use porter::porter::{FunctionSpec, Gateway};
+use porter::util::table::Table;
+use porter::workloads::graph::rmat;
+use porter::workloads::kvstore::KvStore;
+use porter::workloads::pagerank::PageRank;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.porter.servers = 1;
+    cfg.porter.workers_per_server = 2;
+    let mut gw = Gateway::new(&cfg);
+    gw.deploy(FunctionSpec::new(
+        "pagerank",
+        Arc::new(PageRank::new(rmat(15, 8, porter::workloads::registry::GRAPH_SEED), 2)),
+    ));
+    gw.deploy(FunctionSpec::new("kvstore", Arc::new(KvStore::new(400_000, 400_000))));
+
+    let mut slo = SloTracker::default();
+    let mut t = Table::new(&[
+        "invocation", "function", "policy", "virtual time", "DRAM peak", "SLO",
+    ])
+    .left_first();
+
+    for round in 0..4 {
+        for f in ["pagerank", "kvstore"] {
+            let out = gw.invoke(f).unwrap().wait();
+            slo.record(&out);
+            t.row(vec![
+                format!("#{}", round + 1),
+                f.into(),
+                if out.used_hint { "hint".into() } else { "profile (DRAM-first)".into() },
+                porter::bench::fmt_ns(out.report.wall_ns),
+                porter::util::bytes::fmt_bytes(out.report.peak_dram_bytes),
+                match out.slo_met() {
+                    Some(true) => "met".into(),
+                    Some(false) => "VIOLATED".into(),
+                    None => "-".into(),
+                },
+            ]);
+            if round == 0 {
+                gw.tuner.drain(); // let hints land before the next round
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!("overall SLO violation rate: {:.1}%", slo.overall_violation_rate() * 100.0);
+    println!(
+        "\nnote: pagerank's hot object (contrib) is page-separable, so the hint meets SLO\n\
+         with a fraction of the DRAM. kvstore hash-scatters its hot keys across the whole\n\
+         table, so object-granular hints under-provision it — exactly the paper's §4.2\n\
+         \"not all pages of an object are hot\" limitation, flagged as Porter future work\n\
+         (fine-grained awareness + runtime promotion would recover it)."
+    );
+    for (f, s) in slo.functions() {
+        println!(
+            "  {f}: {} invocations, mean virtual time {}",
+            s.invocations,
+            porter::bench::fmt_ns(s.mean_wall_ns())
+        );
+    }
+    gw.shutdown();
+}

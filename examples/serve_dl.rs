@@ -1,0 +1,145 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! * Layer 1/2 (build time): `make artifacts` lowered the Pallas-kernel
+//!   MLP to HLO text.
+//! * Runtime: rust loads the artifacts via PJRT, **trains** the MLP on a
+//!   synthetic classification task for a few hundred steps (logging the
+//!   loss curve), then **serves** batched inference requests through the
+//!   Porter gateway, reporting latency/throughput and SLO outcomes while
+//!   the simulation half decides tier placement for the function's
+//!   memory objects.
+//!
+//! Run with: `make artifacts && cargo run --release --example serve_dl`
+//! (set SERVE_DL_STEPS / SERVE_DL_REQUESTS to scale.)
+
+use std::sync::Arc;
+
+use porter::config::Config;
+use porter::metrics::Histogram;
+use porter::porter::{FunctionSpec, Gateway};
+use porter::runtime::{ArtifactManifest, MlpParams, ModelRuntime};
+use porter::util::prng::Rng;
+use porter::workloads::dl::DlServe;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Synthetic linearly-separable-ish task: class = argmax of 10 random
+/// projections of x. Learnable by the MLP, so the loss curve must fall.
+fn gen_batch(rng: &mut Rng, d_in: usize, batch: usize, proj: &[f32]) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0f32; batch * d_in];
+    let mut y = vec![0i32; batch];
+    for b in 0..batch {
+        for v in &mut x[b * d_in..(b + 1) * d_in] {
+            *v = rng.normal() as f32;
+        }
+        let xs = &x[b * d_in..(b + 1) * d_in];
+        let (mut best, mut best_v) = (0, f32::MIN);
+        for c in 0..10 {
+            let s: f32 = xs.iter().zip(&proj[c * d_in..(c + 1) * d_in]).map(|(a, b)| a * b).sum();
+            if s > best_v {
+                best_v = s;
+                best = c;
+            }
+        }
+        y[b] = best as i32;
+    }
+    (x, y)
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---------- load the AOT artifacts (request path: no Python) ----------
+    let rt = ModelRuntime::load(ArtifactManifest::default_dir())?;
+    println!("PJRT platform: {}  artifacts: {:?}", rt.platform(), {
+        let mut names: Vec<_> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        names.sort();
+        names
+    });
+    let layers = rt.manifest.model_layers.clone();
+    let d_in = layers[0];
+    let train_sig = rt.manifest.get("mlp_train").expect("mlp_train artifact");
+    let train_batch = train_sig.inputs[train_sig.inputs.len() - 2].shape[0];
+
+    // ---------- phase 1: train for a few hundred steps ----------
+    let steps = env_usize("SERVE_DL_STEPS", 300);
+    let mut rng = Rng::new(0xD1);
+    let proj: Vec<f32> = (0..10 * d_in).map(|_| rng.normal() as f32).collect();
+    let mut params = MlpParams::init(&layers, 7);
+    println!("\ntraining {}-param MLP for {steps} steps (batch {train_batch}) via PJRT:", params.param_count());
+    let t0 = std::time::Instant::now();
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for step in 0..steps {
+        let (x, y) = gen_batch(&mut rng, d_in, train_batch, &proj);
+        let loss = rt.mlp_train_step(&mut params, &x, &y)?;
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+        if step % (steps / 10).max(1) == 0 || step == steps - 1 {
+            println!("  step {step:4}  loss {loss:.4}");
+        }
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "trained in {train_secs:.1}s ({:.1} steps/s); loss {:.4} → {:.4}",
+        steps as f64 / train_secs,
+        first_loss.unwrap(),
+        last_loss
+    );
+    assert!(
+        last_loss < first_loss.unwrap() * 0.8,
+        "training must reduce loss: {first_loss:?} → {last_loss}"
+    );
+
+    // ---------- phase 2: serve through the Porter gateway ----------
+    // The gateway decides *memory placement* for the function (simulated
+    // tiers); the actual inference runs on the PJRT executable.
+    let requests = env_usize("SERVE_DL_REQUESTS", 64);
+    let mut cfg = Config::default();
+    cfg.porter.servers = 2;
+    cfg.porter.workers_per_server = 2;
+    let mut gw = Gateway::new(&cfg);
+    gw.deploy(FunctionSpec::new("dl_serve", Arc::new(DlServe::new(40))));
+
+    // Serving uses the XLA-fused artifact when present: on the CPU PJRT
+    // backend the interpret-mode Pallas kernel lowers to un-fused loop
+    // HLO (validation build); the fused build is the CPU-production one.
+    // See EXPERIMENTS.md §Perf (L2).
+    let infer_artifact = if rt.has("mlp_infer_fused") { "mlp_infer_fused" } else { "mlp_infer" };
+    let infer_sig = rt.manifest.get(infer_artifact).expect("infer artifact");
+    let xin = infer_sig.inputs.last().unwrap();
+    let lat = Histogram::default();
+    let t0 = std::time::Instant::now();
+    let mut hint_hits = 0;
+    for r in 0..requests {
+        let ticket = gw.invoke("dl_serve").expect("invoke");
+        // real model execution for this batch
+        let x: Vec<f32> = (0..xin.elements()).map(|i| (((i * 7 + r * 131) % 29) as f32 - 14.0) * 0.07).collect();
+        let q0 = std::time::Instant::now();
+        let logits = rt.mlp_infer_with(infer_artifact, &params, &x)?;
+        let outcome = ticket.wait();
+        lat.record(q0.elapsed().as_nanos() as u64);
+        if outcome.used_hint {
+            hint_hits += 1;
+        }
+        std::hint::black_box(logits);
+        if r == 0 {
+            gw.tuner.drain(); // let the profile→hint pipeline finish once
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("\nserved {requests} batched requests in {secs:.2}s:");
+    println!(
+        "  throughput {:.1} req/s | inference latency mean={} p50≤{} p99≤{}",
+        requests as f64 / secs,
+        porter::bench::fmt_ns(lat.mean()),
+        porter::bench::fmt_ns(lat.percentile(50.0) as f64),
+        porter::bench::fmt_ns(lat.percentile(99.0) as f64),
+    );
+    println!(
+        "  placement: {hint_hits}/{requests} invocations used the cached hint (first invocation profiles)"
+    );
+    gw.shutdown();
+    println!("\nend-to-end OK: L1 Pallas kernel → L2 JAX MLP → HLO → rust PJRT serving under Porter.");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX -> HLO text artifacts for the rust PJRT runtime.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+The manifest (artifacts/manifest.json) records each artifact's entry
+point, file, and flat input/output signature so the rust runtime can
+marshal literals without re-deriving pytree order.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True so
+    rust unwraps a single tuple regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_signature(tree):
+    """Flatten example inputs to the positional order rust must feed."""
+    flat, _ = jax.tree_util.tree_flatten(tree)
+    return [
+        {"shape": list(x.shape), "dtype": str(x.dtype)}
+        for x in flat
+    ]
+
+
+def lower_entry(kind):
+    fn = model.ENTRY_POINTS[kind]
+    example = model.example_inputs(kind)
+    lowered = jax.jit(fn).lower(*example)
+    out_avals = jax.eval_shape(fn, *example)
+    outputs = [
+        {"shape": list(x.shape), "dtype": str(x.dtype)}
+        for x in jax.tree_util.tree_leaves(out_avals)
+    ]
+    return to_hlo_text(lowered), flat_signature(example), outputs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entry points"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    kinds = list(model.ENTRY_POINTS)
+    if args.only:
+        kinds = [k for k in kinds if k in set(args.only.split(","))]
+
+    manifest = {"model_layers": model.LAYERS, "artifacts": {}}
+    for kind in kinds:
+        hlo, inputs, outputs = lower_entry(kind)
+        path = os.path.join(args.out, f"{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][kind] = {
+            "file": f"{kind}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"wrote {path} ({len(hlo)} chars, {len(inputs)} inputs)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Layer 1: Pallas tiled matmul kernel.
+
+The DL serverless functions' compute hot-spot. The paper's tiered-memory
+insight — keep the hot working set in the near tier — maps onto the
+kernel as VMEM tiling: each grid step holds one (bm, bk) x-tile, one
+(bk, bn) y-tile and the (bm, bn) output tile in VMEM (the near tier),
+streaming the K dimension through HBM (the far tier). BlockSpec encodes
+that HBM<->VMEM schedule; the MXU-native tile is 128x128.
+
+CPU execution is interpret=True only: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run. Numerics are validated
+against `ref.py` by pytest (hypothesis sweeps shapes/dtypes); TPU
+performance is *estimated* from the VMEM footprint + MXU utilization in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile. bm=8 also divides the serving batch.
+DEFAULT_BM = 8
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps_k):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    The output tile is revisited across the K steps (its index_map
+    ignores k), so it serves as the VMEM accumulator: zeroed at k==0,
+    accumulated into afterwards.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul_tiles(x, y, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Tiled x @ y via the Pallas kernel. Dims must divide the tiles."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"({m},{k},{n}) not divisible by tiles ({bm},{bk},{bn})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)
+
+
+def _matmul_any(x, y, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Kernel when tileable, jnp fallback otherwise (no vjp attached)."""
+    m, k = x.shape
+    _, n = y.shape
+    if m % bm == 0 and k % bk == 0 and n % bn == 0:
+        return matmul_tiles(x, y, bm=bm, bk=bk, bn=bn)
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Kernel matmul with a jnp fallback for tile-incompatible shapes.
+
+    The MLP's last layer (1024 -> 10 logits) is far below a tile; the
+    fallback keeps the model definition uniform while the big layers run
+    through the kernel.
+
+    A custom VJP makes the op differentiable (Pallas kernels have no
+    automatic transpose) *and* keeps the backward GEMMs on the kernel:
+    dx = g @ yᵀ and dy = xᵀ @ g route through the same tiled path when
+    their shapes allow.
+    """
+    return _matmul_any(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_any(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = _matmul_any(g, y.T)
+    dy = _matmul_any(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (DESIGN.md §Perf)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Fraction of 128x128 MXU lanes a (bm,bk)x(bk,bn) tile pair keeps
+    busy, the structural proxy we optimize under interpret=True."""
+    return min(bm / 128.0, 1.0) * min(bk / 128.0, 1.0) * min(bn / 128.0, 1.0)

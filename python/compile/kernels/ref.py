@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the Pallas kernels — the correctness ground truth
+pytest compares against (no pallas imports here by design)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Reference x @ y in f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def mlp_forward_ref(params, x):
+    """Reference MLP forward pass (must mirror model.mlp_forward)."""
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(jnp.dot(h, w, preferred_element_type=jnp.float32) + b, 0.0)
+    w, b = params[-1]
+    return jnp.dot(h, w, preferred_element_type=jnp.float32) + b

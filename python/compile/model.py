@@ -1,0 +1,120 @@
+"""Layer 2: the DL serverless functions as JAX compute graphs.
+
+An MLP classifier (geometry shared with rust's `workloads::dl`:
+768 -> 1024 -> 1024 -> 10) built over the Layer-1 Pallas matmul kernel.
+Three entry points get AOT-lowered by `aot.py`:
+
+* ``mlp_infer(params, x)``     — the DL-serving function body
+* ``mlp_train_step(params, x, y)`` — fwd + bwd + SGD, the DL-training body
+* ``matmul(x, y)``             — the raw kernel, benchable standalone
+
+Python in this package runs at build time only; the rust runtime executes
+the lowered HLO via PJRT on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+LAYERS = [768, 1024, 1024, 10]
+TRAIN_BATCH = 64
+INFER_BATCH = 8
+LEARNING_RATE = 0.05
+
+
+def init_params(seed=0, layers=None, scale=0.05):
+    """He-ish initialized (W, b) pairs as a flat pytree."""
+    layers = layers or LAYERS
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for din, dout in zip(layers[:-1], layers[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * scale * (2.0 / din) ** 0.5 * din**0.5
+        b = jnp.zeros((dout,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(params, x):
+    """Forward pass; the wide layers run through the Pallas kernel."""
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(matmul(h, w) + b, 0.0)
+    w, b = params[-1]
+    return matmul(h, w) + b
+
+
+def mlp_infer(params, x):
+    """Serving entry point: logits for a batch."""
+    return (mlp_forward(params, x),)
+
+
+def mlp_infer_fused(params, x):
+    """Serving entry point on the pure-XLA path (no Pallas custom
+    lowering): numerically equivalent, but XLA fuses the GEMM chain
+    natively. On CPU the interpret-mode kernel lowers to un-fused loop
+    HLO, so this variant is the production serving artifact there; on
+    TPU the kernel variant is the optimized one. The §Perf log compares
+    both (see EXPERIMENTS.md)."""
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(jnp.dot(h, w, preferred_element_type=jnp.float32) + b, 0.0)
+    w, b = params[-1]
+    return (jnp.dot(h, w, preferred_element_type=jnp.float32) + b,)
+
+
+def loss_fn(params, x, y):
+    """Softmax cross-entropy against integer labels."""
+    logits = mlp_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def mlp_train_step(params, x, y):
+    """One SGD step; returns (new_params..., loss) as a flat tuple so the
+    HLO artifact has a stable output layout for the rust runtime."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - LEARNING_RATE * g, params, grads)
+    flat, _ = jax.tree_util.tree_flatten(new_params)
+    return tuple(flat) + (loss,)
+
+
+def matmul_fn(x, y):
+    """Standalone kernel entry point (256x256 by default in aot.py)."""
+    return (matmul(x, y),)
+
+
+def example_inputs(kind):
+    """ShapeDtypeStructs for lowering each artifact."""
+    f32 = jnp.float32
+    params = [
+        jax.ShapeDtypeStruct(s, f32)
+        for din, dout in zip(LAYERS[:-1], LAYERS[1:])
+        for s in [(din, dout), (dout,)]
+    ]
+    # params are passed as a pytree of (W, b) pairs
+    params_tree = [(params[2 * i], params[2 * i + 1]) for i in range(len(LAYERS) - 1)]
+    if kind in ("mlp_infer", "mlp_infer_fused"):
+        return (params_tree, jax.ShapeDtypeStruct((INFER_BATCH, LAYERS[0]), f32))
+    if kind == "mlp_train":
+        return (
+            params_tree,
+            jax.ShapeDtypeStruct((TRAIN_BATCH, LAYERS[0]), f32),
+            jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32),
+        )
+    if kind == "matmul":
+        return (
+            jax.ShapeDtypeStruct((256, 256), f32),
+            jax.ShapeDtypeStruct((256, 256), f32),
+        )
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+ENTRY_POINTS = {
+    "mlp_infer": mlp_infer,
+    "mlp_infer_fused": mlp_infer_fused,
+    "mlp_train": mlp_train_step,
+    "matmul": matmul_fn,
+}

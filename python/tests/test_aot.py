@@ -1,0 +1,57 @@
+"""AOT pipeline: every entry point lowers to parseable HLO text with a
+manifest the rust runtime can marshal from."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    @pytest.mark.parametrize("kind", list(model.ENTRY_POINTS))
+    def test_lowers_to_hlo_text(self, kind):
+        hlo, inputs, outputs = aot.lower_entry(kind)
+        assert hlo.startswith("HloModule"), hlo[:80]
+        assert "ROOT" in hlo
+        assert len(inputs) >= 2
+        assert len(outputs) >= 1
+
+    def test_infer_signature(self):
+        _, inputs, outputs = aot.lower_entry("mlp_infer")
+        # 3 layers x (W, b) + x
+        assert len(inputs) == 7
+        assert inputs[0]["shape"] == [768, 1024]
+        assert inputs[-1]["shape"] == [model.INFER_BATCH, 768]
+        assert outputs[0]["shape"] == [model.INFER_BATCH, 10]
+
+    def test_train_signature(self):
+        _, inputs, outputs = aot.lower_entry("mlp_train")
+        assert len(inputs) == 8  # params + x + y
+        assert inputs[-1]["dtype"] == "int32"
+        assert len(outputs) == 7  # new params + loss
+        assert outputs[-1]["shape"] == []
+
+    def test_no_serialized_protos(self):
+        """Guard: the artifact must be text, not .serialize() output."""
+        hlo, _, _ = aot.lower_entry("matmul")
+        assert isinstance(hlo, str)
+        assert hlo.isprintable() or "\n" in hlo
+
+
+class TestCli:
+    def test_writes_artifacts_and_manifest(self, tmp_path):
+        out = tmp_path / "artifacts"
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out), "--only", "matmul"],
+            check=True,
+            cwd=str(aot.__file__.rsplit("/compile/", 1)[0]),
+        )
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert "matmul" in manifest["artifacts"]
+        entry = manifest["artifacts"]["matmul"]
+        assert (out / entry["file"]).exists()
+        assert entry["inputs"][0]["shape"] == [256, 256]
+        assert manifest["model_layers"] == model.LAYERS

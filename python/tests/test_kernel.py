@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas matmul kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps tile-compatible shapes and value distributions; the
+assert_allclose against ref.py is the core correctness signal for the
+kernel that every DL artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    DEFAULT_BK,
+    DEFAULT_BM,
+    DEFAULT_BN,
+    matmul,
+    matmul_tiles,
+    mxu_utilization,
+    vmem_bytes,
+)
+from compile.kernels.ref import matmul_ref
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+class TestKernelBasics:
+    def test_matches_ref_square(self):
+        x = rand(0, (128, 128))
+        y = rand(1, (128, 128))
+        np.testing.assert_allclose(
+            matmul_tiles(x, y, bm=128, bk=128, bn=128), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_matches_ref_rectangular(self):
+        x = rand(2, (8, 768))
+        y = rand(3, (768, 1024))
+        np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_multi_k_step_accumulation(self):
+        # K = 4 tiles: exercises the revisited-output accumulator path
+        x = rand(4, (8, 512))
+        y = rand(5, (512, 128))
+        got = matmul_tiles(x, y, bm=8, bk=128, bn=128)
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_fallback_for_incompatible_shapes(self):
+        # 1024 -> 10 logits layer: not tileable, must still be exact
+        x = rand(6, (8, 1024))
+        y = rand(7, (1024, 10))
+        np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_contraction_mismatch(self):
+        with pytest.raises(AssertionError):
+            matmul_tiles(jnp.zeros((8, 128)), jnp.zeros((256, 128)))
+
+    def test_identity(self):
+        x = rand(8, (128, 128))
+        eye = jnp.eye(128, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            matmul_tiles(x, eye, bm=128, bk=128, bn=128), x, rtol=1e-5, atol=1e-6
+        )
+
+    def test_zeros(self):
+        x = jnp.zeros((8, 128), jnp.float32)
+        y = jnp.zeros((128, 128), jnp.float32)
+        assert jnp.all(matmul_tiles(x, y) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_kernel_matches_ref_swept(mi, ki, ni, seed, scale):
+    """Property: for every tile-multiple shape and value scale, the kernel
+    equals the oracle within f32 tolerance."""
+    m, k, n = 8 * mi, 128 * ki, 128 * ni
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32) * scale
+    y = jax.random.normal(ky, (k, n), jnp.float32) * scale
+    got = matmul_tiles(x, y)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale * k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 64, 128]),
+    bk=st.sampled_from([128, 256]),
+    bn=st.sampled_from([128, 256]),
+)
+def test_tile_shape_invariance(bm, bk, bn):
+    """Property: the result must not depend on the tiling."""
+    x = rand(42, (128, 256))
+    y = rand(43, (256, 256))
+    if 128 % bm or 256 % bk or 256 % bn:
+        return
+    got = matmul_tiles(x, y, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_dtype_bf16_inputs():
+    """bf16 inputs with f32 accumulation (the MXU-native mode)."""
+    x = rand(9, (8, 128)).astype(jnp.bfloat16)
+    y = rand(10, (128, 128)).astype(jnp.bfloat16)
+    got = matmul_tiles(x.astype(jnp.float32), y.astype(jnp.float32))
+    want = matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestPerfModel:
+    def test_vmem_footprint_fits(self):
+        # default tiles must fit comfortably in a 16MiB VMEM
+        assert vmem_bytes() < 16 * 1024 * 1024
+        # 128^3 f32 tiles: 3 * 64KiB
+        assert vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+
+    def test_mxu_utilization_monotone(self):
+        assert mxu_utilization(128, 128, 128) == 1.0
+        assert mxu_utilization(8, 128, 128) < mxu_utilization(64, 128, 128)
+        assert mxu_utilization(DEFAULT_BM, DEFAULT_BK, DEFAULT_BN) > 0.0

@@ -1,0 +1,95 @@
+"""L2 correctness: MLP forward/training over the Pallas kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import mlp_forward_ref
+
+
+def data(batch, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (batch, model.LAYERS[0]), jnp.float32)
+    y = jax.random.randint(ky, (batch,), 0, model.LAYERS[-1])
+    return x, y
+
+
+class TestForward:
+    def test_shapes(self):
+        params = model.init_params()
+        x, _ = data(model.INFER_BATCH)
+        (logits,) = model.mlp_infer(params, x)
+        assert logits.shape == (model.INFER_BATCH, model.LAYERS[-1])
+
+    def test_matches_pure_jnp_reference(self):
+        params = model.init_params(seed=3)
+        x, _ = data(8, seed=4)
+        got = model.mlp_forward(params, x)
+        want = mlp_forward_ref(params, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_deterministic(self):
+        params = model.init_params(seed=1)
+        x, _ = data(8, seed=2)
+        a = model.mlp_forward(params, x)
+        b = model.mlp_forward(params, x)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestTraining:
+    def test_loss_decreases_over_steps(self):
+        params = model.init_params(seed=5)
+        x, y = data(model.TRAIN_BATCH, seed=6)
+        step = jax.jit(model.mlp_train_step)
+        losses = []
+        for _ in range(12):
+            out = step(params, x, y)
+            flat, loss = out[:-1], out[-1]
+            losses.append(float(loss))
+            params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(model.LAYERS) - 1)]
+        assert losses[-1] < losses[0] * 0.7, f"loss did not fall: {losses}"
+
+    def test_grad_matches_reference_model(self):
+        """Gradients through the kernel == gradients through pure jnp."""
+        params = model.init_params(seed=7)
+        x, y = data(16, seed=8)
+
+        def ref_loss(params, x, y):
+            logits = mlp_forward_ref(params, x)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+        g_kernel = jax.grad(model.loss_fn)(params, x, y)
+        g_ref = jax.grad(ref_loss)(params, x, y)
+        for (gw, gb), (rw, rb) in zip(g_kernel, g_ref):
+            np.testing.assert_allclose(gw, rw, rtol=5e-3, atol=1e-5)
+            np.testing.assert_allclose(gb, rb, rtol=5e-3, atol=1e-5)
+
+    def test_train_step_output_layout(self):
+        """The flat (params..., loss) layout the rust runtime relies on."""
+        params = model.init_params()
+        x, y = data(model.TRAIN_BATCH)
+        out = model.mlp_train_step(params, x, y)
+        assert len(out) == 2 * (len(model.LAYERS) - 1) + 1
+        for i, (din, dout) in enumerate(zip(model.LAYERS[:-1], model.LAYERS[1:])):
+            assert out[2 * i].shape == (din, dout)
+            assert out[2 * i + 1].shape == (dout,)
+        assert out[-1].shape == ()
+
+
+class TestFusedVariant:
+    def test_fused_matches_kernel_path(self):
+        params = model.init_params(seed=9)
+        x, _ = data(model.INFER_BATCH, seed=10)
+        (a,) = model.mlp_infer(params, x)
+        (b,) = model.mlp_infer_fused(params, x)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+class TestExampleInputs:
+    def test_signatures_consistent_with_entry_points(self):
+        for kind, fn in model.ENTRY_POINTS.items():
+            example = model.example_inputs(kind)
+            out = jax.eval_shape(fn, *example)
+            assert len(jax.tree_util.tree_leaves(out)) >= 1, kind

@@ -1,0 +1,152 @@
+//! Ablations over the design choices DESIGN.md §6 calls out:
+//!
+//! 1. DRAM-budget sweep — how much near-tier memory does hinted
+//!    placement need before the CXL penalty is gone?
+//! 2. Hot-threshold sweep — hint classifier sensitivity.
+//! 3. DAMON sampling-interval sweep — profile fidelity vs overhead
+//!    (samples taken), and the resulting hint quality.
+//! 4. Policy shoot-out — all-DRAM / all-CXL / first-touch / static-hint
+//!    / TPP-like reactive migration on the same workload.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench ablations
+
+use porter::bench::{BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::placement::policies::{FirstTouchDram, TppMigrator};
+use porter::placement::static_place::profile_and_place;
+use porter::sim::Machine;
+use porter::workloads::graph::rmat;
+use porter::workloads::pagerank::PageRank;
+use porter::workloads::registry::GRAPH_SEED;
+use porter::workloads::Workload;
+
+/// Mid-sized pagerank: big enough that tiers matter (contrib > LLC),
+/// small enough to sweep many configurations.
+fn workload(quick: bool) -> PageRank {
+    let scale = if quick { 15 } else { 18 };
+    PageRank::new(rmat(scale, 6, GRAPH_SEED), 2)
+}
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let w = workload(quick);
+    let mut bench = BenchSuite::new("ablations: hint generation + placement policies");
+
+    // --- 1. DRAM budget sweep ---
+    let mut fig = FigureReport::new(
+        "Ablation 1",
+        "hinted slowdown vs all-DRAM (%), as the DRAM budget fraction grows",
+        &["hinted_slowdown_pct", "improvement_over_cxl_pct"],
+    );
+    for budget in [0.0, 0.1, 0.2, 0.35, 0.5, 0.75, 1.0] {
+        let mut cfg = Config::default();
+        cfg.porter.dram_budget_frac = budget;
+        let r = profile_and_place(&cfg, &w);
+        fig.row(
+            &format!("budget={budget}"),
+            vec![r.hinted_slowdown_pct(), r.improvement_over_cxl_pct()],
+        );
+    }
+    bench.section(fig.render());
+
+    // --- 2. hot-threshold sweep ---
+    let mut fig = FigureReport::new(
+        "Ablation 2",
+        "hint classifier threshold vs outcome",
+        &["hinted_slowdown_pct", "hot_bytes_mib"],
+    );
+    for thr in [0.005, 0.02, 0.1, 0.3, 0.8] {
+        let mut cfg = Config::default();
+        cfg.porter.hot_threshold = thr;
+        let r = profile_and_place(&cfg, &w);
+        fig.row(
+            &format!("thr={thr}"),
+            vec![r.hinted_slowdown_pct(), r.hint.hot_bytes() as f64 / (1 << 20) as f64],
+        );
+    }
+    bench.section(fig.render());
+
+    // --- 3. DAMON sampling interval: fidelity vs overhead ---
+    let mut fig = FigureReport::new(
+        "Ablation 3",
+        "DAMON sampling interval vs hint quality and profiling overhead",
+        &["hinted_slowdown_pct", "relative_overhead"],
+    );
+    let mut base_samples = None;
+    for interval in [1_000u64, 5_000, 25_000, 125_000] {
+        let mut cfg = Config::default();
+        cfg.monitor.sample_interval_ns = interval;
+        cfg.monitor.aggregation_interval_ns = interval * 20;
+        let r = profile_and_place(&cfg, &w);
+        // overhead proxy: DAMON samples scale inversely with interval;
+        // report relative to the finest setting
+        let samples = 1e9 / interval as f64;
+        let base = *base_samples.get_or_insert(samples);
+        fig.row(
+            &format!("{}µs", interval / 1000),
+            vec![r.hinted_slowdown_pct(), samples / base],
+        );
+    }
+    bench.section(fig.render());
+
+    // --- 4. policy shoot-out ---
+    let cfg = Config::default();
+    let mut fig = FigureReport::new(
+        "Ablation 4",
+        "slowdown vs all-DRAM (%) per placement policy",
+        &["slowdown_pct", "promotions", "demotions"],
+    );
+    let base = {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
+        w.run(&mut env);
+        drop(env);
+        m.report()
+    };
+    fig.row("all-dram", vec![0.0, 0.0, 0.0]);
+    // all-cxl
+    let r = {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Cxl);
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
+        w.run(&mut env);
+        drop(env);
+        m.report()
+    };
+    fig.row("all-cxl", vec![r.slowdown_pct_vs(&base), 0.0, 0.0]);
+    // first-touch with a DRAM cap (tight server: 25% of footprint)
+    let footprint = w.footprint_hint();
+    let mut tight = cfg.machine.clone();
+    tight.dram_bytes = footprint / 4;
+    let r = {
+        let mut m = Machine::new(&tight, Box::new(FirstTouchDram::default()));
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
+        w.run(&mut env);
+        drop(env);
+        m.report()
+    };
+    fig.row("first-touch (25% dram)", vec![r.slowdown_pct_vs(&base), 0.0, 0.0]);
+    // TPP-like reactive migration under the same cap
+    let r = {
+        let mut m = Machine::new(&tight, Box::new(FirstTouchDram::default()));
+        m.set_migrator(Box::new(TppMigrator::default()));
+        m.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
+        w.run(&mut env);
+        drop(env);
+        m.report()
+    };
+    fig.row(
+        "tpp-like (25% dram)",
+        vec![r.slowdown_pct_vs(&base), r.promotions as f64, r.demotions as f64],
+    );
+    // static hints under the same cap
+    let mut cfg_tight = cfg.clone();
+    cfg_tight.machine.dram_bytes = footprint / 4;
+    cfg_tight.porter.dram_budget_frac = 0.25;
+    let rr = profile_and_place(&cfg_tight, &w);
+    fig.row("static-hint (25% dram)", vec![rr.hinted.wall_ns / base.wall_ns * 100.0 - 100.0, 0.0, 0.0]);
+    bench.section(fig.render());
+
+    bench.run();
+}

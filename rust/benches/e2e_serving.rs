@@ -1,0 +1,108 @@
+//! End-to-end Porter serving bench (Fig. 6 control path + Table 1
+//! testbed): a mixed function population invoked through gateway →
+//! balancer → engine, measuring host-side orchestration throughput,
+//! hint-cache effectiveness, SLO outcomes, and — when `make artifacts`
+//! has run — real PJRT DL inference latency on the same path.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_serving
+
+use std::sync::Arc;
+
+use porter::bench::BenchSuite;
+use porter::config::Config;
+use porter::metrics::Histogram;
+use porter::porter::slo::SloTracker;
+use porter::porter::{FunctionSpec, Gateway};
+use porter::util::table::Table;
+use porter::workloads::registry::{build, Scale};
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let rounds = if quick { 3 } else { 12 };
+    let mut cfg = Config::default();
+    cfg.porter.servers = 2;
+    cfg.porter.workers_per_server = 4;
+    let mut bench = BenchSuite::new("e2e: Porter serving a mixed function population");
+
+    let functions = ["kvstore", "json", "chameleon", "compression", "image", "dl_serve"];
+    let mut gw = Gateway::new(&cfg);
+    for f in functions {
+        gw.deploy(FunctionSpec::new(f, Arc::from(build(f, Scale::Small).unwrap())));
+    }
+
+    let mut slo = SloTracker::default();
+    let lat = Histogram::default();
+    let mut hint_hits = 0u64;
+    let mut total = 0u64;
+    let t0 = std::time::Instant::now();
+    // first wave profiles every function; wait for hints once
+    for (i, f) in functions.iter().enumerate() {
+        let out = gw.invoke(f).unwrap().wait();
+        slo.record(&out);
+        total += 1;
+        std::hint::black_box(i);
+    }
+    gw.tuner.drain();
+    for _round in 0..rounds {
+        let tickets: Vec<_> = functions.iter().map(|f| gw.invoke(f).unwrap()).collect();
+        for t in tickets {
+            let out = t.wait();
+            lat.record(out.host_micros * 1000);
+            if out.used_hint {
+                hint_hits += 1;
+            }
+            slo.record(&out);
+            total += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(&["metric", "value"]).left_first();
+    t.row(vec!["invocations".into(), total.to_string()]);
+    t.row(vec!["host throughput".into(), format!("{:.1} inv/s", total as f64 / secs)]);
+    t.row(vec![
+        "engine latency (host)".into(),
+        format!(
+            "mean {} p99≤{}",
+            porter::bench::fmt_ns(lat.mean()),
+            porter::bench::fmt_ns(lat.percentile(99.0) as f64)
+        ),
+    ]);
+    t.row(vec![
+        "hint hit rate (post-warmup)".into(),
+        format!("{:.1}%", 100.0 * hint_hits as f64 / (total - functions.len() as u64) as f64),
+    ]);
+    t.row(vec![
+        "SLO violation rate".into(),
+        format!("{:.1}%", slo.overall_violation_rate() * 100.0),
+    ]);
+    bench.section(t.render());
+    gw.shutdown();
+
+    // PJRT inference on the same path, if artifacts exist.
+    if let Ok(rt) = porter::runtime::ModelRuntime::load(porter::runtime::ArtifactManifest::default_dir()) {
+        let params = porter::runtime::MlpParams::init(&rt.manifest.model_layers.clone(), 3);
+        let sig = rt.manifest.get("mlp_infer").unwrap();
+        let xin = sig.inputs.last().unwrap().clone();
+        let x: Vec<f32> = (0..xin.elements()).map(|i| (i % 17) as f32 * 0.05).collect();
+        bench.bench_with_throughput("pjrt_mlp_infer_batch8", 8.0, "req", || {
+            rt.mlp_infer(&params, &x).unwrap()
+        });
+        if rt.has("mlp_infer_fused") {
+            bench.bench_with_throughput("pjrt_mlp_infer_fused_batch8", 8.0, "req", || {
+                rt.mlp_infer_with("mlp_infer_fused", &params, &x).unwrap()
+            });
+        }
+        let msig = rt.manifest.get("matmul").unwrap();
+        let n = msig.inputs[0].shape[0];
+        let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32).collect();
+        bench.bench_with_throughput(
+            "pjrt_pallas_matmul_256",
+            2.0 * (n as f64).powi(3),
+            "flop",
+            || rt.matmul(&a, &a).unwrap(),
+        );
+    } else {
+        bench.section("artifacts/ missing — run `make artifacts` for the PJRT benches".into());
+    }
+    bench.run();
+}

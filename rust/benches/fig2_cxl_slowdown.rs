@@ -1,0 +1,94 @@
+//! Fig. 2 — "CXL has various latency impact to Serverless workloads."
+//!
+//! For every workload in the suite: run pure-CXL vs all-local-DRAM,
+//! report percent execution-time slowdown (sorted descending, like the
+//! paper's x-axis) alongside memory backend-boundness (the blue line).
+//!
+//! Paper shape to hold: slowdowns spread roughly 1–44%, ordered by
+//! boundness; graphs / linear-equation solving / DL training at the
+//! heavy end, chameleon/json/image at the light end.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench fig2_cxl_slowdown
+
+use porter::bench::{BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::monitor::TopDown;
+use porter::placement::static_place::run_plain;
+use porter::workloads::registry::{suite, Scale};
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let scale = if quick { Scale::Small } else { Scale::Default };
+    let cfg = Config::default();
+    let mut bench = BenchSuite::new("fig2: CXL slowdown across the serverless suite");
+
+    let mut rows: Vec<(String, f64, f64, u64)> = Vec::new();
+    for w in suite(scale) {
+        let t0 = std::time::Instant::now();
+        let (dram, sum_d) = run_plain(&cfg, w.as_ref(), TierKind::Dram);
+        let (cxl, sum_c) = run_plain(&cfg, w.as_ref(), TierKind::Cxl);
+        assert_eq!(sum_d, sum_c, "{}: tier must not change results", w.name());
+        let slowdown = cxl.slowdown_pct_vs(&dram);
+        let boundness = TopDown::from_report(&dram).offchip_bound_pct();
+        eprintln!(
+            "  {:12} slowdown {:6.1}%  boundness {:5.1}%  ({} accesses, host {:.1}s)",
+            w.name(),
+            slowdown,
+            boundness,
+            dram.accesses,
+            t0.elapsed().as_secs_f64()
+        );
+        rows.push((w.name().to_string(), slowdown, boundness, dram.accesses));
+    }
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    let mut fig = FigureReport::new(
+        "Figure 2",
+        "percent slowdown, pure CXL vs all-local-DRAM (sorted), with memory backend-boundness",
+        &["slowdown_pct", "boundness_pct"],
+    );
+    for (name, slowdown, boundness, _) in &rows {
+        fig.row(name, vec![*slowdown, *boundness]);
+    }
+    bench.section(fig.render());
+
+    // Shape checks (reported, not asserted, so partial regressions are
+    // still visible in output).
+    let spread_ok = rows.first().map(|r| r.1 > 20.0).unwrap_or(false)
+        && rows.last().map(|r| r.1 < 8.0).unwrap_or(false);
+    let rank_corr = spearman(
+        &rows.iter().map(|r| r.1).collect::<Vec<_>>(),
+        &rows.iter().map(|r| r.2).collect::<Vec<_>>(),
+    );
+    bench.section(format!(
+        "shape: slowdown spread {:.1}%..{:.1}% ({}), slowdown~boundness Spearman ρ={:.2} ({})\n\
+         paper: 1%..44%, slowdown roughly tracks boundness",
+        rows.last().map(|r| r.1).unwrap_or(0.0),
+        rows.first().map(|r| r.1).unwrap_or(0.0),
+        if spread_ok { "OK" } else { "NARROW" },
+        rank_corr,
+        if rank_corr > 0.5 { "OK" } else { "WEAK" },
+    ));
+    bench.run();
+}
+
+/// Spearman rank correlation.
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let rank = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let mut r = vec![0.0; xs.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    };
+    let (ra, rb) = (rank(a), rank(b));
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let d2: f64 = ra.iter().zip(&rb).map(|(x, y)| (x - y) * (x - y)).sum();
+    1.0 - 6.0 * d2 / (n * (n * n - 1.0))
+}

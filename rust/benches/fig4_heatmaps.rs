@@ -1,0 +1,83 @@
+//! Fig. 4 — "Heatmap of some workloads, where colored areas are denoted
+//! as hot regions."
+//!
+//! DAMON-profiles the six workloads the paper plots (DL training,
+//! Linpack, BFS, PageRank, Chameleon, image processing) and renders the
+//! DAMO-style address×time heatmaps. Paper shape to hold: strong banded
+//! locality for DL / Linpack / BFS / PageRank; sparse, unpredictable
+//! patterns for Chameleon and image processing — quantified here by the
+//! locality score (heat share of the hottest 10% of address bins).
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench fig4_heatmaps
+
+use porter::bench::{BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::monitor::{Damon, Heatmap};
+use porter::sim::Machine;
+use porter::workloads::registry::{build, Scale};
+
+const WORKLOADS: [&str; 6] = ["dl_train", "linpack", "bfs", "pagerank", "chameleon", "image"];
+
+fn profile(name: &str, scale: Scale, cfg: &Config) -> (Heatmap, u64) {
+    let w = build(name, scale).expect("workload");
+    let mut machine = Machine::all_in(&cfg.machine, TierKind::Cxl);
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    machine.attach_observer(Box::new(Damon::new(&cfg.monitor, cfg.machine.page_bytes, 0xF16)));
+    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+    w.run(&mut env);
+    let objects: Vec<_> = env.objects().to_vec();
+    drop(env);
+    let damon =
+        machine.take_observers().pop().unwrap().into_any().downcast::<Damon>().unwrap();
+    let lo = objects
+        .iter()
+        .filter(|o| o.via_mmap)
+        .map(|o| o.start)
+        .min()
+        .unwrap_or(porter::shim::intercept::MMAP_BASE);
+    let hi = objects.iter().filter(|o| o.via_mmap).map(|o| o.end()).max().unwrap_or(lo + 1);
+    let map = Heatmap::from_damon(&damon.snapshots, lo, hi, 72, 20);
+    (map, damon.samples_taken)
+}
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let scale = if quick { Scale::Small } else { Scale::Default };
+    let cfg = Config::default();
+    let mut bench = BenchSuite::new("fig4: DAMON access heatmaps");
+
+    let mut fig = FigureReport::new(
+        "Figure 4",
+        "locality score per workload (share of heat in hottest 10% of address bins)",
+        &["locality_score", "damon_samples"],
+    );
+    let mut scores = Vec::new();
+    for name in WORKLOADS {
+        let (map, samples) = profile(name, scale, &cfg);
+        let score = map.locality_score();
+        bench.section(format!("--- {name} ---\n{}locality score: {score:.2}\n", map.render_ascii()));
+        fig.row(name, vec![score, samples as f64]);
+        scores.push((name, score));
+    }
+    bench.section(fig.render());
+
+    let strong: f64 = scores
+        .iter()
+        .filter(|(n, _)| ["dl_train", "linpack", "bfs", "pagerank"].contains(n))
+        .map(|(_, s)| *s)
+        .sum::<f64>()
+        / 4.0;
+    let sparse: f64 = scores
+        .iter()
+        .filter(|(n, _)| ["chameleon", "image"].contains(n))
+        .map(|(_, s)| *s)
+        .sum::<f64>()
+        / 2.0;
+    bench.section(format!(
+        "shape: mean locality strong-class {strong:.2} vs sparse-class {sparse:.2} ({})\n\
+         paper: DL/Linpack/BFS/PageRank show strong locality; Chameleon/image are sparse",
+        if strong > sparse { "OK" } else { "INVERTED" }
+    ));
+    bench.run();
+}

@@ -1,0 +1,127 @@
+//! Hot-path microbenches — the §Perf optimization targets.
+//!
+//! The simulator's inner loop (workload emit → cache → page table → tier
+//! cost) bounds every experiment's wall time; DAMON sampling and trace
+//! record/replay are the secondary paths. Run before/after each perf
+//! change and record deltas in EXPERIMENTS.md §Perf.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench hotpath
+
+use porter::bench::{BenchConfig, BenchSuite};
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::monitor::Damon;
+use porter::sim::{Cache, Machine};
+use porter::trace::{NullSink, TraceRecorder};
+use porter::util::prng::Rng;
+
+fn main() {
+    let cfg = Config::default();
+    let mut bench = BenchSuite::new("hotpath: simulator inner loops").with_config(BenchConfig {
+        warmup_iters: 2,
+        sample_iters: 8,
+        max_time: std::time::Duration::from_secs(60),
+    });
+
+    const N_ACCESS: usize = 2_000_000;
+
+    // 1. pure emit overhead (Env + NullSink): the workload-side floor
+    bench.bench_with_throughput("env_emit_null_sink", N_ACCESS as f64, "access", || {
+        let mut sink = NullSink::default();
+        let mut env = porter::shim::Env::new(4096, &mut sink);
+        let v = env.tvec::<u64>(1 << 16, 0, "buf");
+        let mut i = 0usize;
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(i & 0xFFFF, &mut env));
+            i = i.wrapping_add(7919);
+        }
+        sink.accesses
+    });
+
+    // 2. machine, all-hit regime (small working set)
+    bench.bench_with_throughput("machine_l3_hits", N_ACCESS as f64, "access", || {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+        let mut env = porter::shim::Env::new(4096, &mut m);
+        let v = env.tvec::<u64>(1 << 14, 0, "buf");
+        let mut i = 0usize;
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(i & 0x3FFF, &mut env));
+            i = i.wrapping_add(7919);
+        }
+        drop(env);
+        m.report().accesses
+    });
+
+    // 3. machine, miss-heavy regime (random over 64MiB)
+    bench.bench_with_throughput("machine_l3_misses", N_ACCESS as f64, "access", || {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Cxl);
+        let mut env = porter::shim::Env::new(4096, &mut m);
+        let v = env.tvec::<u64>(8 << 20, 0, "buf");
+        let mut rng = Rng::new(42);
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(rng.usize_in(0, 8 << 20), &mut env));
+        }
+        drop(env);
+        m.report().accesses
+    });
+
+    // 4. machine with DAMON attached (profiling overhead)
+    bench.bench_with_throughput("machine_with_damon", N_ACCESS as f64, "access", || {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Cxl);
+        m.attach_observer(Box::new(Damon::new(&cfg.monitor, 4096, 7)));
+        let mut env = porter::shim::Env::new(4096, &mut m);
+        let v = env.tvec::<u64>(8 << 20, 0, "buf");
+        let mut rng = Rng::new(42);
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(rng.usize_in(0, 8 << 20), &mut env));
+        }
+        drop(env);
+        m.report().accesses
+    });
+
+    // 5. raw cache loop
+    bench.bench_with_throughput("cache_access_line", N_ACCESS as f64, "access", || {
+        let mut c = Cache::new(cfg.machine.l3_bytes, 64, 11);
+        let mut rng = Rng::new(9);
+        let mut hits = 0u64;
+        for _ in 0..N_ACCESS {
+            if c.access_line(rng.gen_range(1 << 20)) {
+                hits += 1;
+            }
+        }
+        hits
+    });
+
+    // 6. trace record + replay
+    bench.bench_with_throughput("trace_record", N_ACCESS as f64, "event", || {
+        let mut rec = TraceRecorder::new();
+        let mut env = porter::shim::Env::new(4096, &mut rec);
+        let v = env.tvec::<u64>(1 << 16, 0, "buf");
+        let mut i = 0usize;
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(i & 0xFFFF, &mut env));
+            i = i.wrapping_add(7919);
+        }
+        drop(env);
+        rec.finish().len()
+    });
+    let trace = {
+        let mut rec = TraceRecorder::new();
+        let mut env = porter::shim::Env::new(4096, &mut rec);
+        let v = env.tvec::<u64>(1 << 16, 0, "buf");
+        let mut i = 0usize;
+        for _ in 0..N_ACCESS {
+            std::hint::black_box(v.get(i & 0xFFFF, &mut env));
+            i = i.wrapping_add(7919);
+        }
+        drop(env);
+        rec.finish()
+    };
+    bench.bench_with_throughput("trace_replay_into_machine", trace.len() as f64, "event", || {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+        trace.replay(&mut m);
+        m.report().accesses
+    });
+
+    bench.run();
+}

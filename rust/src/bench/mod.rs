@@ -1,0 +1,334 @@
+//! Bench harness (criterion substitute for the offline image).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that builds a
+//! [`BenchSuite`], registers measurements, and calls [`BenchSuite::run`].
+//! The harness does warmup, fixed-iteration timing, reports mean ± σ and
+//! throughput, and emits both an ASCII table and a JSON line per bench so
+//! EXPERIMENTS.md rows can be regenerated mechanically.
+//!
+//! Figure-reproduction benches additionally print their *figure series*
+//! (the rows the paper plots) via [`FigureReport`]; the timing part
+//! covers the harness cost itself.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// Timing configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub sample_iters: u32,
+    /// Hard cap on total time per bench; sampling stops early once hit.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Benches run in CI alongside the full suite; keep defaults modest
+        // and override per-bench where more samples matter.
+        Self { warmup_iters: 2, sample_iters: 10, max_time: Duration::from_secs(30) }
+    }
+}
+
+/// Result of one measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// Optional work units per iteration for throughput reporting
+    /// (e.g. accesses replayed, requests served).
+    pub units_per_iter: Option<f64>,
+    pub unit_name: String,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        let u = self.units_per_iter?;
+        let mean_ns = self.summary().mean;
+        if mean_ns <= 0.0 {
+            return None;
+        }
+        Some(u / (mean_ns / 1e9))
+    }
+}
+
+/// A collection of benches that prints a unified report.
+pub struct BenchSuite {
+    pub title: String,
+    pub config: BenchConfig,
+    results: Vec<BenchResult>,
+    extra_sections: Vec<String>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> BenchSuite {
+        let mut config = BenchConfig::default();
+        // Honour a quick mode so `cargo bench` smoke runs stay fast.
+        if std::env::var("PORTER_BENCH_QUICK").is_ok() {
+            config.warmup_iters = 1;
+            config.sample_iters = 3;
+            config.max_time = Duration::from_secs(10);
+        }
+        BenchSuite { title: title.to_string(), config, results: Vec::new(), extra_sections: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> BenchSuite {
+        self.config = config;
+        self
+    }
+
+    /// Time `f` (called once per iteration, result discarded via
+    /// `black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_units(name, None, "iter", &mut f);
+    }
+
+    /// Time `f`, reporting `units` work items per iteration as
+    /// throughput.
+    pub fn bench_with_throughput<T>(&mut self, name: &str, units: f64, unit_name: &str, mut f: impl FnMut() -> T) {
+        self.bench_units(name, Some(units), unit_name, &mut f);
+    }
+
+    fn bench_units<T>(&mut self, name: &str, units: Option<f64>, unit_name: &str, f: &mut impl FnMut() -> T) {
+        let cfg = &self.config;
+        for _ in 0..cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(cfg.sample_iters as usize);
+        for _ in 0..cfg.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if started.elapsed() > cfg.max_time && samples.len() >= 3 {
+                break;
+            }
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            units_per_iter: units,
+            unit_name: unit_name.to_string(),
+        };
+        eprintln!("  bench {name}: {}", one_line(&result));
+        self.results.push(result);
+    }
+
+    /// Attach a pre-rendered section (figure series etc.) to the report.
+    pub fn section(&mut self, text: String) {
+        self.extra_sections.push(text);
+    }
+
+    /// Print the full report and the JSON lines. Call this last.
+    pub fn run(&self) {
+        println!("\n=== {} ===", self.title);
+        for s in &self.extra_sections {
+            println!("{s}");
+        }
+        if !self.results.is_empty() {
+            let mut t = Table::new(&["bench", "mean", "p50", "σ", "min", "max", "throughput"]).left_first();
+            for r in &self.results {
+                let s = r.summary();
+                t.row(vec![
+                    r.name.clone(),
+                    fmt_ns(s.mean),
+                    fmt_ns(s.p50),
+                    fmt_ns(s.std),
+                    fmt_ns(s.min),
+                    fmt_ns(s.max),
+                    match r.throughput_per_sec() {
+                        Some(tp) => format!("{} {}/s", human_count(tp), r.unit_name),
+                        None => "-".to_string(),
+                    },
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        for r in &self.results {
+            let s = r.summary();
+            let j = Json::obj(vec![
+                ("suite", Json::str(self.title.clone())),
+                ("bench", Json::str(r.name.clone())),
+                ("mean_ns", Json::num(s.mean)),
+                ("std_ns", Json::num(s.std)),
+                ("n", Json::num(s.n as f64)),
+                (
+                    "throughput_per_s",
+                    r.throughput_per_sec().map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]);
+            println!("BENCH-JSON {j}");
+        }
+    }
+}
+
+fn one_line(r: &BenchResult) -> String {
+    let s = r.summary();
+    match r.throughput_per_sec() {
+        Some(tp) => format!("{} ± {} ({} {}/s)", fmt_ns(s.mean), fmt_ns(s.std), human_count(tp), r.unit_name),
+        None => format!("{} ± {}", fmt_ns(s.mean), fmt_ns(s.std)),
+    }
+}
+
+/// Render nanoseconds at a readable scale.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Render counts at a readable scale (for throughput).
+pub fn human_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// A figure series: named x/y rows matching what the paper plots.
+/// `render()` gives an ASCII bar chart plus the raw rows so the shape is
+/// visible directly in bench output.
+pub struct FigureReport {
+    pub figure: String,
+    pub caption: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+}
+
+impl FigureReport {
+    pub fn new(figure: &str, caption: &str, columns: &[&str]) -> FigureReport {
+        FigureReport {
+            figure: figure.to_string(),
+            caption: caption.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "figure row arity");
+        self.rows.push((label.to_string(), values));
+    }
+
+    pub fn rows(&self) -> &[(String, Vec<f64>)] {
+        &self.rows
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("--- {}: {} ---\n", self.figure, self.caption);
+        let mut t = Table::new(
+            &std::iter::once("series").chain(self.columns.iter().map(|s| s.as_str())).collect::<Vec<_>>(),
+        )
+        .left_first();
+        for (label, vals) in &self.rows {
+            t.row(
+                std::iter::once(label.clone())
+                    .chain(vals.iter().map(|v| crate::util::fmt_f64(*v, 2)))
+                    .collect(),
+            );
+        }
+        out.push_str(&t.render());
+        // ASCII bars over the first column for a quick shape check.
+        if !self.rows.is_empty() {
+            let max = self.rows.iter().map(|(_, v)| v[0]).fold(f64::MIN, f64::max).max(1e-12);
+            let width = self.rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+            out.push_str(&format!("bars: {}\n", self.columns[0]));
+            for (label, vals) in &self.rows {
+                let bar_len = ((vals[0] / max) * 50.0).round().max(0.0) as usize;
+                out.push_str(&format!("  {label:width$} |{} {}\n", "#".repeat(bar_len), crate::util::fmt_f64(vals[0], 2)));
+            }
+        }
+        // machine-readable line
+        let j = Json::obj(vec![
+            ("figure", Json::str(self.figure.clone())),
+            ("columns", Json::arr(self.columns.iter().map(|c| Json::str(c.clone())))),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|(l, v)| {
+                    Json::obj(vec![
+                        ("label", Json::str(l.clone())),
+                        ("values", Json::arr(v.iter().map(|x| Json::num(*x)))),
+                    ])
+                })),
+            ),
+        ]);
+        out.push_str(&format!("FIGURE-JSON {j}\n"));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut suite = BenchSuite::new("t").with_config(BenchConfig {
+            warmup_iters: 1,
+            sample_iters: 4,
+            max_time: Duration::from_secs(5),
+        });
+        let mut acc = 0u64;
+        suite.bench("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(suite.results.len(), 1);
+        assert_eq!(suite.results[0].samples_ns.len(), 4);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples_ns: vec![1e9, 1e9],
+            units_per_iter: Some(1000.0),
+            unit_name: "req".into(),
+        };
+        let tp = r.throughput_per_sec().unwrap();
+        assert!((tp - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn figure_report_renders() {
+        let mut f = FigureReport::new("fig2", "slowdown", &["slowdown_pct", "boundness_pct"]);
+        f.row("pagerank", vec![38.0, 55.0]);
+        f.row("chameleon", vec![2.0, 6.0]);
+        let s = f.render();
+        assert!(s.contains("pagerank"));
+        assert!(s.contains("FIGURE-JSON"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn figure_row_arity_checked() {
+        let mut f = FigureReport::new("f", "c", &["a", "b"]);
+        f.row("x", vec![1.0]);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.500µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal CLI argument parser (clap substitute): subcommand + `--key
+//! value` / `--flag` options, with typed accessors and usage errors.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse: first non-flag token is the subcommand, later non-flag
+    /// tokens are positional; `--key value` pairs and bare `--flag`s.
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run pagerank --tier cxl --iters 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["pagerank"]);
+        assert_eq!(a.opt("tier"), Some("cxl"));
+        assert_eq!(a.opt_usize("iters", 1).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --servers=4 --budget=0.5");
+        assert_eq!(a.opt_usize("servers", 1).unwrap(), 4);
+        assert_eq!(a.opt_f64("budget", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_subcommand() {
+        let a = parse("--show config");
+        // --show takes "config" as its value in `--key value` form
+        assert_eq!(a.opt("show"), Some("config"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.opt_usize("n", 0).is_err());
+        assert!(a.opt_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("tier", "dram"), "dram");
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,336 @@
+//! Configuration system: a TOML-subset parser plus the typed simulation
+//! and Porter configs (defaults mirror the paper's Table 1 testbed).
+
+pub mod toml;
+
+use crate::util::bytes::{parse_bytes, GIB, KIB, MIB};
+use crate::util::table::Table;
+use toml::TomlDoc;
+
+/// Hardware/machine model parameters — defaults are the paper's Table 1
+/// testbed plus the CXL latency from Pond [9] / TPP [7].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// CPU model string (documentation only).
+    pub cpu_model: String,
+    /// Sockets × cores (paper: 2 × 24).
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    /// Nominal core frequency (paper: 2.60 GHz) — converts cycles↔time.
+    pub freq_ghz: f64,
+    /// L3 capacity (paper: 19.25 MB), associativity, line size.
+    pub l3_bytes: u64,
+    pub l3_ways: u32,
+    pub cache_line: u64,
+    /// Local-DRAM capacity and tier model (paper: 192 GB DDR4-2133).
+    pub dram_bytes: u64,
+    pub dram_latency_ns: f64,
+    pub dram_bw_gbps: f64,
+    /// CXL tier: capacity, added port/controller latency (~70 ns above
+    /// DRAM per the paper's §2.2 citing Pond), bandwidth.
+    pub cxl_bytes: u64,
+    pub cxl_latency_ns: f64,
+    pub cxl_bw_gbps: f64,
+    /// OS page size used for placement/migration granularity.
+    pub page_bytes: u64,
+    /// Average memory-level parallelism: how many outstanding LLC misses
+    /// overlap. Divides raw miss latency into effective stall time.
+    pub mlp: f64,
+    /// Cost charged per LLC-hit line (folds L1/L2/L3 hit latencies).
+    pub l3_hit_ns: f64,
+    /// Fraction of page-migration cost that stalls the application (the
+    /// rest is hidden behind Porter's background migration thread).
+    pub migration_stall_frac: f64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig {
+            cpu_model: "Intel(R) Xeon Gold 6126 CPU @ 2.60GHz".to_string(),
+            sockets: 2,
+            cores_per_socket: 24,
+            freq_ghz: 2.60,
+            l3_bytes: (19.25 * MIB as f64) as u64,
+            l3_ways: 11,
+            cache_line: 64,
+            dram_bytes: 192 * GIB,
+            // DDR4-2133 loaded latency on SKX-era parts.
+            dram_latency_ns: 90.0,
+            dram_bw_gbps: 60.0,
+            // "CXL-memory acts as a CPU-less NUMA node … latency of
+            // around 70ns introduced by the CXL port and controller".
+            cxl_bytes: 512 * GIB,
+            cxl_latency_ns: 90.0 + 70.0,
+            cxl_bw_gbps: 30.0,
+            page_bytes: 4 * KIB,
+            mlp: 4.0,
+            l3_hit_ns: 1.2,
+            migration_stall_frac: 0.2,
+        }
+    }
+}
+
+impl MachineConfig {
+    pub fn total_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Cycles per nanosecond.
+    pub fn cycles_per_ns(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    /// Render the Table 1 equivalent for `porter-cli config --show`.
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(&["Hardware", "Specification"]).aligns(&[
+            crate::util::table::Align::Left,
+            crate::util::table::Align::Left,
+        ]);
+        t.row_strs(&["CPU", &self.cpu_model]);
+        t.row(vec!["Cores".into(), format!("{} * {} cores", self.sockets, self.cores_per_socket)]);
+        t.row(vec!["L3 cache".into(), crate::util::bytes::fmt_bytes(self.l3_bytes)]);
+        t.row(vec![
+            "Memory (DRAM tier)".into(),
+            format!("{} @ {}ns / {}GB/s", crate::util::bytes::fmt_bytes(self.dram_bytes), self.dram_latency_ns, self.dram_bw_gbps),
+        ]);
+        t.row(vec![
+            "Memory (CXL tier)".into(),
+            format!("{} @ {}ns / {}GB/s", crate::util::bytes::fmt_bytes(self.cxl_bytes), self.cxl_latency_ns, self.cxl_bw_gbps),
+        ]);
+        t.row(vec!["Page size".into(), crate::util::bytes::fmt_bytes(self.page_bytes)]);
+        t.render()
+    }
+}
+
+/// DAMON monitor knobs (mirrors the kernel interface).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorConfig {
+    /// Sampling interval in trace-time nanoseconds.
+    pub sample_interval_ns: u64,
+    /// Aggregation interval: after this many samples-worth of time,
+    /// access counts are aggregated into a snapshot and regions adjusted.
+    pub aggregation_interval_ns: u64,
+    pub min_regions: usize,
+    pub max_regions: usize,
+    /// Heatmap resolution (address bins × time bins).
+    pub heatmap_bins: usize,
+    pub heatmap_time_bins: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            sample_interval_ns: 5_000,
+            aggregation_interval_ns: 100_000,
+            min_regions: 10,
+            max_regions: 1000,
+            heatmap_bins: 64,
+            heatmap_time_bins: 48,
+        }
+    }
+}
+
+/// Porter middleware knobs (§4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PorterConfig {
+    /// Number of simulated servers behind the balancer.
+    pub servers: usize,
+    /// Engine worker threads per server.
+    pub workers_per_server: usize,
+    /// Per-function DRAM budget fraction used by the hint generator:
+    /// hottest objects up to this fraction of the function's footprint
+    /// go to DRAM.
+    pub dram_budget_frac: f64,
+    /// Fraction of accesses an object must absorb (relative to the
+    /// hottest object) to be classified hot.
+    pub hot_threshold: f64,
+    /// First-invocation placement when no hint exists (paper: DRAM for
+    /// best SLO, load permitting).
+    pub first_touch_dram: bool,
+    /// DRAM occupancy above which first-touch falls back to CXL.
+    pub dram_pressure_high: f64,
+    /// Enable the runtime promotion/demotion thread.
+    pub migration_enabled: bool,
+    /// Accesses within an aggregation window to promote a CXL page.
+    pub promote_threshold: u32,
+    /// Watermark of free DRAM the demotion loop maintains (TPP-style).
+    pub demote_free_watermark: f64,
+    /// Default SLO multiplier over all-DRAM latency (e.g. 1.10 → 10%
+    /// over ideal is acceptable).
+    pub slo_factor: f64,
+}
+
+impl Default for PorterConfig {
+    fn default() -> Self {
+        PorterConfig {
+            servers: 2,
+            workers_per_server: 4,
+            dram_budget_frac: 0.35,
+            hot_threshold: 0.02,
+            first_touch_dram: true,
+            dram_pressure_high: 0.90,
+            migration_enabled: true,
+            promote_threshold: 3,
+            demote_free_watermark: 0.10,
+            slo_factor: 1.10,
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub machine: MachineConfig,
+    pub monitor: MonitorConfig,
+    pub porter: PorterConfig,
+}
+
+impl Config {
+    /// Load from a TOML-subset file; unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_toml_str(text: &str) -> Result<Config, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Config::default();
+        for (section, key, value) in doc.entries() {
+            let path = format!("{section}.{key}");
+            match path.as_str() {
+                "machine.cpu_model" => cfg.machine.cpu_model = value.as_str()?.to_string(),
+                "machine.sockets" => cfg.machine.sockets = value.as_u64()? as u32,
+                "machine.cores_per_socket" => cfg.machine.cores_per_socket = value.as_u64()? as u32,
+                "machine.freq_ghz" => cfg.machine.freq_ghz = value.as_f64()?,
+                "machine.l3" => cfg.machine.l3_bytes = parse_bytes(value.as_str()?)?,
+                "machine.l3_ways" => cfg.machine.l3_ways = value.as_u64()? as u32,
+                "machine.cache_line" => cfg.machine.cache_line = value.as_u64()?,
+                "machine.dram" => cfg.machine.dram_bytes = parse_bytes(value.as_str()?)?,
+                "machine.dram_latency_ns" => cfg.machine.dram_latency_ns = value.as_f64()?,
+                "machine.dram_bw_gbps" => cfg.machine.dram_bw_gbps = value.as_f64()?,
+                "machine.cxl" => cfg.machine.cxl_bytes = parse_bytes(value.as_str()?)?,
+                "machine.cxl_latency_ns" => cfg.machine.cxl_latency_ns = value.as_f64()?,
+                "machine.cxl_bw_gbps" => cfg.machine.cxl_bw_gbps = value.as_f64()?,
+                "machine.page" => cfg.machine.page_bytes = parse_bytes(value.as_str()?)?,
+                "machine.mlp" => cfg.machine.mlp = value.as_f64()?,
+                "machine.l3_hit_ns" => cfg.machine.l3_hit_ns = value.as_f64()?,
+                "machine.migration_stall_frac" => cfg.machine.migration_stall_frac = value.as_f64()?,
+                "monitor.sample_interval_ns" => cfg.monitor.sample_interval_ns = value.as_u64()?,
+                "monitor.aggregation_interval_ns" => cfg.monitor.aggregation_interval_ns = value.as_u64()?,
+                "monitor.min_regions" => cfg.monitor.min_regions = value.as_u64()? as usize,
+                "monitor.max_regions" => cfg.monitor.max_regions = value.as_u64()? as usize,
+                "monitor.heatmap_bins" => cfg.monitor.heatmap_bins = value.as_u64()? as usize,
+                "monitor.heatmap_time_bins" => cfg.monitor.heatmap_time_bins = value.as_u64()? as usize,
+                "porter.servers" => cfg.porter.servers = value.as_u64()? as usize,
+                "porter.workers_per_server" => cfg.porter.workers_per_server = value.as_u64()? as usize,
+                "porter.dram_budget_frac" => cfg.porter.dram_budget_frac = value.as_f64()?,
+                "porter.hot_threshold" => cfg.porter.hot_threshold = value.as_f64()?,
+                "porter.first_touch_dram" => cfg.porter.first_touch_dram = value.as_bool()?,
+                "porter.dram_pressure_high" => cfg.porter.dram_pressure_high = value.as_f64()?,
+                "porter.migration_enabled" => cfg.porter.migration_enabled = value.as_bool()?,
+                "porter.promote_threshold" => cfg.porter.promote_threshold = value.as_u64()? as u32,
+                "porter.demote_free_watermark" => cfg.porter.demote_free_watermark = value.as_f64()?,
+                "porter.slo_factor" => cfg.porter.slo_factor = value.as_f64()?,
+                _ => return Err(format!("unknown config key: {path}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Config::from_toml_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let m = &self.machine;
+        if m.page_bytes == 0 || !m.page_bytes.is_power_of_two() {
+            return Err("machine.page must be a power of two".into());
+        }
+        if m.cache_line == 0 || !m.cache_line.is_power_of_two() {
+            return Err("machine.cache_line must be a power of two".into());
+        }
+        if m.cxl_latency_ns < m.dram_latency_ns {
+            return Err("cxl latency must be >= dram latency".into());
+        }
+        if m.l3_bytes < m.cache_line * m.l3_ways as u64 {
+            return Err("l3 too small for associativity".into());
+        }
+        if m.mlp < 1.0 {
+            return Err("machine.mlp must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&m.migration_stall_frac) {
+            return Err("machine.migration_stall_frac must be in [0,1]".into());
+        }
+        let p = &self.porter;
+        for (name, v) in [
+            ("dram_budget_frac", p.dram_budget_frac),
+            ("hot_threshold", p.hot_threshold),
+            ("dram_pressure_high", p.dram_pressure_high),
+            ("demote_free_watermark", p.demote_free_watermark),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("porter.{name} must be in [0,1]"));
+            }
+        }
+        if p.servers == 0 || p.workers_per_server == 0 {
+            return Err("porter.servers/workers must be >= 1".into());
+        }
+        if self.monitor.min_regions == 0 || self.monitor.max_regions < self.monitor.min_regions {
+            return Err("monitor regions range invalid".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_match_table1() {
+        let c = Config::default();
+        c.validate().unwrap();
+        assert_eq!(c.machine.total_cores(), 48);
+        assert_eq!(c.machine.dram_bytes, 192 * GIB);
+        assert!((c.machine.cxl_latency_ns - c.machine.dram_latency_ns - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let text = r#"
+[machine]
+dram = "64GB"
+cxl = "256GB"
+cxl_latency_ns = 180.0
+
+[porter]
+servers = 4
+migration_enabled = false
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.machine.dram_bytes, 64 * GIB);
+        assert_eq!(c.machine.cxl_bytes, 256 * GIB);
+        assert_eq!(c.porter.servers, 4);
+        assert!(!c.porter.migration_enabled);
+        // untouched fields keep defaults
+        assert_eq!(c.machine.sockets, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let e = Config::from_toml_str("[machine]\nnonsense = 3\n").unwrap_err();
+        assert!(e.contains("unknown config key"), "{e}");
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(Config::from_toml_str("[machine]\npage = \"3000\"\n").is_err()); // not pow2
+        assert!(Config::from_toml_str("[porter]\ndram_budget_frac = 1.5\n").is_err());
+        assert!(Config::from_toml_str("[machine]\ncxl_latency_ns = 10.0\n").is_err());
+    }
+
+    #[test]
+    fn table_renders() {
+        let s = MachineConfig::default().render_table();
+        assert!(s.contains("Xeon Gold 6126"));
+        assert!(s.contains("19.25MiB"));
+    }
+}

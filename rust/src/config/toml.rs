@@ -1,0 +1,184 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs where
+//! value ∈ {string, integer, float, bool}. Comments (`#`) and blank lines
+//! allowed. This covers the whole config surface; arrays/tables-of-tables
+//! are intentionally unsupported (fail loudly rather than misparse).
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, String> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => Err(format!("expected non-negative integer, got {other:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:?}")),
+        }
+    }
+}
+
+/// A parsed document: ordered `(section, key, value)` triples.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') || name.contains('.') {
+                    return Err(format!("line {}: unsupported section {name:?}", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let val_text = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            if section.is_empty() {
+                return Err(format!("line {}: key outside of a [section]", lineno + 1));
+            }
+            let value = parse_value(val_text).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.entries.push((section.clone(), key.to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &TomlValue)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .rev() // last wins, like TOML re-assignment would error but we allow override
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // only strip # outside of quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        clean.parse::<f64>().map(TomlValue::Float).map_err(|_| format!("bad value {text:?}"))
+    } else {
+        clean.parse::<i64>().map(TomlValue::Int).map_err(|_| format!("bad value {text:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# comment
+[alpha]
+s = "hello"   # trailing comment
+i = 42
+f = 3.5
+neg = -7
+b = true
+big = 1_000_000
+
+[beta]
+x = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("alpha", "s").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(doc.get("alpha", "i").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(doc.get("alpha", "f").unwrap().as_f64().unwrap(), 3.5);
+        assert_eq!(doc.get("alpha", "big").unwrap().as_u64().unwrap(), 1_000_000);
+        assert!(doc.get("beta", "x").unwrap().as_bool().unwrap() == false);
+        assert!(doc.get("alpha", "neg").unwrap().as_u64().is_err());
+        assert_eq!(doc.get("alpha", "neg").unwrap().as_f64().unwrap(), -7.0);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "v").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = TomlDoc::parse("[s]\nbad\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(TomlDoc::parse("k = 1\n").is_err()); // outside section
+        assert!(TomlDoc::parse("[a.b]\n").is_err()); // dotted section
+        assert!(TomlDoc::parse("[s]\nv = \"open\n").is_err());
+    }
+}

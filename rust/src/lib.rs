@@ -1,0 +1,37 @@
+//! # Porter — Serverless Workloads on CXL-Enabled Tiered Memory
+//!
+//! A full reproduction of *"Understanding and Optimizing Serverless
+//! Workloads in CXL-Enabled Tiered Memory"* (Li & Yao, 2023) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Porter middleware (gateway, balancer,
+//!   per-server engines, offline tuner, runtime migration) on top of a
+//!   complete tiered-memory simulation substrate (DRAM + CXL tiers, L3
+//!   cache model, DAMON-style access monitor, allocation shim, serverless
+//!   workload suite).
+//! * **Layer 2 (python/compile/model.py)** — JAX models for the DL
+//!   serverless functions, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas tiled-matmul kernel
+//!   called by the L2 model, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `runtime::` loads the HLO
+//! artifacts via PJRT and executes them natively.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod mem;
+pub mod metrics;
+pub mod monitor;
+pub mod placement;
+pub mod porter;
+pub mod runtime;
+pub mod shim;
+pub mod sim;
+pub mod testing;
+pub mod trace;
+pub mod util;
+pub mod workloads;

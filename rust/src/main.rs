@@ -1,0 +1,213 @@
+//! porter-cli — the leader entrypoint.
+//!
+//! Subcommands:
+//!   config  --show                       print the Table-1 machine spec
+//!   run     <workload> [--tier dram|cxl] run one workload on one tier
+//!   profile <workload>                   DAMON heatmap + boundness
+//!   place   <workload>                   §3 profile → static placement
+//!   serve   [--requests N]               Porter serving demo (PJRT DL)
+//!   list                                 workload registry
+//!
+//! The figure benches live under `cargo bench` (see rust/benches/).
+
+use porter::cli::Args;
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::monitor::TopDown;
+use porter::placement::static_place::{profile_and_place, run_plain};
+use porter::util::table::Table;
+use porter::workloads::registry::{build, Scale, NAMES};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("config") => cmd_config(&args),
+        Some("list") => cmd_list(),
+        Some("run") => cmd_run(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("place") => cmd_place(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: porter-cli <config|list|run|profile|place|serve> [options]\n\
+                 see `cargo bench` for the paper-figure harnesses"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Config {
+    match args.opt("config") {
+        Some(path) => Config::from_toml_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => Config::default(),
+    }
+}
+
+fn scale_of(args: &Args) -> Scale {
+    if args.flag("full") {
+        Scale::Default
+    } else {
+        Scale::Small
+    }
+}
+
+fn cmd_config(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    println!("{}", cfg.machine.render_table());
+    0
+}
+
+fn cmd_list() -> i32 {
+    println!("registered workloads (SeBS/FunctionBench/vSwarm/GAPBS-derived):");
+    for n in NAMES {
+        println!("  {n}");
+    }
+    0
+}
+
+fn workload_arg(args: &Args, scale: Scale) -> Option<Box<dyn porter::workloads::Workload + Send + Sync>> {
+    let name = args.positional.first()?;
+    match build(name, scale) {
+        Some(w) => Some(w),
+        None => {
+            eprintln!("unknown workload {name:?}; see `porter-cli list`");
+            None
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
+    let tier = match args.opt_or("tier", "dram") {
+        "dram" => TierKind::Dram,
+        "cxl" => TierKind::Cxl,
+        other => {
+            eprintln!("unknown tier {other:?} (dram|cxl)");
+            return 2;
+        }
+    };
+    let (report, checksum) = run_plain(&cfg, w.as_ref(), tier);
+    let td = TopDown::from_report(&report);
+    let mut t = Table::new(&["metric", "value"]).left_first();
+    t.row(vec!["workload".into(), w.name().into()]);
+    t.row(vec!["tier".into(), tier.name().into()]);
+    t.row(vec!["virtual time".into(), porter::bench::fmt_ns(report.wall_ns)]);
+    t.row(vec!["accesses".into(), report.accesses.to_string()]);
+    t.row(vec!["l3 hit rate".into(), format!("{:.1}%", report.l3_hit_rate() * 100.0)]);
+    t.row(vec!["memory-bound".into(), format!("{:.1}%", td.memory_bound_pct())]);
+    t.row(vec!["checksum".into(), format!("{checksum:#018x}")]);
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    use porter::monitor::{Damon, Heatmap};
+    use porter::sim::Machine;
+    let cfg = load_config(args);
+    let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
+    let mut machine = Machine::all_in(&cfg.machine, TierKind::Cxl);
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    machine.attach_observer(Box::new(Damon::new(&cfg.monitor, cfg.machine.page_bytes, 0xDA11)));
+    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+    w.run(&mut env);
+    let objects: Vec<_> = env.objects().to_vec();
+    drop(env);
+    let report = machine.report();
+    let damon = machine
+        .take_observers()
+        .pop()
+        .unwrap()
+        .into_any()
+        .downcast::<Damon>()
+        .expect("damon observer");
+    let lo = objects.iter().filter(|o| o.via_mmap).map(|o| o.start).min().unwrap_or(0);
+    let hi = objects.iter().filter(|o| o.via_mmap).map(|o| o.end()).max().unwrap_or(lo + 1);
+    let map = Heatmap::from_damon(
+        &damon.snapshots,
+        lo,
+        hi,
+        cfg.monitor.heatmap_bins,
+        cfg.monitor.heatmap_time_bins,
+    );
+    println!("{}", map.render_ascii());
+    println!(
+        "locality score: {:.2}  memory-bound: {:.1}%  regions: {}",
+        map.locality_score(),
+        TopDown::from_report(&report).memory_bound_pct(),
+        damon.n_regions()
+    );
+    0
+}
+
+fn cmd_place(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
+    let r = profile_and_place(&cfg, w.as_ref());
+    let mut t = Table::new(&["policy", "virtual time", "slowdown vs DRAM"]).left_first();
+    t.row(vec!["all-dram".into(), porter::bench::fmt_ns(r.all_dram.wall_ns), "0%".into()]);
+    t.row(vec![
+        "static-hint".into(),
+        porter::bench::fmt_ns(r.hinted.wall_ns),
+        format!("{:.1}%", r.hinted_slowdown_pct()),
+    ]);
+    t.row(vec![
+        "all-cxl".into(),
+        porter::bench::fmt_ns(r.all_cxl.wall_ns),
+        format!("{:.1}%", r.cxl_slowdown_pct()),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "hint: {} objects, {} hot bytes; improvement over pure CXL: {:.1}%",
+        r.hint.objects.len(),
+        porter::util::bytes::fmt_bytes(r.hint.hot_bytes()),
+        r.improvement_over_cxl_pct()
+    );
+    for o in &r.hint.objects {
+        println!("  [{}] {} ({})", o.class.name(), o.site, porter::util::bytes::fmt_bytes(o.bytes));
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use porter::runtime::{MlpParams, ModelRuntime};
+    let requests = args.opt_usize("requests", 32).unwrap_or(32);
+    let rt = match ModelRuntime::load(porter::runtime::ArtifactManifest::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime error: {e:#}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let params = MlpParams::init(&rt.manifest.model_layers.clone(), 42);
+    let sig = rt.manifest.get("mlp_infer").expect("mlp_infer artifact");
+    let xin = sig.inputs.last().unwrap();
+    let lat = porter::metrics::Histogram::default();
+    let mut checksum = 0.0f64;
+    for r in 0..requests {
+        let x: Vec<f32> =
+            (0..xin.elements()).map(|i| (((i + r * 31) % 23) as f32 - 11.0) * 0.09).collect();
+        let t0 = std::time::Instant::now();
+        let logits = rt.mlp_infer(&params, &x).expect("infer");
+        lat.record(t0.elapsed().as_nanos() as u64);
+        checksum += logits.iter().map(|v| *v as f64).sum::<f64>();
+    }
+    println!(
+        "served {requests} batches: mean={} p99≤{} (checksum {checksum:.3})",
+        porter::bench::fmt_ns(lat.mean()),
+        porter::bench::fmt_ns(lat.percentile(99.0) as f64)
+    );
+    0
+}

@@ -1,0 +1,138 @@
+//! Bandwidth-contention model.
+//!
+//! Each tier tracks its recent demand as an exponentially-decayed
+//! bytes-per-window counter. Utilization `U = demand / peak` inflates
+//! effective access latency with an M/M/1-style queueing factor
+//! `1 + U/(1-U)` (capped), which is how loaded-latency curves on real
+//! DDR/CXL parts behave to first order. Colocated tenants share the
+//! model, so bandwidth interference (Fig. 7) falls out naturally.
+
+use crate::mem::tier::TierParams;
+
+/// Sliding-window bandwidth tracker for one tier.
+#[derive(Debug, Clone)]
+pub struct BandwidthModel {
+    /// Peak bytes per ns (GB/s == bytes/ns).
+    peak_bytes_per_ns: f64,
+    /// Averaging window in virtual ns.
+    window_ns: f64,
+    /// Bytes accumulated in the current window.
+    window_bytes: f64,
+    /// Decayed demand estimate in bytes/ns.
+    demand: f64,
+    /// Window anchor time.
+    window_start_ns: f64,
+    /// Cap on the queueing inflation factor.
+    max_factor: f64,
+    /// Factor memoized at the last window roll (it only changes when the
+    /// demand estimate does, so recomputing per access is wasted work).
+    cached_factor: f64,
+}
+
+impl BandwidthModel {
+    pub fn new(params: &TierParams) -> BandwidthModel {
+        BandwidthModel {
+            peak_bytes_per_ns: params.bw_gbps,
+            window_ns: 10_000.0,
+            window_bytes: 0.0,
+            demand: 0.0,
+            window_start_ns: 0.0,
+            max_factor: 8.0,
+            cached_factor: 1.0,
+        }
+    }
+
+    /// Record `bytes` transferred at virtual time `now_ns`.
+    #[inline]
+    pub fn record(&mut self, now_ns: f64, bytes: u64) {
+        self.roll(now_ns);
+        self.window_bytes += bytes as f64;
+    }
+
+    #[inline]
+    fn roll(&mut self, now_ns: f64) {
+        let elapsed = now_ns - self.window_start_ns;
+        if elapsed >= self.window_ns {
+            // fold the finished window into the decayed demand estimate
+            let inst = self.window_bytes / elapsed.max(1.0);
+            self.demand = 0.5 * self.demand + 0.5 * inst;
+            self.window_bytes = 0.0;
+            self.window_start_ns = now_ns;
+            let u = self.utilization();
+            // M/M/1 waiting-time growth: u=0.5 → 1.5×, u≥0.9 → cap
+            self.cached_factor = (1.0 + u / (1.0 - u)).min(self.max_factor);
+        }
+    }
+
+    /// Current utilization estimate in [0, 1).
+    #[inline]
+    pub fn utilization(&self) -> f64 {
+        (self.demand / self.peak_bytes_per_ns).min(0.99)
+    }
+
+    /// Latency inflation factor for the current load (memoized at window
+    /// granularity).
+    #[inline]
+    pub fn factor(&self) -> f64 {
+        self.cached_factor
+    }
+
+    /// Reset (between experiments).
+    pub fn reset(&mut self) {
+        self.window_bytes = 0.0;
+        self.demand = 0.0;
+        self.window_start_ns = 0.0;
+        self.cached_factor = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tier::TierKind;
+
+    fn params(bw: f64) -> TierParams {
+        TierParams { kind: TierKind::Dram, latency_ns: 90.0, bw_gbps: bw, capacity: 1 << 30 }
+    }
+
+    #[test]
+    fn idle_factor_is_one() {
+        let bw = BandwidthModel::new(&params(60.0));
+        assert!((bw.factor() - 1.0).abs() < 1e-9);
+        assert_eq!(bw.utilization(), 0.0);
+    }
+
+    #[test]
+    fn saturating_demand_inflates() {
+        let mut bw = BandwidthModel::new(&params(10.0)); // 10 B/ns peak
+        let mut t = 0.0;
+        // push 20 B/ns for a while — demand should exceed peak and clamp
+        for _ in 0..100 {
+            t += 1000.0;
+            bw.record(t, 20_000);
+        }
+        assert!(bw.utilization() > 0.9, "u={}", bw.utilization());
+        assert!(bw.factor() > 4.0);
+    }
+
+    #[test]
+    fn light_demand_small_factor() {
+        let mut bw = BandwidthModel::new(&params(60.0));
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += 10_000.0;
+            bw.record(t, 60_000); // 6 B/ns = 10% util
+        }
+        assert!(bw.factor() < 1.3, "factor={}", bw.factor());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut bw = BandwidthModel::new(&params(10.0));
+        for i in 0..50 {
+            bw.record(i as f64 * 1000.0, 50_000);
+        }
+        bw.reset();
+        assert_eq!(bw.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Tiered-memory substrate: the DRAM + CXL memory system under the
+//! serverless runtime.
+//!
+//! The paper emulates CXL as a CPU-less NUMA node whose access latency
+//! sits ~70 ns above local DRAM (§2.2/§2.3). We model each tier with a
+//! (latency, bandwidth, capacity) triple, keep a page table mapping every
+//! touched page to its tier, and expose placement + migration as the two
+//! operations Porter drives.
+
+pub mod bwmodel;
+pub mod page;
+pub mod tier;
+pub mod tiered;
+
+pub use bwmodel::BandwidthModel;
+pub use page::{PageMap, PageMeta};
+pub use tier::{TierKind, TierParams};
+pub use tiered::{Migration, PagePlacer, TieredMemory};

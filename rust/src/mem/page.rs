@@ -1,0 +1,233 @@
+//! Page table over the simulated address space.
+//!
+//! The shim's address layout has exactly two linear segments (brk heap at
+//! `HEAP_BASE`, mmap segment at `MMAP_BASE`), so the page table is two
+//! flat arrays indexed by `(addr - base) >> page_shift` — O(1) lookup
+//! with no hashing on the access hot path.
+
+use crate::mem::tier::TierKind;
+use crate::shim::intercept::{HEAP_BASE, MMAP_BASE};
+
+/// Per-page state, packed to 8 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageMeta {
+    /// 0 = unmapped, 1 = DRAM, 2 = CXL.
+    tier: u8,
+    /// Accesses since the last aggregation tick (saturating).
+    pub window_accesses: u16,
+    /// Ticks since last access (saturating) — demotion candidate signal.
+    pub idle_ticks: u8,
+    /// Lifetime access count (saturating) — reporting only.
+    pub total_accesses: u32,
+}
+
+pub const UNMAPPED: PageMeta =
+    PageMeta { tier: 0, window_accesses: 0, idle_ticks: 0, total_accesses: 0 };
+
+impl PageMeta {
+    pub fn tier(&self) -> Option<TierKind> {
+        match self.tier {
+            1 => Some(TierKind::Dram),
+            2 => Some(TierKind::Cxl),
+            _ => None,
+        }
+    }
+
+    pub fn set_tier(&mut self, t: TierKind) {
+        self.tier = match t {
+            TierKind::Dram => 1,
+            TierKind::Cxl => 2,
+        };
+    }
+
+    pub fn unmap(&mut self) {
+        *self = UNMAPPED;
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        self.tier != 0
+    }
+
+    pub fn touch(&mut self) {
+        self.window_accesses = self.window_accesses.saturating_add(1);
+        self.total_accesses = self.total_accesses.saturating_add(1);
+        self.idle_ticks = 0;
+    }
+}
+
+/// Global page number — encodes which segment and the index within it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageNo {
+    pub segment: Segment,
+    pub index: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Segment {
+    Heap,
+    Mmap,
+}
+
+/// Two-segment flat page table.
+#[derive(Debug)]
+pub struct PageMap {
+    page_shift: u32,
+    heap: Vec<PageMeta>,
+    mmap: Vec<PageMeta>,
+}
+
+impl PageMap {
+    pub fn new(page_bytes: u64) -> PageMap {
+        assert!(page_bytes.is_power_of_two());
+        PageMap { page_shift: page_bytes.trailing_zeros(), heap: Vec::new(), mmap: Vec::new() }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        1 << self.page_shift
+    }
+
+    /// Translate an address to its page number. Addresses outside both
+    /// segments are a workload bug — panic in debug, clamp in release.
+    #[inline]
+    pub fn page_of(&self, addr: u64) -> PageNo {
+        if addr >= MMAP_BASE {
+            PageNo { segment: Segment::Mmap, index: ((addr - MMAP_BASE) >> self.page_shift) as u32 }
+        } else {
+            debug_assert!(addr >= HEAP_BASE, "address {addr:#x} below heap base");
+            PageNo {
+                segment: Segment::Heap,
+                index: ((addr.saturating_sub(HEAP_BASE)) >> self.page_shift) as u32,
+            }
+        }
+    }
+
+    /// First byte address of a page.
+    pub fn addr_of(&self, p: PageNo) -> u64 {
+        let base = match p.segment {
+            Segment::Heap => HEAP_BASE,
+            Segment::Mmap => MMAP_BASE,
+        };
+        base + ((p.index as u64) << self.page_shift)
+    }
+
+    #[inline]
+    fn seg_mut(&mut self, segment: Segment) -> &mut Vec<PageMeta> {
+        match segment {
+            Segment::Heap => &mut self.heap,
+            Segment::Mmap => &mut self.mmap,
+        }
+    }
+
+    /// Get page state, growing the table as needed.
+    #[inline]
+    pub fn entry(&mut self, p: PageNo) -> &mut PageMeta {
+        let seg = self.seg_mut(p.segment);
+        let idx = p.index as usize;
+        if idx >= seg.len() {
+            seg.resize(idx + 1, UNMAPPED);
+        }
+        &mut seg[idx]
+    }
+
+    /// Read-only view (unmapped default for untouched pages).
+    pub fn get(&self, p: PageNo) -> PageMeta {
+        let seg = match p.segment {
+            Segment::Heap => &self.heap,
+            Segment::Mmap => &self.mmap,
+        };
+        seg.get(p.index as usize).copied().unwrap_or(UNMAPPED)
+    }
+
+    /// Iterate over all mapped pages.
+    pub fn iter_mapped(&self) -> impl Iterator<Item = (PageNo, &PageMeta)> {
+        let heap = self
+            .heap
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (PageNo { segment: Segment::Heap, index: i as u32 }, m));
+        let mmap = self
+            .mmap
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (PageNo { segment: Segment::Mmap, index: i as u32 }, m));
+        heap.chain(mmap).filter(|(_, m)| m.is_mapped())
+    }
+
+    /// Mutable iteration over mapped pages (migration tick).
+    pub fn iter_mapped_mut(&mut self) -> impl Iterator<Item = (PageNo, &mut PageMeta)> {
+        let heap = self
+            .heap
+            .iter_mut()
+            .enumerate()
+            .map(|(i, m)| (PageNo { segment: Segment::Heap, index: i as u32 }, m));
+        let mmap = self
+            .mmap
+            .iter_mut()
+            .enumerate()
+            .map(|(i, m)| (PageNo { segment: Segment::Mmap, index: i as u32 }, m));
+        heap.chain(mmap).filter(|(_, m)| m.is_mapped())
+    }
+
+    pub fn mapped_count(&self) -> usize {
+        self.iter_mapped().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_translation_roundtrip() {
+        let pm = PageMap::new(4096);
+        for addr in [HEAP_BASE, HEAP_BASE + 4095, HEAP_BASE + 4096, MMAP_BASE, MMAP_BASE + 123456] {
+            let p = pm.page_of(addr);
+            let start = pm.addr_of(p);
+            assert!(start <= addr && addr < start + 4096);
+        }
+    }
+
+    #[test]
+    fn segments_separate() {
+        let pm = PageMap::new(4096);
+        assert_eq!(pm.page_of(HEAP_BASE).segment, Segment::Heap);
+        assert_eq!(pm.page_of(MMAP_BASE).segment, Segment::Mmap);
+        assert_eq!(pm.page_of(HEAP_BASE).index, 0);
+        assert_eq!(pm.page_of(MMAP_BASE + 8192).index, 2);
+    }
+
+    #[test]
+    fn entry_grows_and_tracks() {
+        let mut pm = PageMap::new(4096);
+        let p = pm.page_of(MMAP_BASE + 10 * 4096);
+        assert!(!pm.get(p).is_mapped());
+        pm.entry(p).set_tier(TierKind::Cxl);
+        pm.entry(p).touch();
+        let m = pm.get(p);
+        assert_eq!(m.tier(), Some(TierKind::Cxl));
+        assert_eq!(m.window_accesses, 1);
+        assert_eq!(m.total_accesses, 1);
+        assert_eq!(pm.mapped_count(), 1);
+    }
+
+    #[test]
+    fn touch_saturates() {
+        let mut m = UNMAPPED;
+        m.set_tier(TierKind::Dram);
+        for _ in 0..100_000 {
+            m.touch();
+        }
+        assert_eq!(m.window_accesses, u16::MAX);
+        assert_eq!(m.total_accesses, 100_000);
+    }
+
+    #[test]
+    fn unmap_resets() {
+        let mut m = UNMAPPED;
+        m.set_tier(TierKind::Dram);
+        m.touch();
+        m.unmap();
+        assert!(!m.is_mapped());
+        assert_eq!(m.total_accesses, 0);
+    }
+}

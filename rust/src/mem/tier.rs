@@ -1,0 +1,104 @@
+//! Memory tiers: local DRAM and CXL-attached memory.
+
+use crate::config::MachineConfig;
+
+/// Which tier a page lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TierKind {
+    /// Local DDR behind the socket's memory controller.
+    Dram,
+    /// CXL.mem expander: a CPU-less NUMA node reachable by load/store,
+    /// with port/controller latency added on every access.
+    Cxl,
+}
+
+impl TierKind {
+    pub const ALL: [TierKind; 2] = [TierKind::Dram, TierKind::Cxl];
+
+    pub fn index(self) -> usize {
+        match self {
+            TierKind::Dram => 0,
+            TierKind::Cxl => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TierKind::Dram => "dram",
+            TierKind::Cxl => "cxl",
+        }
+    }
+
+    pub fn other(self) -> TierKind {
+        match self {
+            TierKind::Dram => TierKind::Cxl,
+            TierKind::Cxl => TierKind::Dram,
+        }
+    }
+}
+
+/// Performance/capacity parameters of one tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierParams {
+    pub kind: TierKind,
+    /// Idle (uncontended) access latency for a cache-line fill.
+    pub latency_ns: f64,
+    /// Peak sustainable bandwidth.
+    pub bw_gbps: f64,
+    /// Capacity in bytes.
+    pub capacity: u64,
+}
+
+impl TierParams {
+    /// Build both tiers from the machine config.
+    pub fn from_config(cfg: &MachineConfig) -> [TierParams; 2] {
+        [
+            TierParams {
+                kind: TierKind::Dram,
+                latency_ns: cfg.dram_latency_ns,
+                bw_gbps: cfg.dram_bw_gbps,
+                capacity: cfg.dram_bytes,
+            },
+            TierParams {
+                kind: TierKind::Cxl,
+                latency_ns: cfg.cxl_latency_ns,
+                bw_gbps: cfg.cxl_bw_gbps,
+                capacity: cfg.cxl_bytes,
+            },
+        ]
+    }
+
+    /// Time to transfer `bytes` at peak bandwidth, in ns.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bw_gbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_and_names() {
+        assert_eq!(TierKind::Dram.index(), 0);
+        assert_eq!(TierKind::Cxl.index(), 1);
+        assert_eq!(TierKind::Dram.other(), TierKind::Cxl);
+        assert_eq!(TierKind::Cxl.name(), "cxl");
+    }
+
+    #[test]
+    fn from_config_matches() {
+        let cfg = MachineConfig::default();
+        let [dram, cxl] = TierParams::from_config(&cfg);
+        assert_eq!(dram.kind, TierKind::Dram);
+        assert!((cxl.latency_ns - dram.latency_ns - 70.0).abs() < 1e-9);
+        assert!(cxl.capacity > dram.capacity);
+    }
+
+    #[test]
+    fn transfer_time() {
+        let t = TierParams { kind: TierKind::Dram, latency_ns: 90.0, bw_gbps: 64.0, capacity: 1 << 30 };
+        // 64 bytes at 64 GB/s = 1 ns
+        assert!((t.transfer_ns(64) - 1.0).abs() < 1e-9);
+    }
+}

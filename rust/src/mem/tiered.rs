@@ -1,0 +1,278 @@
+//! The tiered memory system: page tables + tier occupancy + placement +
+//! migration. This is the "CXL-enabled tiered memory" the paper's
+//! middleware manages.
+
+use crate::config::MachineConfig;
+use crate::mem::bwmodel::BandwidthModel;
+use crate::mem::page::{PageMap, PageNo};
+use crate::mem::tier::{TierKind, TierParams};
+use crate::shim::object::MemoryObject;
+
+/// Decides the tier for each page of a new allocation. Implementations
+/// live in `placement::policies` (AllDram, AllCxl, static hints, Porter).
+pub trait PagePlacer {
+    /// `page_idx` is the page's 0-based index within the object.
+    fn place(&mut self, obj: &MemoryObject, page_idx: u64, mem: &TieredMemory) -> TierKind;
+
+    /// Human-readable policy name for reports.
+    fn name(&self) -> &str;
+}
+
+/// A page movement between tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Migration {
+    pub page: PageNo,
+    pub from: TierKind,
+    pub to: TierKind,
+}
+
+/// Occupancy state of one tier.
+#[derive(Debug, Clone)]
+pub struct TierState {
+    pub params: TierParams,
+    pub used_bytes: u64,
+    pub bw: BandwidthModel,
+}
+
+impl TierState {
+    pub fn free_bytes(&self) -> u64 {
+        self.params.capacity.saturating_sub(self.used_bytes)
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        self.used_bytes as f64 / self.params.capacity as f64
+    }
+}
+
+/// Page table + two tiers.
+#[derive(Debug)]
+pub struct TieredMemory {
+    pub pages: PageMap,
+    tiers: [TierState; 2],
+    page_bytes: u64,
+    /// Lifetime migration counters (promotions = CXL→DRAM).
+    pub promotions: u64,
+    pub demotions: u64,
+}
+
+impl TieredMemory {
+    pub fn new(cfg: &MachineConfig) -> TieredMemory {
+        let params = TierParams::from_config(cfg);
+        TieredMemory {
+            pages: PageMap::new(cfg.page_bytes),
+            tiers: params.map(|p| TierState { bw: BandwidthModel::new(&p), params: p, used_bytes: 0 }),
+            page_bytes: cfg.page_bytes,
+            promotions: 0,
+            demotions: 0,
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn tier(&self, kind: TierKind) -> &TierState {
+        &self.tiers[kind.index()]
+    }
+
+    pub fn tier_mut(&mut self, kind: TierKind) -> &mut TierState {
+        &mut self.tiers[kind.index()]
+    }
+
+    /// Map every page of `obj`, asking the placer tier by tier. If the
+    /// chosen tier is full the page falls back to the other tier (DRAM
+    /// overflow goes to CXL — the whole point of the capacity tier; CXL
+    /// "overflow" cannot happen at simulated capacities but is handled).
+    pub fn map_object(&mut self, obj: &MemoryObject, placer: &mut dyn PagePlacer) {
+        let first = self.pages.page_of(obj.start);
+        let last = self.pages.page_of(obj.end().saturating_sub(1));
+        let n_pages = (last.index - first.index + 1) as u64;
+        debug_assert_eq!(first.segment, last.segment);
+        for i in 0..n_pages {
+            let p = PageNo { segment: first.segment, index: first.index + i as u32 };
+            // shared pages (brk heap packs small objects) keep their tier
+            if self.pages.get(p).is_mapped() {
+                continue;
+            }
+            let mut kind = placer.place(obj, i, self);
+            if self.tier(kind).free_bytes() < self.page_bytes {
+                kind = kind.other();
+            }
+            self.map_page(p, kind);
+        }
+    }
+
+    fn map_page(&mut self, p: PageNo, kind: TierKind) {
+        let entry = self.pages.entry(p);
+        debug_assert!(!entry.is_mapped());
+        entry.set_tier(kind);
+        self.tiers[kind.index()].used_bytes += self.page_bytes;
+    }
+
+    /// Unmap the pages of a freed object (pages shared with live objects
+    /// are kept: the heap segment packs small allocations).
+    pub fn unmap_object(&mut self, obj: &MemoryObject, page_is_shared: impl Fn(PageNo) -> bool) {
+        let first = self.pages.page_of(obj.start);
+        let last = self.pages.page_of(obj.end().saturating_sub(1));
+        for idx in first.index..=last.index {
+            let p = PageNo { segment: first.segment, index: idx };
+            if page_is_shared(p) {
+                continue;
+            }
+            let entry = self.pages.entry(p);
+            if let Some(kind) = entry.tier() {
+                entry.unmap();
+                self.tiers[kind.index()].used_bytes -= self.page_bytes;
+            }
+        }
+    }
+
+    /// Move one page between tiers; returns false if the target is full.
+    pub fn migrate(&mut self, m: Migration) -> bool {
+        if self.tier(m.to).free_bytes() < self.page_bytes {
+            return false;
+        }
+        let entry = self.pages.entry(m.page);
+        if entry.tier() != Some(m.from) {
+            return false;
+        }
+        entry.set_tier(m.to);
+        self.tiers[m.from.index()].used_bytes -= self.page_bytes;
+        self.tiers[m.to.index()].used_bytes += self.page_bytes;
+        match (m.from, m.to) {
+            (TierKind::Cxl, TierKind::Dram) => self.promotions += 1,
+            (TierKind::Dram, TierKind::Cxl) => self.demotions += 1,
+            _ => {}
+        }
+        true
+    }
+
+    /// Bytes resident per tier, for reports.
+    pub fn used(&self, kind: TierKind) -> u64 {
+        self.tier(kind).used_bytes
+    }
+
+    /// Reset per-window page counters (called at aggregation ticks).
+    pub fn end_window(&mut self) {
+        for (_, m) in self.pages.iter_mapped_mut() {
+            m.window_accesses = 0;
+            m.idle_ticks = m.idle_ticks.saturating_add(1);
+        }
+    }
+}
+
+/// Trivial placers used across tests and as Fig. 2 endpoints.
+pub struct FixedPlacer {
+    pub kind: TierKind,
+}
+
+impl PagePlacer for FixedPlacer {
+    fn place(&mut self, _obj: &MemoryObject, _page_idx: u64, _mem: &TieredMemory) -> TierKind {
+        self.kind
+    }
+
+    fn name(&self) -> &str {
+        match self.kind {
+            TierKind::Dram => "all-dram",
+            TierKind::Cxl => "all-cxl",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn small_cfg() -> MachineConfig {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = 16 * 4096; // 16 pages of DRAM
+        cfg.cxl_bytes = 1024 * 4096;
+        cfg
+    }
+
+    fn obj(id: u32, start: u64, bytes: u64) -> MemoryObject {
+        MemoryObject { id: ObjectId(id), start, bytes, site: "t".into(), seq: id as u64, via_mmap: true }
+    }
+
+    #[test]
+    fn map_object_places_all_pages() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 10 * 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        assert_eq!(mem.used(TierKind::Dram), 10 * 4096);
+        assert_eq!(mem.pages.mapped_count(), 10);
+    }
+
+    #[test]
+    fn dram_overflow_falls_to_cxl() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 32 * 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        assert_eq!(mem.used(TierKind::Dram), 16 * 4096); // capacity
+        assert_eq!(mem.used(TierKind::Cxl), 16 * 4096); // overflow
+    }
+
+    #[test]
+    fn migrate_moves_accounting() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        let p = mem.pages.page_of(o.start);
+        assert!(mem.migrate(Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram }));
+        assert_eq!(mem.used(TierKind::Dram), 4096);
+        assert_eq!(mem.used(TierKind::Cxl), 0);
+        assert_eq!(mem.promotions, 1);
+        // wrong 'from' tier is rejected
+        assert!(!mem.migrate(Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram }));
+    }
+
+    #[test]
+    fn migrate_rejected_when_full() {
+        let mut cfg = small_cfg();
+        cfg.dram_bytes = 4096; // one page
+        let mut mem = TieredMemory::new(&cfg);
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 2 * 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        // page 0 in DRAM (full), page 1 overflowed to CXL
+        let p1 = PageNo { index: mem.pages.page_of(o.start).index + 1, ..mem.pages.page_of(o.start) };
+        assert!(!mem.migrate(Migration { page: p1, from: TierKind::Cxl, to: TierKind::Dram }));
+    }
+
+    #[test]
+    fn unmap_returns_capacity() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 8 * 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        mem.unmap_object(&o, |_| false);
+        assert_eq!(mem.used(TierKind::Dram), 0);
+        assert_eq!(mem.pages.mapped_count(), 0);
+    }
+
+    #[test]
+    fn shared_heap_page_not_double_mapped() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        // two small objects in the same heap page
+        let a = obj(1, crate::shim::intercept::HEAP_BASE, 64);
+        let b = obj(2, crate::shim::intercept::HEAP_BASE + 64, 64);
+        mem.map_object(&a, &mut FixedPlacer { kind: TierKind::Dram });
+        mem.map_object(&b, &mut FixedPlacer { kind: TierKind::Cxl });
+        // page stays in DRAM (first mapping wins), accounted once
+        assert_eq!(mem.used(TierKind::Dram), 4096);
+        assert_eq!(mem.used(TierKind::Cxl), 0);
+    }
+
+    #[test]
+    fn end_window_resets_counters() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        let p = mem.pages.page_of(o.start);
+        mem.pages.entry(p).touch();
+        assert_eq!(mem.pages.get(p).window_accesses, 1);
+        mem.end_window();
+        assert_eq!(mem.pages.get(p).window_accesses, 0);
+        assert_eq!(mem.pages.get(p).total_accesses, 1);
+        assert_eq!(mem.pages.get(p).idle_ticks, 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Memory backend-boundness — the paper's VTune metric (Fig. 2's blue
+//! line), computed top-down from the machine's cycle accounting.
+//!
+//! VTune's "Memory Bound" = slots stalled on loads/stores across the
+//! cache/memory hierarchy, split into latency- and bandwidth-bound. Our
+//! machine accounts exactly those quantities directly.
+
+use crate::sim::machine::RunReport;
+
+/// Top-down breakdown of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopDown {
+    /// Share of wall time on pure compute.
+    pub compute_frac: f64,
+    /// Share stalled on memory (incl. LLC hits) — the headline
+    /// "backend-boundness".
+    pub memory_bound_frac: f64,
+    /// Of the memory-bound share, the part attributable to queueing
+    /// (bandwidth) vs. idle latency.
+    pub latency_frac: f64,
+    pub dram_traffic_frac: f64,
+    pub cxl_traffic_frac: f64,
+}
+
+impl TopDown {
+    pub fn from_report(r: &RunReport) -> TopDown {
+        let wall = r.wall_ns.max(1e-12);
+        let mem = r.stall_ns + r.hit_ns;
+        let misses = (r.dram_misses + r.cxl_misses).max(1);
+        TopDown {
+            compute_frac: r.compute_ns / wall,
+            memory_bound_frac: mem / wall,
+            latency_frac: if mem > 0.0 { r.stall_ns / mem } else { 0.0 },
+            dram_traffic_frac: r.dram_misses as f64 / misses as f64,
+            cxl_traffic_frac: r.cxl_misses as f64 / misses as f64,
+        }
+    }
+
+    /// Percentage for reports.
+    pub fn memory_bound_pct(&self) -> f64 {
+        self.memory_bound_frac * 100.0
+    }
+
+    /// Off-chip (DRAM/CXL-traffic) stall share — VTune's "DRAM Bound"
+    /// sub-metric, the predictor of CXL sensitivity (Fig. 2 blue line):
+    /// on-chip L3-hit time does not slow down when memory moves to CXL.
+    pub fn offchip_bound_pct(&self) -> f64 {
+        self.memory_bound_frac * self.latency_frac * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(compute: f64, stall: f64, hit: f64, dram: u64, cxl: u64) -> RunReport {
+        RunReport {
+            policy: "t".into(),
+            wall_ns: compute + stall + hit,
+            compute_ns: compute,
+            stall_ns: stall,
+            hit_ns: hit,
+            migration_stall_ns: 0.0,
+            accesses: 100,
+            l3_hits: 50,
+            l3_misses: dram + cxl,
+            dram_misses: dram,
+            cxl_misses: cxl,
+            promotions: 0,
+            demotions: 0,
+            peak_dram_bytes: 0,
+            peak_cxl_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let td = TopDown::from_report(&report(600.0, 300.0, 100.0, 10, 30));
+        assert!((td.compute_frac + td.memory_bound_frac - 1.0).abs() < 1e-9);
+        assert!((td.memory_bound_frac - 0.4).abs() < 1e-9);
+        assert!((td.dram_traffic_frac - 0.25).abs() < 1e-9);
+        assert!((td.cxl_traffic_frac - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_only_run() {
+        let td = TopDown::from_report(&report(1000.0, 0.0, 0.0, 0, 0));
+        assert_eq!(td.memory_bound_frac, 0.0);
+        assert_eq!(td.latency_frac, 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Workload monitoring: the paper's profiling toolchain rebuilt.
+//!
+//! * [`damon`] — a faithful reimplementation of DAMON's region-based
+//!   sampling with adaptive region adjustment (Park et al.,
+//!   Middleware'19; the kernel feature the paper records with).
+//! * [`heatmap`] — DAMO-style address×time heatmaps (Fig. 4), from DAMON
+//!   snapshots or exact access streams.
+//! * [`boundness`] — the VTune "memory backend-boundness" proxy (Fig. 2's
+//!   blue line) computed from the machine's stall accounting.
+
+pub mod boundness;
+pub mod damon;
+pub mod heatmap;
+
+pub use boundness::TopDown;
+pub use damon::{Damon, RegionSnapshot};
+pub use heatmap::{ExactHeatmap, Heatmap};

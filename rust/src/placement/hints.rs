@@ -1,0 +1,293 @@
+//! Placement-hint generation: DAMON hot regions ∩ shim object log.
+//!
+//! The paper (§3.2): "Since for each mmap intercept there is a memory
+//! address range and each sample has a memory address associated with it,
+//! we can combine with the profiled hot regions observed over time to get
+//! placement hints." Objects are keyed by *allocation site + sequence*
+//! rather than raw addresses, which is the §4.2 "resistance to payload
+//! changing" fix: addresses move between invocations, call sites don't.
+
+use std::collections::HashMap;
+
+use crate::mem::tier::TierKind;
+use crate::monitor::damon::Damon;
+use crate::shim::object::MemoryObject;
+use crate::util::json::Json;
+
+/// Heat classification of one object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeatClass {
+    Hot,
+    Warm,
+    Cold,
+}
+
+impl HeatClass {
+    /// §3's rule: hot → DRAM, cold/warm → CXL.
+    pub fn tier(self) -> TierKind {
+        match self {
+            HeatClass::Hot => TierKind::Dram,
+            HeatClass::Warm | HeatClass::Cold => TierKind::Cxl,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HeatClass::Hot => "hot",
+            HeatClass::Warm => "warm",
+            HeatClass::Cold => "cold",
+        }
+    }
+}
+
+/// Measured heat of one object from the profile run.
+#[derive(Debug, Clone)]
+pub struct ObjectHeat {
+    pub site: String,
+    pub seq: u64,
+    pub bytes: u64,
+    /// DAMON heat (sampled accesses attributed to the object).
+    pub heat: f64,
+    /// Heat per byte — the ranking key.
+    pub density: f64,
+    pub class: HeatClass,
+}
+
+/// The function's cached placement metadata.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementHint {
+    pub function: String,
+    pub objects: Vec<ObjectHeat>,
+    /// Lookup: (site, seq) → index. Seq disambiguates same-site
+    /// allocations; lookups fall back to site-only.
+    by_key: HashMap<(String, u64), usize>,
+    by_site: HashMap<String, usize>,
+}
+
+impl PlacementHint {
+    /// Build from a finished profile run.
+    ///
+    /// Ranking: objects sorted by heat density; the densest objects are
+    /// `Hot` until `dram_budget_frac` of the total footprint is used;
+    /// objects with non-trivial heat after that are `Warm`; the rest
+    /// `Cold`.
+    pub fn generate(
+        function: &str,
+        damon: &Damon,
+        objects: &[MemoryObject],
+        dram_budget_frac: f64,
+        hot_threshold: f64,
+    ) -> PlacementHint {
+        let mut heats: Vec<ObjectHeat> = objects
+            .iter()
+            .map(|o| {
+                let heat = damon.range_heat(o.start, o.end());
+                ObjectHeat {
+                    site: o.site.clone(),
+                    seq: o.seq,
+                    bytes: o.bytes,
+                    heat,
+                    density: heat / o.bytes.max(1) as f64,
+                    class: HeatClass::Cold,
+                }
+            })
+            .collect();
+        let total_bytes: u64 = heats.iter().map(|h| h.bytes).sum();
+        let budget = (total_bytes as f64 * dram_budget_frac) as u64;
+        let max_density = heats.iter().map(|h| h.density).fold(0.0, f64::max).max(1e-12);
+        // densest first
+        let mut order: Vec<usize> = (0..heats.len()).collect();
+        order.sort_by(|&a, &b| heats[b].density.partial_cmp(&heats[a].density).unwrap());
+        let mut used = 0u64;
+        for &i in &order {
+            let h = &mut heats[i];
+            if h.heat <= 0.0 {
+                h.class = HeatClass::Cold;
+            } else if used + h.bytes <= budget && h.density >= hot_threshold * max_density {
+                h.class = HeatClass::Hot;
+                used += h.bytes;
+            } else if h.density >= 0.01 * max_density {
+                h.class = HeatClass::Warm;
+            } else {
+                h.class = HeatClass::Cold;
+            }
+        }
+        let mut hint = PlacementHint {
+            function: function.to_string(),
+            objects: heats,
+            by_key: HashMap::new(),
+            by_site: HashMap::new(),
+        };
+        hint.rebuild_index();
+        hint
+    }
+
+    fn rebuild_index(&mut self) {
+        self.by_key = self
+            .objects
+            .iter()
+            .enumerate()
+            .map(|(i, h)| ((h.site.clone(), h.seq), i))
+            .collect();
+        // site-only fallback keeps the *hottest* instance of the site
+        self.by_site.clear();
+        for (i, h) in self.objects.iter().enumerate() {
+            let e = self.by_site.entry(h.site.clone()).or_insert(i);
+            if self.objects[*e].density < h.density {
+                *e = i;
+            }
+        }
+    }
+
+    /// Look up the class for a new allocation (next invocation).
+    pub fn classify(&self, obj: &MemoryObject) -> Option<HeatClass> {
+        self.by_key
+            .get(&(obj.site.clone(), obj.seq))
+            .or_else(|| self.by_site.get(&obj.site))
+            .map(|&i| self.objects[i].class)
+    }
+
+    pub fn hot_bytes(&self) -> u64 {
+        self.objects.iter().filter(|h| h.class == HeatClass::Hot).map(|h| h.bytes).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Serialize for the tuner's hint cache.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("function", Json::str(self.function.clone())),
+            (
+                "objects",
+                Json::arr(self.objects.iter().map(|h| {
+                    Json::obj(vec![
+                        ("site", Json::str(h.site.clone())),
+                        ("seq", Json::num(h.seq as f64)),
+                        ("bytes", Json::num(h.bytes as f64)),
+                        ("heat", Json::num(h.heat)),
+                        ("class", Json::str(h.class.name())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlacementHint, String> {
+        let function = v.get("function").and_then(|f| f.as_str()).ok_or("missing function")?;
+        let objects = v
+            .get("objects")
+            .and_then(|o| o.as_arr())
+            .ok_or("missing objects")?
+            .iter()
+            .map(|o| -> Result<ObjectHeat, String> {
+                let site = o.get("site").and_then(|s| s.as_str()).ok_or("site")?.to_string();
+                let seq = o.get("seq").and_then(|s| s.as_u64()).ok_or("seq")?;
+                let bytes = o.get("bytes").and_then(|s| s.as_u64()).ok_or("bytes")?;
+                let heat = o.get("heat").and_then(|s| s.as_f64()).ok_or("heat")?;
+                let class = match o.get("class").and_then(|s| s.as_str()) {
+                    Some("hot") => HeatClass::Hot,
+                    Some("warm") => HeatClass::Warm,
+                    Some("cold") => HeatClass::Cold,
+                    _ => return Err("class".into()),
+                };
+                Ok(ObjectHeat { site, seq, bytes, heat, density: heat / bytes.max(1) as f64, class })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut hint = PlacementHint {
+            function: function.to_string(),
+            objects,
+            by_key: HashMap::new(),
+            by_site: HashMap::new(),
+        };
+        hint.rebuild_index();
+        Ok(hint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MonitorConfig;
+    use crate::shim::object::ObjectId;
+    use crate::sim::machine::AccessObserver;
+
+    fn obj(id: u32, start: u64, bytes: u64, site: &str) -> MemoryObject {
+        MemoryObject { id: ObjectId(id), start, bytes, site: site.into(), seq: id as u64, via_mmap: true }
+    }
+
+    fn profiled_hint(hot_frac_budget: f64) -> (PlacementHint, MemoryObject, MemoryObject) {
+        let base = crate::shim::intercept::MMAP_BASE;
+        let hot = obj(0, base, 1 << 20, "fn/hot");
+        let cold = obj(1, base + (1 << 20), 8 << 20, "fn/cold");
+        let mcfg = MonitorConfig {
+            sample_interval_ns: 100,
+            aggregation_interval_ns: 10_000,
+            ..Default::default()
+        };
+        let mut damon = Damon::new(&mcfg, 4096, 3);
+        damon.on_alloc(0.0, &hot);
+        damon.on_alloc(0.0, &cold);
+        let mut rng = crate::util::prng::Rng::new(5);
+        let mut t = 0.0;
+        for _ in 0..100_000 {
+            t += 30.0;
+            let addr = if rng.chance(0.95) {
+                hot.start + rng.gen_range(hot.bytes)
+            } else {
+                cold.start + rng.gen_range(cold.bytes)
+            };
+            damon.on_access(t, addr, 8, false);
+        }
+        let objs = vec![hot.clone(), cold.clone()];
+        (PlacementHint::generate("fn", &damon, &objs, hot_frac_budget, 0.1), hot, cold)
+    }
+
+    #[test]
+    fn hot_object_classified_hot() {
+        let (hint, hot, cold) = profiled_hint(0.35);
+        assert_eq!(hint.classify(&hot), Some(HeatClass::Hot));
+        let cold_class = hint.classify(&cold).unwrap();
+        assert_ne!(cold_class, HeatClass::Hot);
+        assert_eq!(cold_class.tier(), TierKind::Cxl);
+    }
+
+    #[test]
+    fn zero_budget_means_no_hot() {
+        let (hint, hot, _) = profiled_hint(0.0);
+        assert_ne!(hint.classify(&hot), Some(HeatClass::Hot));
+    }
+
+    #[test]
+    fn site_fallback_survives_address_change() {
+        let (hint, hot, _) = profiled_hint(0.35);
+        // same site, different seq/address — the §4.2 payload-change case
+        let moved = obj(9, crate::shim::intercept::MMAP_BASE + (64 << 20), 1 << 20, "fn/hot");
+        assert_eq!(hint.classify(&moved), hint.classify(&hot));
+    }
+
+    #[test]
+    fn unknown_object_unclassified() {
+        let (hint, _, _) = profiled_hint(0.35);
+        let unknown = obj(7, 0x100, 64, "other/site");
+        assert_eq!(hint.classify(&unknown), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (hint, hot, _) = profiled_hint(0.35);
+        let j = hint.to_json();
+        let parsed = PlacementHint::from_json(&j).unwrap();
+        assert_eq!(parsed.function, "fn");
+        assert_eq!(parsed.objects.len(), hint.objects.len());
+        assert_eq!(parsed.classify(&hot), hint.classify(&hot));
+    }
+
+    #[test]
+    fn hot_bytes_respects_budget() {
+        let (hint, _, _) = profiled_hint(0.35);
+        let total: u64 = hint.objects.iter().map(|o| o.bytes).sum();
+        assert!(hint.hot_bytes() <= (total as f64 * 0.35) as u64 + 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Placement: turning profiles into tier decisions (§3 of the paper).
+//!
+//! * [`hints`] — match DAMON's hot regions against the shim's object log
+//!   to classify each object hot/warm/cold and produce a
+//!   [`hints::PlacementHint`] (the metadata Porter caches per function).
+//! * [`policies`] — the page placers the experiments compare: AllDram,
+//!   AllCxl, FirstTouchDram, hint-driven static placement, and a
+//!   TPP-like promotion/demotion migrator as the kernel-baseline.
+//! * [`static_place`] — the §3 profile→place pipeline in one call.
+
+pub mod hints;
+pub mod policies;
+pub mod static_place;
+
+pub use hints::{HeatClass, ObjectHeat, PlacementHint};
+pub use policies::{FirstTouchDram, HintedPlacer, TppMigrator};
+pub use static_place::{profile_and_place, StaticPlacementResult};

@@ -1,0 +1,232 @@
+//! The page-placement policies compared across the experiments.
+//!
+//! * `FixedPlacer` (in `mem::tiered`): AllDram / AllCxl — Fig. 2's
+//!   endpoints.
+//! * [`FirstTouchDram`]: the kernel default — local DRAM until pressure,
+//!   then spill to CXL.
+//! * [`HintedPlacer`]: §3's static placement — hot objects (per the
+//!   cached [`PlacementHint`]) to DRAM, cold/warm to CXL.
+//! * [`TppMigrator`]: TPP-like [7] reactive promotion/demotion — the
+//!   state-of-the-art kernel baseline the paper positions against.
+
+use crate::mem::page::PageNo;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::{Migration, PagePlacer, TieredMemory};
+use crate::placement::hints::PlacementHint;
+use crate::shim::object::MemoryObject;
+use crate::sim::machine::Migrator;
+
+/// Kernel-default NUMA-local first touch: allocate in DRAM while it has
+/// headroom, spill to CXL beyond the pressure threshold.
+pub struct FirstTouchDram {
+    /// DRAM occupancy above which new pages go to CXL.
+    pub pressure: f64,
+}
+
+impl Default for FirstTouchDram {
+    fn default() -> Self {
+        FirstTouchDram { pressure: 0.90 }
+    }
+}
+
+impl PagePlacer for FirstTouchDram {
+    fn place(&mut self, _obj: &MemoryObject, _page_idx: u64, mem: &TieredMemory) -> TierKind {
+        if mem.tier(TierKind::Dram).occupancy() < self.pressure {
+            TierKind::Dram
+        } else {
+            TierKind::Cxl
+        }
+    }
+
+    fn name(&self) -> &str {
+        "first-touch-dram"
+    }
+}
+
+/// §3 static placement from a cached hint. Objects the hint does not
+/// know follow `unknown_tier` (CXL in the §3 experiment, DRAM for
+/// Porter's SLO-safe first invocation).
+pub struct HintedPlacer {
+    pub hint: PlacementHint,
+    pub unknown_tier: TierKind,
+}
+
+impl HintedPlacer {
+    pub fn new(hint: PlacementHint) -> HintedPlacer {
+        HintedPlacer { hint, unknown_tier: TierKind::Cxl }
+    }
+}
+
+impl PagePlacer for HintedPlacer {
+    fn place(&mut self, obj: &MemoryObject, _page_idx: u64, _mem: &TieredMemory) -> TierKind {
+        match self.hint.classify(obj) {
+            Some(class) => class.tier(),
+            None => self.unknown_tier,
+        }
+    }
+
+    fn name(&self) -> &str {
+        "static-hint"
+    }
+}
+
+/// TPP-like reactive migration: promote CXL pages that exceed an access
+/// threshold within an aggregation window; demote idle DRAM pages when
+/// DRAM occupancy crosses the watermark. Placement side is first-touch.
+pub struct TppMigrator {
+    /// Window accesses to qualify for promotion.
+    pub promote_threshold: u32,
+    /// Keep this fraction of DRAM free (demotion watermark).
+    pub free_watermark: f64,
+    /// Demotion candidates must have been idle at least this many ticks.
+    pub idle_ticks_min: u8,
+    /// Cap on migrations per tick (kernel rate limit).
+    pub max_moves_per_tick: usize,
+}
+
+impl Default for TppMigrator {
+    fn default() -> Self {
+        TppMigrator {
+            promote_threshold: 3,
+            free_watermark: 0.10,
+            idle_ticks_min: 2,
+            max_moves_per_tick: 512,
+        }
+    }
+}
+
+impl Migrator for TppMigrator {
+    fn plan(&mut self, mem: &TieredMemory) -> Vec<Migration> {
+        let mut moves = Vec::new();
+        let page_bytes = mem.page_bytes();
+        let dram = mem.tier(TierKind::Dram);
+        let free_target = (dram.params.capacity as f64 * self.free_watermark) as u64;
+        let mut dram_free = dram.free_bytes();
+
+        // promotion scan: hot CXL pages → DRAM while room remains
+        let mut promote: Vec<(PageNo, u32)> = mem
+            .pages
+            .iter_mapped()
+            .filter(|(_, m)| m.tier() == Some(TierKind::Cxl) && m.window_accesses >= self.promote_threshold as u16)
+            .map(|(p, m)| (p, m.window_accesses as u32))
+            .collect();
+        promote.sort_by_key(|&(_, w)| std::cmp::Reverse(w));
+        for (p, _) in promote.into_iter().take(self.max_moves_per_tick) {
+            if dram_free < page_bytes + free_target {
+                break;
+            }
+            moves.push(Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram });
+            dram_free -= page_bytes;
+        }
+
+        // demotion scan: if DRAM is above watermark, push the coldest
+        // idle pages to CXL
+        if dram_free < free_target {
+            let mut need = free_target - dram_free;
+            let mut demote: Vec<(PageNo, u8)> = mem
+                .pages
+                .iter_mapped()
+                .filter(|(_, m)| {
+                    m.tier() == Some(TierKind::Dram)
+                        && m.idle_ticks >= self.idle_ticks_min
+                        && m.window_accesses == 0
+                })
+                .map(|(p, m)| (p, m.idle_ticks))
+                .collect();
+            demote.sort_by_key(|&(_, idle)| std::cmp::Reverse(idle));
+            for (p, _) in demote.into_iter().take(self.max_moves_per_tick) {
+                moves.push(Migration { page: p, from: TierKind::Dram, to: TierKind::Cxl });
+                need = need.saturating_sub(page_bytes);
+                if need == 0 {
+                    break;
+                }
+            }
+        }
+        moves
+    }
+
+    fn name(&self) -> &str {
+        "tpp-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::shim::object::ObjectId;
+
+    fn obj(id: u32, start: u64, bytes: u64, site: &str) -> MemoryObject {
+        MemoryObject { id: ObjectId(id), start, bytes, site: site.into(), seq: id as u64, via_mmap: true }
+    }
+
+    fn tiny_cfg(dram_pages: u64) -> MachineConfig {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = dram_pages * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        cfg
+    }
+
+    #[test]
+    fn first_touch_spills_under_pressure() {
+        let cfg = tiny_cfg(10);
+        let mut mem = TieredMemory::new(&cfg);
+        let mut placer = FirstTouchDram { pressure: 0.5 };
+        let o = obj(0, crate::shim::intercept::MMAP_BASE, 10 * cfg.page_bytes, "t");
+        mem.map_object(&o, &mut placer);
+        // after 5 pages DRAM hits 50% occupancy → remainder goes to CXL
+        assert_eq!(mem.used(TierKind::Dram), 5 * cfg.page_bytes);
+        assert_eq!(mem.used(TierKind::Cxl), 5 * cfg.page_bytes);
+    }
+
+    #[test]
+    fn tpp_promotes_hot_cxl_pages() {
+        let cfg = tiny_cfg(100);
+        let mut mem = TieredMemory::new(&cfg);
+        let o = obj(0, crate::shim::intercept::MMAP_BASE, 4 * cfg.page_bytes, "t");
+        mem.map_object(&o, &mut crate::mem::tiered::FixedPlacer { kind: TierKind::Cxl });
+        // heat up page 0
+        let p0 = mem.pages.page_of(o.start);
+        for _ in 0..10 {
+            mem.pages.entry(p0).touch();
+        }
+        let mut tpp = TppMigrator::default();
+        let plan = tpp.plan(&mem);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].page, p0);
+        assert_eq!(plan[0].to, TierKind::Dram);
+    }
+
+    #[test]
+    fn tpp_demotes_idle_pages_under_watermark_pressure() {
+        let cfg = tiny_cfg(4); // 4 DRAM pages, watermark 10% → needs ~1 free
+        let mut mem = TieredMemory::new(&cfg);
+        let o = obj(0, crate::shim::intercept::MMAP_BASE, 4 * cfg.page_bytes, "t");
+        mem.map_object(&o, &mut crate::mem::tiered::FixedPlacer { kind: TierKind::Dram });
+        // everything idle
+        for _ in 0..3 {
+            mem.end_window();
+        }
+        let mut tpp = TppMigrator::default();
+        let plan = tpp.plan(&mem);
+        assert!(!plan.is_empty());
+        assert!(plan.iter().all(|m| m.to == TierKind::Cxl));
+    }
+
+    #[test]
+    fn tpp_respects_rate_limit() {
+        let cfg = tiny_cfg(10_000);
+        let mut mem = TieredMemory::new(&cfg);
+        let o = obj(0, crate::shim::intercept::MMAP_BASE, 2048 * cfg.page_bytes, "t");
+        mem.map_object(&o, &mut crate::mem::tiered::FixedPlacer { kind: TierKind::Cxl });
+        let first = mem.pages.page_of(o.start);
+        for i in 0..2048u32 {
+            let p = PageNo { index: first.index + i, ..first };
+            for _ in 0..5 {
+                mem.pages.entry(p).touch();
+            }
+        }
+        let mut tpp = TppMigrator { max_moves_per_tick: 64, ..Default::default() };
+        assert_eq!(tpp.plan(&mem).len(), 64);
+    }
+}

@@ -1,0 +1,56 @@
+//! Load balancer (Fig. 6's "load balancer (e.g. Kubernetes)"):
+//! least-loaded routing over the server pool.
+
+use crate::porter::server::Server;
+
+/// Route to the server with the fewest queued + running invocations;
+/// ties break round-robin so idle pools still spread work.
+#[derive(Debug, Default)]
+pub struct LeastLoaded {
+    rr: std::sync::atomic::AtomicUsize,
+}
+
+impl LeastLoaded {
+    pub fn pick(&self, servers: &[Server]) -> usize {
+        assert!(!servers.is_empty());
+        let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % servers.len();
+        let mut best = start;
+        let mut best_load = servers[start].load();
+        for off in 1..servers.len() {
+            let i = (start + off) % servers.len();
+            let l = servers[i].load();
+            if l < best_load {
+                best = i;
+                best_load = l;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::porter::tuner::OfflineTuner;
+    use std::sync::Arc;
+
+    #[test]
+    fn picks_least_loaded() {
+        let mut cfg = Config::default();
+        cfg.porter.workers_per_server = 1;
+        let tuner = Arc::new(OfflineTuner::new(&cfg));
+        let servers: Vec<Server> =
+            (0..3).map(|i| Server::spawn(i, &cfg, Arc::clone(&tuner))).collect();
+        let lb = LeastLoaded::default();
+        // all empty: round-robins over servers
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            seen.insert(lb.pick(&servers));
+        }
+        assert_eq!(seen.len(), 3);
+        for s in servers {
+            s.shutdown();
+        }
+    }
+}

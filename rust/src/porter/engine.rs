@@ -1,0 +1,226 @@
+//! The Porter engine: per-invocation placement decision + execution
+//! (Fig. 6 ③⑥⑦).
+//!
+//! Decision tree per invocation:
+//! * **Hint cached** → static placement by hint (hot→DRAM, cold→CXL)
+//!   within the DRAM the server can actually grant right now (⑥), plus
+//!   the background promotion/demotion thread (⑦).
+//! * **No hint (first invocation / redeploy)** → provision local DRAM
+//!   for the best SLO guarantee, load permitting (③), and attach the
+//!   shim + DAMON profiler; metrics ship to the offline tuner (④).
+
+use std::time::Instant;
+
+use crate::config::{Config, MachineConfig, MonitorConfig, PorterConfig};
+use crate::mem::tier::TierKind;
+use crate::monitor::damon::Damon;
+use crate::placement::policies::{FirstTouchDram, HintedPlacer, TppMigrator};
+use crate::porter::gateway::FunctionSpec;
+use crate::porter::sysload::SystemLoad;
+use crate::porter::tuner::{OfflineTuner, ProfileData};
+use crate::sim::machine::{Machine, RunReport};
+
+/// Engine-side slice of the config (cloneable into worker threads).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub machine: MachineConfig,
+    pub monitor: MonitorConfig,
+    pub porter: PorterConfig,
+}
+
+impl From<&Config> for EngineConfig {
+    fn from(cfg: &Config) -> EngineConfig {
+        EngineConfig {
+            machine: cfg.machine.clone(),
+            monitor: cfg.monitor.clone(),
+            porter: cfg.porter.clone(),
+        }
+    }
+}
+
+/// What the gateway hands back for one completed invocation.
+#[derive(Debug)]
+pub struct InvocationOutcome {
+    pub id: u64,
+    pub function: String,
+    pub report: RunReport,
+    pub checksum: u64,
+    /// Whether a cached hint drove placement.
+    pub used_hint: bool,
+    /// Whether this run was profiled (first invocation path).
+    pub profiled: bool,
+    /// SLO target in effect before the run (best wall × slo_factor).
+    pub slo_target_ns: Option<f64>,
+    /// Host-side execution time of the simulation (engine overhead
+    /// accounting, not part of the simulated metric).
+    pub host_micros: u64,
+}
+
+impl InvocationOutcome {
+    pub fn slo_met(&self) -> Option<bool> {
+        self.slo_target_ns.map(|t| self.report.wall_ns <= t)
+    }
+}
+
+/// Execute one invocation on a worker thread.
+pub fn run_invocation(
+    id: u64,
+    spec: &FunctionSpec,
+    cfg: &EngineConfig,
+    sysload: &SystemLoad,
+    tuner: &OfflineTuner,
+) -> InvocationOutcome {
+    let started = Instant::now();
+    let slo_target_ns = tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
+    let hint = tuner.hints().get(&spec.name);
+    let footprint = spec.body.footprint_hint().max(cfg.machine.page_bytes);
+
+    // ⑥ how much DRAM do we *want* and can the server grant?
+    let dram_wanted = match &hint {
+        Some(h) => h.hot_bytes().max(cfg.machine.page_bytes).min(spec.memory_cap_bytes),
+        // first invocation: all of it, for the best SLO guarantee
+        None => footprint.min(spec.memory_cap_bytes),
+    };
+    let reservation = sysload.reserve(footprint, dram_wanted);
+
+    // The invocation's machine sees only the granted capacities.
+    let mut mcfg = cfg.machine.clone();
+    mcfg.dram_bytes = reservation.dram.max(cfg.machine.page_bytes);
+    mcfg.cxl_bytes = cfg.machine.cxl_bytes; // capacity tier is plentiful
+
+    let dram_pressure = sysload.occupancy(TierKind::Dram);
+    let (mut machine, used_hint, profiled) = match hint {
+        Some(h) => {
+            let mut placer = HintedPlacer::new(h);
+            // unknown objects: DRAM if the server has headroom (SLO-safe
+            // default), CXL under pressure
+            placer.unknown_tier = if dram_pressure < cfg.porter.dram_pressure_high {
+                TierKind::Dram
+            } else {
+                TierKind::Cxl
+            };
+            (Machine::new(&mcfg, Box::new(placer)), true, false)
+        }
+        None => {
+            let pressure_limit = if cfg.porter.first_touch_dram {
+                cfg.porter.dram_pressure_high
+            } else {
+                0.0
+            };
+            let machine =
+                Machine::new(&mcfg, Box::new(FirstTouchDram { pressure: pressure_limit.max(0.01) }));
+            (machine, false, true)
+        }
+    };
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    if profiled {
+        machine.attach_observer(Box::new(Damon::new(
+            &cfg.monitor,
+            cfg.machine.page_bytes,
+            0xDA110 ^ id,
+        )));
+    }
+    // ⑦ runtime promotion/demotion thread
+    if cfg.porter.migration_enabled {
+        machine.set_migrator(Box::new(TppMigrator {
+            promote_threshold: cfg.porter.promote_threshold,
+            free_watermark: cfg.porter.demote_free_watermark,
+            ..Default::default()
+        }));
+    }
+
+    // run the function
+    let mut env = crate::shim::env::Env::new(cfg.machine.page_bytes, &mut machine);
+    let checksum = spec.body.run(&mut env);
+    let objects: Vec<_> = env.objects().to_vec();
+    drop(env);
+    let report = machine.report();
+
+    // ④ ship the profile to the offline tuner
+    if profiled {
+        if let Some(obs) = machine.take_observers().pop() {
+            if let Ok(damon) = obs.into_any().downcast::<Damon>() {
+                tuner.submit(ProfileData {
+                    function: spec.name.clone(),
+                    damon,
+                    objects,
+                    report: report.clone(),
+                });
+            }
+        }
+    }
+    tuner.hints().record_wall(&spec.name, report.wall_ns);
+    drop(reservation);
+
+    InvocationOutcome {
+        id,
+        function: spec.name.clone(),
+        report,
+        checksum,
+        used_hint,
+        profiled,
+        slo_target_ns,
+        host_micros: started.elapsed().as_micros() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use crate::workloads::kvstore::KvStore;
+
+    fn setup() -> (EngineConfig, Arc<SystemLoad>, OfflineTuner) {
+        let cfg = Config::default();
+        let ecfg = EngineConfig::from(&cfg);
+        let sysload = Arc::new(SystemLoad::new(&cfg.machine));
+        let tuner = OfflineTuner::new(&cfg);
+        (ecfg, sysload, tuner)
+    }
+
+    #[test]
+    fn first_invocation_profiles_then_hint_is_used() {
+        let (ecfg, sysload, tuner) = setup();
+        let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(50_000, 100_000)));
+
+        let first = run_invocation(1, &spec, &ecfg, &sysload, &tuner);
+        assert!(first.profiled);
+        assert!(!first.used_hint);
+        assert!(first.slo_target_ns.is_none());
+
+        tuner.drain();
+        assert!(tuner.hints().get("kv").is_some());
+
+        let second = run_invocation(2, &spec, &ecfg, &sysload, &tuner);
+        assert!(second.used_hint);
+        assert!(!second.profiled);
+        assert!(second.slo_target_ns.is_some());
+        // identical computation regardless of placement
+        assert_eq!(first.checksum, second.checksum);
+    }
+
+    #[test]
+    fn hinted_run_close_to_first_touch_dram_run() {
+        // With ample DRAM, the first run is essentially all-DRAM; the
+        // hinted run keeps the hot set in DRAM so it should be within a
+        // modest factor.
+        let (ecfg, sysload, tuner) = setup();
+        let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(100_000, 200_000)));
+        let first = run_invocation(1, &spec, &ecfg, &sysload, &tuner);
+        tuner.drain();
+        let second = run_invocation(2, &spec, &ecfg, &sysload, &tuner);
+        let ratio = second.report.wall_ns / first.report.wall_ns;
+        assert!(ratio < 1.6, "hinted run {ratio:.2}x the DRAM-first run");
+    }
+
+    #[test]
+    fn pressure_pushes_first_touch_to_cxl() {
+        let (mut ecfg, _, tuner) = setup();
+        ecfg.machine.dram_bytes = 64 * ecfg.machine.page_bytes; // tiny server DRAM
+        let sysload = Arc::new(SystemLoad::new(&ecfg.machine));
+        let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(50_000, 50_000)));
+        let out = run_invocation(1, &spec, &ecfg, &sysload, &tuner);
+        // footprint ≫ DRAM: most pages must live in CXL
+        assert!(out.report.peak_cxl_bytes > out.report.peak_dram_bytes);
+    }
+}

@@ -1,0 +1,156 @@
+//! Gateway: function registry + invocation intake (Fig. 6 ①).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::porter::balancer::LeastLoaded;
+use crate::porter::engine::InvocationOutcome;
+use crate::porter::server::Server;
+use crate::porter::tuner::OfflineTuner;
+use crate::workloads::Workload;
+
+/// A deployed function: the body plus the user-supplied speculation the
+/// paper mentions (memory cap, SLO factor).
+#[derive(Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// The function body. Shared: workloads are immutable (`run(&self)`).
+    pub body: Arc<dyn Workload + Send + Sync>,
+    /// User-configured memory cap (the Lambda-style knob; informs the
+    /// engine's DRAM grant).
+    pub memory_cap_bytes: u64,
+    /// Acceptable latency multiple over the function's best observed
+    /// run (e.g. 1.10 = 10% over).
+    pub slo_factor: f64,
+}
+
+impl FunctionSpec {
+    pub fn new(name: &str, body: Arc<dyn Workload + Send + Sync>) -> FunctionSpec {
+        FunctionSpec { name: name.to_string(), body, memory_cap_bytes: 4 << 30, slo_factor: 1.10 }
+    }
+}
+
+/// Handle for an in-flight invocation.
+pub struct InvocationTicket {
+    pub id: u64,
+    pub function: String,
+    rx: Receiver<InvocationOutcome>,
+}
+
+impl InvocationTicket {
+    /// Block until the function completes.
+    pub fn wait(self) -> InvocationOutcome {
+        self.rx.recv().expect("engine dropped without completing invocation")
+    }
+}
+
+/// The deployment: registry + balancer + servers + tuner.
+pub struct Gateway {
+    functions: HashMap<String, FunctionSpec>,
+    servers: Vec<Server>,
+    balancer: LeastLoaded,
+    pub tuner: Arc<OfflineTuner>,
+    next_id: AtomicU64,
+}
+
+impl Gateway {
+    pub fn new(cfg: &crate::config::Config) -> Gateway {
+        let tuner = Arc::new(OfflineTuner::new(cfg));
+        let servers = (0..cfg.porter.servers)
+            .map(|i| Server::spawn(i, cfg, Arc::clone(&tuner)))
+            .collect::<Vec<_>>();
+        Gateway {
+            functions: HashMap::new(),
+            servers,
+            balancer: LeastLoaded::default(),
+            tuner,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Deploy (or update) a function. Updating clears its cached hint —
+    /// new code means old profiles are stale.
+    pub fn deploy(&mut self, spec: FunctionSpec) {
+        self.tuner.hints().invalidate(&spec.name);
+        self.functions.insert(spec.name.clone(), spec);
+    }
+
+    pub fn function(&self, name: &str) -> Option<&FunctionSpec> {
+        self.functions.get(name)
+    }
+
+    /// Invoke a function (Fig. 6 ① → ②). Returns a ticket to await.
+    pub fn invoke(&self, name: &str) -> Result<InvocationTicket, String> {
+        let spec = self.functions.get(name).ok_or_else(|| format!("unknown function {name:?}"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let server = self.balancer.pick(&self.servers);
+        let rx = self.servers[server].enqueue(id, spec.clone());
+        Ok(InvocationTicket { id, function: name.to_string(), rx })
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Queue depths per server (for balancer tests/metrics).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.servers.iter().map(|s| s.load()).collect()
+    }
+
+    /// Stop all workers; in-flight invocations finish first.
+    pub fn shutdown(self) {
+        for s in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::workloads::chameleon::Chameleon;
+
+    fn small_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.porter.servers = 2;
+        cfg.porter.workers_per_server = 1;
+        cfg
+    }
+
+    #[test]
+    fn deploy_and_invoke_roundtrip() {
+        let cfg = small_config();
+        let mut gw = Gateway::new(&cfg);
+        gw.deploy(FunctionSpec::new("chameleon", Arc::new(Chameleon::new(16, 8))));
+        let t = gw.invoke("chameleon").unwrap();
+        let outcome = t.wait();
+        assert_eq!(outcome.function, "chameleon");
+        assert!(outcome.report.wall_ns > 0.0);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let cfg = small_config();
+        let gw = Gateway::new(&cfg);
+        assert!(gw.invoke("nope").is_err());
+        gw.shutdown();
+    }
+
+    #[test]
+    fn redeploy_invalidates_hint() {
+        let cfg = small_config();
+        let mut gw = Gateway::new(&cfg);
+        gw.deploy(FunctionSpec::new("f", Arc::new(Chameleon::new(16, 8))));
+        gw.invoke("f").unwrap().wait();
+        // wait for the tuner to process the profile
+        gw.tuner.drain();
+        assert!(gw.tuner.hints().get("f").is_some());
+        gw.deploy(FunctionSpec::new("f", Arc::new(Chameleon::new(8, 4))));
+        assert!(gw.tuner.hints().get("f").is_none());
+        gw.shutdown();
+    }
+}

@@ -1,0 +1,34 @@
+//! Porter — the middleware between the serverless platform and the
+//! CXL-enabled tiered memory system (§4, Fig. 6).
+//!
+//! Control path, numbered as in the paper's Fig. 6:
+//!
+//! 1. a user invokes a function via the [`gateway`];
+//! 2. the [`balancer`] routes the invocation to a server, where it is
+//!    pushed onto a local queue fetched asynchronously by the engine;
+//! 3. first-time invocations are provisioned local DRAM for the best SLO
+//!    guarantee (load permitting), while the attached shim + DAMON
+//!    profile the run;
+//! 4. metrics flow to the offline [`tuner`];
+//! 5. the tuner emits a per-function *placement hint* (cacheable
+//!    metadata);
+//! 6. subsequent invocations combine the hint with current
+//!    [`sysload`] to place memory objects;
+//! 7. a background migration thread promotes/demotes pages during
+//!    execution.
+//!
+//! Everything is plain threads + channels: the offline image has no
+//! tokio, and a queue-per-server worker pool is exactly what the paper's
+//! engine describes anyway.
+
+pub mod balancer;
+pub mod engine;
+pub mod gateway;
+pub mod server;
+pub mod slo;
+pub mod sysload;
+pub mod tuner;
+
+pub use engine::{EngineConfig, InvocationOutcome};
+pub use gateway::{FunctionSpec, Gateway, InvocationTicket};
+pub use tuner::{HintCache, OfflineTuner};

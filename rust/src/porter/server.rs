@@ -1,0 +1,112 @@
+//! Per-server queue + engine worker pool (Fig. 6 ②: "invocation
+//! payloads … are pushed into a local queue, which are fetched by an
+//! engine asynchronously").
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::Config;
+use crate::porter::engine::{run_invocation, EngineConfig, InvocationOutcome};
+use crate::porter::gateway::FunctionSpec;
+use crate::porter::sysload::SystemLoad;
+use crate::porter::tuner::OfflineTuner;
+
+enum Job {
+    Invoke { id: u64, spec: FunctionSpec, done: Sender<InvocationOutcome> },
+    Stop,
+}
+
+/// One simulated server: queue, engine workers, and its own memory-load
+/// accounting shared by the workers.
+pub struct Server {
+    pub index: usize,
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    outstanding: Arc<AtomicUsize>,
+    pub sysload: Arc<SystemLoad>,
+}
+
+impl Server {
+    pub fn spawn(index: usize, cfg: &Config, tuner: Arc<OfflineTuner>) -> Server {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let sysload = Arc::new(SystemLoad::new(&cfg.machine));
+        let engine_cfg = EngineConfig::from(cfg);
+        let workers = (0..cfg.porter.workers_per_server)
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                let outstanding = Arc::clone(&outstanding);
+                let sysload = Arc::clone(&sysload);
+                let tuner = Arc::clone(&tuner);
+                let engine_cfg = engine_cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("porter-s{index}w{w}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(Job::Invoke { id, spec, done }) => {
+                                let outcome =
+                                    run_invocation(id, &spec, &engine_cfg, &sysload, &tuner);
+                                outstanding.fetch_sub(1, Ordering::Relaxed);
+                                let _ = done.send(outcome);
+                            }
+                            Ok(Job::Stop) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Server { index, tx, workers, outstanding, sysload }
+    }
+
+    /// Push an invocation; returns the completion channel.
+    pub fn enqueue(&self, id: u64, spec: FunctionSpec) -> Receiver<InvocationOutcome> {
+        let (done_tx, done_rx) = channel();
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Job::Invoke { id, spec, done: done_tx }).expect("server stopped");
+        done_rx
+    }
+
+    /// Queued + running invocations (balancer signal).
+    pub fn load(&self) -> usize {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::porter::gateway::FunctionSpec;
+    use crate::workloads::json_ser::JsonSer;
+
+    #[test]
+    fn serves_jobs_in_parallel_workers() {
+        let mut cfg = Config::default();
+        cfg.porter.workers_per_server = 4;
+        let tuner = Arc::new(OfflineTuner::new(&cfg));
+        let server = Server::spawn(0, &cfg, tuner);
+        let spec = FunctionSpec::new("json", Arc::new(JsonSer::new(50)));
+        let rxs: Vec<_> = (0..8).map(|i| server.enqueue(i, spec.clone())).collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.function, "json");
+        }
+        assert_eq!(server.load(), 0);
+        server.shutdown();
+    }
+}

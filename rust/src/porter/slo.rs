@@ -1,0 +1,126 @@
+//! SLO accounting: per-function targets and violation rates.
+
+use std::collections::HashMap;
+
+use crate::porter::engine::InvocationOutcome;
+
+/// Aggregates SLO outcomes across invocations.
+#[derive(Debug, Default)]
+pub struct SloTracker {
+    per_function: HashMap<String, FnSlo>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct FnSlo {
+    pub invocations: u64,
+    /// Invocations that had a target in effect.
+    pub judged: u64,
+    pub violations: u64,
+    pub total_wall_ns: f64,
+}
+
+impl FnSlo {
+    pub fn violation_rate(&self) -> f64 {
+        if self.judged == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.judged as f64
+        }
+    }
+
+    pub fn mean_wall_ns(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.total_wall_ns / self.invocations as f64
+        }
+    }
+}
+
+impl SloTracker {
+    pub fn record(&mut self, outcome: &InvocationOutcome) {
+        let e = self.per_function.entry(outcome.function.clone()).or_default();
+        e.invocations += 1;
+        e.total_wall_ns += outcome.report.wall_ns;
+        if let Some(met) = outcome.slo_met() {
+            e.judged += 1;
+            if !met {
+                e.violations += 1;
+            }
+        }
+    }
+
+    pub fn get(&self, function: &str) -> Option<&FnSlo> {
+        self.per_function.get(function)
+    }
+
+    pub fn overall_violation_rate(&self) -> f64 {
+        let judged: u64 = self.per_function.values().map(|f| f.judged).sum();
+        let viol: u64 = self.per_function.values().map(|f| f.violations).sum();
+        if judged == 0 {
+            0.0
+        } else {
+            viol as f64 / judged as f64
+        }
+    }
+
+    pub fn functions(&self) -> impl Iterator<Item = (&str, &FnSlo)> {
+        self.per_function.iter().map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::machine::RunReport;
+
+    fn outcome(function: &str, wall: f64, target: Option<f64>) -> InvocationOutcome {
+        InvocationOutcome {
+            id: 0,
+            function: function.into(),
+            report: RunReport {
+                policy: "t".into(),
+                wall_ns: wall,
+                compute_ns: wall,
+                stall_ns: 0.0,
+                hit_ns: 0.0,
+                migration_stall_ns: 0.0,
+                accesses: 0,
+                l3_hits: 0,
+                l3_misses: 0,
+                dram_misses: 0,
+                cxl_misses: 0,
+                promotions: 0,
+                demotions: 0,
+                peak_dram_bytes: 0,
+                peak_cxl_bytes: 0,
+            },
+            checksum: 0,
+            used_hint: false,
+            profiled: false,
+            slo_target_ns: target,
+            host_micros: 0,
+        }
+    }
+
+    #[test]
+    fn violation_rate_counts_only_judged() {
+        let mut t = SloTracker::default();
+        t.record(&outcome("f", 100.0, None)); // first run: no target
+        t.record(&outcome("f", 100.0, Some(110.0))); // met
+        t.record(&outcome("f", 150.0, Some(110.0))); // violated
+        let f = t.get("f").unwrap();
+        assert_eq!(f.invocations, 3);
+        assert_eq!(f.judged, 2);
+        assert_eq!(f.violations, 1);
+        assert!((f.violation_rate() - 0.5).abs() < 1e-9);
+        assert!((t.overall_violation_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_function_none() {
+        let t = SloTracker::default();
+        assert!(t.get("nope").is_none());
+        assert_eq!(t.overall_violation_rate(), 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Per-server system-load tracking (Fig. 6 ⑥): the engine consults
+//! current memory footprint/pressure when deciding placements, and
+//! invocations reserve/release tier capacity as they start/finish.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::MachineConfig;
+use crate::mem::tier::TierKind;
+
+/// Lock-free occupancy accounting for one server's two tiers.
+#[derive(Debug)]
+pub struct SystemLoad {
+    dram_capacity: u64,
+    cxl_capacity: u64,
+    dram_used: AtomicU64,
+    cxl_used: AtomicU64,
+}
+
+/// A reservation; returned to the load tracker on drop.
+#[derive(Debug)]
+pub struct Reservation<'a> {
+    load: &'a SystemLoad,
+    pub dram: u64,
+    pub cxl: u64,
+}
+
+impl SystemLoad {
+    pub fn new(cfg: &MachineConfig) -> SystemLoad {
+        SystemLoad {
+            dram_capacity: cfg.dram_bytes,
+            cxl_capacity: cfg.cxl_bytes,
+            dram_used: AtomicU64::new(0),
+            cxl_used: AtomicU64::new(0),
+        }
+    }
+
+    pub fn occupancy(&self, tier: TierKind) -> f64 {
+        match tier {
+            TierKind::Dram => self.dram_used.load(Ordering::Relaxed) as f64 / self.dram_capacity as f64,
+            TierKind::Cxl => self.cxl_used.load(Ordering::Relaxed) as f64 / self.cxl_capacity as f64,
+        }
+    }
+
+    pub fn free(&self, tier: TierKind) -> u64 {
+        match tier {
+            TierKind::Dram => {
+                self.dram_capacity.saturating_sub(self.dram_used.load(Ordering::Relaxed))
+            }
+            TierKind::Cxl => self.cxl_capacity.saturating_sub(self.cxl_used.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Reserve up to `dram_wanted` DRAM (granted as available) and the
+    /// remainder of `footprint` in CXL.
+    pub fn reserve(&self, footprint: u64, dram_wanted: u64) -> Reservation<'_> {
+        let dram = self.try_take(&self.dram_used, self.dram_capacity, dram_wanted.min(footprint));
+        let cxl = self.try_take(&self.cxl_used, self.cxl_capacity, footprint - dram);
+        Reservation { load: self, dram, cxl }
+    }
+
+    fn try_take(&self, used: &AtomicU64, capacity: u64, want: u64) -> u64 {
+        let mut cur = used.load(Ordering::Relaxed);
+        loop {
+            let granted = want.min(capacity.saturating_sub(cur));
+            if granted == 0 {
+                return 0;
+            }
+            match used.compare_exchange_weak(
+                cur,
+                cur + granted,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return granted,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl Drop for Reservation<'_> {
+    fn drop(&mut self) {
+        self.load.dram_used.fetch_sub(self.dram, Ordering::Relaxed);
+        self.load.cxl_used.fetch_sub(self.cxl, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MachineConfig {
+        let mut c = MachineConfig::default();
+        c.dram_bytes = 1000;
+        c.cxl_bytes = 10_000;
+        c
+    }
+
+    #[test]
+    fn reserve_and_release() {
+        let load = SystemLoad::new(&cfg());
+        {
+            let r = load.reserve(600, 600);
+            assert_eq!(r.dram, 600);
+            assert_eq!(r.cxl, 0);
+            assert!((load.occupancy(TierKind::Dram) - 0.6).abs() < 1e-9);
+        }
+        assert_eq!(load.occupancy(TierKind::Dram), 0.0);
+    }
+
+    #[test]
+    fn overflow_spills_to_cxl() {
+        let load = SystemLoad::new(&cfg());
+        let _a = load.reserve(900, 900);
+        let b = load.reserve(500, 500);
+        assert_eq!(b.dram, 100); // only 100 DRAM left
+        assert_eq!(b.cxl, 400);
+    }
+
+    #[test]
+    fn concurrent_reservations_never_oversubscribe() {
+        let load = std::sync::Arc::new(SystemLoad::new(&cfg()));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let load = std::sync::Arc::clone(&load);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        let r = load.reserve(77, 77);
+                        assert!(r.dram + r.cxl <= 77);
+                        drop(r);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(load.free(TierKind::Dram), 1000);
+        assert_eq!(load.free(TierKind::Cxl), 10_000);
+    }
+}

@@ -1,0 +1,219 @@
+//! Offline tuner (Fig. 6 ④⑤): consumes profile data from engines,
+//! produces cached placement hints for subsequent invocations.
+//!
+//! Runs on its own thread so hint generation never blocks the request
+//! path — the paper's "all metrics are sent to an offline tuner". The
+//! hint cache is the "placement hint consists only of metadata that can
+//! be cached on each server".
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use crate::config::Config;
+use crate::monitor::damon::Damon;
+use crate::placement::hints::PlacementHint;
+use crate::shim::object::MemoryObject;
+use crate::sim::machine::RunReport;
+
+/// Shared hint cache (per-deployment; the paper caches per server, but
+/// hints are tiny metadata — one map serves the simulation).
+#[derive(Default)]
+pub struct HintCache {
+    map: RwLock<HashMap<String, PlacementHint>>,
+    /// Best observed wall time per function (SLO reference).
+    best_wall: RwLock<HashMap<String, f64>>,
+}
+
+impl HintCache {
+    pub fn get(&self, function: &str) -> Option<PlacementHint> {
+        self.map.read().unwrap().get(function).cloned()
+    }
+
+    pub fn put(&self, hint: PlacementHint) {
+        self.map.write().unwrap().insert(hint.function.clone(), hint);
+    }
+
+    pub fn invalidate(&self, function: &str) {
+        self.map.write().unwrap().remove(function);
+        self.best_wall.write().unwrap().remove(function);
+    }
+
+    pub fn record_wall(&self, function: &str, wall_ns: f64) {
+        let mut best = self.best_wall.write().unwrap();
+        let e = best.entry(function.to_string()).or_insert(wall_ns);
+        if wall_ns < *e {
+            *e = wall_ns;
+        }
+    }
+
+    /// SLO reference latency for a function, if any run has completed.
+    pub fn best_wall(&self, function: &str) -> Option<f64> {
+        self.best_wall.read().unwrap().get(function).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Profile payload an engine ships after a monitored run.
+pub struct ProfileData {
+    pub function: String,
+    pub damon: Box<Damon>,
+    pub objects: Vec<MemoryObject>,
+    pub report: RunReport,
+}
+
+enum Msg {
+    Profile(ProfileData),
+    Stop,
+}
+
+/// The tuner thread + its cache.
+pub struct OfflineTuner {
+    tx: Mutex<Sender<Msg>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    hints: Arc<HintCache>,
+    pending: Arc<AtomicUsize>,
+    pub processed: Arc<AtomicUsize>,
+}
+
+impl OfflineTuner {
+    pub fn new(cfg: &Config) -> OfflineTuner {
+        let (tx, rx) = channel::<Msg>();
+        let hints = Arc::new(HintCache::default());
+        let pending = Arc::new(AtomicUsize::new(0));
+        let processed = Arc::new(AtomicUsize::new(0));
+        let worker = {
+            let hints = Arc::clone(&hints);
+            let pending = Arc::clone(&pending);
+            let processed = Arc::clone(&processed);
+            let budget = cfg.porter.dram_budget_frac;
+            let threshold = cfg.porter.hot_threshold;
+            std::thread::Builder::new()
+                .name("porter-tuner".into())
+                .spawn(move || {
+                    while let Ok(Msg::Profile(p)) = rx.recv() {
+                        let hint = PlacementHint::generate(
+                            &p.function,
+                            &p.damon,
+                            &p.objects,
+                            budget,
+                            threshold,
+                        );
+                        hints.put(hint);
+                        pending.fetch_sub(1, Ordering::SeqCst);
+                        processed.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .expect("spawn tuner")
+        };
+        OfflineTuner {
+            tx: Mutex::new(tx),
+            worker: Mutex::new(Some(worker)),
+            hints,
+            pending,
+            processed,
+        }
+    }
+
+    pub fn hints(&self) -> &HintCache {
+        &self.hints
+    }
+
+    /// Ship a profile for asynchronous hint generation (Fig. 6 ④).
+    pub fn submit(&self, data: ProfileData) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        let _ = self.tx.lock().unwrap().send(Msg::Profile(data));
+    }
+
+    /// Wait until all submitted profiles are processed (tests/benches).
+    pub fn drain(&self) {
+        while self.pending.load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for OfflineTuner {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Msg::Stop);
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::machine::AccessObserver;
+
+    #[test]
+    fn tuner_generates_hint_async() {
+        let cfg = Config::default();
+        let tuner = OfflineTuner::new(&cfg);
+        // synthetic profile: one hot object
+        let base = crate::shim::intercept::MMAP_BASE;
+        let obj = MemoryObject {
+            id: crate::shim::object::ObjectId(0),
+            start: base,
+            bytes: 1 << 20,
+            site: "f/x".into(),
+            seq: 0,
+            via_mmap: true,
+        };
+        let mut damon = Damon::new(&cfg.monitor, 4096, 1);
+        damon.on_alloc(0.0, &obj);
+        let mut t = 0.0;
+        for i in 0..200_000u64 {
+            t += 40.0;
+            damon.on_access(t, base + (i * 64) % (1 << 20), 8, false);
+        }
+        let report = RunReport {
+            policy: "all-cxl".into(),
+            wall_ns: 1e6,
+            compute_ns: 4e5,
+            stall_ns: 5e5,
+            hit_ns: 1e5,
+            migration_stall_ns: 0.0,
+            accesses: 200_000,
+            l3_hits: 0,
+            l3_misses: 0,
+            dram_misses: 0,
+            cxl_misses: 0,
+            promotions: 0,
+            demotions: 0,
+            peak_dram_bytes: 0,
+            peak_cxl_bytes: 0,
+        };
+        tuner.submit(ProfileData {
+            function: "f".into(),
+            damon: Box::new(damon),
+            objects: vec![obj],
+            report,
+        });
+        tuner.drain();
+        let hint = tuner.hints().get("f").expect("hint generated");
+        assert_eq!(hint.objects.len(), 1);
+        assert!(tuner.hints().get("g").is_none());
+    }
+
+    #[test]
+    fn best_wall_keeps_minimum() {
+        let cache = HintCache::default();
+        cache.record_wall("f", 100.0);
+        cache.record_wall("f", 80.0);
+        cache.record_wall("f", 120.0);
+        assert_eq!(cache.best_wall("f"), Some(80.0));
+        cache.invalidate("f");
+        assert_eq!(cache.best_wall("f"), None);
+    }
+}

@@ -1,0 +1,148 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSig> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("tensor sig missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("tensor sig missing dtype"))?
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One artifact's signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub model_layers: Vec<usize>,
+    pub artifacts: Vec<ArtifactSig>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let model_layers = v
+            .get("model_layers")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing model_layers"))?
+            .iter()
+            .filter_map(|d| d.as_u64().map(|x| x as usize))
+            .collect();
+        let arts = match v.get("artifacts") {
+            Some(Json::Obj(map)) => map,
+            _ => return Err(anyhow!("manifest missing artifacts")),
+        };
+        let mut artifacts = Vec::new();
+        for (name, a) in arts {
+            let file = dir.join(
+                a.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("missing file"))?,
+            );
+            let parse_list = |key: &str| -> Result<Vec<TensorSig>> {
+                a.get(key)
+                    .and_then(|l| l.as_arr())
+                    .ok_or_else(|| anyhow!("missing {key}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            artifacts.push(ArtifactSig {
+                name: name.clone(),
+                file,
+                inputs: parse_list("inputs")?,
+                outputs: parse_list("outputs")?,
+            });
+        }
+        Ok(ArtifactManifest { dir, model_layers, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSig> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Default artifact dir: `$PORTER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PORTER_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let text = r#"{
+  "model_layers": [768, 1024, 1024, 10],
+  "artifacts": {
+    "matmul": {
+      "file": "matmul.hlo.txt",
+      "inputs": [
+        {"shape": [256, 256], "dtype": "float32"},
+        {"shape": [256, 256], "dtype": "float32"}
+      ],
+      "outputs": [{"shape": [256, 256], "dtype": "float32"}]
+    }
+  }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("porter-mani-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.model_layers, vec![768, 1024, 1024, 10]);
+        let a = m.get("matmul").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].elements(), 256 * 256);
+        assert_eq!(a.outputs[0].shape, vec![256, 256]);
+        assert!(m.get("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = ArtifactManifest::load("/nonexistent-porter-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

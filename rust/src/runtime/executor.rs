@@ -1,0 +1,227 @@
+//! Executable cache + typed entry points for the DL artifacts.
+//!
+//! One `PjRtLoadedExecutable` per artifact, compiled once at startup and
+//! reused for every invocation — the request path never touches Python.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::artifacts::{ArtifactManifest, ArtifactSig};
+use crate::util::prng::Rng;
+
+/// MLP parameters as flat (W, b) float vectors in layer order — the
+/// positional layout `python/compile/aot.py` records in the manifest.
+#[derive(Debug, Clone)]
+pub struct MlpParams {
+    /// [(weights, biases)] per layer; weights are row-major (din, dout).
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+    pub dims: Vec<usize>,
+}
+
+impl MlpParams {
+    /// Initialize with the same scheme as `model.init_params` (different
+    /// RNG — numerical equivalence is established per-execution by
+    /// feeding identical literals, not by matching Python's init).
+    pub fn init(dims: &[usize], seed: u64) -> MlpParams {
+        let mut rng = Rng::new(seed);
+        let layers = dims
+            .windows(2)
+            .map(|w| {
+                let (din, dout) = (w[0], w[1]);
+                let scale = 0.05 * (2.0 / din as f64).sqrt() * (din as f64).sqrt();
+                let weights = (0..din * dout).map(|_| (rng.normal() * scale) as f32).collect();
+                (weights, vec![0f32; dout])
+            })
+            .collect();
+        MlpParams { layers, dims: dims.to_vec() }
+    }
+
+    /// Flatten into PJRT literals (W1, b1, W2, b2, ...).
+    pub fn to_literals(&self) -> Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(self.layers.len() * 2);
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            let (din, dout) = (self.dims[i] as i64, self.dims[i + 1] as i64);
+            out.push(Literal::vec1(w).reshape(&[din, dout])?);
+            out.push(Literal::vec1(b));
+        }
+        Ok(out)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|(w, b)| w.len() + b.len()).sum()
+    }
+}
+
+/// The runtime: PJRT client + compiled executables.
+pub struct ModelRuntime {
+    pub manifest: ArtifactManifest,
+    client: PjRtClient,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact in the manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<ModelRuntime> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let exe = Self::compile_artifact(&client, art)?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(ModelRuntime { manifest, client, executables })
+    }
+
+    fn compile_artifact(client: &PjRtClient, art: &ArtifactSig) -> Result<PjRtLoadedExecutable> {
+        let path = art
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", art.file))?;
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))
+            .with_context(|| "HLO text artifact unreadable — rerun `make artifacts`")?;
+        let comp = XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", art.name))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact with positional inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let sig = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        if inputs.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = &self.executables[name];
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    /// Serve one inference batch: logits for `x` of shape (batch, d_in).
+    pub fn mlp_infer(&self, params: &MlpParams, x: &[f32]) -> Result<Vec<f32>> {
+        self.mlp_infer_with("mlp_infer", params, x)
+    }
+
+    /// Inference through a named artifact variant (`mlp_infer` embeds the
+    /// Pallas kernel; `mlp_infer_fused` is the XLA-native-fusion build —
+    /// see EXPERIMENTS.md §Perf for the comparison).
+    pub fn mlp_infer_with(&self, artifact: &str, params: &MlpParams, x: &[f32]) -> Result<Vec<f32>> {
+        let sig = self.manifest.get(artifact).ok_or_else(|| anyhow!("no {artifact} artifact"))?;
+        let xin = &sig.inputs[sig.inputs.len() - 1];
+        if x.len() != xin.elements() {
+            return Err(anyhow!("x has {} elements, artifact wants {}", x.len(), xin.elements()));
+        }
+        let mut inputs = params.to_literals()?;
+        inputs.push(Literal::vec1(x).reshape(&[xin.shape[0] as i64, xin.shape[1] as i64])?);
+        let out = self.execute(artifact, &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+    }
+
+    /// One SGD training step; updates `params` in place, returns loss.
+    pub fn mlp_train_step(&self, params: &mut MlpParams, x: &[f32], y: &[i32]) -> Result<f32> {
+        let sig = self.manifest.get("mlp_train").ok_or_else(|| anyhow!("no mlp_train artifact"))?;
+        let xin = &sig.inputs[sig.inputs.len() - 2];
+        let mut inputs = params.to_literals()?;
+        inputs.push(Literal::vec1(x).reshape(&[xin.shape[0] as i64, xin.shape[1] as i64])?);
+        inputs.push(Literal::vec1(y));
+        let out = self.execute("mlp_train", &inputs)?;
+        // layout: (W1, b1, W2, b2, W3, b3, loss)
+        if out.len() != params.layers.len() * 2 + 1 {
+            return Err(anyhow!("unexpected train output arity {}", out.len()));
+        }
+        for (i, lw) in params.layers.iter_mut().enumerate() {
+            lw.0 = out[2 * i].to_vec::<f32>().map_err(|e| anyhow!("W{i}: {e:?}"))?;
+            lw.1 = out[2 * i + 1].to_vec::<f32>().map_err(|e| anyhow!("b{i}: {e:?}"))?;
+        }
+        out.last().unwrap().get_first_element::<f32>().map_err(|e| anyhow!("loss: {e:?}"))
+    }
+
+    /// Run the standalone Pallas-matmul artifact.
+    pub fn matmul(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let sig = self.manifest.get("matmul").ok_or_else(|| anyhow!("no matmul artifact"))?;
+        let (a, b) = (&sig.inputs[0], &sig.inputs[1]);
+        let xs = Literal::vec1(x).reshape(&[a.shape[0] as i64, a.shape[1] as i64])?;
+        let ys = Literal::vec1(y).reshape(&[b.shape[0] as i64, b.shape[1] as i64])?;
+        let out = self.execute("matmul", &[xs, ys])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("matmul out: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `make artifacts` to have run; they are skipped
+    //! (not failed) when artifacts are absent so `cargo test` works in a
+    //! fresh checkout. `rust/tests/integration_runtime.rs` asserts the
+    //! full numerics.
+
+    use super::*;
+
+    fn runtime() -> Option<ModelRuntime> {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(ModelRuntime::load(dir).expect("runtime loads"))
+    }
+
+    #[test]
+    fn params_flatten_in_layer_order() {
+        let p = MlpParams::init(&[4, 8, 2], 1);
+        assert_eq!(p.param_count(), 4 * 8 + 8 + 8 * 2 + 2);
+        let lits = p.to_literals().unwrap();
+        assert_eq!(lits.len(), 4);
+        assert_eq!(lits[0].element_count(), 32);
+        assert_eq!(lits[1].element_count(), 8);
+    }
+
+    #[test]
+    fn matmul_artifact_multiplies() {
+        let Some(rt) = runtime() else { return };
+        let sig = rt.manifest.get("matmul").unwrap();
+        let n = sig.inputs[0].shape[0];
+        // x = I, y = arbitrary → x@y = y
+        let mut x = vec![0f32; n * n];
+        for i in 0..n {
+            x[i * n + i] = 1.0;
+        }
+        let y: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+        let out = rt.matmul(&x, &y).unwrap();
+        assert_eq!(out, y);
+    }
+
+    #[test]
+    fn infer_runs_and_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let params = MlpParams::init(&rt.manifest.model_layers.clone(), 7);
+        let sig = rt.manifest.get("mlp_infer").unwrap();
+        let xin = sig.inputs.last().unwrap();
+        let x: Vec<f32> = (0..xin.elements()).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let a = rt.mlp_infer(&params, &x).unwrap();
+        let b = rt.mlp_infer(&params, &x).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), sig.outputs[0].elements());
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them natively.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! request-path half — `PjRtClient::cpu()` compiles each
+//! `artifacts/*.hlo.txt` once, then invocations execute the cached
+//! executable with concrete literals.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactManifest, ArtifactSig, TensorSig};
+pub use executor::{ModelRuntime, MlpParams};

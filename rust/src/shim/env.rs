@@ -1,0 +1,263 @@
+//! The instrumented-process environment workloads run against.
+//!
+//! `Env` = intercepting allocator + event sink. Workloads allocate
+//! [`TVec`]s (traced vectors) and go through `get`/`set`, which perform
+//! the *real* load/store on the backing `Vec` **and** emit the logical
+//! access to the sink. This keeps algorithms genuinely executing (BFS
+//! really traverses, PageRank really converges) while the memory system
+//! under test sees their true access streams.
+
+use crate::shim::intercept::InterceptingAllocator;
+use crate::shim::object::{MemoryObject, ObjectId};
+use crate::trace::Sink;
+
+/// Instrumented process: allocator + sink + counters.
+pub struct Env<'s> {
+    alloc: InterceptingAllocator,
+    sink: &'s mut dyn Sink,
+    accesses: u64,
+}
+
+impl<'s> Env<'s> {
+    pub fn new(page_bytes: u64, sink: &'s mut dyn Sink) -> Env<'s> {
+        Env { alloc: InterceptingAllocator::new(page_bytes), sink, accesses: 0 }
+    }
+
+    /// Allocate a traced vector of `n` copies of `init`.
+    pub fn tvec<T: Copy>(&mut self, n: usize, init: T, site: &str) -> TVec<T> {
+        let bytes = (n * std::mem::size_of::<T>()).max(1) as u64;
+        let obj = self.alloc.malloc(bytes, site);
+        self.sink.alloc(&obj);
+        TVec { data: vec![init; n], base: obj.start, id: obj.id }
+    }
+
+    /// Allocate a traced vector built from an iterator.
+    pub fn tvec_from<T: Copy>(&mut self, data: Vec<T>, site: &str) -> TVec<T> {
+        let bytes = (data.len() * std::mem::size_of::<T>()).max(1) as u64;
+        let obj = self.alloc.malloc(bytes, site);
+        self.sink.alloc(&obj);
+        TVec { data, base: obj.start, id: obj.id }
+    }
+
+    /// Free a traced vector (emits the shim's munmap/free event).
+    pub fn free<T>(&mut self, v: TVec<T>) {
+        if let Some(obj) = self.alloc.free(v.id) {
+            self.sink.free(&obj);
+        }
+    }
+
+    /// Record pure compute work, in core cycles.
+    #[inline]
+    pub fn compute(&mut self, cycles: u64) {
+        self.sink.compute(cycles);
+    }
+
+    /// Mark a named execution phase.
+    pub fn phase(&mut self, name: &str) {
+        self.sink.phase(name);
+    }
+
+    #[inline]
+    pub(crate) fn emit(&mut self, addr: u64, bytes: u32, write: bool) {
+        self.accesses += 1;
+        self.sink.access(addr, bytes, write);
+    }
+
+    /// Total traced accesses so far.
+    pub fn access_count(&self) -> u64 {
+        self.accesses
+    }
+
+    /// The shim's allocation log (object registry), for hint generation.
+    pub fn objects(&self) -> &[MemoryObject] {
+        self.alloc.log()
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.alloc.live_bytes()
+    }
+
+    pub fn find_object(&self, addr: u64) -> Option<&MemoryObject> {
+        self.alloc.find(addr)
+    }
+}
+
+/// A traced vector: real data + simulated base address.
+///
+/// `get`/`set` emit one access per element touch. `*_untraced` variants
+/// skip emission — for initialization that the paper's tooling would also
+/// not see (e.g. building the input graph before the function runs) and
+/// for assertions.
+#[derive(Debug, Clone)]
+pub struct TVec<T> {
+    data: Vec<T>,
+    base: u64,
+    id: ObjectId,
+}
+
+impl<T: Copy> TVec<T> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn id(&self) -> ObjectId {
+        self.id
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    #[inline]
+    fn addr(&self, i: usize) -> u64 {
+        self.base + (i * std::mem::size_of::<T>()) as u64
+    }
+
+    /// Traced read.
+    #[inline]
+    pub fn get(&self, i: usize, env: &mut Env) -> T {
+        env.emit(self.addr(i), std::mem::size_of::<T>() as u32, false);
+        self.data[i]
+    }
+
+    /// Traced write.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: T, env: &mut Env) {
+        env.emit(self.addr(i), std::mem::size_of::<T>() as u32, true);
+        self.data[i] = v;
+    }
+
+    /// Traced read-modify-write.
+    #[inline]
+    pub fn update(&mut self, i: usize, env: &mut Env, f: impl FnOnce(T) -> T) {
+        let addr = self.addr(i);
+        let sz = std::mem::size_of::<T>() as u32;
+        env.emit(addr, sz, false);
+        let v = f(self.data[i]);
+        env.emit(addr, sz, true);
+        self.data[i] = v;
+    }
+
+    /// Untraced read (setup/verification only).
+    #[inline]
+    pub fn get_untraced(&self, i: usize) -> T {
+        self.data[i]
+    }
+
+    /// Untraced write (setup only).
+    #[inline]
+    pub fn set_untraced(&mut self, i: usize, v: T) {
+        self.data[i] = v;
+    }
+
+    /// Traced sequential scan of `[lo, hi)` — emits one access per
+    /// element and hands each value to `f`. Dense kernels use this to
+    /// keep the per-element emission on one call path.
+    #[inline]
+    pub fn scan(&self, lo: usize, hi: usize, env: &mut Env, mut f: impl FnMut(usize, T)) {
+        let sz = std::mem::size_of::<T>() as u32;
+        for i in lo..hi {
+            env.emit(self.addr(i), sz, false);
+            f(i, self.data[i]);
+        }
+    }
+
+    /// Raw slice (untraced) for result verification.
+    pub fn raw(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Raw mutable slice (untraced). Dense kernels (LU, GEMM) compute on
+    /// the raw data and emit their memory traffic separately with
+    /// [`TVec::touch_range`] at cache-line granularity — the documented
+    /// granularity convention for register-blocked inner loops.
+    pub fn raw_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Emit one access per cache line covering elements `[lo, hi)`.
+    /// Equivalent miss behaviour to per-element emission for contiguous
+    /// sweeps, at 1/`line/size_of::<T>()` the event count; the folded-in
+    /// L1/L2 hit cost is part of the caller's compute budget.
+    pub fn touch_range(&self, lo: usize, hi: usize, write: bool, env: &mut Env) {
+        const LINE: u64 = 64;
+        if hi <= lo {
+            return;
+        }
+        let start = self.addr(lo);
+        let end = self.addr(hi - 1) + std::mem::size_of::<T>() as u64;
+        let mut line = start & !(LINE - 1);
+        while line < end {
+            env.emit(line, LINE as u32, write);
+            line += LINE;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn tvec_reads_writes_real_data() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let mut v = env.tvec::<u64>(100, 0, "v");
+        v.set(3, 42, &mut env);
+        assert_eq!(v.get(3, &mut env), 42);
+        assert_eq!(v.get_untraced(3), 42);
+        drop(v);
+        assert_eq!(env.access_count(), 2);
+        assert_eq!(sink.accesses, 2);
+        assert_eq!(sink.allocs, 1);
+    }
+
+    #[test]
+    fn addresses_line_up_with_object() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let v = env.tvec::<u32>(100_000, 0, "big"); // 400KB → mmap
+        let obj = env.objects()[0].clone();
+        assert_eq!(v.base(), obj.start);
+        assert!(obj.via_mmap);
+        assert_eq!(obj.bytes, 400_000);
+        assert_eq!(obj.site, "big");
+    }
+
+    #[test]
+    fn update_emits_read_then_write() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let mut v = env.tvec::<u64>(4, 10, "v");
+        v.update(0, &mut env, |x| x + 1);
+        assert_eq!(v.get_untraced(0), 11);
+        assert_eq!(sink.accesses, 2);
+    }
+
+    #[test]
+    fn scan_visits_all() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let v = env.tvec_from((0u64..50).collect(), "v");
+        let mut sum = 0;
+        v.scan(10, 20, &mut env, |_, x| sum += x);
+        assert_eq!(sum, (10..20).sum::<u64>());
+        assert_eq!(sink.accesses, 10);
+    }
+
+    #[test]
+    fn free_emits_event() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let v = env.tvec::<u8>(200_000, 0, "v");
+        assert_eq!(env.live_bytes(), 200_000);
+        env.free(v);
+        assert_eq!(env.live_bytes(), 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Allocation interception — the simulated `syscall_intercept` shim.
+//!
+//! Reproduces the glibc malloc dispatch the paper relies on (§3.2):
+//! requests of `MMAP_THRESHOLD` (128 KiB) or more are served by `mmap`
+//! in the Memory Mapping Segment; smaller requests grow the heap via
+//! `brk`. Every allocation is recorded as a [`MemoryObject`] with its
+//! site label and sequence number. Addresses are deterministic
+//! (ASLR off), so a profile run and a placement run see identical
+//! object layouts.
+
+use std::collections::BTreeMap;
+
+use super::object::{MemoryObject, ObjectId};
+
+/// glibc's default M_MMAP_THRESHOLD.
+pub const MMAP_THRESHOLD: u64 = 128 * 1024;
+
+/// Base of the simulated brk heap.
+pub const HEAP_BASE: u64 = 0x0000_1000_0000;
+/// Base of the simulated Memory Mapping Segment (grows upward here for
+/// simplicity; determinism is what matters, not direction).
+pub const MMAP_BASE: u64 = 0x7f00_0000_0000;
+
+/// The interceptor: a deterministic virtual-address allocator + object
+/// registry.
+#[derive(Debug)]
+pub struct InterceptingAllocator {
+    heap_brk: u64,
+    mmap_next: u64,
+    next_id: u32,
+    seq: u64,
+    /// Live objects keyed by start address for O(log n) addr→object.
+    live: BTreeMap<u64, MemoryObject>,
+    /// Everything ever allocated (the shim's record log).
+    log: Vec<MemoryObject>,
+    page: u64,
+}
+
+impl InterceptingAllocator {
+    pub fn new(page: u64) -> InterceptingAllocator {
+        assert!(page.is_power_of_two());
+        InterceptingAllocator {
+            heap_brk: HEAP_BASE,
+            mmap_next: MMAP_BASE,
+            next_id: 0,
+            seq: 0,
+            live: BTreeMap::new(),
+            log: Vec::new(),
+            page,
+        }
+    }
+
+    /// Allocate `bytes` with glibc-style dispatch; returns the object.
+    pub fn malloc(&mut self, bytes: u64, site: &str) -> MemoryObject {
+        assert!(bytes > 0, "malloc(0)");
+        let via_mmap = bytes >= MMAP_THRESHOLD;
+        let start = if via_mmap {
+            // mmap allocations are page-aligned and page-granular
+            let start = self.mmap_next;
+            self.mmap_next += round_up(bytes, self.page);
+            start
+        } else {
+            // brk: bump the heap, 16-byte aligned like malloc chunks
+            let start = round_up(self.heap_brk, 16);
+            self.heap_brk = start + bytes;
+            start
+        };
+        let obj = MemoryObject {
+            id: ObjectId(self.next_id),
+            start,
+            bytes,
+            site: site.to_string(),
+            seq: self.seq,
+            via_mmap,
+        };
+        self.next_id += 1;
+        self.seq += 1;
+        self.live.insert(start, obj.clone());
+        self.log.push(obj.clone());
+        obj
+    }
+
+    /// Release an object (munmap / heap free). The address range is not
+    /// recycled — determinism and post-mortem attribution matter more
+    /// than virtual-address frugality in a 47-bit space.
+    pub fn free(&mut self, id: ObjectId) -> Option<MemoryObject> {
+        let key = self.live.iter().find(|(_, o)| o.id == id).map(|(k, _)| *k)?;
+        self.live.remove(&key)
+    }
+
+    /// Object containing `addr`, if any is live.
+    pub fn find(&self, addr: u64) -> Option<&MemoryObject> {
+        self.live
+            .range(..=addr)
+            .next_back()
+            .map(|(_, o)| o)
+            .filter(|o| o.contains(addr))
+    }
+
+    /// All allocations ever made, in sequence order.
+    pub fn log(&self) -> &[MemoryObject] {
+        &self.log
+    }
+
+    pub fn live_objects(&self) -> impl Iterator<Item = &MemoryObject> {
+        self.live.values()
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live.values().map(|o| o.bytes).sum()
+    }
+
+    pub fn page_size(&self) -> u64 {
+        self.page
+    }
+}
+
+fn round_up(v: u64, to: u64) -> u64 {
+    (v + to - 1) & !(to - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_by_threshold() {
+        let mut a = InterceptingAllocator::new(4096);
+        let small = a.malloc(1024, "small");
+        let big = a.malloc(MMAP_THRESHOLD, "big");
+        assert!(!small.via_mmap);
+        assert!(big.via_mmap);
+        assert!(small.start >= HEAP_BASE && small.start < MMAP_BASE);
+        assert!(big.start >= MMAP_BASE);
+        assert_eq!(big.start % 4096, 0);
+    }
+
+    #[test]
+    fn deterministic_addresses() {
+        let run = || {
+            let mut a = InterceptingAllocator::new(4096);
+            let x = a.malloc(200_000, "x").start;
+            let y = a.malloc(50, "y").start;
+            let z = a.malloc(300_000, "z").start;
+            (x, y, z)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mmap_regions_do_not_overlap() {
+        let mut a = InterceptingAllocator::new(4096);
+        let o1 = a.malloc(130_000, "a");
+        let o2 = a.malloc(130_000, "b");
+        assert!(o1.end() <= o2.start);
+    }
+
+    #[test]
+    fn find_by_address() {
+        let mut a = InterceptingAllocator::new(4096);
+        let o = a.malloc(200_000, "obj");
+        assert_eq!(a.find(o.start).unwrap().id, o.id);
+        assert_eq!(a.find(o.start + o.bytes - 1).unwrap().id, o.id);
+        assert!(a.find(o.end() + 4096 * 100).is_none());
+        // address below every object
+        assert!(a.find(0).is_none());
+    }
+
+    #[test]
+    fn free_removes_from_live_keeps_log() {
+        let mut a = InterceptingAllocator::new(4096);
+        let o = a.malloc(200_000, "obj");
+        assert_eq!(a.live_bytes(), 200_000);
+        let freed = a.free(o.id).unwrap();
+        assert_eq!(freed.id, o.id);
+        assert_eq!(a.live_bytes(), 0);
+        assert!(a.find(o.start).is_none());
+        assert_eq!(a.log().len(), 1);
+        assert!(a.free(o.id).is_none());
+    }
+
+    #[test]
+    fn seq_increases() {
+        let mut a = InterceptingAllocator::new(4096);
+        let s1 = a.malloc(10, "a").seq;
+        let s2 = a.malloc(10, "b").seq;
+        assert!(s2 > s1);
+    }
+}

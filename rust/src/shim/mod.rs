@@ -1,0 +1,22 @@
+//! The shim layer (§3.2 of the paper).
+//!
+//! The paper interposes on `mmap`/`brk` with `syscall_intercept` to learn
+//! *memory objects* — (timestamp, size, start address, call site) — and
+//! later matches DAMON's hot regions against them. Our simulated
+//! processes allocate through [`intercept::InterceptingAllocator`], which
+//! reproduces glibc's dispatch: requests ≥ `MMAP_THRESHOLD` go to the
+//! mmap segment, smaller ones to the brk heap. `randomize_va_space` is
+//! effectively disabled (the paper disables it too): addresses are
+//! deterministic across runs, which is what makes profile-then-place
+//! work.
+//!
+//! [`env::Env`] wraps the allocator + a [`crate::trace::Sink`] into the
+//! instrumented-process handle workloads run against.
+
+pub mod env;
+pub mod intercept;
+pub mod object;
+
+pub use env::{Env, TVec};
+pub use intercept::{InterceptingAllocator, MMAP_THRESHOLD};
+pub use object::{MemoryObject, ObjectId};

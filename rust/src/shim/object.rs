@@ -1,0 +1,71 @@
+//! Memory objects — the placement granularity of §3.
+
+/// Stable identifier for a tracked allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u32);
+
+/// A tracked allocation: what the paper's shim records per `mmap`/`brk`
+/// growth — timestamp (here: allocation sequence number), size, start
+/// address, and call stack (here: a site label provided by the workload,
+/// playing the role of the hashed call stack).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryObject {
+    pub id: ObjectId,
+    pub start: u64,
+    pub bytes: u64,
+    /// Allocation-site label (the paper hashes the call stack; workloads
+    /// here pass a stable name like `"pagerank/out_contrib"`).
+    pub site: String,
+    /// Allocation sequence number — the shim's logical timestamp.
+    pub seq: u64,
+    /// Whether the allocation was served from the mmap segment (true) or
+    /// by growing the brk heap (false).
+    pub via_mmap: bool,
+}
+
+impl MemoryObject {
+    pub fn end(&self) -> u64 {
+        self.start + self.bytes
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.start && addr < self.end()
+    }
+
+    /// Overlap in bytes with the half-open address range `[lo, hi)`.
+    pub fn overlap(&self, lo: u64, hi: u64) -> u64 {
+        let s = self.start.max(lo);
+        let e = self.end().min(hi);
+        e.saturating_sub(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(start: u64, bytes: u64) -> MemoryObject {
+        MemoryObject { id: ObjectId(0), start, bytes, site: "s".into(), seq: 0, via_mmap: true }
+    }
+
+    #[test]
+    fn contains_and_end() {
+        let o = obj(100, 50);
+        assert!(o.contains(100));
+        assert!(o.contains(149));
+        assert!(!o.contains(150));
+        assert!(!o.contains(99));
+        assert_eq!(o.end(), 150);
+    }
+
+    #[test]
+    fn overlap_cases() {
+        let o = obj(100, 100); // [100, 200)
+        assert_eq!(o.overlap(0, 100), 0); // disjoint below
+        assert_eq!(o.overlap(200, 300), 0); // disjoint above
+        assert_eq!(o.overlap(150, 250), 50); // right
+        assert_eq!(o.overlap(50, 150), 50); // left
+        assert_eq!(o.overlap(0, 1000), 100); // containing
+        assert_eq!(o.overlap(120, 130), 10); // contained
+    }
+}

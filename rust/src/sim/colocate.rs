@@ -1,0 +1,154 @@
+//! Multi-tenant colocation (§4.2 "Multi-tenancy resource contention",
+//! Fig. 7).
+//!
+//! Recorded traces of colocated functions are replayed through one shared
+//! machine in fine-grained interleaved chunks: tenants contend for the
+//! shared LLC (extra misses) and for per-tier bandwidth (queueing
+//! inflation). Each tenant keeps its own virtual clock; the reported
+//! per-tenant wall time is compared against its standalone run to get the
+//! paper's "percent of slowdown when colocated".
+
+use crate::config::MachineConfig;
+use crate::mem::tier::TierKind;
+use crate::sim::machine::{Machine, RunReport};
+use crate::trace::RecordedTrace;
+
+/// Result of a colocated run.
+#[derive(Debug, Clone)]
+pub struct ColocationReport {
+    /// Per-tenant wall time when colocated.
+    pub colocated_wall_ns: Vec<f64>,
+    /// Per-tenant standalone wall time (same placement policy).
+    pub solo_wall_ns: Vec<f64>,
+    pub tier: TierKind,
+}
+
+impl ColocationReport {
+    /// Percent slowdown of tenant `i` vs. running alone.
+    pub fn slowdown_pct(&self, i: usize) -> f64 {
+        (self.colocated_wall_ns[i] / self.solo_wall_ns[i] - 1.0) * 100.0
+    }
+}
+
+/// Replay each trace alone to get the solo baselines.
+fn solo_runs(cfg: &MachineConfig, tier: TierKind, traces: &[&RecordedTrace]) -> Vec<RunReport> {
+    traces
+        .iter()
+        .map(|t| {
+            let mut m = Machine::all_in(cfg, tier);
+            t.replay(&mut m);
+            m.report()
+        })
+        .collect()
+}
+
+/// Run `traces` colocated with everything placed in `tier`, interleaving
+/// `chunk` events at a time.
+pub fn colocate(
+    cfg: &MachineConfig,
+    tier: TierKind,
+    traces: &[&RecordedTrace],
+    chunk: usize,
+) -> ColocationReport {
+    assert!(!traces.is_empty());
+    let solo = solo_runs(cfg, tier, traces);
+
+    let mut machine = Machine::all_in(cfg, tier);
+    let n = traces.len();
+    // Tenants are separate processes: relocate each one past the largest
+    // footprint so their pages are physically distinct on the machine.
+    let stride = traces
+        .iter()
+        .map(|t| t.footprint_extent())
+        .max()
+        .unwrap_or(0)
+        .next_multiple_of(cfg.page_bytes)
+        + cfg.page_bytes;
+    let mut cursors = vec![0usize; n];
+    let mut clocks = vec![0.0f64; n];
+    let mut done = 0usize;
+    // Round-robin in chunks, favouring the tenant with the smallest
+    // virtual clock so concurrent progress stays realistic.
+    while done < n {
+        // pick unfinished tenant with min clock
+        let i = (0..n)
+            .filter(|&i| cursors[i] < traces[i].len())
+            .min_by(|&a, &b| clocks[a].partial_cmp(&clocks[b]).unwrap())
+            .unwrap();
+        machine.set_clock_ns(clocks[i]);
+        let end = (cursors[i] + chunk).min(traces[i].len());
+        traces[i].replay_range_relocated(&mut machine, cursors[i], end, i as u64 * stride);
+        cursors[i] = end;
+        clocks[i] = machine.clock_ns();
+        if cursors[i] >= traces[i].len() {
+            done += 1;
+        }
+    }
+
+    ColocationReport {
+        colocated_wall_ns: clocks,
+        solo_wall_ns: solo.iter().map(|r| r.wall_ns).collect(),
+        tier,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::env::Env;
+    use crate::trace::TraceRecorder;
+    use crate::util::prng::Rng;
+
+    /// Record a random-access workload trace over `n` u64s.
+    fn record_random(n: usize, accesses: usize, seed: u64) -> RecordedTrace {
+        let mut rec = TraceRecorder::new();
+        let mut env = Env::new(4096, &mut rec);
+        let v = env.tvec::<u64>(n, 1, "buf");
+        let mut rng = Rng::new(seed);
+        for _ in 0..accesses {
+            let i = rng.usize_in(0, n);
+            let _ = v.get(i, &mut env);
+            env.compute(6);
+        }
+        rec.finish()
+    }
+
+    #[test]
+    fn colocation_slows_tenants_down() {
+        let cfg = MachineConfig::default();
+        // working sets big enough to fight over the LLC
+        let a = record_random(3_000_000, 120_000, 1);
+        let b = record_random(3_000_000, 120_000, 2);
+        let rep = colocate(&cfg, TierKind::Cxl, &[&a, &b], 256);
+        for i in 0..2 {
+            assert!(
+                rep.slowdown_pct(i) > 0.0,
+                "tenant {i} should slow down: {}",
+                rep.slowdown_pct(i)
+            );
+        }
+    }
+
+    #[test]
+    fn cxl_colocation_hurts_more_than_dram() {
+        // Fig. 7's headline shape.
+        let cfg = MachineConfig::default();
+        let a = record_random(3_000_000, 150_000, 3);
+        let b = record_random(3_000_000, 150_000, 4);
+        let dram = colocate(&cfg, TierKind::Dram, &[&a, &b], 256);
+        let cxl = colocate(&cfg, TierKind::Cxl, &[&a, &b], 256);
+        let dram_avg = (dram.slowdown_pct(0) + dram.slowdown_pct(1)) / 2.0;
+        let cxl_avg = (cxl.slowdown_pct(0) + cxl.slowdown_pct(1)) / 2.0;
+        assert!(cxl_avg > dram_avg, "cxl={cxl_avg:.1}% dram={dram_avg:.1}%");
+    }
+
+    #[test]
+    fn single_tenant_colocation_matches_solo() {
+        let cfg = MachineConfig::default();
+        let a = record_random(100_000, 20_000, 5);
+        let rep = colocate(&cfg, TierKind::Dram, &[&a], 256);
+        // one tenant: "colocated" == solo modulo chunking (exact here)
+        let sd = rep.slowdown_pct(0);
+        assert!(sd.abs() < 1.0, "sd={sd}");
+    }
+}

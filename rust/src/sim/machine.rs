@@ -1,0 +1,487 @@
+//! The machine: cache + tiered memory + virtual clock.
+//!
+//! `Machine` implements [`Sink`], so a workload streamed into it is
+//! "executed on" the simulated testbed: compute ops advance the clock at
+//! core frequency, accesses filter through the LLC, misses pay the
+//! resident tier's (possibly contended) latency. Attachable observers
+//! (DAMON, heatmap) watch the time-annotated access stream, and an
+//! optional [`Migrator`] is ticked at aggregation intervals to move pages
+//! between tiers at runtime (§4's promotion/demotion thread).
+
+use crate::config::MachineConfig;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::{FixedPlacer, Migration, PagePlacer, TieredMemory};
+use crate::shim::object::MemoryObject;
+use crate::sim::cache::Cache;
+use crate::trace::Sink;
+
+/// Time-annotated observer of the access stream (DAMON, heatmaps).
+pub trait AccessObserver {
+    fn on_access(&mut self, t_ns: f64, addr: u64, bytes: u32, write: bool);
+    fn on_alloc(&mut self, _t_ns: f64, _obj: &MemoryObject) {}
+    fn on_free(&mut self, _t_ns: f64, _obj: &MemoryObject) {}
+    fn on_phase(&mut self, _t_ns: f64, _name: &str) {}
+    /// Called at every aggregation tick with the current virtual time.
+    fn on_tick(&mut self, _t_ns: f64) {}
+    /// Downcast support so callers can take concrete observers back off
+    /// the machine after a run (`Box<dyn Any>::downcast::<Damon>()`).
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any>;
+}
+
+/// Runtime page-migration policy, ticked at aggregation intervals.
+pub trait Migrator {
+    /// Inspect page metadata and return the migrations to perform.
+    fn plan(&mut self, mem: &TieredMemory) -> Vec<Migration>;
+    fn name(&self) -> &str;
+}
+
+/// Final accounting of one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    pub wall_ns: f64,
+    pub compute_ns: f64,
+    pub stall_ns: f64,
+    pub hit_ns: f64,
+    pub migration_stall_ns: f64,
+    pub accesses: u64,
+    pub l3_hits: u64,
+    pub l3_misses: u64,
+    pub dram_misses: u64,
+    pub cxl_misses: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub peak_dram_bytes: u64,
+    pub peak_cxl_bytes: u64,
+}
+
+impl RunReport {
+    /// Memory backend-boundness: share of wall time stalled on memory
+    /// traffic (the paper's VTune metric, Fig. 2's blue line).
+    pub fn boundness(&self) -> f64 {
+        if self.wall_ns <= 0.0 {
+            0.0
+        } else {
+            (self.stall_ns + self.hit_ns) / self.wall_ns
+        }
+    }
+
+    /// Slowdown of this run relative to a baseline run, in percent.
+    pub fn slowdown_pct_vs(&self, base: &RunReport) -> f64 {
+        (self.wall_ns / base.wall_ns - 1.0) * 100.0
+    }
+
+    pub fn l3_hit_rate(&self) -> f64 {
+        let t = self.l3_hits + self.l3_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.l3_hits as f64 / t as f64
+        }
+    }
+}
+
+/// The simulated testbed.
+pub struct Machine {
+    cfg: MachineConfig,
+    pub cache: Cache,
+    pub mem: TieredMemory,
+    placer: Box<dyn PagePlacer>,
+    migrator: Option<Box<dyn Migrator>>,
+    observers: Vec<Box<dyn AccessObserver>>,
+    clock_ns: f64,
+    compute_ns: f64,
+    stall_ns: f64,
+    hit_ns: f64,
+    migration_stall_ns: f64,
+    accesses: u64,
+    dram_misses: u64,
+    cxl_misses: u64,
+    peak_dram: u64,
+    peak_cxl: u64,
+    tick_interval_ns: f64,
+    next_tick_ns: f64,
+    line_bytes: u64,
+    inv_mlp: f64,
+    /// Hardware stream-prefetcher model: expected next line numbers of
+    /// recently detected sequential miss streams. A miss matching an
+    /// entry is bandwidth-bound (the prefetcher already issued it);
+    /// other misses pay demand latency.
+    streams: [u64; 8],
+    stream_cursor: usize,
+}
+
+/// Effective overlap depth of the stream prefetcher: a detected stream
+/// hides all but 1/DEPTH of the demand latency, bottoming out at the
+/// line transfer time (bandwidth-bound).
+const PREFETCH_DEPTH: f64 = 16.0;
+
+impl Machine {
+    pub fn new(cfg: &MachineConfig, placer: Box<dyn PagePlacer>) -> Machine {
+        let cache = Cache::new(cfg.l3_bytes, cfg.cache_line, cfg.l3_ways);
+        let mem = TieredMemory::new(cfg);
+        Machine {
+            cache,
+            mem,
+            placer,
+            migrator: None,
+            observers: Vec::new(),
+            clock_ns: 0.0,
+            compute_ns: 0.0,
+            stall_ns: 0.0,
+            hit_ns: 0.0,
+            migration_stall_ns: 0.0,
+            accesses: 0,
+            dram_misses: 0,
+            cxl_misses: 0,
+            peak_dram: 0,
+            peak_cxl: 0,
+            tick_interval_ns: 100_000.0,
+            next_tick_ns: 100_000.0,
+            line_bytes: cfg.cache_line,
+            inv_mlp: 1.0 / cfg.mlp,
+            streams: [u64::MAX; 8],
+            stream_cursor: 0,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Convenience: machine that places everything in one tier (the
+    /// Fig. 2 pure-DRAM / pure-CXL endpoints).
+    pub fn all_in(cfg: &MachineConfig, kind: TierKind) -> Machine {
+        Machine::new(cfg, Box::new(FixedPlacer { kind }))
+    }
+
+    pub fn config(&self) -> &MachineConfig {
+        &self.cfg
+    }
+
+    pub fn attach_observer(&mut self, obs: Box<dyn AccessObserver>) {
+        self.observers.push(obs);
+    }
+
+    /// Take back the observers (to extract heatmaps/DAMON results).
+    pub fn take_observers(&mut self) -> Vec<Box<dyn AccessObserver>> {
+        std::mem::take(&mut self.observers)
+    }
+
+    pub fn set_migrator(&mut self, m: Box<dyn Migrator>) {
+        self.migrator = Some(m);
+    }
+
+    pub fn set_tick_interval_ns(&mut self, ns: f64) {
+        assert!(ns > 0.0);
+        self.tick_interval_ns = ns;
+        self.next_tick_ns = self.clock_ns + ns;
+    }
+
+    pub fn clock_ns(&self) -> f64 {
+        self.clock_ns
+    }
+
+    /// Jump the clock (colocation interleaving restores per-stream
+    /// clocks; only forward jumps affect the bandwidth windows).
+    pub fn set_clock_ns(&mut self, t: f64) {
+        self.clock_ns = t;
+    }
+
+    #[inline]
+    fn maybe_tick(&mut self) {
+        while self.clock_ns >= self.next_tick_ns {
+            self.next_tick_ns += self.tick_interval_ns;
+            // migration pass
+            if let Some(mut mig) = self.migrator.take() {
+                let plan = mig.plan(&self.mem);
+                let mut moved = 0u64;
+                for m in plan {
+                    if self.mem.migrate(m) {
+                        moved += 1;
+                        // a page copy reads from the source tier and
+                        // writes to the destination tier
+                        let pb = self.mem.page_bytes();
+                        let t = self.clock_ns;
+                        self.mem.tier_mut(m.from).bw.record(t, pb);
+                        self.mem.tier_mut(m.to).bw.record(t, pb);
+                    }
+                }
+                if moved > 0 {
+                    // copy cost: page transfer at the slower tier's
+                    // bandwidth + one latency each way; only a fraction
+                    // stalls the app (background thread does the rest)
+                    let pb = self.mem.page_bytes();
+                    let per_page = self.mem.tier(TierKind::Cxl).params.transfer_ns(pb)
+                        + self.mem.tier(TierKind::Dram).params.latency_ns
+                        + self.mem.tier(TierKind::Cxl).params.latency_ns;
+                    let stall = per_page * moved as f64 * self.cfg.migration_stall_frac;
+                    self.clock_ns += stall;
+                    self.migration_stall_ns += stall;
+                }
+                self.migrator = Some(mig);
+            }
+            for obs in &mut self.observers {
+                obs.on_tick(self.clock_ns);
+            }
+            self.mem.end_window();
+        }
+    }
+
+    /// Finish the run and produce the report.
+    pub fn report(&self) -> RunReport {
+        RunReport {
+            policy: self.placer.name().to_string(),
+            wall_ns: self.clock_ns,
+            compute_ns: self.compute_ns,
+            stall_ns: self.stall_ns,
+            hit_ns: self.hit_ns,
+            migration_stall_ns: self.migration_stall_ns,
+            accesses: self.accesses,
+            l3_hits: self.cache.hits,
+            l3_misses: self.cache.misses,
+            dram_misses: self.dram_misses,
+            cxl_misses: self.cxl_misses,
+            promotions: self.mem.promotions,
+            demotions: self.mem.demotions,
+            peak_dram_bytes: self.peak_dram,
+            peak_cxl_bytes: self.peak_cxl,
+        }
+    }
+}
+
+impl Sink for Machine {
+    fn alloc(&mut self, obj: &MemoryObject) {
+        self.mem.map_object(obj, self.placer.as_mut());
+        self.peak_dram = self.peak_dram.max(self.mem.used(TierKind::Dram));
+        self.peak_cxl = self.peak_cxl.max(self.mem.used(TierKind::Cxl));
+        // an mmap syscall is not free: ~1µs of kernel time
+        self.clock_ns += 1_000.0;
+        for obs in &mut self.observers {
+            obs.on_alloc(self.clock_ns, obj);
+        }
+    }
+
+    fn free(&mut self, obj: &MemoryObject) {
+        // brk heaps don't shrink in practice; release mmap regions only.
+        if obj.via_mmap {
+            self.mem.unmap_object(obj, |_| false);
+        }
+        self.clock_ns += 1_000.0;
+        for obs in &mut self.observers {
+            obs.on_free(self.clock_ns, obj);
+        }
+    }
+
+    #[inline]
+    fn access(&mut self, addr: u64, bytes: u32, write: bool) {
+        self.accesses += 1;
+        if !self.observers.is_empty() {
+            let t = self.clock_ns;
+            for obs in &mut self.observers {
+                obs.on_access(t, addr, bytes, write);
+            }
+        }
+        let clock = self.clock_ns;
+        let line_bytes = self.line_bytes;
+        let inv_mlp = self.inv_mlp;
+        let mem = &mut self.mem;
+        let streams = &mut self.streams;
+        let stream_cursor = &mut self.stream_cursor;
+        let mut stall = 0.0;
+        let mut dram_misses = 0u64;
+        let mut cxl_misses = 0u64;
+        let (hits, _misses) = self.cache.access(addr, bytes, |line_addr| {
+            let p = mem.pages.page_of(line_addr);
+            let page_bytes = mem.page_bytes();
+            let entry = mem.pages.entry(p);
+            let (kind, was_unmapped) = match entry.tier() {
+                Some(k) => (k, false),
+                None => {
+                    // untracked address (workload bookkeeping outside the
+                    // shim): kernel default — local DRAM first-touch
+                    entry.set_tier(TierKind::Dram);
+                    (TierKind::Dram, true)
+                }
+            };
+            entry.touch();
+            if was_unmapped {
+                mem.tier_mut(TierKind::Dram).used_bytes += page_bytes;
+            }
+            // stream-prefetch check: is this line the successor of a
+            // recent sequential miss stream?
+            let line_no = line_addr / line_bytes;
+            let prefetched = match streams.iter().position(|&s| s == line_no) {
+                Some(i) => {
+                    streams[i] = line_no + 1;
+                    true
+                }
+                None => {
+                    streams[*stream_cursor] = line_no + 1;
+                    *stream_cursor = (*stream_cursor + 1) % streams.len();
+                    false
+                }
+            };
+            let tier = mem.tier_mut(kind);
+            tier.bw.record(clock + stall, line_bytes);
+            let factor = tier.bw.factor();
+            let cost = if prefetched {
+                // prefetcher hides demand latency down to the line
+                // transfer time; contention inflates both terms
+                (tier.params.latency_ns / PREFETCH_DEPTH).max(tier.params.transfer_ns(line_bytes))
+                    * factor
+            } else {
+                (tier.params.latency_ns * factor + tier.params.transfer_ns(line_bytes)) * inv_mlp
+            };
+            stall += cost;
+            match kind {
+                TierKind::Dram => dram_misses += 1,
+                TierKind::Cxl => cxl_misses += 1,
+            }
+        });
+        let hit_cost = hits as f64 * self.cfg.l3_hit_ns;
+        self.clock_ns += stall + hit_cost;
+        self.stall_ns += stall;
+        self.hit_ns += hit_cost;
+        self.dram_misses += dram_misses;
+        self.cxl_misses += cxl_misses;
+        self.maybe_tick();
+    }
+
+    #[inline]
+    fn compute(&mut self, cycles: u64) {
+        let ns = cycles as f64 / self.cfg.cycles_per_ns();
+        self.clock_ns += ns;
+        self.compute_ns += ns;
+        self.maybe_tick();
+    }
+
+    fn phase(&mut self, name: &str) {
+        let t = self.clock_ns;
+        for obs in &mut self.observers {
+            obs.on_phase(t, name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::env::Env;
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::default()
+    }
+
+    /// A pointer-chasing microworkload: every access misses once the
+    /// working set exceeds L3. The chase order is a random full cycle so
+    /// there are no short loops that would stay cache-resident.
+    fn chase(env: &mut Env, n: usize, iters: usize) {
+        let mut rng = crate::util::prng::Rng::new(0xC4A5E);
+        let mut perm: Vec<u64> = (0..n as u64).collect();
+        rng.shuffle(&mut perm);
+        let mut data = vec![0u64; n];
+        for k in 0..n {
+            data[perm[k] as usize] = perm[(k + 1) % n];
+        }
+        let v = env.tvec_from(data, "chase");
+        let mut idx = perm[0];
+        for _ in 0..iters {
+            idx = v.get(idx as usize, env);
+            env.compute(4);
+        }
+        std::hint::black_box(idx);
+    }
+
+    #[test]
+    fn cxl_slower_than_dram_for_random_access() {
+        let n = 4_000_000; // 32MB of u64 > 19.25MB L3
+        let run = |kind| {
+            let mut m = Machine::all_in(&cfg(), kind);
+            let mut env = Env::new(4096, &mut m);
+            chase(&mut env, n, 200_000);
+            m.report()
+        };
+        let dram = run(TierKind::Dram);
+        let cxl = run(TierKind::Cxl);
+        assert!(cxl.wall_ns > dram.wall_ns * 1.1, "dram={} cxl={}", dram.wall_ns, cxl.wall_ns);
+        assert!(dram.boundness() > 0.5, "chase should be memory-bound: {}", dram.boundness());
+        assert!(cxl.cxl_misses > 0 && cxl.dram_misses == 0);
+        assert!(dram.dram_misses > 0 && dram.cxl_misses == 0);
+    }
+
+    #[test]
+    fn compute_heavy_sees_little_cxl_impact() {
+        let run = |kind| {
+            let mut m = Machine::all_in(&cfg(), kind);
+            let mut env = Env::new(4096, &mut m);
+            let v = env.tvec::<u64>(1024, 1, "small");
+            for i in 0..50_000 {
+                let x = v.get(i % 1024, &mut env);
+                env.compute(200 + (x % 2));
+            }
+            m.report()
+        };
+        let dram = run(TierKind::Dram);
+        let cxl = run(TierKind::Cxl);
+        let slowdown = cxl.slowdown_pct_vs(&dram);
+        assert!(slowdown < 5.0, "slowdown={slowdown}");
+        assert!(dram.boundness() < 0.2);
+    }
+
+    #[test]
+    fn clock_advances_with_compute() {
+        let mut m = Machine::all_in(&cfg(), TierKind::Dram);
+        m.compute(2600); // 2600 cycles @2.6GHz = 1000ns
+        assert!((m.clock_ns() - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn report_accounting_consistent() {
+        let mut m = Machine::all_in(&cfg(), TierKind::Dram);
+        let mut env = Env::new(4096, &mut m);
+        chase(&mut env, 100_000, 10_000);
+        let r = m.report();
+        assert_eq!(r.accesses, 10_000);
+        assert_eq!(r.l3_hits + r.l3_misses, r.dram_misses + r.cxl_misses + r.l3_hits);
+        // wall = compute + stall + hits + alloc syscalls + migration
+        let explained = r.compute_ns + r.stall_ns + r.hit_ns + r.migration_stall_ns;
+        assert!(r.wall_ns >= explained);
+        assert!(r.wall_ns - explained < 10_000.0); // just the 1µs mmap costs
+    }
+
+    #[test]
+    fn untracked_access_defaults_to_dram() {
+        let mut m = Machine::all_in(&cfg(), TierKind::Cxl);
+        m.access(crate::shim::intercept::HEAP_BASE + 0x100, 8, false);
+        let r = m.report();
+        assert_eq!(r.dram_misses, 1);
+    }
+
+    struct PromoteAll;
+    impl Migrator for PromoteAll {
+        fn plan(&mut self, mem: &TieredMemory) -> Vec<Migration> {
+            mem.pages
+                .iter_mapped()
+                .filter(|(_, m)| m.tier() == Some(TierKind::Cxl) && m.window_accesses > 0)
+                .map(|(p, _)| Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "promote-all"
+        }
+    }
+
+    #[test]
+    fn migrator_promotes_hot_pages() {
+        let mut m = Machine::all_in(&cfg(), TierKind::Cxl);
+        m.set_tick_interval_ns(10_000.0);
+        m.set_migrator(Box::new(PromoteAll));
+        let mut env = Env::new(4096, &mut m);
+        let v = env.tvec::<u64>(512, 0, "hot"); // one page worth
+        for i in 0..20_000 {
+            let _ = v.get(i % 512, &mut env);
+            env.compute(10);
+        }
+        let r = m.report();
+        assert!(r.promotions > 0, "hot page should be promoted");
+        assert!(r.migration_stall_ns > 0.0);
+    }
+}

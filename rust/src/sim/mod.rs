@@ -1,0 +1,15 @@
+//! Execution model: translates a workload's access/compute stream into
+//! virtual time on a machine with an L3 cache and DRAM/CXL tiers.
+//!
+//! This is the substitution for the paper's physical testbed (Table 1):
+//! the same workloads that ran on the dual-socket Xeon run here against
+//! an analytic cache + tier latency model. `Machine` implements
+//! [`crate::trace::Sink`], so workloads stream straight into it.
+
+pub mod cache;
+pub mod colocate;
+pub mod machine;
+
+pub use cache::Cache;
+pub use colocate::{colocate, ColocationReport};
+pub use machine::{Machine, RunReport};

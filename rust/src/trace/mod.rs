@@ -1,0 +1,139 @@
+//! Memory-access traces: the event stream every workload emits and every
+//! consumer (cost-model machine, DAMON monitor, heatmap, recorder)
+//! consumes.
+//!
+//! Workloads *stream* events — they are real algorithms whose data
+//! structures are instrumented (`shim::env`), so traces never need to be
+//! materialized for single-tenant runs. For colocation and offline
+//! heatmap processing a compact [`TraceRecorder`] buffers the stream.
+
+pub mod recorder;
+
+pub use recorder::{RecordedTrace, TraceRecorder};
+
+use crate::shim::object::MemoryObject;
+
+/// Consumer of a workload's instrumented execution.
+///
+/// Calls arrive in program order. `access` granularity is whatever the
+/// workload touched (an element, a line, a buffer chunk); consumers
+/// split/merge to their own granularity (the cache model works on lines,
+/// DAMON on regions, tiers on pages).
+pub trait Sink {
+    /// A tracked allocation entered the address space.
+    fn alloc(&mut self, obj: &MemoryObject);
+    /// A tracked allocation was released.
+    fn free(&mut self, obj: &MemoryObject);
+    /// A memory access at `addr` covering `bytes` bytes.
+    fn access(&mut self, addr: u64, bytes: u32, write: bool);
+    /// Pure compute between memory operations, in core cycles.
+    fn compute(&mut self, cycles: u64);
+    /// Named phase marker (e.g. "build", "iterate") for heatmap axes.
+    fn phase(&mut self, _name: &str) {}
+}
+
+/// A sink that discards everything — used to measure workload-side
+/// overhead and as a placeholder in tests.
+#[derive(Debug, Default, Clone)]
+pub struct NullSink {
+    pub accesses: u64,
+    pub bytes: u64,
+    pub compute_cycles: u64,
+    pub allocs: u64,
+}
+
+impl Sink for NullSink {
+    fn alloc(&mut self, _obj: &MemoryObject) {
+        self.allocs += 1;
+    }
+
+    fn free(&mut self, _obj: &MemoryObject) {}
+
+    fn access(&mut self, _addr: u64, bytes: u32, _write: bool) {
+        self.accesses += 1;
+        self.bytes += bytes as u64;
+    }
+
+    fn compute(&mut self, cycles: u64) {
+        self.compute_cycles += cycles;
+    }
+}
+
+/// Fan a stream out to two sinks (e.g. machine + recorder).
+pub struct TeeSink<'a> {
+    pub a: &'a mut dyn Sink,
+    pub b: &'a mut dyn Sink,
+}
+
+impl<'a> Sink for TeeSink<'a> {
+    fn alloc(&mut self, obj: &MemoryObject) {
+        self.a.alloc(obj);
+        self.b.alloc(obj);
+    }
+
+    fn free(&mut self, obj: &MemoryObject) {
+        self.a.free(obj);
+        self.b.free(obj);
+    }
+
+    fn access(&mut self, addr: u64, bytes: u32, write: bool) {
+        self.a.access(addr, bytes, write);
+        self.b.access(addr, bytes, write);
+    }
+
+    fn compute(&mut self, cycles: u64) {
+        self.a.compute(cycles);
+        self.b.compute(cycles);
+    }
+
+    fn phase(&mut self, name: &str) {
+        self.a.phase(name);
+        self.b.phase(name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn obj() -> MemoryObject {
+        MemoryObject {
+            id: ObjectId(1),
+            start: 0x1000,
+            bytes: 4096,
+            site: "test".into(),
+            seq: 0,
+            via_mmap: true,
+        }
+    }
+
+    #[test]
+    fn null_sink_counts() {
+        let mut s = NullSink::default();
+        s.alloc(&obj());
+        s.access(0x1000, 8, false);
+        s.access(0x1008, 8, true);
+        s.compute(100);
+        assert_eq!(s.accesses, 2);
+        assert_eq!(s.bytes, 16);
+        assert_eq!(s.compute_cycles, 100);
+        assert_eq!(s.allocs, 1);
+    }
+
+    #[test]
+    fn tee_duplicates() {
+        let mut a = NullSink::default();
+        let mut b = NullSink::default();
+        {
+            let mut tee = TeeSink { a: &mut a, b: &mut b };
+            tee.access(0x10, 4, false);
+            tee.compute(7);
+            tee.phase("p");
+        }
+        assert_eq!(a.accesses, 1);
+        assert_eq!(b.accesses, 1);
+        assert_eq!(a.compute_cycles, 7);
+        assert_eq!(b.compute_cycles, 7);
+    }
+}

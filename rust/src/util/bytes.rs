@@ -1,0 +1,74 @@
+//! Byte-size formatting and parsing (`"192GB"`, `"19.25MB"`, …) used by
+//! the config system (Table 1 values) and reports.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Render a byte count with a binary-unit suffix.
+pub fn fmt_bytes(n: u64) -> String {
+    let (val, unit) = if n >= GIB {
+        (n as f64 / GIB as f64, "GiB")
+    } else if n >= MIB {
+        (n as f64 / MIB as f64, "MiB")
+    } else if n >= KIB {
+        (n as f64 / KIB as f64, "KiB")
+    } else {
+        return format!("{n}B");
+    };
+    format!("{}{}", crate::util::fmt_f64(val, 2), unit)
+}
+
+/// Parse sizes like `4096`, `128KB`, `19.25MB`, `192GB`, `2GiB`
+/// (case-insensitive; decimal and binary suffixes both mean binary here,
+/// matching how the paper quotes capacities).
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let lower = t.to_ascii_lowercase();
+    let (num_part, mult) = if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")).or(lower.strip_suffix("g")) {
+        (p, GIB)
+    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")).or(lower.strip_suffix("m")) {
+        (p, MIB)
+    } else if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")).or(lower.strip_suffix("k")) {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix("b") {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let v: f64 = num_part.trim().parse().map_err(|_| format!("bad size: {s:?}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size: {s:?}"));
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("128KB").unwrap(), 128 * KIB);
+        assert_eq!(parse_bytes("19.25MB").unwrap(), (19.25 * MIB as f64) as u64);
+        assert_eq!(parse_bytes("192GB").unwrap(), 192 * GIB);
+        assert_eq!(parse_bytes("2GiB").unwrap(), 2 * GIB);
+        assert_eq!(parse_bytes(" 64 kb ").unwrap(), 64 * KIB);
+    }
+
+    #[test]
+    fn parse_rejects() {
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-5MB").is_err());
+        assert!(parse_bytes("").is_err());
+    }
+
+    #[test]
+    fn fmt_roundtrips_scale() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2 * KIB), "2KiB");
+        assert_eq!(fmt_bytes(19 * MIB + MIB / 4), "19.25MiB");
+        assert_eq!(fmt_bytes(192 * GIB), "192GiB");
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline build image ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `serde`, `criterion`,
+//! `clap`, `proptest`) are unavailable. Everything here is a deliberate,
+//! tested stand-in: a deterministic PRNG, summary statistics, a JSON
+//! reader/writer, ASCII tables, and byte-size formatting.
+
+pub mod bytes;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+/// Format a float with a fixed number of significant-looking decimals,
+/// trimming trailing zeros (used by tables and reports).
+pub fn fmt_f64(v: f64, decimals: usize) -> String {
+    let s = format!("{v:.decimals$}");
+    if s.contains('.') {
+        let t = s.trim_end_matches('0').trim_end_matches('.');
+        if t.is_empty() || t == "-" {
+            "0".to_string()
+        } else {
+            t.to_string()
+        }
+    } else {
+        s
+    }
+}
+
+/// Clamp helper for f64 (std's `clamp` panics on NaN bounds; this never
+/// panics and propagates NaN inputs unchanged).
+pub fn clamp_f64(v: f64, lo: f64, hi: f64) -> f64 {
+    if v < lo {
+        lo
+    } else if v > hi {
+        hi
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_trims_zeros() {
+        assert_eq!(fmt_f64(1.5000, 4), "1.5");
+        assert_eq!(fmt_f64(2.0, 2), "2");
+        assert_eq!(fmt_f64(0.0, 3), "0");
+        assert_eq!(fmt_f64(-0.25, 2), "-0.25");
+    }
+
+    #[test]
+    fn clamp_works() {
+        assert_eq!(clamp_f64(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp_f64(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp_f64(0.5, 0.0, 1.0), 0.5);
+    }
+}

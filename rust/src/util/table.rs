@@ -1,0 +1,165 @@
+//! ASCII table rendering for bench reports and CLI output.
+//!
+//! Every figure/table bench prints its rows through this so the output
+//! visually matches the paper's tables and can be diffed between runs.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignments (defaults to all right-aligned; first column is
+    /// usually a label, so `left_first()` is the common tweak).
+    pub fn aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn left_first(mut self) -> Table {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Table {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let line = |out: &mut String, cells: &[String], aligns: &[Align]| {
+            out.push('|');
+            for i in 0..cols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        out.push(' ');
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(pad + 1));
+                        out.push_str(cell);
+                        out.push(' ');
+                    }
+                }
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        line(&mut out, &self.headers, &vec![Align::Left; cols]);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row, &self.aligns);
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md snippets).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| ");
+        out.push_str(&self.headers.join(" | "));
+        out.push_str(" |\n|");
+        for a in &self.aligns {
+            out.push_str(match a {
+                Align::Left => " :--- |",
+                Align::Right => " ---: |",
+            });
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str("| ");
+            out.push_str(&row.join(" | "));
+            out.push_str(" |\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["workload", "slowdown %"]).left_first();
+        t.row_strs(&["pagerank", "38.2"]);
+        t.row_strs(&["bfs", "31.0"]);
+        let s = t.render();
+        assert!(s.contains("| workload"));
+        assert!(s.contains("pagerank"));
+        // all lines same width
+        let widths: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["k", "v"]).left_first();
+        t.row_strs(&["x", "1"]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| k | v |\n| :--- | ---: |\n| x | 1 |"));
+    }
+}

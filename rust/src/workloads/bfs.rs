@@ -1,0 +1,146 @@
+//! BFS (GAPBS-derived): frontier-based top-down breadth-first search.
+//!
+//! Access pattern: sequential frontier scans + random neighbor lookups
+//! into the `parent` array — the hot object is `parent` (and the CSR
+//! offsets), which is what the paper's Fig. 4 heatmap shows as the
+//! banded hot region.
+
+use crate::shim::env::Env;
+use crate::workloads::graph::CsrGraph;
+use crate::workloads::{mix, Workload};
+
+pub struct Bfs {
+    pub graph: CsrGraph,
+    pub source: u32,
+    /// Cycles of address arithmetic per traversed edge.
+    pub cycles_per_edge: u64,
+}
+
+impl Bfs {
+    pub fn new(graph: CsrGraph, source: u32) -> Bfs {
+        Bfs { graph, source, cycles_per_edge: 4 }
+    }
+
+    /// Untraced reference BFS for correctness tests.
+    pub fn reference_depth_histogram(&self) -> Vec<u32> {
+        let n = self.graph.n();
+        let mut depth = vec![u32::MAX; n];
+        let mut q = std::collections::VecDeque::new();
+        depth[self.source as usize] = 0;
+        q.push_back(self.source);
+        while let Some(v) = q.pop_front() {
+            for &t in self.graph.neighbors(v as usize) {
+                if depth[t as usize] == u32::MAX {
+                    depth[t as usize] = depth[v as usize] + 1;
+                    q.push_back(t);
+                }
+            }
+        }
+        let max_d = depth.iter().filter(|&&d| d != u32::MAX).max().copied().unwrap_or(0);
+        let mut hist = vec![0u32; max_d as usize + 1];
+        for &d in &depth {
+            if d != u32::MAX {
+                hist[d as usize] += 1;
+            }
+        }
+        hist
+    }
+}
+
+impl Workload for Bfs {
+    fn name(&self) -> &str {
+        "bfs"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.graph.n() * 8 + self.graph.m() * 4) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        env.phase("load");
+        let g = self.graph.into_env(env, "bfs");
+        let n = g.n();
+        let mut parent = env.tvec::<u32>(n, u32::MAX, "bfs/parent");
+        let mut frontier = env.tvec::<u32>(n, 0, "bfs/frontier");
+        let mut next = env.tvec::<u32>(n, 0, "bfs/next");
+
+        env.phase("traverse");
+        parent.set(self.source as usize, self.source, env);
+        frontier.set(0, self.source, env);
+        let mut frontier_len = 1usize;
+        let mut visited = 1u64;
+        let mut depth_sum = 0u64;
+        let mut depth = 0u64;
+        while frontier_len > 0 {
+            depth += 1;
+            let mut next_len = 0usize;
+            for fi in 0..frontier_len {
+                let v = frontier.get(fi, env) as usize;
+                let lo = g.offsets.get(v, env) as usize;
+                let hi = g.offsets.get(v + 1, env) as usize;
+                // neighbor list streams at line granularity
+                g.targets.touch_range(lo, hi, false, env);
+                for ei in lo..hi {
+                    let t = g.targets.get_untraced(ei) as usize;
+                    env.compute(self.cycles_per_edge);
+                    if parent.get(t, env) == u32::MAX {
+                        parent.set(t, v as u32, env);
+                        next.set(next_len, t as u32, env);
+                        next_len += 1;
+                        visited += 1;
+                        depth_sum += depth;
+                    }
+                }
+            }
+            std::mem::swap(&mut frontier, &mut next);
+            frontier_len = next_len;
+        }
+        mix(mix(0, visited), depth_sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+    use crate::workloads::graph::{rmat, uniform, CsrGraph};
+
+    #[test]
+    fn bfs_visits_reachable_set() {
+        // path graph 0→1→2→3 plus disconnected 4
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3)]);
+        let w = Bfs::new(g, 0);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let c = w.run(&mut env);
+        // visited=4, depth_sum=1+2+3=6
+        assert_eq!(c, mix(mix(0, 4), 6));
+    }
+
+    #[test]
+    fn bfs_matches_reference_on_rmat() {
+        let g = rmat(10, 8, 3);
+        let w = Bfs::new(g, 0);
+        let hist = w.reference_depth_histogram();
+        let reachable: u32 = hist.iter().sum();
+        let depth_sum: u64 =
+            hist.iter().enumerate().map(|(d, &c)| d as u64 * c as u64).sum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let c = w.run(&mut env);
+        assert_eq!(c, mix(mix(0, reachable as u64), depth_sum));
+        assert!(reachable > 100, "rmat giant component should be reachable");
+    }
+
+    #[test]
+    fn bfs_deterministic_across_runs() {
+        let run = || {
+            let g = uniform(512, 4, 9);
+            let w = Bfs::new(g, 1);
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            (w.run(&mut env), env.access_count())
+        };
+        assert_eq!(run(), run());
+    }
+}

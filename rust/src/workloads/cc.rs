@@ -1,0 +1,135 @@
+//! Connected components (GAPBS-derived): Shiloach–Vishkin style label
+//! propagation over the undirected view of the graph.
+
+use crate::shim::env::Env;
+use crate::workloads::graph::CsrGraph;
+use crate::workloads::{mix, Workload};
+
+pub struct ConnectedComponents {
+    pub graph: CsrGraph,
+    pub cycles_per_edge: u64,
+}
+
+impl ConnectedComponents {
+    pub fn new(graph: CsrGraph) -> ConnectedComponents {
+        ConnectedComponents { graph, cycles_per_edge: 3 }
+    }
+
+    /// Untraced reference: union-find component count + labels checksum.
+    pub fn reference(&self) -> (u64, u64) {
+        let n = self.graph.n();
+        let mut labels: Vec<u32> = (0..n as u32).collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for v in 0..n {
+                for &t in self.graph.neighbors(v) {
+                    let (a, b) = (labels[v], labels[t as usize]);
+                    let m = a.min(b);
+                    if labels[v] != m {
+                        labels[v] = m;
+                        changed = true;
+                    }
+                    if labels[t as usize] != m {
+                        labels[t as usize] = m;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        let mut uniq: Vec<u32> = labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let sum: u64 = labels.iter().map(|&l| l as u64).sum();
+        (uniq.len() as u64, sum)
+    }
+}
+
+impl Workload for ConnectedComponents {
+    fn name(&self) -> &str {
+        "cc"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.graph.n() * 8 + self.graph.m() * 4) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        env.phase("load");
+        let g = self.graph.into_env(env, "cc");
+        let n = g.n();
+        let mut labels = env.tvec_from((0..n as u32).collect(), "cc/labels");
+
+        env.phase("propagate");
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for v in 0..n {
+                let lo = g.offsets.get(v, env) as usize;
+                let hi = g.offsets.get(v + 1, env) as usize;
+                g.targets.touch_range(lo, hi, false, env);
+                for ei in lo..hi {
+                    let t = g.targets.get_untraced(ei) as usize;
+                    env.compute(self.cycles_per_edge);
+                    let a = labels.get(v, env);
+                    let b = labels.get(t, env);
+                    let m = a.min(b);
+                    if a != m {
+                        labels.set(v, m, env);
+                        changed = true;
+                    }
+                    if b != m {
+                        labels.set(t, m, env);
+                        changed = true;
+                    }
+                }
+            }
+        }
+
+        env.phase("reduce");
+        let mut sum = 0u64;
+        labels.scan(0, n, env, |_, l| sum += l as u64);
+        let mut uniq: Vec<u32> = labels.raw().to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        mix(mix(0, uniq.len() as u64), sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+    use crate::workloads::graph::{rmat, CsrGraph};
+
+    #[test]
+    fn two_components_found() {
+        // {0,1,2} and {3,4}
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        let w = ConnectedComponents::new(g);
+        let (count, sum) = w.reference();
+        assert_eq!(count, 2);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), mix(mix(0, count), sum));
+    }
+
+    #[test]
+    fn singleton_vertices_are_components() {
+        let g = CsrGraph::from_edges(4, &[(0, 1)]);
+        let w = ConnectedComponents::new(g);
+        let (count, _) = w.reference();
+        assert_eq!(count, 3); // {0,1}, {2}, {3}
+    }
+
+    #[test]
+    fn traced_matches_reference_on_rmat() {
+        let g = rmat(8, 4, 17);
+        let w = ConnectedComponents::new(g);
+        let (count, sum) = w.reference();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), mix(mix(0, count), sum));
+        assert!(count >= 1);
+    }
+}

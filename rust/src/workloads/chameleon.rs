@@ -1,0 +1,124 @@
+//! Chameleon (FunctionBench-derived): HTML table rendering from a
+//! template — string-heavy, small hot working set, the paper's example
+//! of a *sparse, unpredictable* access pattern with minimal CXL
+//! sensitivity (Fig. 2 low end, Fig. 4 scattered heatmap).
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+pub struct Chameleon {
+    /// Table dimensions to render.
+    pub rows: usize,
+    pub cols: usize,
+    pub seed: u64,
+}
+
+impl Chameleon {
+    pub fn new(rows: usize, cols: usize) -> Chameleon {
+        Chameleon { rows, cols, seed: 0xC0FFEE }
+    }
+
+    fn cell_value(&self, r: usize, c: usize) -> u64 {
+        crate::workloads::mix(self.seed, (r * self.cols + c) as u64) % 100_000
+    }
+}
+
+impl Workload for Chameleon {
+    fn name(&self) -> &str {
+        "chameleon"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.rows * self.cols * 12) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        env.phase("render");
+        // output buffer grows like a rope; model as chunked appends
+        let cap = self.rows * self.cols * 16 + 1024;
+        let mut out = env.tvec::<u8>(cap, 0, "chameleon/out");
+        let mut pos = 0usize;
+        let mut emit = |bytes: &[u8], out: &mut crate::shim::env::TVec<u8>, env: &mut Env| {
+            for &b in bytes {
+                out.set(pos, b, env);
+                pos += 1;
+            }
+        };
+        let mut h = 0u64;
+        emit(b"<table>", &mut out, env);
+        let mut numbuf = [0u8; 20];
+        for r in 0..self.rows {
+            emit(b"<tr>", &mut out, env);
+            for c in 0..self.cols {
+                emit(b"<td>", &mut out, env);
+                let v = self.cell_value(r, c);
+                env.compute(30); // template engine per-cell interpretation
+                let s = format_u64(v, &mut numbuf);
+                emit(s, &mut out, env);
+                emit(b"</td>", &mut out, env);
+                h = mix(h, v);
+            }
+            emit(b"</tr>", &mut out, env);
+        }
+        emit(b"</table>", &mut out, env);
+        mix(h, pos as u64)
+    }
+}
+
+/// Format into a stack buffer without allocating.
+fn format_u64(mut v: u64, buf: &mut [u8; 20]) -> &[u8] {
+    if v == 0 {
+        buf[0] = b'0';
+        return &buf[..1];
+    }
+    let mut i = 20;
+    while v > 0 {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+    }
+    buf.copy_within(i..20, 0);
+    let len = 20 - i;
+    &buf[..len]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn renders_valid_html() {
+        let w = Chameleon::new(10, 5);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let c1 = w.run(&mut env);
+        // deterministic
+        let mut sink2 = NullSink::default();
+        let mut env2 = Env::new(4096, &mut sink2);
+        assert_eq!(c1, w.run(&mut env2));
+        assert!(sink.accesses > 10 * 5 * 9); // at least the tag bytes
+    }
+
+    #[test]
+    fn output_scales_with_table() {
+        let count = |r, c| {
+            let w = Chameleon::new(r, c);
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            w.run(&mut env);
+            sink.accesses
+        };
+        assert!(count(20, 10) > 3 * count(10, 5));
+    }
+
+    #[test]
+    fn format_u64_works() {
+        let mut b = [0u8; 20];
+        assert_eq!(format_u64(0, &mut b), b"0");
+        let mut b = [0u8; 20];
+        assert_eq!(format_u64(12345, &mut b), b"12345");
+        let mut b = [0u8; 20];
+        assert_eq!(format_u64(u64::MAX, &mut b), b"18446744073709551615");
+    }
+}

@@ -1,0 +1,177 @@
+//! Compression (FunctionBench-derived): LZ77-style compression with a
+//! rolling hash chain over synthetic markup-ish text. Sequential input
+//! scan + random hash-table probes — mid-pack CXL sensitivity.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+pub struct Compression {
+    pub input_bytes: usize,
+    pub seed: u64,
+    /// Hash table size (power of two).
+    pub table_size: usize,
+}
+
+impl Compression {
+    pub fn new(input_bytes: usize) -> Compression {
+        Compression { input_bytes, seed: 0x217, table_size: 1 << 16 }
+    }
+
+    /// Synthetic compressible text: words drawn zipf-style from a small
+    /// vocabulary, so real matches exist.
+    fn gen_input(&self) -> Vec<u8> {
+        const VOCAB: &[&str] = &[
+            "the", "serverless", "function", "memory", "tier", "cxl", "dram", "page", "hot",
+            "cold", "placement", "latency", "bandwidth", "object", "porter", "lambda", "invoke",
+            "request", "data", "cache",
+        ];
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.input_bytes + 16);
+        while out.len() < self.input_bytes {
+            let w = VOCAB[rng.zipf(VOCAB.len() as u64, 0.9) as usize];
+            out.extend_from_slice(w.as_bytes());
+            out.push(b' ');
+        }
+        out.truncate(self.input_bytes);
+        out
+    }
+
+    /// Untraced reference compression.
+    pub fn reference(&self) -> (usize, u64) {
+        let input = self.gen_input();
+        compress(&input, self.table_size)
+    }
+}
+
+const MIN_MATCH: usize = 4;
+const MAX_DIST: usize = 1 << 15;
+
+fn hash4(bytes: &[u8], mask: usize) -> usize {
+    let v = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    (v.wrapping_mul(2654435761) >> 16) as usize & mask
+}
+
+/// Returns (compressed length, checksum over tokens). The token stream
+/// is (literal byte) or (dist, len) pairs.
+fn compress(input: &[u8], table_size: usize) -> (usize, u64) {
+    let mask = table_size - 1;
+    let mut table = vec![usize::MAX; table_size];
+    let mut h = 0u64;
+    let mut out_len = 0usize;
+    let mut i = 0usize;
+    while i < input.len() {
+        if i + MIN_MATCH <= input.len() {
+            let slot = hash4(&input[i..], mask);
+            let cand = table[slot];
+            table[slot] = i;
+            if cand != usize::MAX && i - cand <= MAX_DIST {
+                // extend match
+                let mut len = 0;
+                while i + len < input.len() && input[cand + len] == input[i + len] && len < 255 {
+                    len += 1;
+                }
+                if len >= MIN_MATCH {
+                    h = mix(h, ((i - cand) as u64) << 16 | len as u64);
+                    out_len += 3;
+                    i += len;
+                    continue;
+                }
+            }
+        }
+        h = mix(h, input[i] as u64);
+        out_len += 1;
+        i += 1;
+    }
+    (out_len, h)
+}
+
+impl Workload for Compression {
+    fn name(&self) -> &str {
+        "compression"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.input_bytes + self.table_size * 8) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let input_v = self.gen_input();
+        env.phase("load");
+        let input = env.tvec_from(input_v, "compression/input");
+        let mut table = env.tvec::<u64>(self.table_size, u64::MAX, "compression/table");
+        let out = env.tvec::<u8>(self.input_bytes + 64, 0, "compression/out");
+
+        env.phase("compress");
+        let mask = self.table_size - 1;
+        let mut h = 0u64;
+        let mut out_len = 0usize;
+        let mut i = 0usize;
+        let data = input.raw().to_vec(); // real bytes for matching
+        while i < data.len() {
+            // traced read of the 4-byte window
+            input.touch_range(i, (i + 4).min(data.len()), false, env);
+            env.compute(8);
+            if i + MIN_MATCH <= data.len() {
+                let slot = hash4(&data[i..], mask);
+                let cand = table.get(slot, env);
+                table.set(slot, i as u64, env);
+                if cand != u64::MAX && i - cand as usize <= MAX_DIST {
+                    let cand = cand as usize;
+                    let mut len = 0;
+                    while i + len < data.len() && data[cand + len] == data[i + len] && len < 255 {
+                        len += 1;
+                    }
+                    if len >= MIN_MATCH {
+                        // traced read of the back-reference
+                        input.touch_range(cand, cand + len, false, env);
+                        env.compute(len as u64);
+                        h = mix(h, ((i - cand) as u64) << 16 | len as u64);
+                        out.touch_range(out_len, out_len + 3, true, env);
+                        out_len += 3;
+                        i += len;
+                        continue;
+                    }
+                }
+            }
+            h = mix(h, data[i] as u64);
+            out.touch_range(out_len, out_len + 1, true, env);
+            out_len += 1;
+            i += 1;
+        }
+        mix(h, out_len as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn compresses_redundant_text() {
+        let w = Compression::new(64 * 1024);
+        let (out_len, _) = w.reference();
+        assert!(
+            out_len < w.input_bytes / 2,
+            "vocabulary text should compress >2x: {out_len} vs {}",
+            w.input_bytes
+        );
+    }
+
+    #[test]
+    fn incompressible_input_stays_put() {
+        let mut rng = crate::util::prng::Rng::new(1);
+        let random: Vec<u8> = (0..32 * 1024).map(|_| rng.next_u64() as u8).collect();
+        let (out_len, _) = compress(&random, 1 << 14);
+        assert!(out_len as f64 > 0.9 * random.len() as f64);
+    }
+
+    #[test]
+    fn traced_matches_reference() {
+        let w = Compression::new(32 * 1024);
+        let (out_len, h) = w.reference();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), mix(h, out_len as u64));
+    }
+}

@@ -1,0 +1,215 @@
+//! DL training and serving workloads.
+//!
+//! Two halves, matching the paper's split between *memory behaviour* and
+//! *function execution*:
+//!
+//! * **Simulation half (this module)**: [`DlTrain`] / [`DlServe`] emit
+//!   the memory-access structure of MLP training/inference over traced
+//!   objects — weights (hot, reused every step), activations (streamed,
+//!   transient), gradients + optimizer state (training only) — with the
+//!   FMA work as bulk compute. This is what Fig. 2/4/7 need: the access
+//!   pattern, not the numerics.
+//! * **Numerics half (`runtime::` + `python/compile/`)**: the same MLP is
+//!   defined in JAX (L2) over the Pallas matmul kernel (L1), AOT-lowered
+//!   to HLO, and executed natively via PJRT on the serving path
+//!   (`examples/serve_dl.rs`). Python never runs at request time.
+//!
+//! The layer geometry below matches `python/compile/model.py`, so the
+//! simulated traffic and the real executable describe the same network.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+/// Default MLP geometry shared with python/compile/model.py.
+pub const DEFAULT_LAYERS: [usize; 4] = [768, 1024, 1024, 10];
+
+/// One training step = forward + backward + SGD update over every layer.
+pub struct DlTrain {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub steps: usize,
+    /// f32 FMA throughput per cycle (SIMD).
+    pub flops_per_cycle: u64,
+}
+
+impl DlTrain {
+    pub fn new(steps: usize) -> DlTrain {
+        DlTrain { layers: DEFAULT_LAYERS.to_vec(), batch: 64, steps, flops_per_cycle: 16 }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+}
+
+
+impl Workload for DlTrain {
+    fn name(&self) -> &str {
+        "dl_train"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        // params ×3 (weights, grads, momentum) + activations
+        (self.param_count() * 12 + self.batch * self.layers.iter().sum::<usize>() * 4) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let p = self.param_count();
+        let act_elems: usize = self.batch * self.layers.iter().sum::<usize>();
+        env.phase("init");
+        let weights = env.tvec::<f32>(p, 0.01, "dl_train/weights");
+        let grads = env.tvec::<f32>(p, 0.0, "dl_train/grads");
+        let moment = env.tvec::<f32>(p, 0.0, "dl_train/momentum");
+        let acts = env.tvec::<f32>(act_elems, 0.0, "dl_train/activations");
+        let batches = env.tvec::<f32>(self.batch * self.layers[0] * 4, 0.5, "dl_train/input_batches");
+
+        let mut h = 0u64;
+        for step in 0..self.steps {
+            env.phase("forward");
+            // input batch load (rotating over a small batch pool)
+            let in_off = (step % 4) * self.batch * self.layers[0];
+            batches.touch_range(in_off, in_off + self.batch * self.layers[0], false, env);
+            let mut w_off = 0usize;
+            let mut a_off = 0usize;
+            for l in 0..self.layers.len() - 1 {
+                let (din, dout) = (self.layers[l], self.layers[l + 1]);
+                let next_a = a_off + self.batch * din;
+                // GEMM: acts[l] (m×k) · W_l (k×n) → acts[l+1] (m×n)
+                acts.touch_range(a_off, a_off + self.batch * din, false, env);
+                weights.touch_range(w_off, w_off + din * dout, false, env);
+                acts.touch_range(next_a, next_a + self.batch * dout, true, env);
+                env.compute((self.batch * din * dout) as u64 / self.flops_per_cycle);
+                w_off += din * dout + dout;
+                a_off = next_a;
+            }
+            env.phase("backward");
+            // reverse pass: dW = aᵀ·δ and δ' = δ·Wᵀ per layer
+            let mut w_end = p;
+            for l in (0..self.layers.len() - 1).rev() {
+                let (din, dout) = (self.layers[l], self.layers[l + 1]);
+                w_end -= din * dout + dout;
+                // read activations + weights, write grads
+                acts.touch_range(a_off.saturating_sub(self.batch * din), a_off, false, env);
+                weights.touch_range(w_end, w_end + din * dout, false, env);
+                grads.touch_range(w_end, w_end + din * dout, true, env);
+                env.compute(2 * (self.batch * din * dout) as u64 / self.flops_per_cycle);
+                a_off = a_off.saturating_sub(self.batch * din);
+            }
+            env.phase("update");
+            // SGD+momentum: stream weights, grads, momentum
+            weights.touch_range(0, p, false, env);
+            grads.touch_range(0, p, false, env);
+            moment.touch_range(0, p, false, env);
+            moment.touch_range(0, p, true, env);
+            weights.touch_range(0, p, true, env);
+            env.compute(3 * p as u64 / self.flops_per_cycle);
+            h = mix(h, step as u64);
+        }
+        mix(h, p as u64)
+    }
+}
+
+/// Inference: forward pass only, small batch, weights dominate traffic.
+pub struct DlServe {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub requests: usize,
+    pub flops_per_cycle: u64,
+}
+
+impl DlServe {
+    pub fn new(requests: usize) -> DlServe {
+        DlServe { layers: DEFAULT_LAYERS.to_vec(), batch: 8, requests, flops_per_cycle: 16 }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+}
+
+impl Workload for DlServe {
+    fn name(&self) -> &str {
+        "dl_serve"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.param_count() * 4 + self.batch * self.layers.iter().sum::<usize>() * 4) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let p = self.param_count();
+        env.phase("init");
+        let weights = env.tvec::<f32>(p, 0.01, "dl_serve/weights");
+        let act_elems: usize = self.batch * self.layers.iter().sum::<usize>();
+        let acts = env.tvec::<f32>(act_elems, 0.0, "dl_serve/activations");
+
+        env.phase("serve");
+        let mut h = 0u64;
+        for r in 0..self.requests {
+            let mut w_off = 0usize;
+            let mut a_off = 0usize;
+            for l in 0..self.layers.len() - 1 {
+                let (din, dout) = (self.layers[l], self.layers[l + 1]);
+                let next_a = a_off + self.batch * din;
+                acts.touch_range(a_off, a_off + self.batch * din, false, env);
+                weights.touch_range(w_off, w_off + din * dout, false, env);
+                acts.touch_range(next_a, next_a + self.batch * dout, true, env);
+                env.compute((self.batch * din * dout) as u64 / self.flops_per_cycle);
+                w_off += din * dout + dout;
+                a_off = next_a;
+            }
+            h = mix(h, r as u64);
+        }
+        mix(h, p as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn train_weights_are_hot() {
+        let w = DlTrain::new(4);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        w.run(&mut env);
+        // weights object should exist and training touches it every step
+        let objs = env.objects();
+        assert!(objs.iter().any(|o| o.site == "dl_train/weights"));
+        assert!(sink.accesses > 0);
+    }
+
+    #[test]
+    fn serve_traffic_scales_with_requests() {
+        let count = |req| {
+            let w = DlServe::new(req);
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            w.run(&mut env);
+            sink.bytes
+        };
+        let b1 = count(2);
+        let b2 = count(8);
+        assert!(b2 as f64 > 3.0 * b1 as f64);
+    }
+
+    #[test]
+    fn param_count_matches_geometry() {
+        let t = DlTrain::new(1);
+        // 768·1024+1024 + 1024·1024+1024 + 1024·10+10
+        assert_eq!(t.param_count(), 768 * 1024 + 1024 + 1024 * 1024 + 1024 + 1024 * 10 + 10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let w = DlTrain::new(2);
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            (w.run(&mut env), sink.accesses, sink.bytes)
+        };
+        assert_eq!(run(), run());
+    }
+}

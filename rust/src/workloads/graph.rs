@@ -1,0 +1,207 @@
+//! Graph substrate for the GAPBS-derived workloads: CSR representation +
+//! synthetic generators.
+//!
+//! The paper evaluates BFS/PageRank on the Twitter graph. Twitter is not
+//! shippable, so the RMAT/Kronecker generator (the GAPBS default for
+//! synthetic inputs) reproduces its power-law degree skew: a small set of
+//! celebrity vertices absorbs most edges, which is precisely the
+//! structure that makes hot-object DRAM placement effective. A uniform
+//! (Erdős–Rényi-style) generator provides the contrast case.
+
+use crate::shim::env::{Env, TVec};
+use crate::util::prng::Rng;
+
+/// Compressed-sparse-row directed graph held in *untraced* memory — the
+/// generator side. Workloads load it into traced memory via
+/// [`CsrGraph::into_env`].
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// n+1 offsets into `targets`.
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+}
+
+impl CsrGraph {
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.targets[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Build a CSR from an edge list.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> CsrGraph {
+        let mut deg = vec![0u32; n];
+        for &(s, _) in edges {
+            deg[s as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut targets = vec![0u32; edges.len()];
+        let mut cursor = offsets.clone();
+        for &(s, t) in edges {
+            targets[cursor[s as usize] as usize] = t;
+            cursor[s as usize] += 1;
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    /// Reverse (transpose) graph — PageRank's pull direction.
+    pub fn transpose(&self) -> CsrGraph {
+        let n = self.n();
+        let edges: Vec<(u32, u32)> = (0..n)
+            .flat_map(|v| self.neighbors(v).iter().map(move |&t| (t, v as u32)))
+            .collect();
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    /// Move the graph into traced memory: the function's working set as
+    /// the shim sees it (two mmap'd objects: offsets and targets).
+    pub fn into_env(&self, env: &mut Env, prefix: &str) -> TracedCsr {
+        let offsets = env.tvec_from(self.offsets.clone(), &format!("{prefix}/offsets"));
+        let targets = env.tvec_from(self.targets.clone(), &format!("{prefix}/targets"));
+        TracedCsr { offsets, targets }
+    }
+}
+
+/// CSR resident in traced memory.
+pub struct TracedCsr {
+    pub offsets: TVec<u32>,
+    pub targets: TVec<u32>,
+}
+
+impl TracedCsr {
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+/// RMAT (Kronecker) generator with GAPBS's (a,b,c,d) = (.57,.19,.19,.05).
+/// Produces Twitter-like skew: degree distribution is power-law.
+pub fn rmat(scale: u32, avg_degree: usize, seed: u64) -> CsrGraph {
+    let n = 1usize << scale;
+    let m = n * avg_degree;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut s, mut t) = (0usize, 0usize);
+        for _ in 0..scale {
+            s <<= 1;
+            t <<= 1;
+            let r = rng.f64();
+            if r < 0.57 {
+                // top-left quadrant
+            } else if r < 0.76 {
+                t |= 1;
+            } else if r < 0.95 {
+                s |= 1;
+            } else {
+                s |= 1;
+                t |= 1;
+            }
+        }
+        edges.push((s as u32, t as u32));
+    }
+    // GAPBS permutes vertex ids so degree is uncorrelated with id;
+    // we keep raw RMAT ids: the correlation concentrates hot vertices at
+    // low addresses, which is the structure the heatmaps (Fig. 4) show.
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Uniform random graph: every edge endpoint uniform — the no-skew
+/// contrast to RMAT.
+pub fn uniform(n: usize, avg_degree: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let m = n * avg_degree;
+    let edges: Vec<(u32, u32)> = (0..m)
+        .map(|_| (rng.gen_range(n as u64) as u32, rng.gen_range(n as u64) as u32))
+        .collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_builds_valid_csr() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (3, 0)]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        assert_eq!(g.neighbors(3), &[0]);
+    }
+
+    #[test]
+    fn transpose_reverses() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        let t = g.transpose();
+        assert_eq!(t.neighbors(1), &[0]);
+        let mut n2 = t.neighbors(2).to_vec();
+        n2.sort();
+        assert_eq!(n2, vec![0, 1]);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(12, 8, 42);
+        assert_eq!(g.n(), 4096);
+        assert_eq!(g.m(), 4096 * 8);
+        let mut degs: Vec<usize> = (0..g.n()).map(|v| g.degree(v)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // top 1% of vertices should hold a disproportionate share of edges
+        let top: usize = degs[..g.n() / 100].iter().sum();
+        assert!(
+            top as f64 > 0.15 * g.m() as f64,
+            "top1% share = {}",
+            top as f64 / g.m() as f64
+        );
+        // and the max degree dwarfs the average
+        assert!(degs[0] > 8 * 10);
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let g = uniform(4096, 8, 7);
+        let max_deg = (0..g.n()).map(|v| g.degree(v)).max().unwrap();
+        assert!(max_deg < 40, "max degree {max_deg} too skewed for uniform");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = rmat(8, 4, 1);
+        let b = rmat(8, 4, 1);
+        assert_eq!(a.targets, b.targets);
+        let c = rmat(8, 4, 2);
+        assert_ne!(a.targets, c.targets);
+    }
+
+    #[test]
+    fn into_env_registers_objects() {
+        use crate::trace::NullSink;
+        let g = rmat(8, 4, 1);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let t = g.into_env(&mut env, "g");
+        assert_eq!(t.n(), g.n());
+        assert_eq!(env.objects().len(), 2);
+        assert!(env.objects().iter().any(|o| o.site == "g/offsets"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Image processing (SeBS/FunctionBench-derived): thumbnail pipeline —
+//! gaussian blur then 2× box downsample over a synthetic RGBA image.
+//! Streaming row-major sweeps with a short vertical stencil: moderate
+//! bandwidth demand, little temporal reuse (the paper's "sparse,
+//! unpredictable" class alongside Chameleon).
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+pub struct ImageProc {
+    pub width: usize,
+    pub height: usize,
+    pub seed: u64,
+}
+
+impl ImageProc {
+    pub fn new(width: usize, height: usize) -> ImageProc {
+        ImageProc { width, height, seed: 0x1A6E }
+    }
+
+    fn gen_pixels(&self) -> Vec<u32> {
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        (0..self.width * self.height).map(|_| rng.next_u64() as u32).collect()
+    }
+
+    /// Untraced reference pipeline.
+    pub fn reference_checksum(&self) -> u64 {
+        let src = self.gen_pixels();
+        let blurred = blur3(&src, self.width, self.height);
+        let thumb = downsample2(&blurred, self.width, self.height);
+        checksum(&thumb)
+    }
+}
+
+/// 3×3 box blur on packed RGBA (channel-wise).
+fn blur3(src: &[u32], w: usize, h: usize) -> Vec<u32> {
+    let mut out = vec![0u32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = [0u32; 4];
+            let mut cnt = 0u32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let (nx, ny) = (x as i64 + dx, y as i64 + dy);
+                    if nx >= 0 && ny >= 0 && (nx as usize) < w && (ny as usize) < h {
+                        let p = src[ny as usize * w + nx as usize];
+                        for ch in 0..4 {
+                            acc[ch] += (p >> (ch * 8)) & 0xFF;
+                        }
+                        cnt += 1;
+                    }
+                }
+            }
+            let mut px = 0u32;
+            for ch in 0..4 {
+                px |= (acc[ch] / cnt) << (ch * 8);
+            }
+            out[y * w + x] = px;
+        }
+    }
+    out
+}
+
+/// 2×2 average downsample.
+fn downsample2(src: &[u32], w: usize, h: usize) -> Vec<u32> {
+    let (ow, oh) = (w / 2, h / 2);
+    let mut out = vec![0u32; ow * oh];
+    for y in 0..oh {
+        for x in 0..ow {
+            let mut acc = [0u32; 4];
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    let p = src[(y * 2 + dy) * w + x * 2 + dx];
+                    for ch in 0..4 {
+                        acc[ch] += (p >> (ch * 8)) & 0xFF;
+                    }
+                }
+            }
+            let mut px = 0u32;
+            for ch in 0..4 {
+                px |= (acc[ch] / 4) << (ch * 8);
+            }
+            out[y * ow + x] = px;
+        }
+    }
+    out
+}
+
+fn checksum(px: &[u32]) -> u64 {
+    px.iter().fold(0u64, |h, &p| mix(h, p as u64))
+}
+
+impl Workload for ImageProc {
+    fn name(&self) -> &str {
+        "image"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.width * self.height * 4 * 2) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let (w, h) = (self.width, self.height);
+        env.phase("load");
+        let src = env.tvec_from(self.gen_pixels(), "image/src");
+        let mut blur = env.tvec::<u32>(w * h, 0, "image/blur");
+
+        env.phase("blur");
+        // traffic: per output row, read the 3 input rows + write output;
+        // compute: 9 taps × 4 channels per pixel
+        for y in 0..h {
+            for dy in -1i64..=1 {
+                let ny = y as i64 + dy;
+                if ny >= 0 && (ny as usize) < h {
+                    src.touch_range(ny as usize * w, (ny as usize + 1) * w, false, env);
+                }
+            }
+            blur.touch_range(y * w, (y + 1) * w, true, env);
+            env.compute((w * 40) as u64);
+        }
+        let blurred = blur3(src.raw(), w, h);
+        blur.raw_mut().copy_from_slice(&blurred);
+
+        env.phase("thumbnail");
+        let (ow, oh) = (w / 2, h / 2);
+        let mut thumb = env.tvec::<u32>(ow * oh, 0, "image/thumb");
+        for y in 0..oh {
+            blur.touch_range(y * 2 * w, (y * 2 + 2) * w, false, env);
+            thumb.touch_range(y * ow, (y + 1) * ow, true, env);
+            env.compute((ow * 12) as u64);
+        }
+        let t = downsample2(blur.raw(), w, h);
+        thumb.raw_mut().copy_from_slice(&t);
+        checksum(thumb.raw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn traced_matches_reference() {
+        let w = ImageProc::new(64, 48);
+        let expect = w.reference_checksum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), expect);
+    }
+
+    #[test]
+    fn blur_preserves_constant_image() {
+        let src = vec![0x40404040u32; 16 * 16];
+        let out = blur3(&src, 16, 16);
+        assert!(out.iter().all(|&p| p == 0x40404040), "constant image stays constant");
+    }
+
+    #[test]
+    fn downsample_halves_dims() {
+        let src = vec![0u32; 8 * 6];
+        let out = downsample2(&src, 8, 6);
+        assert_eq!(out.len(), 4 * 3);
+    }
+
+    #[test]
+    fn downsample_averages() {
+        // 2x2 image with channel-0 values 0,2,4,6 → avg 3
+        let src = vec![0, 2, 4, 6];
+        let out = downsample2(&src, 2, 2);
+        assert_eq!(out[0] & 0xFF, 3);
+    }
+}

@@ -1,0 +1,110 @@
+//! JSON serialization/deserialization (FunctionBench-derived): build a
+//! synthetic record batch, serialize with the crate's JSON writer, parse
+//! it back, and fold a checksum. Allocation-churny, small hot set — low
+//! CXL sensitivity.
+
+use crate::shim::env::Env;
+use crate::util::json::Json;
+use crate::workloads::{mix, Workload};
+
+pub struct JsonSer {
+    pub records: usize,
+    pub seed: u64,
+}
+
+impl JsonSer {
+    pub fn new(records: usize) -> JsonSer {
+        JsonSer { records, seed: 0x1503 }
+    }
+}
+
+impl JsonSer {
+    fn build(&self) -> Json {
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        Json::arr((0..self.records).map(|i| {
+            Json::obj(vec![
+                ("id", Json::num(i as f64)),
+                ("user", Json::str(format!("user-{}", rng.gen_range(10_000)))),
+                ("score", Json::num((rng.f64() * 1000.0).round() / 10.0)),
+                ("active", Json::Bool(rng.chance(0.5))),
+                (
+                    "tags",
+                    Json::arr((0..rng.gen_range(4)).map(|_| Json::str(format!("t{}", rng.gen_range(100))))),
+                ),
+            ])
+        }))
+    }
+
+    pub fn reference_checksum(&self) -> u64 {
+        let doc = self.build();
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        checksum(&parsed, text.len())
+    }
+}
+
+fn checksum(doc: &Json, text_len: usize) -> u64 {
+    let mut h = mix(0, text_len as u64);
+    if let Json::Arr(items) = doc {
+        for item in items {
+            if let Some(v) = item.get("score").and_then(|s| s.as_f64()) {
+                h = mix(h, (v * 10.0) as u64);
+            }
+        }
+    }
+    h
+}
+
+impl Workload for JsonSer {
+    fn name(&self) -> &str {
+        "json"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.records * 128) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        env.phase("build");
+        let doc = self.build();
+        env.compute((self.records * 120) as u64);
+
+        env.phase("serialize");
+        let text = doc.to_string_compact();
+        let buf = env.tvec_from(text.clone().into_bytes(), "json/text");
+        // serializer writes the buffer once
+        buf.touch_range(0, buf.len(), true, env);
+        env.compute((text.len() * 4) as u64);
+
+        env.phase("parse");
+        // parser scans the buffer once with per-token bookkeeping
+        buf.touch_range(0, buf.len(), false, env);
+        env.compute((text.len() * 10) as u64);
+        let parsed = Json::parse(&text).unwrap();
+
+        checksum(&parsed, text.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn roundtrip_checksum_stable() {
+        let w = JsonSer::new(200);
+        let expect = w.reference_checksum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), expect);
+        assert!(sink.accesses > 100);
+    }
+
+    #[test]
+    fn output_grows_with_records() {
+        let small = JsonSer::new(50).build().to_string_compact().len();
+        let big = JsonSer::new(500).build().to_string_compact().len();
+        assert!(big > 8 * small);
+    }
+}

@@ -1,0 +1,144 @@
+//! In-memory KV store (vSwarm/RAMCloud-flavoured): open-addressing hash
+//! table serving a zipf-skewed get/put mix. Random probes over a large
+//! table with a strong hot set — high CXL sensitivity, and a clear
+//! winner from hot-page DRAM placement.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+pub struct KvStore {
+    /// Number of resident keys.
+    pub keys: usize,
+    /// Operations to serve.
+    pub ops: usize,
+    /// Zipf skew of key popularity.
+    pub theta: f64,
+    /// Fraction of ops that are writes.
+    pub write_frac: f64,
+    pub value_words: usize,
+    pub seed: u64,
+}
+
+impl KvStore {
+    pub fn new(keys: usize, ops: usize) -> KvStore {
+        KvStore { keys, ops, theta: 0.99, write_frac: 0.1, value_words: 4, seed: 0x5707E }
+    }
+
+    fn capacity(&self) -> usize {
+        (self.keys * 2).next_power_of_two()
+    }
+}
+
+#[inline]
+fn khash(k: u64) -> u64 {
+    let mut x = k.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 32;
+    x.wrapping_mul(0xD6E8FEB86659FD93)
+}
+
+impl Workload for KvStore {
+    fn name(&self) -> &str {
+        "kvstore"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.capacity() * (8 + self.value_words * 8)) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let cap = self.capacity();
+        let mask = (cap - 1) as u64;
+        env.phase("load");
+        // slot 0 of each entry: key+1 (0 = empty); values in a parallel arena
+        let mut slots = env.tvec::<u64>(cap, 0, "kvstore/slots");
+        let mut values = env.tvec::<u64>(cap * self.value_words, 0, "kvstore/values");
+
+        // preload keys 0..keys (traced: the store is built by the function
+        // from its input payload)
+        for k in 0..self.keys as u64 {
+            let mut idx = khash(k) & mask;
+            loop {
+                let cur = slots.get(idx as usize, env);
+                env.compute(4);
+                if cur == 0 {
+                    slots.set(idx as usize, k + 1, env);
+                    for wi in 0..self.value_words {
+                        values.set(idx as usize * self.value_words + wi, khash(k ^ wi as u64), env);
+                    }
+                    break;
+                }
+                idx = (idx + 1) & mask;
+            }
+        }
+
+        env.phase("serve");
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        let mut h = 0u64;
+        let mut found = 0u64;
+        for _ in 0..self.ops {
+            // zipf rank → key (rank 0 = hottest)
+            let k = rng.zipf(self.keys as u64, self.theta);
+            let is_write = rng.chance(self.write_frac);
+            // per-request server work: parse, hash, build response
+            env.compute(110);
+            let mut idx = khash(k) & mask;
+            loop {
+                let cur = slots.get(idx as usize, env);
+                env.compute(6);
+                if cur == k + 1 {
+                    if is_write {
+                        let w = rng.next_u64();
+                        values.set(idx as usize * self.value_words, w, env);
+                        h = mix(h, w);
+                    } else {
+                        let v = values.get(idx as usize * self.value_words, env);
+                        h = mix(h, v);
+                    }
+                    found += 1;
+                    break;
+                }
+                if cur == 0 {
+                    break; // miss (can't happen for k < keys, kept for safety)
+                }
+                idx = (idx + 1) & mask;
+            }
+        }
+        mix(h, found)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn all_gets_hit() {
+        let w = KvStore::new(1000, 5000);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let c = w.run(&mut env);
+        assert_ne!(c, 0);
+        // deterministic
+        let mut sink2 = NullSink::default();
+        let mut env2 = Env::new(4096, &mut sink2);
+        assert_eq!(c, w.run(&mut env2));
+    }
+
+    #[test]
+    fn skew_concentrates_accesses() {
+        // With theta=0.99, the top key should be served far more often
+        // than a mid-rank key; probe it via the RNG directly.
+        let mut rng = crate::util::prng::Rng::new(1);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[rng.zipf(1000, 0.99) as usize] += 1;
+        }
+        assert!(counts[0] > 30 * counts[500].max(1));
+    }
+
+    #[test]
+    fn footprint_scales_with_keys() {
+        assert!(KvStore::new(100_000, 1).footprint_hint() > 10 * KvStore::new(5_000, 1).footprint_hint());
+    }
+}

@@ -1,0 +1,235 @@
+//! Linpack (FunctionBench-derived): solve a dense linear system via
+//! blocked LU factorization (no pivoting — the generated system is made
+//! strictly diagonally dominant, the standard benchmark trick) followed
+//! by triangular solves.
+//!
+//! The paper singles out "linear equation solving" as one of the heavier
+//! CXL victims: the trailing-matrix updates stream panels from memory at
+//! O(n³/b) line traffic over an O(n²) footprint larger than the LLC.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix_f64, Workload};
+
+pub struct Linpack {
+    pub n: usize,
+    pub block: usize,
+    pub simd_flops_per_cycle: u64,
+    pub seed: u64,
+}
+
+impl Linpack {
+    pub fn new(n: usize) -> Linpack {
+        Linpack { n, block: 64, simd_flops_per_cycle: 8, seed: 0x11A9 }
+    }
+
+    /// Diagonally dominant system: A = U(-1,1) + n·I, b = A·1.
+    fn gen(&self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n;
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        let mut a: Vec<f64> = (0..n * n).map(|_| rng.f64_in(-1.0, 1.0)).collect();
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        let b: Vec<f64> = (0..n).map(|i| a[i * n..(i + 1) * n].iter().sum()).collect();
+        (a, b)
+    }
+
+    /// Factor in place (blocked, right-looking), then solve. Shared by
+    /// the traced run and the untraced reference.
+    fn lu_and_solve(a: &mut [f64], rhs: &[f64], n: usize, b: usize) -> Vec<f64> {
+        let nb = n.div_ceil(b);
+        for kb in 0..nb {
+            let k0 = kb * b;
+            let k1 = (k0 + b).min(n);
+            // 1. unblocked LU of the diagonal block
+            for k in k0..k1 {
+                let pivot = a[k * n + k];
+                for i in k + 1..k1 {
+                    let l = a[i * n + k] / pivot;
+                    a[i * n + k] = l;
+                    for j in k + 1..k1 {
+                        a[i * n + j] -= l * a[k * n + j];
+                    }
+                }
+            }
+            // 2a. row panel: U12 = L11⁻¹ · A[k0..k1][k1..n]
+            for k in k0..k1 {
+                for i in k + 1..k1 {
+                    let l = a[i * n + k];
+                    for j in k1..n {
+                        a[i * n + j] -= l * a[k * n + j];
+                    }
+                }
+            }
+            // 2b. column panel: L21 = A[k1..n][k0..k1] · U11⁻¹
+            for i in k1..n {
+                for k in k0..k1 {
+                    let mut v = a[i * n + k];
+                    for p in k0..k {
+                        v -= a[i * n + p] * a[p * n + k];
+                    }
+                    a[i * n + k] = v / a[k * n + k];
+                }
+            }
+            // 3. trailing update: A22 -= L21 · U12
+            for i in k1..n {
+                for k in k0..k1 {
+                    let l = a[i * n + k];
+                    for j in k1..n {
+                        a[i * n + j] -= l * a[k * n + j];
+                    }
+                }
+            }
+        }
+        // forward substitution (L has unit diagonal)
+        let mut y = rhs.to_vec();
+        for i in 0..n {
+            for j in 0..i {
+                y[i] = y[i] - a[i * n + j] * y[j];
+            }
+        }
+        // back substitution
+        let mut x = y;
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                x[i] = x[i] - a[i * n + j] * x[j];
+            }
+            x[i] /= a[i * n + i];
+        }
+        x
+    }
+
+    fn checksum(x: &[f64]) -> u64 {
+        // solution should be ≈ 1 everywhere
+        let max_err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+        let sum: f64 = x.iter().sum();
+        mix_f64(mix_f64(0, sum), (max_err * 1e3).round())
+    }
+
+    pub fn reference_checksum(&self) -> u64 {
+        let (mut a, rhs) = self.gen();
+        let x = Self::lu_and_solve(&mut a, &rhs, self.n, self.block);
+        Self::checksum(&x)
+    }
+}
+
+impl Workload for Linpack {
+    fn name(&self) -> &str {
+        "linpack"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.n * self.n * 8) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let n = self.n;
+        let b = self.block.min(n);
+        let (av, rhs_v) = self.gen();
+        env.phase("load");
+        let mut a = env.tvec_from(av, "linpack/matrix");
+        let rhs = env.tvec_from(rhs_v, "linpack/rhs");
+
+        env.phase("factorize");
+        // Emit the traffic of the blocked factorization: the trailing
+        // update dominates — for every (i-row, k-panel) pair, one read
+        // pass over rows of U12 and the updated row.
+        let nb = n.div_ceil(b);
+        for kb in 0..nb {
+            let k0 = kb * b;
+            let k1 = (k0 + b).min(n);
+            // diagonal block: resident, one read+write pass
+            for i in k0..k1 {
+                a.touch_range(i * n + k0, i * n + k1, false, env);
+                a.touch_range(i * n + k0, i * n + k1, true, env);
+            }
+            env.compute(((k1 - k0) as u64).pow(3) / 3 / self.simd_flops_per_cycle);
+            // row panel update
+            for i in k0..k1 {
+                a.touch_range(i * n + k1, i * n + n, false, env);
+                a.touch_range(i * n + k1, i * n + n, true, env);
+            }
+            env.compute(((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2 / self.simd_flops_per_cycle);
+            // column panel
+            for i in k1..n {
+                a.touch_range(i * n + k0, i * n + k1, false, env);
+                a.touch_range(i * n + k0, i * n + k1, true, env);
+            }
+            env.compute(((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2 / self.simd_flops_per_cycle);
+            // trailing update: for each row i and panel row k, stream the
+            // U12 row and the target row
+            for i in k1..n {
+                for k in k0..k1 {
+                    a.touch_range(k * n + k1, k * n + n, false, env);
+                    env.compute((n - k1) as u64 / self.simd_flops_per_cycle + 2);
+                }
+                a.touch_range(i * n + k1, i * n + n, true, env);
+            }
+        }
+        // the real arithmetic, once (identical result to interleaving)
+        let x = {
+            let rhs_raw = rhs.raw().to_vec();
+            Self::lu_and_solve(a.raw_mut(), &rhs_raw, n, b)
+        };
+
+        env.phase("solve");
+        // triangular solves: one pass over the factored matrix
+        for i in 0..n {
+            a.touch_range(i * n, i * n + i + 1, false, env);
+            env.compute(i as u64 / self.simd_flops_per_cycle + 1);
+        }
+        for i in (0..n).rev() {
+            a.touch_range(i * n + i, i * n + n, false, env);
+            env.compute((n - i) as u64 / self.simd_flops_per_cycle + 1);
+        }
+
+        Self::checksum(&x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn solves_accurately() {
+        let w = Linpack { n: 96, block: 32, simd_flops_per_cycle: 8, seed: 3 };
+        let (mut a, rhs) = w.gen();
+        let x = Linpack::lu_and_solve(&mut a, &rhs, w.n, w.block);
+        for v in &x {
+            assert!((v - 1.0).abs() < 1e-9, "x={v}");
+        }
+    }
+
+    #[test]
+    fn blocked_equals_unblocked() {
+        let w = Linpack { n: 64, block: 64, simd_flops_per_cycle: 8, seed: 5 };
+        let (mut a1, rhs) = w.gen();
+        let x1 = Linpack::lu_and_solve(&mut a1, &rhs, 64, 64); // single block = unblocked
+        let (mut a2, _) = w.gen();
+        let x2 = Linpack::lu_and_solve(&mut a2, &rhs, 64, 16);
+        for (u, v) in x1.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn traced_matches_reference() {
+        let w = Linpack { n: 128, block: 32, simd_flops_per_cycle: 8, seed: 9 };
+        let expect = w.reference_checksum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), expect);
+    }
+
+    #[test]
+    fn non_multiple_block_sizes_work() {
+        let w = Linpack { n: 100, block: 32, simd_flops_per_cycle: 8, seed: 11 };
+        let (mut a, rhs) = w.gen();
+        let x = Linpack::lu_and_solve(&mut a, &rhs, 100, 32);
+        for v in &x {
+            assert!((v - 1.0).abs() < 1e-8);
+        }
+    }
+}

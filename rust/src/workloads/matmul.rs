@@ -1,0 +1,161 @@
+//! Matrix multiplication (FunctionBench-derived): blocked single-
+//! precision GEMM, the workload the paper colocates against in Fig. 7
+//! and the CPU analogue of the DL hot loop.
+//!
+//! Traffic convention: each block operand load/store is emitted at
+//! cache-line granularity via `touch_range`; the register-blocked FMAs
+//! inside a block-GEMM are bulk compute (SIMD width folded in).
+
+use crate::shim::env::Env;
+use crate::workloads::{mix_f64, Workload};
+
+pub struct MatMul {
+    /// Square matrix dimension.
+    pub n: usize,
+    /// Block (tile) edge.
+    pub block: usize,
+    /// Effective FMA throughput: cycles per block-GEMM = b³ / simd_flops.
+    pub simd_flops_per_cycle: u64,
+    pub seed: u64,
+}
+
+impl MatMul {
+    pub fn new(n: usize) -> MatMul {
+        MatMul { n, block: 64, simd_flops_per_cycle: 16, seed: 0xA11CE }
+    }
+
+    fn gen(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        let a: Vec<f32> = (0..self.n * self.n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..self.n * self.n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+        (a, b)
+    }
+
+    /// Untraced reference: checksum of C = A·B computed naively.
+    pub fn reference_checksum(&self) -> u64 {
+        let (a, b) = self.gen();
+        let n = self.n;
+        let mut c = vec![0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let aik = a[i * n + k];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[k * n + j];
+                }
+            }
+        }
+        Self::checksum(&c, n)
+    }
+
+    fn checksum(c: &[f32], n: usize) -> u64 {
+        // trace of C plus one corner — rounded to absorb FMA-order noise
+        let trace: f64 = (0..n).map(|i| c[i * n + i] as f64).sum();
+        let h = mix_f64(0, (trace * 100.0).round() / 100.0);
+        mix_f64(h, ((c[n - 1] as f64) * 100.0).round() / 100.0)
+    }
+}
+
+impl Workload for MatMul {
+    fn name(&self) -> &str {
+        "matmul"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (3 * self.n * self.n * 4) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let n = self.n;
+        let b = self.block.min(n);
+        assert_eq!(n % b, 0, "n must be a multiple of block");
+        let (av, bv) = self.gen();
+        env.phase("load");
+        let a = env.tvec_from(av, "matmul/a");
+        let bm = env.tvec_from(bv, "matmul/b");
+        let mut c = env.tvec::<f32>(n * n, 0.0, "matmul/c");
+
+        env.phase("gemm");
+        let nb = n / b;
+        let cycles_per_block_gemm = (b * b * b) as u64 / self.simd_flops_per_cycle;
+        for bi in 0..nb {
+            for bj in 0..nb {
+                // C tile resident across the k loop: load once, store once
+                for r in 0..b {
+                    let row = (bi * b + r) * n + bj * b;
+                    c.touch_range(row, row + b, false, env);
+                }
+                for bk in 0..nb {
+                    // stream A(bi,bk) and B(bk,bj) tiles
+                    for r in 0..b {
+                        let arow = (bi * b + r) * n + bk * b;
+                        a.touch_range(arow, arow + b, false, env);
+                    }
+                    for r in 0..b {
+                        let brow = (bk * b + r) * n + bj * b;
+                        bm.touch_range(brow, brow + b, false, env);
+                    }
+                    env.compute(cycles_per_block_gemm);
+                    // the real arithmetic
+                    let (ar, br, cr) = (a.raw(), bm.raw(), c.raw_mut());
+                    for i in bi * b..(bi + 1) * b {
+                        for k in bk * b..(bk + 1) * b {
+                            let aik = ar[i * n + k];
+                            let crow = &mut cr[i * n + bj * b..i * n + (bj + 1) * b];
+                            let brow = &br[k * n + bj * b..k * n + (bj + 1) * b];
+                            for (cv, bv) in crow.iter_mut().zip(brow) {
+                                *cv += aik * bv;
+                            }
+                        }
+                    }
+                }
+                for r in 0..b {
+                    let row = (bi * b + r) * n + bj * b;
+                    c.touch_range(row, row + b, true, env);
+                }
+            }
+        }
+
+        env.phase("reduce");
+        Self::checksum(c.raw(), n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let w = MatMul { n: 128, block: 32, simd_flops_per_cycle: 16, seed: 7 };
+        let expect = w.reference_checksum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), expect);
+    }
+
+    #[test]
+    fn traffic_scales_with_n_cubed_over_b() {
+        let count = |n: usize, b: usize| {
+            let w = MatMul { n, block: b, simd_flops_per_cycle: 16, seed: 1 };
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            w.run(&mut env);
+            sink.accesses
+        };
+        let small = count(64, 32);
+        let big = count(128, 32);
+        // n doubles → ~8× block-gemm count → ~8× traffic (C tiles minor)
+        let ratio = big as f64 / small as f64;
+        assert!(ratio > 5.0 && ratio < 9.0, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unaligned_block() {
+        let w = MatMul { n: 100, block: 64, simd_flops_per_cycle: 16, seed: 1 };
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        w.run(&mut env);
+    }
+}

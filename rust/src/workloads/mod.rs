@@ -1,0 +1,81 @@
+//! The serverless workload suite (derived from the suites the paper
+//! ports to OpenFaaS: SeBS, FunctionBench, vSwarm, GAPBS).
+//!
+//! Every workload is a *real algorithm* — BFS truly traverses, LU truly
+//! factorizes, the KV store truly serves gets — executed over
+//! instrumented [`crate::shim::Env`] memory so the machine under test
+//! sees the genuine access pattern. Each returns a checksum validated by
+//! unit tests against an untraced reference.
+//!
+//! Granularity convention: data movement is emitted per element touch;
+//! register-resident arithmetic between touches is accounted as bulk
+//! `env.compute(cycles)`. This matches what the paper's tooling observes
+//! (DAMON/VTune see memory traffic and stall cycles, not ALU µops).
+
+pub mod bfs;
+pub mod cc;
+pub mod chameleon;
+pub mod compression;
+pub mod dl;
+pub mod graph;
+pub mod image;
+pub mod json_ser;
+pub mod kvstore;
+pub mod linpack;
+pub mod matmul;
+pub mod pagerank;
+pub mod registry;
+pub mod sort;
+
+use crate::shim::env::Env;
+
+/// A serverless function body.
+pub trait Workload {
+    /// Registry name (Fig. 2 x-axis label).
+    fn name(&self) -> &str;
+
+    /// Execute against an instrumented environment. Returns a checksum
+    /// of the result so tests can verify the algorithm really ran.
+    fn run(&self, env: &mut Env) -> u64;
+
+    /// Rough live-data footprint in bytes (for scaling decisions).
+    fn footprint_hint(&self) -> u64 {
+        0
+    }
+}
+
+/// Mix a u64 into a running checksum (order-sensitive).
+#[inline]
+pub fn mix(h: u64, v: u64) -> u64 {
+    let mut x = h ^ v.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 29;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^ (x >> 32)
+}
+
+/// Checksum an f64 with tolerance-friendly quantization (so tiny
+/// float-order differences don't change the sum).
+#[inline]
+pub fn mix_f64(h: u64, v: f64) -> u64 {
+    mix(h, (v * 1e6).round() as i64 as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_order_sensitive() {
+        let a = mix(mix(0, 1), 2);
+        let b = mix(mix(0, 2), 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix_f64_tolerates_noise() {
+        let a = mix_f64(0, 1.0000000001);
+        let b = mix_f64(0, 1.0000000002);
+        assert_eq!(a, b);
+        assert_ne!(mix_f64(0, 1.0), mix_f64(0, 1.1));
+    }
+}

@@ -1,0 +1,141 @@
+//! Workload registry: name → factory, with the two instance scales used
+//! across the repo (Small for tests, Default for the figure benches).
+
+use crate::workloads::bfs::Bfs;
+use crate::workloads::cc::ConnectedComponents;
+use crate::workloads::chameleon::Chameleon;
+use crate::workloads::compression::Compression;
+use crate::workloads::dl::{DlServe, DlTrain};
+use crate::workloads::graph::rmat;
+use crate::workloads::image::ImageProc;
+use crate::workloads::json_ser::JsonSer;
+use crate::workloads::kvstore::KvStore;
+use crate::workloads::linpack::Linpack;
+use crate::workloads::matmul::MatMul;
+use crate::workloads::pagerank::PageRank;
+use crate::workloads::sort::Sort;
+use crate::workloads::Workload;
+
+/// Instance scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-fast instances for unit/integration tests.
+    Small,
+    /// The figure-bench instances: working sets sized well past the
+    /// 19.25 MB LLC so tier placement matters, traces in the tens of
+    /// millions of events.
+    Default,
+}
+
+/// Graph seeds fixed so the "Twitter-like" input is identical across
+/// profile and placement runs (ASLR-off analogue for inputs).
+pub const GRAPH_SEED: u64 = 0x7417E2;
+
+/// All registry names, in the order benches iterate them.
+pub const NAMES: [&str; 13] = [
+    "pagerank", "bfs", "cc", "kvstore", "linpack", "dl_train", "sort", "compression",
+    "dl_serve", "matmul", "image", "chameleon", "json",
+];
+
+/// Instantiate a workload by registry name.
+pub fn build(name: &str, scale: Scale) -> Option<Box<dyn Workload + Send + Sync>> {
+    let small = scale == Scale::Small;
+    Some(match name {
+        "bfs" => {
+            // Default: parent array (32MiB) well past the 19.25MiB LLC —
+            // the Twitter-like regime where hot-object placement pays.
+            let g = if small { rmat(10, 8, GRAPH_SEED) } else { rmat(23, 6, GRAPH_SEED) };
+            Box::new(Bfs::new(g, 0))
+        }
+        "pagerank" => {
+            // Default: contrib/rank arrays 32MiB each (> LLC).
+            let (g, iters) =
+                if small { (rmat(10, 8, GRAPH_SEED), 3) } else { (rmat(22, 6, GRAPH_SEED), 2) };
+            Box::new(PageRank::new(g, iters))
+        }
+        "cc" => {
+            let g = if small { rmat(9, 6, GRAPH_SEED) } else { rmat(18, 8, GRAPH_SEED) };
+            Box::new(ConnectedComponents::new(g))
+        }
+        "linpack" => {
+            // Default uses a daxpy-ish narrow block: low arithmetic
+            // intensity (the netlib-Linpack regime the paper observes as
+            // heavily CXL-impacted), matrix 32MiB > LLC.
+            let mut l = Linpack::new(if small { 128 } else { 2048 });
+            if !small {
+                l.block = 16;
+            }
+            Box::new(l)
+        }
+        "matmul" => Box::new(MatMul::new(if small { 128 } else { 1024 })),
+        "chameleon" => {
+            Box::new(if small { Chameleon::new(64, 16) } else { Chameleon::new(2000, 24) })
+        }
+        "image" => Box::new(if small { ImageProc::new(128, 96) } else { ImageProc::new(3840, 2160) }),
+        "compression" => Box::new(Compression::new(if small { 64 << 10 } else { 24 << 20 })),
+        "json" => Box::new(JsonSer::new(if small { 200 } else { 40_000 })),
+        "kvstore" => {
+            Box::new(if small { KvStore::new(4_000, 20_000) } else { KvStore::new(6_000_000, 2_000_000) })
+        }
+        "sort" => Box::new(Sort::new(if small { 20_000 } else { 8_000_000 })),
+        "dl_train" => {
+            // Default: ResNet-scale parameter footprint (80MiB ≫ LLC);
+            // Small keeps the PJRT-artifact geometry.
+            Box::new(if small {
+                DlTrain::new(2)
+            } else {
+                DlTrain { layers: vec![768, 4096, 4096, 10], batch: 64, steps: 10, flops_per_cycle: 16 }
+            })
+        }
+        "dl_serve" => Box::new(if small {
+            DlServe::new(4)
+        } else {
+            DlServe { layers: vec![768, 4096, 4096, 10], batch: 8, requests: 30, flops_per_cycle: 16 }
+        }),
+        _ => return None,
+    })
+}
+
+/// The full Fig. 2 suite at the given scale.
+pub fn suite(scale: Scale) -> Vec<Box<dyn Workload + Send + Sync>> {
+    NAMES.iter().map(|n| build(n, scale).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::env::Env;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn every_name_builds() {
+        for name in NAMES {
+            let w = build(name, Scale::Small).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(w.name(), name);
+        }
+        assert!(build("nonsense", Scale::Small).is_none());
+    }
+
+    #[test]
+    fn small_suite_runs_everything() {
+        for w in suite(Scale::Small) {
+            let mut sink = NullSink::default();
+            let (c, n_objs, n_accesses) = {
+                let mut env = Env::new(4096, &mut sink);
+                let c = w.run(&mut env);
+                (c, env.objects().len(), env.access_count())
+            };
+            assert!(n_accesses > 0, "{} emitted no accesses", w.name());
+            assert!(n_objs >= 1, "{} allocated nothing", w.name());
+            std::hint::black_box(c);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut v = NAMES.to_vec();
+        v.sort();
+        v.dedup();
+        assert_eq!(v.len(), NAMES.len());
+    }
+}

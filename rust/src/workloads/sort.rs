@@ -1,0 +1,139 @@
+//! Sort (FunctionBench "sorting" class): bottom-up merge sort over a
+//! large u64 array. Two streaming operands + one streaming output per
+//! pass — bandwidth-bound with zero temporal reuse across passes, so the
+//! CXL hit comes from bandwidth rather than latency.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, Workload};
+
+pub struct Sort {
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl Sort {
+    pub fn new(n: usize) -> Sort {
+        Sort { n, seed: 0x5027 }
+    }
+
+    fn gen(&self) -> Vec<u64> {
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        (0..self.n).map(|_| rng.next_u64()).collect()
+    }
+
+    pub fn reference_checksum(&self) -> u64 {
+        let mut v = self.gen();
+        v.sort_unstable();
+        checksum(&v)
+    }
+}
+
+fn checksum(v: &[u64]) -> u64 {
+    // sample 64 evenly spaced elements of the sorted output
+    let mut h = 0u64;
+    let step = (v.len() / 64).max(1);
+    for i in (0..v.len()).step_by(step) {
+        h = mix(h, v[i]);
+    }
+    mix(h, v.len() as u64)
+}
+
+impl Workload for Sort {
+    fn name(&self) -> &str {
+        "sort"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        (self.n * 16) as u64
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        env.phase("load");
+        let mut a = env.tvec_from(self.gen(), "sort/a");
+        let mut b = env.tvec::<u64>(self.n, 0, "sort/b");
+        let n = self.n;
+
+        env.phase("sort");
+        let mut width = 1usize;
+        let mut src_is_a = true;
+        while width < n {
+            // one merge pass: stream src (two runs at a time) → dst
+            {
+                let (src, dst): (&mut crate::shim::env::TVec<u64>, &mut crate::shim::env::TVec<u64>) =
+                    if src_is_a { (&mut a, &mut b) } else { (&mut b, &mut a) };
+                let mut lo = 0usize;
+                while lo < n {
+                    let mid = (lo + width).min(n);
+                    let hi = (lo + 2 * width).min(n);
+                    // traffic: read both runs, write the merged run
+                    src.touch_range(lo, hi, false, env);
+                    dst.touch_range(lo, hi, true, env);
+                    env.compute(((hi - lo) * 3) as u64);
+                    // real merge
+                    let s = src.raw();
+                    let mut merged = Vec::with_capacity(hi - lo);
+                    let (mut i, mut j) = (lo, mid);
+                    while i < mid && j < hi {
+                        if s[i] <= s[j] {
+                            merged.push(s[i]);
+                            i += 1;
+                        } else {
+                            merged.push(s[j]);
+                            j += 1;
+                        }
+                    }
+                    merged.extend_from_slice(&s[i..mid]);
+                    merged.extend_from_slice(&s[j..hi]);
+                    dst.raw_mut()[lo..hi].copy_from_slice(&merged);
+                    lo = hi;
+                }
+            }
+            src_is_a = !src_is_a;
+            width *= 2;
+        }
+        let result = if src_is_a { a.raw() } else { b.raw() };
+        checksum(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn sorts_correctly() {
+        let w = Sort::new(10_000);
+        let expect = w.reference_checksum();
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        assert_eq!(w.run(&mut env), expect);
+    }
+
+    #[test]
+    fn non_power_of_two_sizes() {
+        for n in [1, 2, 3, 1000, 1023, 1025] {
+            let w = Sort { n, seed: 5 };
+            let expect = w.reference_checksum();
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            assert_eq!(w.run(&mut env), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn traffic_is_n_log_n() {
+        let count = |n: usize| {
+            let w = Sort { n, seed: 5 };
+            let mut sink = NullSink::default();
+            let mut env = Env::new(4096, &mut sink);
+            w.run(&mut env);
+            sink.bytes
+        };
+        let b1 = count(1 << 12);
+        let b2 = count(1 << 14);
+        // 4× elements, +2 passes: bytes ratio ≈ 4 * 14/12 ≈ 4.7
+        let ratio = b2 as f64 / b1 as f64;
+        assert!(ratio > 4.0 && ratio < 6.0, "ratio={ratio}");
+    }
+}

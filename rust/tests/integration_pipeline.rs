@@ -1,0 +1,150 @@
+//! Integration: the full §3 pipeline (workload → machine → DAMON →
+//! hints → static placement) across modules, at test scale.
+
+use porter::config::Config;
+use porter::mem::tier::TierKind;
+use porter::monitor::{Damon, ExactHeatmap, Heatmap, TopDown};
+use porter::placement::static_place::{profile_and_place, run_plain};
+use porter::placement::HeatClass;
+use porter::sim::{colocate, Machine};
+use porter::trace::TraceRecorder;
+use porter::workloads::graph::rmat;
+use porter::workloads::kvstore::KvStore;
+use porter::workloads::pagerank::PageRank;
+use porter::workloads::registry::{suite, Scale, GRAPH_SEED};
+use porter::workloads::Workload;
+
+/// Every suite workload: CXL must never be faster than DRAM, and the
+/// result must be identical on both tiers.
+#[test]
+fn suite_cxl_never_faster_and_results_stable() {
+    let cfg = Config::default();
+    for w in suite(Scale::Small) {
+        let (dram, sum_d) = run_plain(&cfg, w.as_ref(), TierKind::Dram);
+        let (cxl, sum_c) = run_plain(&cfg, w.as_ref(), TierKind::Cxl);
+        assert_eq!(sum_d, sum_c, "{}: tier changed the computation", w.name());
+        assert!(
+            cxl.wall_ns >= dram.wall_ns * 0.999,
+            "{}: cxl ({}) faster than dram ({})",
+            w.name(),
+            cxl.wall_ns,
+            dram.wall_ns
+        );
+        // accounting sanity
+        assert_eq!(dram.cxl_misses, 0, "{}: dram run touched cxl", w.name());
+        assert_eq!(cxl.dram_misses, 0, "{}: cxl run touched dram", w.name());
+        let b = TopDown::from_report(&dram);
+        assert!(b.memory_bound_frac >= 0.0 && b.memory_bound_frac <= 1.0);
+    }
+}
+
+/// The virtual-time model is exactly deterministic.
+#[test]
+fn virtual_time_deterministic() {
+    let cfg = Config::default();
+    let w = KvStore::new(10_000, 50_000);
+    let (a, _) = run_plain(&cfg, &w, TierKind::Cxl);
+    let (b, _) = run_plain(&cfg, &w, TierKind::Cxl);
+    assert_eq!(a.wall_ns, b.wall_ns);
+    assert_eq!(a.l3_misses, b.l3_misses);
+}
+
+/// Placement pipeline on a kvstore: the zipf-hot slots should make the
+/// hint classify at least one object, and hinted must beat pure CXL.
+#[test]
+fn kvstore_hinted_beats_pure_cxl() {
+    let mut cfg = Config::default();
+    cfg.porter.dram_budget_frac = 0.5;
+    // LLC-busting store
+    let w = KvStore::new(1_500_000, 600_000);
+    let r = profile_and_place(&cfg, &w);
+    assert_eq!(r.checksums[1], r.checksums[2]);
+    assert!(
+        r.hinted.wall_ns < r.all_cxl.wall_ns,
+        "hinted {} vs cxl {}",
+        r.hinted.wall_ns,
+        r.all_cxl.wall_ns
+    );
+    assert!(r.hint.objects.iter().any(|o| o.class == HeatClass::Hot));
+}
+
+/// DAMON vs exact ground truth: the sampled heatmap must agree with the
+/// exact one on where the hot half of the address space is.
+#[test]
+fn damon_heatmap_tracks_exact_heatmap() {
+    let cfg = Config::default();
+    let w = PageRank::new(rmat(13, 8, GRAPH_SEED), 3);
+    let mut machine = Machine::all_in(&cfg.machine, TierKind::Cxl);
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    machine.attach_observer(Box::new(Damon::new(&cfg.monitor, cfg.machine.page_bytes, 5)));
+    let base = porter::shim::intercept::MMAP_BASE;
+    let span = 64 << 20;
+    machine.attach_observer(Box::new(ExactHeatmap::new(base, base + span, 32, 1e5)));
+    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+    w.run(&mut env);
+    drop(env);
+    let mut obs = machine.take_observers();
+    let exact = obs.pop().unwrap().into_any().downcast::<ExactHeatmap>().unwrap().finish();
+    let damon = obs.pop().unwrap().into_any().downcast::<Damon>().unwrap();
+    let dmap = Heatmap::from_damon(&damon.snapshots, base, base + span, 32, 8);
+
+    // column (address-bin) heat vectors should correlate positively
+    let col = |m: &Heatmap, a: usize| -> f64 { (0..m.time_bins).map(|t| m.at(t, a)).sum() };
+    let e: Vec<f64> = (0..32).map(|a| col(&exact, a)).collect();
+    let d: Vec<f64> = (0..32).map(|a| col(&dmap, a)).collect();
+    let hot_exact: Vec<usize> = top_half(&e);
+    let hot_damon: Vec<usize> = top_half(&d);
+    let overlap = hot_exact.iter().filter(|i| hot_damon.contains(i)).count();
+    assert!(
+        overlap * 2 >= hot_exact.len(),
+        "DAMON hot-bin overlap too low: {overlap}/{}",
+        hot_exact.len()
+    );
+}
+
+fn top_half(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(xs.len() / 2);
+    idx
+}
+
+/// Colocation: pairwise colocated runs are slower than solo and CXL
+/// colocation is worse than DRAM colocation (Fig. 7's invariant) for
+/// cache-contending tenants.
+#[test]
+fn colocation_invariants() {
+    let cfg = Config::default();
+    let record = |seed: u64| {
+        let mut rec = TraceRecorder::new();
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut rec);
+        let w = KvStore { keys: 800_000, ops: 120_000, theta: 0.6, write_frac: 0.2, value_words: 4, seed };
+        w.run(&mut env);
+        rec.finish()
+    };
+    let a = record(1);
+    let b = record(2);
+    let dram = colocate(&cfg.machine, TierKind::Dram, &[&a, &b], 256);
+    let cxl = colocate(&cfg.machine, TierKind::Cxl, &[&a, &b], 256);
+    for i in 0..2 {
+        assert!(dram.slowdown_pct(i) > -1.0);
+        assert!(cxl.slowdown_pct(i) > -1.0);
+    }
+    let dram_avg = (dram.slowdown_pct(0) + dram.slowdown_pct(1)) / 2.0;
+    let cxl_avg = (cxl.slowdown_pct(0) + cxl.slowdown_pct(1)) / 2.0;
+    assert!(cxl_avg > dram_avg, "cxl {cxl_avg:.2}% <= dram {dram_avg:.2}%");
+}
+
+/// A custom machine config flows through the whole pipeline: with zero
+/// CXL latency penalty and equal bandwidth, the tiers behave identically.
+#[test]
+fn equal_tiers_mean_no_slowdown() {
+    let mut cfg = Config::default();
+    cfg.machine.cxl_latency_ns = cfg.machine.dram_latency_ns;
+    cfg.machine.cxl_bw_gbps = cfg.machine.dram_bw_gbps;
+    let w = KvStore::new(200_000, 100_000);
+    let (dram, _) = run_plain(&cfg, &w, TierKind::Dram);
+    let (cxl, _) = run_plain(&cfg, &w, TierKind::Cxl);
+    let sd = cxl.wall_ns / dram.wall_ns - 1.0;
+    assert!(sd.abs() < 0.005, "equal tiers produced {sd:.4} slowdown");
+}

