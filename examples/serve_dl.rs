@@ -2,7 +2,9 @@
 //!
 //! * Layer 1/2 (build time): `make artifacts` lowered the Pallas-kernel
 //!   MLP to HLO text.
-//! * Runtime: rust loads the artifacts via PJRT, **trains** the MLP on a
+//! * Runtime: rust loads the artifact manifest (native reference
+//!   interpreter; the PJRT path lives in git history), **trains** the
+//!   MLP on a
 //!   synthetic classification task for a few hundred steps (logging the
 //!   loss curve), then **serves** batched inference requests through the
 //!   Porter gateway, reporting latency/throughput and SLO outcomes while
@@ -48,10 +50,10 @@ fn gen_batch(rng: &mut Rng, d_in: usize, batch: usize, proj: &[f32]) -> (Vec<f32
     (x, y)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> porter::util::error::Result<()> {
     // ---------- load the AOT artifacts (request path: no Python) ----------
     let rt = ModelRuntime::load(ArtifactManifest::default_dir())?;
-    println!("PJRT platform: {}  artifacts: {:?}", rt.platform(), {
+    println!("runtime platform: {}  artifacts: {:?}", rt.platform(), {
         let mut names: Vec<_> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
         names.sort();
         names
@@ -66,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0xD1);
     let proj: Vec<f32> = (0..10 * d_in).map(|_| rng.normal() as f32).collect();
     let mut params = MlpParams::init(&layers, 7);
-    println!("\ntraining {}-param MLP for {steps} steps (batch {train_batch}) via PJRT:", params.param_count());
+    println!("\ntraining {}-param MLP for {steps} steps (batch {train_batch}) natively:", params.param_count());
     let t0 = std::time::Instant::now();
     let mut first_loss = None;
     let mut last_loss = 0.0;
@@ -93,7 +95,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- phase 2: serve through the Porter gateway ----------
     // The gateway decides *memory placement* for the function (simulated
-    // tiers); the actual inference runs on the PJRT executable.
+    // tiers); the actual inference runs on the native runtime.
     let requests = env_usize("SERVE_DL_REQUESTS", 64);
     let mut cfg = Config::default();
     cfg.porter.servers = 2;
@@ -101,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     let mut gw = Gateway::new(&cfg);
     gw.deploy(FunctionSpec::new("dl_serve", Arc::new(DlServe::new(40))));
 
-    // Serving uses the XLA-fused artifact when present: on the CPU PJRT
+    // Serving prefers the XLA-fused artifact when present: on a CPU PJRT
     // backend the interpret-mode Pallas kernel lowers to un-fused loop
     // HLO (validation build); the fused build is the CPU-production one.
     // See EXPERIMENTS.md §Perf (L2).
@@ -140,6 +142,6 @@ fn main() -> anyhow::Result<()> {
         "  placement: {hint_hits}/{requests} invocations used the cached hint (first invocation profiles)"
     );
     gw.shutdown();
-    println!("\nend-to-end OK: L1 Pallas kernel → L2 JAX MLP → HLO → rust PJRT serving under Porter.");
+    println!("\nend-to-end OK: L1 Pallas kernel → L2 JAX MLP → HLO artifacts → native rust serving under Porter.");
     Ok(())
 }

@@ -1,0 +1,204 @@
+//! End-to-end fleet bench: open-loop arrivals over 1→16 nodes × three
+//! arrival shapes, with the shared CXL pool contended throughout.
+//!
+//! The offered load is calibrated against single-node capacity (2× —
+//! an overloaded single node) so the sweep shows real queueing relief
+//! as nodes are added. Reports virtual-time p50/p99 e2e latency, queue
+//! wait, cost proxy, and the determinism token per configuration, and
+//! writes the whole series to `BENCH_cluster.json` at the repo root so
+//! future PRs have a perf trajectory to compare against.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_cluster
+
+use porter::bench::{fmt_ns, BenchConfig, BenchSuite, FigureReport};
+use porter::cluster::simulate;
+use porter::config::Config;
+use porter::util::json::Json;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.functions = 6;
+    cfg.cluster.zipf_theta = 0.9;
+    cfg.cluster.seed = 0xC1;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.workers_per_server = 4;
+    cfg.cluster.min_nodes = 1;
+    cfg.cluster.max_nodes = 32;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let node_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let shapes = ["poisson", "bursty", "diurnal"];
+    let duration_s = if quick { 0.25 } else { 0.5 };
+
+    // each sample is a full fleet run (with real measurement executions
+    // inside), so keep the host-timing sample count small
+    let mut suite = BenchSuite::new("e2e: fleet simulation (cluster/) — nodes × arrival shapes")
+        .with_config(BenchConfig {
+            warmup_iters: 1,
+            sample_iters: 3,
+            max_time: std::time::Duration::from_secs(60),
+        });
+
+    // ---- calibrate offered load to 2.5× single-node capacity ----
+    // enough calibration arrivals that warm (hinted) service dominates
+    // the mean, not the handful of profile runs
+    let mut cal = base_cfg();
+    cal.cluster.nodes = 1;
+    cal.cluster.rate_per_s = 500.0;
+    cal.cluster.duration_s = 0.2;
+    let cal_report = simulate(&cal).expect("calibration run");
+    let mean_service_s = (cal_report.mean_service_ns / 1e9).max(1e-6);
+    let single_node_capacity =
+        cal.cluster.servers_per_node as f64 * cal.cluster.workers_per_server as f64
+            / mean_service_s;
+    let rate = 2.5 * single_node_capacity;
+    suite.section(format!(
+        "calibration: mean service {} → 1-node capacity {:.0} inv/s → offered load {:.0} inv/s",
+        fmt_ns(cal_report.mean_service_ns),
+        single_node_capacity,
+        rate
+    ));
+
+    // ---- the sweep ----
+    let mut fig = FigureReport::new(
+        "fleet-scaling",
+        "e2e p99 vs node count under 2.5× single-node load",
+        &["p99_ms", "p50_ms", "mean_wait_ms", "throughput_per_s", "cost_units"],
+    );
+    let mut series = Vec::new();
+    for shape in shapes {
+        for &n in node_counts {
+            let mut cfg = base_cfg();
+            cfg.cluster.nodes = n;
+            cfg.cluster.arrivals = shape.to_string();
+            cfg.cluster.rate_per_s = rate;
+            cfg.cluster.duration_s = duration_s;
+            let r = simulate(&cfg).expect("fleet run");
+            fig.row(
+                &format!("{shape}/{n}n"),
+                vec![
+                    r.fleet_p99_ns as f64 / 1e6,
+                    r.fleet_p50_ns as f64 / 1e6,
+                    r.mean_wait_ns / 1e6,
+                    r.throughput_per_s,
+                    r.cost_units,
+                ],
+            );
+            series.push(Json::obj(vec![
+                ("shape", Json::str(shape)),
+                ("nodes", Json::num(n as f64)),
+                ("completed", Json::num(r.completed as f64)),
+                ("p50_ns", Json::num(r.fleet_p50_ns as f64)),
+                ("p99_ns", Json::num(r.fleet_p99_ns as f64)),
+                ("mean_ns", Json::num(r.fleet_mean_ns)),
+                ("mean_wait_ns", Json::num(r.mean_wait_ns)),
+                ("mean_service_ns", Json::num(r.mean_service_ns)),
+                ("throughput_per_s", Json::num(r.throughput_per_s)),
+                ("violation_rate", Json::num(r.violation_rate)),
+                ("pool_peak_occupancy", Json::num(r.pool_peak_occupancy)),
+                ("node_seconds", Json::num(r.node_seconds)),
+                ("cost_units", Json::num(r.cost_units)),
+                ("determinism_token", Json::str(format!("{:#018x}", r.determinism_token))),
+            ]));
+            eprintln!(
+                "  {shape}/{n}n: p99 {} wait {} cost {:.1}",
+                fmt_ns(r.fleet_p99_ns as f64),
+                fmt_ns(r.mean_wait_ns),
+                r.cost_units
+            );
+        }
+    }
+    suite.section(fig.render());
+
+    // ---- determinism + scaling checks ----
+    let mut check = base_cfg();
+    check.cluster.nodes = 2;
+    check.cluster.rate_per_s = rate;
+    check.cluster.duration_s = duration_s.min(0.25);
+    let a = simulate(&check).expect("determinism run A");
+    let b = simulate(&check).expect("determinism run B");
+    assert_eq!(
+        a.determinism_token, b.determinism_token,
+        "fleet run must be deterministic under a fixed seed"
+    );
+    suite.section(format!(
+        "determinism: token {:#018x} reproduced across two runs",
+        a.determinism_token
+    ));
+    let mean_wait = |nodes: usize| -> f64 {
+        let mut cfg = base_cfg();
+        cfg.cluster.nodes = nodes;
+        cfg.cluster.rate_per_s = rate;
+        cfg.cluster.duration_s = duration_s.min(0.25);
+        let r = simulate(&cfg).expect("scaling run");
+        r.mean_wait_ns
+    };
+    let (w1, w4) = (mean_wait(1), mean_wait(4));
+    assert!(
+        w4 <= w1 * 1.05 + 10_000.0,
+        "4 nodes must not queue worse than 1 under the same load: {w4} vs {w1}"
+    );
+    suite.section(format!(
+        "scaling: mean wait {} (1 node) → {} (4 nodes) under 2.5× single-node load",
+        fmt_ns(w1),
+        fmt_ns(w4)
+    ));
+
+    // ---- autoscaler demo: start at min, let the signals grow it ----
+    let mut auto_cfg = base_cfg();
+    auto_cfg.cluster.nodes = 1;
+    auto_cfg.cluster.max_nodes = 8;
+    auto_cfg.cluster.autoscale = true;
+    auto_cfg.cluster.rate_per_s = rate;
+    auto_cfg.cluster.duration_s = duration_s;
+    let auto_report = simulate(&auto_cfg).expect("autoscale run");
+    suite.section(format!(
+        "autoscaler: {} events under 2× load starting from 1 node (final wait {})\n{}",
+        auto_report.events.len(),
+        fmt_ns(auto_report.mean_wait_ns),
+        auto_report
+            .events
+            .iter()
+            .map(|e| format!(
+                "  t={:6.3}s {} → {} nodes ({})",
+                e.t_ns as f64 / 1e9,
+                e.direction.name(),
+                e.nodes_after,
+                e.reason
+            ))
+            .collect::<Vec<_>>()
+            .join("\n")
+    ));
+
+    // ---- host-side timing of one mid-size configuration ----
+    let mut host_cfg = base_cfg();
+    host_cfg.cluster.nodes = 8;
+    host_cfg.cluster.rate_per_s = rate;
+    host_cfg.cluster.duration_s = 0.2;
+    let arrivals = rate * 0.2;
+    suite.bench_with_throughput("simulate_8n_poisson", arrivals, "arrival", || {
+        simulate(&host_cfg).unwrap()
+    });
+
+    // ---- persist the series for future PRs ----
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_cluster")),
+        ("quick", Json::Bool(quick)),
+        ("offered_rate_per_s", Json::num(rate)),
+        ("duration_s", Json::num(duration_s)),
+        ("calibration_mean_service_ns", Json::num(cal_report.mean_service_ns)),
+        ("autoscaler_events", Json::num(auto_report.events.len() as f64)),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    suite.run();
+}

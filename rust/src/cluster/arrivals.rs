@@ -1,0 +1,344 @@
+//! Open-loop invocation generation.
+//!
+//! The single-machine examples drive Porter closed-loop (invoke → wait →
+//! invoke), which can never overload anything. Fleet behaviour — queue
+//! growth, SLO violations, autoscaling — only appears under *open-loop*
+//! arrivals: invocations fire on a schedule regardless of completions.
+//!
+//! Three synthetic shapes (all PRNG-seeded and fully deterministic):
+//!
+//! * **Poisson** — homogeneous rate λ, exponential gaps;
+//! * **Bursty** — ON/OFF modulated Poisson (mean rate preserved);
+//! * **Diurnal** — sinusoidal rate over the horizon, sampled by
+//!   thinning (one simulated "day" compressed into the run).
+//!
+//! Plus **replay** of a compact Azure-Functions-style trace: per
+//! function, invocation counts per fixed time bin — the format the
+//! public Azure traces use, scaled down so traces stay reviewable text.
+
+use crate::util::prng::Rng;
+
+/// One invocation request: fires at `t_ns` (virtual) for population
+/// function `function` (index into [`ArrivalSpec::names`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub t_ns: u64,
+    pub function: usize,
+}
+
+/// A full open-loop schedule: the function population plus the
+/// time-sorted arrivals over it.
+#[derive(Debug, Clone)]
+pub struct ArrivalSpec {
+    pub names: Vec<String>,
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Synthetic arrival shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl Shape {
+    pub fn parse(s: &str) -> Option<Shape> {
+        match s {
+            "poisson" => Some(Shape::Poisson),
+            "bursty" => Some(Shape::Bursty),
+            "diurnal" => Some(Shape::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::Poisson => "poisson",
+            Shape::Bursty => "bursty",
+            Shape::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Generate a synthetic open-loop schedule. Functions are drawn
+/// Zipf(θ)-skewed over `names` (rank 0 hottest), matching the skewed
+/// function popularity of production serverless fleets.
+pub fn synthetic(
+    shape: Shape,
+    names: &[String],
+    rate_per_s: f64,
+    duration_s: f64,
+    zipf_theta: f64,
+    seed: u64,
+) -> ArrivalSpec {
+    assert!(!names.is_empty());
+    assert!(rate_per_s > 0.0 && duration_s > 0.0);
+    let mut rng = Rng::new(seed ^ 0xA221_7A15);
+    let horizon_ns = duration_s * 1e9;
+    let rate_per_ns = rate_per_s / 1e9;
+    let mut arrivals = Vec::new();
+    match shape {
+        Shape::Poisson => {
+            let mut t = 0.0f64;
+            loop {
+                t += rng.exp(rate_per_ns);
+                if t >= horizon_ns {
+                    break;
+                }
+                arrivals.push(at(t, names.len(), zipf_theta, &mut rng));
+            }
+        }
+        Shape::Bursty => {
+            // ON/OFF modulation: equal mean dwell in a hot (1.8×) and a
+            // quiet (0.2×) phase keeps the mean rate at λ.
+            let dwell_mean_ns = (horizon_ns / 10.0).max(1.0);
+            let mut t = 0.0f64;
+            let mut hot = true;
+            let mut phase_end = rng.exp(1.0 / dwell_mean_ns);
+            loop {
+                let factor = if hot { 1.8 } else { 0.2 };
+                t += rng.exp(rate_per_ns * factor);
+                if t >= horizon_ns {
+                    break;
+                }
+                while t > phase_end {
+                    hot = !hot;
+                    phase_end += rng.exp(1.0 / dwell_mean_ns);
+                }
+                arrivals.push(at(t, names.len(), zipf_theta, &mut rng));
+            }
+        }
+        Shape::Diurnal => {
+            // rate(t) = λ·(1 + 0.8·sin(2πt/T)): one compressed "day";
+            // sampled by thinning against the peak rate.
+            let peak = rate_per_ns * 1.8;
+            let mut t = 0.0f64;
+            loop {
+                t += rng.exp(peak);
+                if t >= horizon_ns {
+                    break;
+                }
+                let rate_t =
+                    rate_per_ns * (1.0 + 0.8 * (std::f64::consts::TAU * t / horizon_ns).sin());
+                if rng.f64() < rate_t / peak {
+                    arrivals.push(at(t, names.len(), zipf_theta, &mut rng));
+                }
+            }
+        }
+    }
+    ArrivalSpec { names: names.to_vec(), arrivals }
+}
+
+fn at(t_ns: f64, n_functions: usize, zipf_theta: f64, rng: &mut Rng) -> Arrival {
+    Arrival {
+        t_ns: t_ns as u64,
+        function: rng.zipf(n_functions as u64, zipf_theta) as usize,
+    }
+}
+
+/// A compact Azure-Functions-style trace: per-function invocation counts
+/// over fixed time bins.
+///
+/// Text format (one header, then one line per function):
+///
+/// ```text
+/// # porter-trace v1
+/// bin_ms=100
+/// json,12,0,7,3
+/// kvstore,2,2,2,2
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AzureTrace {
+    pub bin_ms: u64,
+    /// (function name, invocations per bin); every row has equal length.
+    pub rows: Vec<(String, Vec<u32>)>,
+}
+
+impl AzureTrace {
+    pub fn parse(text: &str) -> Result<AzureTrace, String> {
+        let mut bin_ms = None;
+        let mut rows: Vec<(String, Vec<u32>)> = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("bin_ms=") {
+                bin_ms =
+                    Some(v.parse::<u64>().map_err(|_| format!("line {}: bad bin_ms", ln + 1))?);
+                continue;
+            }
+            let mut parts = line.split(',');
+            let name = parts.next().unwrap_or("").trim().to_string();
+            if name.is_empty() {
+                return Err(format!("line {}: missing function name", ln + 1));
+            }
+            let counts = parts
+                .map(|c| c.trim().parse::<u32>().map_err(|_| format!("line {}: bad count", ln + 1)))
+                .collect::<Result<Vec<_>, _>>()?;
+            if counts.is_empty() {
+                return Err(format!("line {}: no bins for {name}", ln + 1));
+            }
+            rows.push((name, counts));
+        }
+        let bin_ms = bin_ms.ok_or("trace missing bin_ms header")?;
+        if bin_ms == 0 {
+            return Err("bin_ms must be > 0".into());
+        }
+        if rows.is_empty() {
+            return Err("trace has no function rows".into());
+        }
+        let bins = rows[0].1.len();
+        if rows.iter().any(|(_, c)| c.len() != bins) {
+            return Err("trace rows have unequal bin counts".into());
+        }
+        Ok(AzureTrace { bin_ms, rows })
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("# porter-trace v1\n");
+        out.push_str(&format!("bin_ms={}\n", self.bin_ms));
+        for (name, counts) in &self.rows {
+            let cs: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
+            out.push_str(&format!("{name},{}\n", cs.join(",")));
+        }
+        out
+    }
+
+    /// Synthesize a trace with Zipf-popular functions and per-bin jitter
+    /// (demo input for `porter cluster --arrivals replay`).
+    pub fn synthesize(names: &[String], bins: usize, bin_ms: u64, mean_per_bin: f64, seed: u64) -> AzureTrace {
+        let mut rng = Rng::new(seed ^ 0x7AACE);
+        let rows = names
+            .iter()
+            .enumerate()
+            .map(|(rank, name)| {
+                // harmonic popularity falloff by rank
+                let scale = mean_per_bin / (1.0 + rank as f64);
+                let counts = (0..bins)
+                    .map(|_| (scale * rng.f64_in(0.25, 1.75)).round() as u32)
+                    .collect();
+                (name.clone(), counts)
+            })
+            .collect();
+        AzureTrace { bin_ms, rows }
+    }
+
+    /// Expand to a time-sorted open-loop schedule: each bin's count is
+    /// spread uniformly (PRNG-seeded) within the bin.
+    pub fn expand(&self, seed: u64) -> ArrivalSpec {
+        let mut rng = Rng::new(seed ^ 0xE9A4D);
+        let bin_ns = self.bin_ms * 1_000_000;
+        let mut arrivals = Vec::new();
+        for (fi, (_, counts)) in self.rows.iter().enumerate() {
+            for (bi, &c) in counts.iter().enumerate() {
+                for _ in 0..c {
+                    let t = bi as u64 * bin_ns + rng.gen_range(bin_ns.max(1));
+                    arrivals.push(Arrival { t_ns: t, function: fi });
+                }
+            }
+        }
+        arrivals.sort_by_key(|a| (a.t_ns, a.function));
+        ArrivalSpec { names: self.rows.iter().map(|(n, _)| n.clone()).collect(), arrivals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("f{i}")).collect()
+    }
+
+    #[test]
+    fn poisson_deterministic_and_sorted() {
+        let a = synthetic(Shape::Poisson, &names(4), 1000.0, 0.5, 0.9, 7);
+        let b = synthetic(Shape::Poisson, &names(4), 1000.0, 0.5, 0.9, 7);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        // ~λ·T arrivals
+        let n = a.arrivals.len() as f64;
+        assert!((n - 500.0).abs() < 120.0, "n={n}");
+        assert!(a.arrivals.iter().all(|x| x.function < 4));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = synthetic(Shape::Poisson, &names(2), 500.0, 0.2, 0.0, 1);
+        let b = synthetic(Shape::Poisson, &names(2), 500.0, 0.2, 0.0, 2);
+        assert_ne!(a.arrivals, b.arrivals);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let a = synthetic(Shape::Poisson, &names(8), 5000.0, 1.0, 0.99, 3);
+        let mut counts = [0usize; 8];
+        for x in &a.arrivals {
+            counts[x.function] += 1;
+        }
+        assert!(counts[0] > counts[7] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn bursty_and_diurnal_preserve_mean_rate_roughly() {
+        for shape in [Shape::Bursty, Shape::Diurnal] {
+            let a = synthetic(shape, &names(2), 2000.0, 0.5, 0.5, 11);
+            let n = a.arrivals.len() as f64;
+            // bursty's realized rate wanders with the ON/OFF phase draw;
+            // only the order of magnitude is pinned here
+            assert!((n - 1000.0).abs() < 600.0, "{}: n={n}", shape.name());
+            assert!(a.arrivals.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "{}", shape.name());
+        }
+    }
+
+    #[test]
+    fn shape_parse_roundtrip() {
+        for s in [Shape::Poisson, Shape::Bursty, Shape::Diurnal] {
+            assert_eq!(Shape::parse(s.name()), Some(s));
+        }
+        assert_eq!(Shape::parse("nope"), None);
+    }
+
+    #[test]
+    fn trace_parse_render_roundtrip() {
+        let text = "# porter-trace v1\nbin_ms=100\njson,12,0,7,3\nkvstore,2,2,2,2\n";
+        let t = AzureTrace::parse(text).unwrap();
+        assert_eq!(t.bin_ms, 100);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(AzureTrace::parse(&t.render()).unwrap(), t);
+    }
+
+    #[test]
+    fn trace_rejects_malformed() {
+        assert!(AzureTrace::parse("json,1,2\n").is_err()); // no bin_ms
+        assert!(AzureTrace::parse("bin_ms=100\n").is_err()); // no rows
+        assert!(AzureTrace::parse("bin_ms=100\njson,1\nkv,1,2\n").is_err()); // ragged
+        assert!(AzureTrace::parse("bin_ms=100\njson,x\n").is_err()); // bad count
+    }
+
+    #[test]
+    fn trace_expand_matches_counts() {
+        let t = AzureTrace::parse("bin_ms=10\na,3,0,2\nb,1,1,1\n").unwrap();
+        let spec = t.expand(5);
+        assert_eq!(spec.names, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(spec.arrivals.len(), 8);
+        assert!(spec.arrivals.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        // every arrival lands inside its bin
+        let n_a = spec.arrivals.iter().filter(|x| x.function == 0).count();
+        assert_eq!(n_a, 5);
+        assert!(spec.arrivals.iter().all(|x| x.t_ns < 30_000_000));
+        // deterministic
+        assert_eq!(spec.arrivals, t.expand(5).arrivals);
+    }
+
+    #[test]
+    fn synthesize_expands() {
+        let t = AzureTrace::synthesize(&names(3), 5, 50, 4.0, 9);
+        assert_eq!(t.rows.len(), 3);
+        let spec = t.expand(9);
+        assert!(!spec.arrivals.is_empty());
+        assert_eq!(AzureTrace::parse(&t.render()).unwrap(), t);
+    }
+}

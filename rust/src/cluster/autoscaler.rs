@@ -1,0 +1,191 @@
+//! Fleet autoscaling on queue-depth and SLO-violation signals.
+//!
+//! Evaluated at a fixed virtual cadence. Scale **up** when either the
+//! queued work per engine worker exceeds a threshold (expressed in
+//! evaluation intervals of backlog) or the windowed SLO violation rate
+//! does; scale **down** when the fleet is near-idle and meeting SLOs.
+//! A cooldown suppresses flapping; node counts stay within
+//! `[min_nodes, max_nodes]`.
+
+use crate::config::ClusterConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+impl ScaleDirection {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScaleDirection::Up => "scale-up",
+            ScaleDirection::Down => "scale-down",
+        }
+    }
+}
+
+/// One applied scaling decision (for the report/event log).
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    pub t_ns: u64,
+    pub direction: ScaleDirection,
+    pub nodes_after: usize,
+    pub reason: String,
+}
+
+/// Fleet snapshot handed to each evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSignal {
+    pub t_ns: u64,
+    /// Nodes accepting traffic (not draining, not retired).
+    pub active_nodes: usize,
+    /// Engine workers across active nodes.
+    pub total_workers: usize,
+    /// Σ queued-but-unfinished virtual work across active nodes.
+    pub backlog_ns: u64,
+    /// Evaluation interval (normalizes the backlog signal).
+    pub interval_ns: u64,
+    /// SLO outcomes since the previous evaluation.
+    pub window_judged: u64,
+    pub window_violations: u64,
+}
+
+impl FleetSignal {
+    /// Queued work per worker, in units of evaluation intervals.
+    pub fn backlog_per_worker(&self) -> f64 {
+        if self.total_workers == 0 {
+            0.0
+        } else {
+            self.backlog_ns as f64
+                / self.total_workers as f64
+                / self.interval_ns.max(1) as f64
+        }
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        if self.window_judged == 0 {
+            0.0
+        } else {
+            self.window_violations as f64 / self.window_judged as f64
+        }
+    }
+}
+
+/// The decision policy.
+#[derive(Debug)]
+pub struct Autoscaler {
+    min_nodes: usize,
+    max_nodes: usize,
+    up_backlog: f64,
+    up_violation: f64,
+    down_idle: f64,
+    cooldown_ns: u64,
+    last_action_ns: Option<u64>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: &ClusterConfig) -> Autoscaler {
+        Autoscaler {
+            min_nodes: cfg.min_nodes,
+            max_nodes: cfg.max_nodes,
+            up_backlog: cfg.scale_up_backlog,
+            up_violation: cfg.scale_up_violation,
+            down_idle: cfg.scale_down_idle,
+            cooldown_ns: cfg.cooldown_ns,
+            last_action_ns: None,
+        }
+    }
+
+    /// Evaluate one window; `Some` means the cluster should add or
+    /// drain one node.
+    pub fn decide(&mut self, sig: &FleetSignal) -> Option<(ScaleDirection, String)> {
+        if let Some(last) = self.last_action_ns {
+            if sig.t_ns.saturating_sub(last) < self.cooldown_ns {
+                return None;
+            }
+        }
+        let bpw = sig.backlog_per_worker();
+        let vr = sig.violation_rate();
+        if sig.active_nodes < self.max_nodes && (bpw > self.up_backlog || vr > self.up_violation) {
+            self.last_action_ns = Some(sig.t_ns);
+            let reason = if bpw > self.up_backlog {
+                format!("backlog {bpw:.2} intervals/worker > {:.2}", self.up_backlog)
+            } else {
+                format!("violation rate {:.0}% > {:.0}%", vr * 100.0, self.up_violation * 100.0)
+            };
+            return Some((ScaleDirection::Up, reason));
+        }
+        if sig.active_nodes > self.min_nodes
+            && bpw < self.down_idle
+            && vr <= self.up_violation / 2.0
+        {
+            self.last_action_ns = Some(sig.t_ns);
+            return Some((
+                ScaleDirection::Down,
+                format!("idle: backlog {bpw:.3} intervals/worker < {:.3}", self.down_idle),
+            ));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> Autoscaler {
+        let mut cfg = ClusterConfig::default();
+        cfg.min_nodes = 1;
+        cfg.max_nodes = 4;
+        cfg.cooldown_ns = 100;
+        Autoscaler::new(&cfg)
+    }
+
+    fn sig(t: u64, nodes: usize, backlog_ns: u64, judged: u64, viol: u64) -> FleetSignal {
+        FleetSignal {
+            t_ns: t,
+            active_nodes: nodes,
+            total_workers: nodes * 4,
+            backlog_ns,
+            interval_ns: 1000,
+            window_judged: judged,
+            window_violations: viol,
+        }
+    }
+
+    #[test]
+    fn overload_scales_up_until_max() {
+        let mut a = scaler();
+        // backlog 10 intervals/worker on 1 node (4 workers × 1000 ns)
+        let s = sig(0, 1, 40_000, 0, 0);
+        assert_eq!(a.decide(&s).unwrap().0, ScaleDirection::Up);
+        // cooldown suppresses the immediate next decision
+        assert!(a.decide(&sig(50, 1, 40_000, 0, 0)).is_none());
+        // at max_nodes no further scale-up
+        assert!(a.decide(&sig(500, 4, 160_000, 0, 0)).is_none());
+    }
+
+    #[test]
+    fn violations_scale_up_even_without_backlog() {
+        let mut a = scaler();
+        let (d, reason) = a.decide(&sig(0, 2, 0, 10, 6)).unwrap();
+        assert_eq!(d, ScaleDirection::Up);
+        assert!(reason.contains("violation"), "{reason}");
+    }
+
+    #[test]
+    fn idle_scales_down_to_min() {
+        let mut a = scaler();
+        assert_eq!(a.decide(&sig(0, 3, 0, 10, 0)).unwrap().0, ScaleDirection::Down);
+        assert!(a.decide(&sig(50, 2, 0, 10, 0)).is_none()); // cooldown
+        assert_eq!(a.decide(&sig(200, 2, 0, 10, 0)).unwrap().0, ScaleDirection::Down);
+        assert!(a.decide(&sig(400, 1, 0, 10, 0)).is_none()); // at min
+    }
+
+    #[test]
+    fn steady_state_does_nothing() {
+        let mut a = scaler();
+        // modest backlog, no violations: between thresholds
+        assert!(a.decide(&sig(0, 2, 4_000, 20, 1)).is_none());
+    }
+}

@@ -1,0 +1,108 @@
+//! Two-level fleet routing: node pick (this module), then server pick
+//! inside the node (`porter::balancer::LeastLoaded` over its virtual
+//! servers).
+//!
+//! Node choice extends least-loaded with *hint locality*: a node whose
+//! `HintCache` is cold for the invoked function would pay the profile
+//! run + cold start, so it is charged a phantom backlog (a configurable
+//! multiple of the fleet's mean service time) at pick time. Warm nodes
+//! therefore attract repeat invocations of "their" functions, while a
+//! sufficiently overloaded warm node still sheds traffic to cold ones —
+//! locality is a bonus, not an affinity pin. Ties rotate round-robin
+//! with the same advance-past-the-pick cursor as `LeastLoaded`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// What the balancer sees of one node at pick time.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView {
+    /// Queued-but-unfinished virtual work at the arrival time.
+    pub backlog_ns: u64,
+    /// Node holds a warm hint for the invoked function.
+    pub warm: bool,
+    /// Draining or retired nodes receive no new work.
+    pub draining: bool,
+}
+
+/// The node-level balancer.
+#[derive(Debug, Default)]
+pub struct ClusterBalancer {
+    rr: AtomicUsize,
+}
+
+impl ClusterBalancer {
+    /// Pick a node for one arrival; `cold_penalty_ns` is the phantom
+    /// backlog charged to nodes without a warm hint. `None` only when
+    /// every node is draining.
+    pub fn pick(&self, views: &[NodeView], cold_penalty_ns: u64) -> Option<usize> {
+        if views.is_empty() {
+            return None;
+        }
+        let n = views.len();
+        let start = self.rr.load(Ordering::Relaxed) % n;
+        let mut best: Option<(usize, u64)> = None;
+        for off in 0..n {
+            let i = (start + off) % n;
+            let v = &views[i];
+            if v.draining {
+                continue;
+            }
+            let score = v.backlog_ns.saturating_add(if v.warm { 0 } else { cold_penalty_ns });
+            match best {
+                Some((_, s)) if s <= score => {}
+                _ => best = Some((i, score)),
+            }
+        }
+        if let Some((i, _)) = best {
+            self.rr.store(i + 1, Ordering::Relaxed);
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(backlog_ns: u64, warm: bool) -> NodeView {
+        NodeView { backlog_ns, warm, draining: false }
+    }
+
+    #[test]
+    fn warm_node_attracts_under_equal_load() {
+        let b = ClusterBalancer::default();
+        let views = [view(1000, false), view(1000, true), view(1000, false)];
+        for _ in 0..5 {
+            assert_eq!(b.pick(&views, 500), Some(1));
+        }
+    }
+
+    #[test]
+    fn overloaded_warm_node_sheds_to_cold() {
+        let b = ClusterBalancer::default();
+        let views = [view(10_000, true), view(100, false)];
+        assert_eq!(b.pick(&views, 500), Some(1));
+    }
+
+    #[test]
+    fn ties_rotate_round_robin() {
+        let b = ClusterBalancer::default();
+        let views = [view(0, true), view(0, true), view(0, true)];
+        let mut counts = [0usize; 3];
+        for _ in 0..9 {
+            counts[b.pick(&views, 500).unwrap()] += 1;
+        }
+        assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn draining_nodes_skipped_and_all_draining_is_none() {
+        let b = ClusterBalancer::default();
+        let mut views = [view(0, true), view(99, true)];
+        views[0].draining = true;
+        assert_eq!(b.pick(&views, 0), Some(1));
+        views[1].draining = true;
+        assert_eq!(b.pick(&views, 0), None);
+        assert_eq!(b.pick(&[], 0), None);
+    }
+}

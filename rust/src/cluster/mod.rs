@@ -1,0 +1,536 @@
+//! Fleet simulation: Porter scaled from one machine to a multi-node
+//! cluster.
+//!
+//! The single-machine stack (gateway → balancer → server → engine →
+//! tuner) reproduces the paper's testbed; this layer answers the
+//! question the paper motivates but cannot measure on one box — what
+//! fine-grained DRAM/CXL provisioning buys *fleet-wide*:
+//!
+//! * [`node`] — a fleet node: real Porter servers + a private per-node
+//!   tuner/hint cache, dispatched in virtual time;
+//! * [`pool`] — the cluster-wide shared CXL pool (capacity leases +
+//!   link/backplane bandwidth contention via `mem::bwmodel`);
+//! * [`arrivals`] — open-loop load generation (Poisson, bursty,
+//!   diurnal, Azure-style trace replay), PRNG-seeded and deterministic;
+//! * [`balancer`] — two-level routing with hint-locality awareness;
+//! * [`autoscaler`] — node add/drain on queue-depth and SLO signals.
+//!
+//! The simulation is a discrete-event loop over the arrival schedule in
+//! virtual time. Real engine runs (on real server threads) measure each
+//! function's service shape per node and placement mode; everything
+//! else — queueing, contention, scaling — is replayed deterministically,
+//! so an entire 16-node run is exactly reproducible from one seed
+//! (checked by [`ClusterReport::determinism_token`]).
+
+pub mod arrivals;
+pub mod autoscaler;
+pub mod balancer;
+pub mod node;
+pub mod pool;
+
+use crate::config::Config;
+use crate::metrics::Histogram;
+use crate::porter::gateway::FunctionSpec;
+use crate::porter::slo::SloTracker;
+use crate::util::bytes::GIB;
+use crate::workloads::mix;
+use crate::workloads::registry::{build, Scale};
+
+use arrivals::{ArrivalSpec, AzureTrace, Shape};
+use autoscaler::{Autoscaler, FleetSignal, ScaleDirection, ScaleEvent};
+use balancer::{ClusterBalancer, NodeView};
+use node::Node;
+use pool::CxlPool;
+
+/// Cost proxy, in relative $/GiB-second: local DRAM versus pooled CXL
+/// capacity. The 1 : 0.33 ratio reflects the pooled-memory TCO premise
+/// (Pond: cheaper media, amortized across hosts); only the ratio
+/// matters to the trends the benches track.
+pub const DRAM_COST_PER_GIB_S: f64 = 1.0;
+pub const CXL_COST_PER_GIB_S: f64 = 0.33;
+
+/// Serving-oriented default population, lightest functions first (rank 0
+/// is the Zipf-hottest).
+const POPULATION_ORDER: [&str; 13] = [
+    "json", "kvstore", "chameleon", "image", "compression", "sort", "matmul", "bfs", "cc",
+    "pagerank", "linpack", "dl_serve", "dl_train",
+];
+
+/// The first `n` registry functions of the serving population.
+pub fn default_population(n: usize) -> Vec<String> {
+    POPULATION_ORDER.iter().take(n.clamp(1, POPULATION_ORDER.len())).map(|s| s.to_string()).collect()
+}
+
+/// Build the open-loop schedule a config describes.
+pub fn arrivals_from_config(cfg: &Config) -> Result<ArrivalSpec, String> {
+    let cl = &cfg.cluster;
+    if cl.functions > POPULATION_ORDER.len() {
+        return Err(format!(
+            "cluster.functions = {} exceeds the {}-function registry population",
+            cl.functions,
+            POPULATION_ORDER.len()
+        ));
+    }
+    if cl.arrivals == "replay" {
+        let trace = if cl.trace_path.is_empty() {
+            // demo trace: synthesized, deterministic from the seed
+            let bins = ((cl.duration_s * 10.0).ceil() as usize).max(1);
+            let per_bin = cl.rate_per_s * 0.1 / default_population(cl.functions).len() as f64 * 2.0;
+            AzureTrace::synthesize(&default_population(cl.functions), bins, 100, per_bin, cl.seed)
+        } else {
+            let text = std::fs::read_to_string(&cl.trace_path)
+                .map_err(|e| format!("read trace {}: {e}", cl.trace_path))?;
+            AzureTrace::parse(&text)?
+        };
+        return Ok(trace.expand(cl.seed));
+    }
+    let shape = Shape::parse(&cl.arrivals)
+        .ok_or_else(|| format!("unknown arrival shape {:?} (poisson|bursty|diurnal|replay)", cl.arrivals))?;
+    Ok(arrivals::synthetic(
+        shape,
+        &default_population(cl.functions),
+        cl.rate_per_s,
+        cl.duration_s,
+        cl.zipf_theta,
+        cl.seed,
+    ))
+}
+
+/// Per-node slice of the final report.
+#[derive(Debug, Clone)]
+pub struct NodeSummary {
+    pub id: usize,
+    pub invocations: u64,
+    pub cold_runs: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub active_s: f64,
+    pub peak_dram_bytes: u64,
+    pub retired: bool,
+}
+
+/// Fleet-level results of one simulation run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub completed: u64,
+    pub virtual_duration_s: f64,
+    pub throughput_per_s: f64,
+    pub fleet_p50_ns: u64,
+    pub fleet_p99_ns: u64,
+    pub fleet_mean_ns: f64,
+    pub mean_wait_ns: f64,
+    pub mean_service_ns: f64,
+    pub judged: u64,
+    pub violation_rate: f64,
+    pub cold_runs: u64,
+    pub pool_mean_occupancy: f64,
+    pub pool_peak_occupancy: f64,
+    pub pool_shortages: u64,
+    pub node_seconds: f64,
+    /// DRAM + pooled-CXL provisioning cost (relative units; see
+    /// [`DRAM_COST_PER_GIB_S`]).
+    pub cost_units: f64,
+    pub nodes: Vec<NodeSummary>,
+    pub events: Vec<ScaleEvent>,
+    /// Order-sensitive hash over every routing decision and virtual
+    /// timeline — two runs of the same config+seed must match exactly.
+    pub determinism_token: u64,
+}
+
+impl ClusterReport {
+    /// ASCII report: fleet rollup, per-node table, autoscaler events.
+    pub fn render(&self) -> String {
+        use crate::bench::fmt_ns;
+        use crate::util::table::Table;
+        let mut out = String::new();
+        let mut t = Table::new(&["fleet metric", "value"]).left_first();
+        t.row(vec!["invocations".into(), self.completed.to_string()]);
+        t.row(vec!["virtual duration".into(), format!("{:.3}s", self.virtual_duration_s)]);
+        t.row(vec!["throughput".into(), format!("{:.1} inv/s", self.throughput_per_s)]);
+        t.row(vec![
+            "e2e latency".into(),
+            format!(
+                "mean {} p50≤{} p99≤{}",
+                fmt_ns(self.fleet_mean_ns),
+                fmt_ns(self.fleet_p50_ns as f64),
+                fmt_ns(self.fleet_p99_ns as f64)
+            ),
+        ]);
+        t.row(vec!["mean queue wait".into(), fmt_ns(self.mean_wait_ns)]);
+        t.row(vec!["mean service".into(), fmt_ns(self.mean_service_ns)]);
+        t.row(vec![
+            "SLO violations".into(),
+            format!("{:.1}% of {} judged", self.violation_rate * 100.0, self.judged),
+        ]);
+        t.row(vec!["cold (profile) runs".into(), self.cold_runs.to_string()]);
+        t.row(vec![
+            "CXL pool occupancy".into(),
+            format!(
+                "mean {:.1}% peak {:.1}% ({} shortages)",
+                self.pool_mean_occupancy * 100.0,
+                self.pool_peak_occupancy * 100.0,
+                self.pool_shortages
+            ),
+        ]);
+        t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
+        t.row(vec!["cost proxy".into(), format!("{:.1} units", self.cost_units)]);
+        t.row(vec![
+            "determinism token".into(),
+            format!("{:#018x}", self.determinism_token),
+        ]);
+        out.push_str(&t.render());
+
+        let mut nt = Table::new(&["node", "invocations", "cold", "p50", "p99", "active", "peak DRAM"])
+            .left_first();
+        for n in &self.nodes {
+            nt.row(vec![
+                format!("n{}{}", n.id, if n.retired { " (drained)" } else { "" }),
+                n.invocations.to_string(),
+                n.cold_runs.to_string(),
+                fmt_ns(n.p50_ns as f64),
+                fmt_ns(n.p99_ns as f64),
+                format!("{:.3}s", n.active_s),
+                crate::util::bytes::fmt_bytes(n.peak_dram_bytes),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&nt.render());
+
+        if !self.events.is_empty() {
+            out.push_str("\nautoscaler events:\n");
+            for e in &self.events {
+                out.push_str(&format!(
+                    "  t={:8.3}s {:10} → {} nodes  ({})\n",
+                    e.t_ns as f64 / 1e9,
+                    e.direction.name(),
+                    e.nodes_after,
+                    e.reason
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// The fleet.
+pub struct Cluster {
+    cfg: Config,
+    specs: Vec<FunctionSpec>,
+    nodes: Vec<Node>,
+    pool: CxlPool,
+    balancer: ClusterBalancer,
+    autoscaler: Option<Autoscaler>,
+    slo: SloTracker,
+    fleet_hist: Histogram,
+    node_hists: Vec<Histogram>,
+    events: Vec<ScaleEvent>,
+    window_judged: u64,
+    window_violations: u64,
+    wait_sum_ns: f64,
+    service_sum_ns: f64,
+    completed: u64,
+    end_ns: u64,
+    token: u64,
+    next_node_id: usize,
+}
+
+impl Cluster {
+    /// Build a fleet for the given function population (registry names).
+    pub fn new(cfg: &Config, names: &[String]) -> Result<Cluster, String> {
+        cfg.validate()?;
+        let cl = &cfg.cluster;
+        let mut specs = Vec::with_capacity(names.len());
+        for name in names {
+            let body = build(name, Scale::Small)
+                .ok_or_else(|| format!("unknown registry workload {name:?}"))?;
+            let mut spec = FunctionSpec::new(name, std::sync::Arc::from(body));
+            spec.slo_factor = cfg.porter.slo_factor;
+            specs.push(spec);
+        }
+        let nodes: Vec<Node> = (0..cl.nodes).map(|i| Node::spawn(i, cfg, 0)).collect();
+        let node_hists = (0..cl.nodes).map(|_| Histogram::default()).collect();
+        let pool = CxlPool::new(
+            cl.cxl_pool,
+            cl.cxl_pool_bw_gbps,
+            cl.cxl_link_bw_gbps,
+            cl.nodes,
+            cl.bw_window_ns,
+        );
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            specs,
+            next_node_id: nodes.len(),
+            nodes,
+            pool,
+            balancer: ClusterBalancer::default(),
+            autoscaler: if cl.autoscale { Some(Autoscaler::new(cl)) } else { None },
+            slo: SloTracker::default(),
+            fleet_hist: Histogram::default(),
+            node_hists,
+            events: Vec::new(),
+            window_judged: 0,
+            window_violations: 0,
+            wait_sum_ns: 0.0,
+            service_sum_ns: 0.0,
+            completed: 0,
+            end_ns: 0,
+            token: 0x0C1A57E5,
+        })
+    }
+
+    fn mean_service_ns(&self) -> f64 {
+        if self.completed == 0 {
+            // before any completion, use the cold-start penalty as the
+            // locality bonus scale
+            self.cfg.cluster.cold_start_ns as f64
+        } else {
+            self.service_sum_ns / self.completed as f64
+        }
+    }
+
+    /// Route and dispatch one arrival.
+    fn step(&mut self, a: arrivals::Arrival) {
+        let t = a.t_ns;
+        let spec = self.specs[a.function].clone();
+        self.pool.advance(t);
+        self.pool.sample();
+        let bonus =
+            (self.cfg.cluster.hint_affinity * self.mean_service_ns()).round().max(0.0) as u64;
+        let views: Vec<NodeView> = self
+            .nodes
+            .iter()
+            .map(|n| NodeView {
+                backlog_ns: n.backlog_ns(t),
+                warm: n.warm_for(&spec.name),
+                draining: n.draining || n.retired(),
+            })
+            .collect();
+        let ni = match self.balancer.pick(&views, bonus) {
+            Some(i) => i,
+            // defensive: everything draining (should not happen — the
+            // autoscaler keeps min_nodes active); use any live node
+            None => match self.nodes.iter().position(|n| !n.retired()) {
+                Some(i) => i,
+                None => return,
+            },
+        };
+        let node_id = self.nodes[ni].id;
+        let spill = self.nodes[ni].spill_estimate(&spec);
+        let (grant_ns, granted) = self.pool.acquire(t, spill);
+        let factor = self.pool.factor(node_id);
+        let d = self.nodes[ni].dispatch(
+            t,
+            grant_ns.max(t),
+            &spec,
+            factor,
+            self.cfg.cluster.cold_start_ns,
+        );
+        self.pool.release_at(d.finish_ns, granted);
+        self.pool.record_traffic(node_id, d.start_ns, d.cxl_bytes);
+
+        let e2e_ns = d.finish_ns - t;
+        self.fleet_hist.record(e2e_ns);
+        self.node_hists[ni].record(e2e_ns);
+        self.slo.record_latency(&spec.name, e2e_ns as f64, d.slo_target_ns);
+        if let Some(target) = d.slo_target_ns {
+            self.window_judged += 1;
+            if e2e_ns as f64 > target {
+                self.window_violations += 1;
+            }
+        }
+        self.wait_sum_ns += d.wait_ns as f64;
+        self.service_sum_ns += d.service_ns as f64;
+        self.completed += 1;
+        self.end_ns = self.end_ns.max(d.finish_ns);
+        self.token = mix(self.token, a.function as u64);
+        self.token = mix(self.token, node_id as u64);
+        self.token = mix(self.token, d.start_ns);
+        self.token = mix(self.token, d.finish_ns);
+    }
+
+    /// One autoscaler evaluation at virtual time `t`.
+    fn autoscale_tick(&mut self, t: u64) {
+        // retire drained nodes whose queues have emptied
+        for n in &mut self.nodes {
+            if n.draining && !n.retired() && n.backlog_ns(t) == 0 {
+                n.retire(t);
+            }
+        }
+        let active: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| !self.nodes[i].draining && !self.nodes[i].retired())
+            .collect();
+        let sig = FleetSignal {
+            t_ns: t,
+            active_nodes: active.len(),
+            total_workers: active.iter().map(|&i| self.nodes[i].workers()).sum(),
+            backlog_ns: active.iter().map(|&i| self.nodes[i].backlog_ns(t)).sum(),
+            interval_ns: self.cfg.cluster.autoscale_interval_ns,
+            window_judged: self.window_judged,
+            window_violations: self.window_violations,
+        };
+        self.window_judged = 0;
+        self.window_violations = 0;
+        let decision = match &mut self.autoscaler {
+            Some(a) => a.decide(&sig),
+            None => None,
+        };
+        if let Some((direction, reason)) = decision {
+            let nodes_after = match direction {
+                ScaleDirection::Up => {
+                    let id = self.next_node_id;
+                    self.next_node_id += 1;
+                    self.pool.ensure_nodes(id + 1);
+                    self.nodes.push(Node::spawn(id, &self.cfg, t));
+                    self.node_hists.push(Histogram::default());
+                    sig.active_nodes + 1
+                }
+                ScaleDirection::Down => {
+                    // drain the youngest active node
+                    if let Some(&i) = active.last() {
+                        self.nodes[i].draining = true;
+                    }
+                    sig.active_nodes - 1
+                }
+            };
+            self.events.push(ScaleEvent { t_ns: t, direction, nodes_after, reason });
+        }
+    }
+
+    /// Run the whole schedule and produce the fleet report.
+    pub fn run(&mut self, spec: &ArrivalSpec) -> ClusterReport {
+        let interval = self.cfg.cluster.autoscale_interval_ns;
+        let mut next_check = interval;
+        for a in &spec.arrivals {
+            if self.autoscaler.is_some() {
+                while next_check <= a.t_ns {
+                    self.autoscale_tick(next_check);
+                    next_check += interval;
+                }
+            }
+            assert!(
+                a.function < self.specs.len(),
+                "arrival references function {} outside the population",
+                a.function
+            );
+            self.step(*a);
+        }
+        self.finish()
+    }
+
+    fn finish(&mut self) -> ClusterReport {
+        let end = self.end_ns.max(1);
+        for n in &mut self.nodes {
+            n.retire(end);
+        }
+        let node_seconds: f64 = self.nodes.iter().map(|n| n.active_seconds(end)).sum();
+        let dram_gib = self.cfg.cluster.dram_per_node as f64 / GIB as f64;
+        let pool_gib = self.pool.capacity() as f64 / GIB as f64;
+        let duration_s = end as f64 / 1e9;
+        let cost_units = node_seconds * dram_gib * DRAM_COST_PER_GIB_S
+            + duration_s * pool_gib * CXL_COST_PER_GIB_S;
+        let nodes: Vec<NodeSummary> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| NodeSummary {
+                id: n.id,
+                invocations: n.invocations,
+                cold_runs: n.cold_runs,
+                p50_ns: self.node_hists[i].percentile(50.0),
+                p99_ns: self.node_hists[i].percentile(99.0),
+                active_s: n.active_seconds(end),
+                peak_dram_bytes: n.peak_dram_bytes,
+                retired: n.draining,
+            })
+            .collect();
+        let judged: u64 = self.slo.functions().map(|(_, f)| f.judged).sum();
+        ClusterReport {
+            completed: self.completed,
+            virtual_duration_s: duration_s,
+            throughput_per_s: if duration_s > 0.0 { self.completed as f64 / duration_s } else { 0.0 },
+            fleet_p50_ns: self.fleet_hist.percentile(50.0),
+            fleet_p99_ns: self.fleet_hist.percentile(99.0),
+            fleet_mean_ns: self.fleet_hist.mean(),
+            mean_wait_ns: if self.completed == 0 { 0.0 } else { self.wait_sum_ns / self.completed as f64 },
+            mean_service_ns: if self.completed == 0 { 0.0 } else { self.service_sum_ns / self.completed as f64 },
+            judged,
+            violation_rate: self.slo.overall_violation_rate(),
+            cold_runs: self.nodes.iter().map(|n| n.cold_runs).sum(),
+            pool_mean_occupancy: self.pool.mean_occupancy(),
+            pool_peak_occupancy: self.pool.peak_occupancy(),
+            pool_shortages: self.pool.shortages,
+            node_seconds,
+            cost_units,
+            nodes,
+            events: std::mem::take(&mut self.events),
+            determinism_token: self.token,
+        }
+    }
+}
+
+/// Convenience entry point: schedule from the config, then simulate.
+pub fn simulate(cfg: &Config) -> Result<ClusterReport, String> {
+    let spec = arrivals_from_config(cfg)?;
+    let mut cluster = Cluster::new(cfg, &spec.names)?;
+    Ok(cluster.run(&spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 2;
+        cfg.cluster.max_nodes = 4;
+        cfg.cluster.functions = 2;
+        cfg.cluster.rate_per_s = 300.0;
+        cfg.cluster.duration_s = 0.05;
+        cfg.cluster.autoscale = false;
+        cfg.cluster.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn population_defaults_are_registry_names() {
+        for name in default_population(13) {
+            assert!(build(&name, Scale::Small).is_some(), "{name} missing from registry");
+        }
+        assert_eq!(default_population(0).len(), 1);
+        assert_eq!(default_population(99).len(), 13);
+    }
+
+    #[test]
+    fn simulate_completes_all_arrivals() {
+        let cfg = small_cfg();
+        let spec = arrivals_from_config(&cfg).unwrap();
+        let r = simulate(&cfg).unwrap();
+        assert_eq!(r.completed, spec.arrivals.len() as u64);
+        assert!(r.fleet_p99_ns >= r.fleet_p50_ns);
+        assert!(r.violation_rate >= 0.0 && r.violation_rate <= 1.0);
+        assert!(r.cost_units > 0.0);
+        assert!(r.node_seconds > 0.0);
+        // every node profiled each function at most once
+        for n in &r.nodes {
+            assert!(n.cold_runs <= cfg.cluster.functions as u64);
+        }
+        assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn unknown_shape_and_function_rejected() {
+        let mut cfg = small_cfg();
+        cfg.cluster.arrivals = "sawtooth".into();
+        assert!(arrivals_from_config(&cfg).is_err());
+        let err = Cluster::new(&small_cfg(), &["not-a-workload".to_string()]).unwrap_err();
+        assert!(err.contains("unknown registry workload"), "{err}");
+    }
+
+    #[test]
+    fn oversized_population_rejected_not_clamped() {
+        let mut cfg = small_cfg();
+        cfg.cluster.functions = POPULATION_ORDER.len() + 1;
+        let err = arrivals_from_config(&cfg).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+}

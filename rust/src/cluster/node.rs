@@ -1,0 +1,371 @@
+//! One fleet node: today's single-machine Porter stack (servers +
+//! engines + its own offline tuner/hint cache) wrapped behind a
+//! virtual-time dispatch interface.
+//!
+//! A node owns real [`porter::server::Server`](crate::porter::server)
+//! worker threads and a private [`OfflineTuner`] — hint caches are
+//! per-node, which is what makes *hint locality* a routing signal: a
+//! node that has profiled a function serves it warm, any other node
+//! pays the profile run + cold start again.
+//!
+//! Execution is hybrid: the first cold (profiled) and first warm
+//! (hinted) invocation of each function *actually run* through the
+//! engine on the node's servers, producing a measured [`ServiceShape`];
+//! repeat invocations replay that shape in virtual time, with the
+//! CXL-stall portion inflated by the current pool contention factor.
+//! This keeps a 16-node × thousands-of-arrivals fleet run fast and —
+//! because shapes, hints, and queues evolve only with the deterministic
+//! arrival order — exactly reproducible under a fixed seed.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::porter::balancer::{LeastLoaded, Loaded};
+use crate::porter::engine::InvocationOutcome;
+use crate::porter::gateway::FunctionSpec;
+use crate::porter::server::Server;
+use crate::porter::tuner::OfflineTuner;
+
+/// Deterministic service-time shape measured from a real engine run.
+#[derive(Debug, Clone)]
+pub struct ServiceShape {
+    pub wall_ns: f64,
+    /// Stall time attributable to CXL-tier misses (scales with pool
+    /// contention).
+    pub cxl_stall_ns: f64,
+    /// Line traffic to the CXL tier (fed to the pool bandwidth models).
+    pub cxl_bytes: u64,
+    /// Peak CXL residency (leased from the shared pool while running).
+    pub peak_cxl_bytes: u64,
+    pub checksum: u64,
+}
+
+impl ServiceShape {
+    fn from_outcome(out: &InvocationOutcome, cache_line: u64) -> ServiceShape {
+        let misses = out.report.dram_misses + out.report.cxl_misses;
+        let cxl_frac = if misses == 0 {
+            0.0
+        } else {
+            out.report.cxl_misses as f64 / misses as f64
+        };
+        ServiceShape {
+            wall_ns: out.report.wall_ns,
+            cxl_stall_ns: out.report.stall_ns * cxl_frac,
+            cxl_bytes: out.report.cxl_misses * cache_line,
+            peak_cxl_bytes: out.report.peak_cxl_bytes,
+            checksum: out.checksum,
+        }
+    }
+}
+
+/// One Porter server plus its virtual engine workers' busy-until times.
+struct VServer {
+    server: Server,
+    free_ns: Vec<u64>,
+    cached_backlog: usize,
+}
+
+impl Loaded for VServer {
+    fn load(&self) -> usize {
+        self.cached_backlog
+    }
+}
+
+/// The result of routing one arrival to this node.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    pub start_ns: u64,
+    pub finish_ns: u64,
+    pub wait_ns: u64,
+    pub service_ns: u64,
+    /// No hint was cached on this node — the profiled path ran.
+    pub cold: bool,
+    /// Which of the node's servers executed it.
+    pub server: usize,
+    pub slo_target_ns: Option<f64>,
+    pub cxl_bytes: u64,
+    pub checksum: u64,
+}
+
+/// A fleet node.
+pub struct Node {
+    pub id: usize,
+    cfg: Config,
+    tuner: Arc<OfflineTuner>,
+    vservers: Vec<VServer>,
+    picker: LeastLoaded,
+    cold_shapes: HashMap<String, ServiceShape>,
+    warm_shapes: HashMap<String, ServiceShape>,
+    /// Drain mode: the balancer stops routing here; the node retires
+    /// once its backlog empties.
+    pub draining: bool,
+    pub joined_ns: u64,
+    pub retired_ns: Option<u64>,
+    pub invocations: u64,
+    pub cold_runs: u64,
+    pub peak_dram_bytes: u64,
+    next_exec_id: u64,
+}
+
+impl Node {
+    /// Spawn a node: `servers_per_node` real Porter servers sharing one
+    /// per-node tuner, each granted an equal slice of the node's DRAM;
+    /// the CXL tier is the (nominal) shared pool.
+    pub fn spawn(id: usize, base: &Config, joined_ns: u64) -> Node {
+        let cl = &base.cluster;
+        let mut cfg = base.clone();
+        cfg.machine.dram_bytes =
+            (cl.dram_per_node / cl.servers_per_node as u64).max(cfg.machine.page_bytes);
+        cfg.machine.cxl_bytes = cl.cxl_pool;
+        cfg.porter.servers = cl.servers_per_node;
+        // one real worker thread per server: the fleet simulation
+        // measures sequentially and replays in virtual time
+        cfg.porter.workers_per_server = 1;
+        let tuner = Arc::new(OfflineTuner::new(&cfg));
+        let vservers = (0..cl.servers_per_node)
+            .map(|s| VServer {
+                server: Server::spawn(id * 1000 + s, &cfg, Arc::clone(&tuner)),
+                free_ns: vec![joined_ns; cl.workers_per_server],
+                cached_backlog: 0,
+            })
+            .collect();
+        Node {
+            id,
+            cfg,
+            tuner,
+            vservers,
+            picker: LeastLoaded::default(),
+            cold_shapes: HashMap::new(),
+            warm_shapes: HashMap::new(),
+            draining: false,
+            joined_ns,
+            retired_ns: None,
+            invocations: 0,
+            cold_runs: 0,
+            peak_dram_bytes: 0,
+            next_exec_id: 0,
+        }
+    }
+
+    /// Does this node hold a warm hint for `function`?
+    pub fn warm_for(&self, function: &str) -> bool {
+        self.tuner.hints().get(function).is_some()
+    }
+
+    /// Queued-but-unfinished virtual work at time `t_ns`, summed over
+    /// every engine worker.
+    pub fn backlog_ns(&self, t_ns: u64) -> u64 {
+        self.vservers
+            .iter()
+            .flat_map(|v| v.free_ns.iter())
+            .map(|&f| f.saturating_sub(t_ns))
+            .sum()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.vservers.iter().map(|v| v.free_ns.len()).sum()
+    }
+
+    pub fn retired(&self) -> bool {
+        self.retired_ns.is_some()
+    }
+
+    /// Expected CXL lease for an invocation of `spec` (measured shape if
+    /// known, otherwise half the declared footprint).
+    pub fn spill_estimate(&self, spec: &FunctionSpec) -> u64 {
+        if let Some(s) = self.warm_shapes.get(&spec.name) {
+            s.peak_cxl_bytes
+        } else if let Some(s) = self.cold_shapes.get(&spec.name) {
+            s.peak_cxl_bytes
+        } else {
+            spec.body.footprint_hint() / 2
+        }
+    }
+
+    /// Run one invocation for real on a node server (sequentially — the
+    /// fleet stays deterministic), draining the tuner after a profiled
+    /// run so the hint is visible to the next arrival.
+    fn measure(&mut self, spec: &FunctionSpec) -> InvocationOutcome {
+        let id = ((self.id as u64) << 32) | self.next_exec_id;
+        self.next_exec_id += 1;
+        let s = (self.next_exec_id as usize) % self.vservers.len();
+        let rx = self.vservers[s].server.enqueue(id, spec.clone());
+        let out = rx.recv().expect("node server worker died");
+        if out.profiled {
+            self.tuner.drain();
+        }
+        self.peak_dram_bytes = self.peak_dram_bytes.max(out.report.peak_dram_bytes);
+        out
+    }
+
+    fn shape_for(&mut self, spec: &FunctionSpec, warm: bool) -> ServiceShape {
+        let map = if warm { &self.warm_shapes } else { &self.cold_shapes };
+        if let Some(s) = map.get(&spec.name) {
+            return s.clone();
+        }
+        let out = self.measure(spec);
+        let shape = ServiceShape::from_outcome(&out, self.cfg.machine.cache_line);
+        let map = if warm { &mut self.warm_shapes } else { &mut self.cold_shapes };
+        map.insert(spec.name.clone(), shape.clone());
+        shape
+    }
+
+    /// Dispatch one arrival: pick a server (least-loaded, round-robin
+    /// ties), queue it on that server's earliest-free engine worker, and
+    /// return the virtual timeline. `earliest_ns` ≥ the arrival time —
+    /// it carries any pool-capacity delay.
+    pub fn dispatch(
+        &mut self,
+        arrival_ns: u64,
+        earliest_ns: u64,
+        spec: &FunctionSpec,
+        pool_factor: f64,
+        cold_start_ns: u64,
+    ) -> Dispatch {
+        debug_assert!(earliest_ns >= arrival_ns);
+        debug_assert!(!self.retired(), "dispatch to retired node {}", self.id);
+        let slo_target_ns =
+            self.tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
+        let warm = self.warm_for(&spec.name);
+        let shape = self.shape_for(spec, warm);
+        let mut service = shape.wall_ns + shape.cxl_stall_ns * (pool_factor - 1.0).max(0.0);
+        if !warm {
+            self.cold_runs += 1;
+            service += cold_start_ns as f64;
+        }
+        let service_ns = (service.round() as u64).max(1);
+
+        for v in &mut self.vservers {
+            v.cached_backlog = v.free_ns.iter().filter(|&&f| f > earliest_ns).count();
+        }
+        let s = self.picker.pick(&self.vservers);
+        let v = &mut self.vservers[s];
+        let mut wi = 0;
+        for (i, f) in v.free_ns.iter().enumerate() {
+            if *f < v.free_ns[wi] {
+                wi = i;
+            }
+        }
+        let start_ns = earliest_ns.max(v.free_ns[wi]);
+        let finish_ns = start_ns + service_ns;
+        v.free_ns[wi] = finish_ns;
+        self.invocations += 1;
+        Dispatch {
+            start_ns,
+            finish_ns,
+            wait_ns: start_ns - arrival_ns,
+            service_ns,
+            cold: !warm,
+            server: s,
+            slo_target_ns,
+            cxl_bytes: shape.cxl_bytes,
+            checksum: shape.checksum,
+        }
+    }
+
+    /// Shut the node's real servers down (drained or end of run).
+    pub fn retire(&mut self, t_ns: u64) {
+        if self.retired() {
+            return;
+        }
+        self.retired_ns = Some(t_ns.max(self.joined_ns));
+        for v in self.vservers.drain(..) {
+            v.server.shutdown();
+        }
+    }
+
+    /// Seconds of fleet time this node was provisioned for.
+    pub fn active_seconds(&self, end_ns: u64) -> f64 {
+        let until = self.retired_ns.unwrap_or(end_ns).max(self.joined_ns);
+        (until - self.joined_ns) as f64 / 1e9
+    }
+
+    pub fn dram_bytes_total(&self) -> u64 {
+        self.cfg.machine.dram_bytes * self.cfg.cluster.servers_per_node as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::registry::{build, Scale};
+
+    fn spec(name: &str) -> FunctionSpec {
+        FunctionSpec::new(name, Arc::from(build(name, Scale::Small).unwrap()))
+    }
+
+    fn node() -> Node {
+        let mut cfg = Config::default();
+        cfg.cluster.workers_per_server = 2;
+        Node::spawn(0, &cfg, 0)
+    }
+
+    #[test]
+    fn cold_then_warm_then_replay() {
+        let mut n = node();
+        let f = spec("json");
+        assert!(!n.warm_for("json"));
+        let d1 = n.dispatch(0, 0, &f, 1.0, 1000);
+        assert!(d1.cold);
+        assert!(d1.slo_target_ns.is_none());
+        // the profiled run published a hint on this node
+        assert!(n.warm_for("json"));
+        let d2 = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 1000);
+        assert!(!d2.cold);
+        assert!(d2.slo_target_ns.is_some());
+        assert_eq!(d1.checksum, d2.checksum, "placement must not change results");
+        // third invocation replays the warm shape exactly
+        let d3 = n.dispatch(d2.finish_ns, d2.finish_ns, &f, 1.0, 1000);
+        assert_eq!(d3.service_ns, d2.service_ns);
+        assert_eq!(n.cold_runs, 1);
+        assert_eq!(n.invocations, 3);
+        n.retire(d3.finish_ns);
+    }
+
+    #[test]
+    fn pool_contention_inflates_service() {
+        let mut n = node();
+        let f = spec("kvstore");
+        let d1 = n.dispatch(0, 0, &f, 1.0, 0);
+        let warm = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 0);
+        let contended = n.dispatch(warm.finish_ns, warm.finish_ns, &f, 3.0, 0);
+        assert!(
+            contended.service_ns >= warm.service_ns,
+            "contended {} < uncontended {}",
+            contended.service_ns,
+            warm.service_ns
+        );
+        n.retire(contended.finish_ns);
+    }
+
+    #[test]
+    fn queueing_when_workers_busy() {
+        let mut n = node(); // 1 server × 2 workers
+        let f = spec("json");
+        // warm the shape caches first
+        let w = n.dispatch(0, 0, &f, 1.0, 0);
+        let w2 = n.dispatch(w.finish_ns, w.finish_ns, &f, 1.0, 0);
+        let t0 = w2.finish_ns;
+        // three simultaneous arrivals on two workers: the third waits
+        let a = n.dispatch(t0, t0, &f, 1.0, 0);
+        let b = n.dispatch(t0, t0, &f, 1.0, 0);
+        let c = n.dispatch(t0, t0, &f, 1.0, 0);
+        assert_eq!(a.wait_ns, 0);
+        assert_eq!(b.wait_ns, 0);
+        assert!(c.wait_ns > 0);
+        assert_eq!(c.start_ns, a.finish_ns.min(b.finish_ns));
+        assert_eq!(n.backlog_ns(c.finish_ns), 0);
+        n.retire(c.finish_ns);
+    }
+
+    #[test]
+    fn retire_empties_servers() {
+        let mut n = node();
+        n.retire(5);
+        assert!(n.retired());
+        assert_eq!(n.workers(), 0);
+        assert_eq!(n.backlog_ns(0), 0);
+        assert!((n.active_seconds(1_000_000_000) - 5e-9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,299 @@
+//! Cluster-wide shared CXL memory pool.
+//!
+//! The paper evaluates one server with its own CXL expander; pooled
+//! deployments (Pond, TrEnv) instead attach many hosts to one capacity
+//! pool. This module models that pool for the fleet simulation:
+//!
+//! * **capacity arbitration** — every in-flight invocation leases its
+//!   CXL spill from the shared pool for its lifetime; when the pool is
+//!   exhausted, the lease (and thus the invocation's start) is delayed
+//!   until earlier leases release — capacity pressure becomes latency,
+//!   exactly how an allocator stall manifests;
+//! * **bandwidth contention** — per-node CXL links and the shared
+//!   backplane are [`mem::bwmodel`](crate::mem::bwmodel) instances fed
+//!   with each invocation's CXL byte traffic; the resulting M/M/1
+//!   factor inflates the CXL-stall portion of co-running invocations.
+//!
+//! The pool is single-threaded by design: the cluster simulation
+//! processes arrivals in virtual-time order, so plain `&mut` state keeps
+//! the whole fleet run deterministic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::mem::bwmodel::BandwidthModel;
+use crate::mem::tier::{TierKind, TierParams};
+
+/// The shared pool: capacity ledger + bandwidth models.
+#[derive(Debug)]
+pub struct CxlPool {
+    capacity: u64,
+    used: u64,
+    /// Pending releases: (virtual release time, bytes).
+    releases: BinaryHeap<Reverse<(u64, u64)>>,
+    backplane: BandwidthModel,
+    links: Vec<BandwidthModel>,
+    link_params: TierParams,
+    window_ns: f64,
+    /// Times the pool could not grant a full lease even after draining
+    /// every pending release.
+    pub shortages: u64,
+    pub peak_used: u64,
+    occ_sum: f64,
+    occ_samples: u64,
+}
+
+impl CxlPool {
+    pub fn new(
+        capacity: u64,
+        backplane_bw_gbps: f64,
+        link_bw_gbps: f64,
+        nodes: usize,
+        window_ns: u64,
+    ) -> CxlPool {
+        let mk = |bw: f64| TierParams {
+            kind: TierKind::Cxl,
+            latency_ns: 0.0,
+            bw_gbps: bw,
+            capacity,
+        };
+        let link_params = mk(link_bw_gbps);
+        let window_ns = window_ns as f64;
+        let mut pool = CxlPool {
+            capacity,
+            used: 0,
+            releases: BinaryHeap::new(),
+            backplane: BandwidthModel::with_window(&mk(backplane_bw_gbps), window_ns),
+            links: Vec::new(),
+            link_params,
+            window_ns,
+            shortages: 0,
+            peak_used: 0,
+            occ_sum: 0.0,
+            occ_samples: 0,
+        };
+        pool.ensure_nodes(nodes);
+        pool
+    }
+
+    /// Grow the per-node link set (autoscaler added nodes).
+    pub fn ensure_nodes(&mut self, n: usize) {
+        while self.links.len() < n {
+            self.links.push(BandwidthModel::with_window(&self.link_params, self.window_ns));
+        }
+    }
+
+    /// Apply every pending release scheduled at or before `t_ns`.
+    pub fn advance(&mut self, t_ns: u64) {
+        while let Some(&Reverse((te, b))) = self.releases.peek() {
+            if te > t_ns {
+                break;
+            }
+            self.releases.pop();
+            self.used -= b;
+        }
+    }
+
+    /// Lease `want` bytes at virtual time `t_ns`. Returns the grant time
+    /// (≥ `t_ns`; later when the lease had to wait for capacity) and the
+    /// granted byte count (< `want` only when the pool cannot ever fit
+    /// it — counted as a shortage).
+    ///
+    /// A delayed grant does not free the blocking leases early: their
+    /// releases stay queued (and their bytes stay in `used`) until
+    /// their release times, so an acquire landing in between still
+    /// sees them held. The new lease is charged from acquire time even
+    /// when its grant is in the future — conservative by at most the
+    /// waiting lease's own size.
+    pub fn acquire(&mut self, t_ns: u64, want: u64) -> (u64, u64) {
+        let want = want.min(self.capacity);
+        self.advance(t_ns);
+        let mut t_grant = t_ns;
+        // signed: `used` already includes leases granted in the future,
+        // so the live deficit must not be lost to saturation — that is
+        // what keeps several waiters from double-spending one release
+        let mut free = self.capacity as i128 - self.used as i128;
+        if free < want as i128 {
+            // peek-scan forward for the time enough capacity frees,
+            // leaving the release queue itself untouched
+            let mut scanned = Vec::new();
+            while free < want as i128 {
+                match self.releases.pop() {
+                    Some(entry) => {
+                        let Reverse((te, b)) = entry;
+                        free += b as i128;
+                        t_grant = t_grant.max(te);
+                        scanned.push(entry);
+                    }
+                    None => break,
+                }
+            }
+            for entry in scanned {
+                self.releases.push(entry);
+            }
+        }
+        let granted = (want as i128).min(free.max(0)) as u64;
+        if granted < want {
+            self.shortages += 1;
+        }
+        self.used += granted;
+        self.peak_used = self.peak_used.max(self.used);
+        (t_grant, granted)
+    }
+
+    /// Schedule a lease release at virtual time `t_ns`.
+    pub fn release_at(&mut self, t_ns: u64, bytes: u64) {
+        if bytes > 0 {
+            self.releases.push(Reverse((t_ns, bytes)));
+        }
+    }
+
+    /// Record an invocation's CXL byte traffic on its node's link and
+    /// the shared backplane.
+    pub fn record_traffic(&mut self, node: usize, t_ns: u64, bytes: u64) {
+        self.ensure_nodes(node + 1);
+        if bytes > 0 {
+            self.links[node].record(t_ns as f64, bytes);
+            self.backplane.record(t_ns as f64, bytes);
+        }
+    }
+
+    /// Latency-inflation factor a node currently sees: the worse of its
+    /// own link and the shared backplane.
+    pub fn factor(&self, node: usize) -> f64 {
+        let link = self.links.get(node).map(|l| l.factor()).unwrap_or(1.0);
+        link.max(self.backplane.factor())
+    }
+
+    /// Current occupancy, clamped to [0, 1] — `used` can transiently
+    /// exceed capacity while a delayed lease waits for its grant time.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            (self.used as f64 / self.capacity as f64).min(1.0)
+        }
+    }
+
+    pub fn peak_occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            (self.peak_used as f64 / self.capacity as f64).min(1.0)
+        }
+    }
+
+    /// Sample the current occupancy into the running mean.
+    pub fn sample(&mut self) {
+        self.occ_sum += self.occupancy();
+        self.occ_samples += 1;
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occ_samples == 0 {
+            0.0
+        } else {
+            self.occ_sum / self.occ_samples as f64
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: u64) -> CxlPool {
+        CxlPool::new(cap, 64.0, 30.0, 2, 1_000_000)
+    }
+
+    #[test]
+    fn lease_and_release_cycle() {
+        let mut p = pool(1000);
+        let (t, g) = p.acquire(10, 600);
+        assert_eq!((t, g), (10, 600));
+        assert!((p.occupancy() - 0.6).abs() < 1e-9);
+        p.release_at(100, 600);
+        p.advance(99);
+        assert_eq!(p.occupancy(), 0.6);
+        p.advance(100);
+        assert_eq!(p.occupancy(), 0.0);
+        assert_eq!(p.shortages, 0);
+        assert_eq!(p.peak_used, 600);
+    }
+
+    #[test]
+    fn exhausted_pool_delays_grant() {
+        let mut p = pool(1000);
+        let (_, g1) = p.acquire(0, 900);
+        assert_eq!(g1, 900);
+        p.release_at(500, 900);
+        // wants 400 at t=10: must wait for the t=500 release
+        let (t, g) = p.acquire(10, 400);
+        assert_eq!(g, 400);
+        assert_eq!(t, 500);
+        assert_eq!(p.shortages, 0);
+    }
+
+    #[test]
+    fn delayed_grant_does_not_free_blockers_early() {
+        // A holds 900 until t=500; B's 400 must wait for it. A third
+        // lease arriving in between must still see A's bytes held —
+        // the pool must not over-commit the interval [t, 500).
+        let mut p = pool(1000);
+        p.acquire(0, 900);
+        p.release_at(500, 900);
+        let (tb, gb) = p.acquire(10, 400);
+        assert_eq!((tb, gb), (500, 400));
+        let (tc, gc) = p.acquire(20, 500);
+        assert_eq!(gc, 500);
+        assert!(tc >= 500, "C granted at {tc}, while A still holds 900 until t=500");
+        assert!(p.occupancy() <= 1.0);
+        // a fourth waiter cannot double-spend A's release: B (400) and
+        // C (500) already claimed it, so only 100 bytes remain
+        let (_, gd) = p.acquire(30, 400);
+        assert_eq!(gd, 100);
+        assert_eq!(p.shortages, 1);
+    }
+
+    #[test]
+    fn oversized_lease_is_clamped_and_counted() {
+        let mut p = pool(1000);
+        let (t, g) = p.acquire(0, 5000);
+        assert_eq!((t, g), (0, 1000));
+        // want > capacity is clamped up front, not a shortage
+        assert_eq!(p.shortages, 0);
+        let (_, g2) = p.acquire(1, 500);
+        assert_eq!(g2, 0);
+        assert_eq!(p.shortages, 1);
+    }
+
+    #[test]
+    fn traffic_inflates_factor() {
+        let mut p = pool(1 << 30);
+        assert!((p.factor(0) - 1.0).abs() < 1e-9);
+        // hammer node 0's 30 GB/s link: 60 GB/s offered
+        let mut t = 0u64;
+        for _ in 0..200 {
+            t += 500_000; // 0.5 ms steps
+            p.record_traffic(0, t, 30_000_000); // 30 MB per 0.5 ms = 60 B/ns
+        }
+        assert!(p.factor(0) > 1.5, "factor={}", p.factor(0));
+        // node 1's link is idle, but the shared backplane is not
+        assert!(p.factor(1) >= 1.0);
+    }
+
+    #[test]
+    fn occupancy_sampling() {
+        let mut p = pool(100);
+        p.acquire(0, 50);
+        p.sample();
+        p.release_at(1, 50);
+        p.advance(1);
+        p.sample();
+        assert!((p.mean_occupancy() - 0.25).abs() < 1e-9);
+    }
+}

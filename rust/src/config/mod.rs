@@ -177,12 +177,99 @@ impl Default for PorterConfig {
     }
 }
 
+/// Fleet-simulation knobs (`cluster::` — multi-node Porter with an
+/// open-loop load generator and a shared cross-node CXL pool).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Initial node count.
+    pub nodes: usize,
+    /// Autoscaler bounds.
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Porter servers per node and virtual engine workers per server.
+    pub servers_per_node: usize,
+    pub workers_per_server: usize,
+    /// Node-local DRAM tier (split across the node's servers).
+    pub dram_per_node: u64,
+    /// Cluster-wide shared CXL pool capacity (TrEnv-style: one pool,
+    /// every node's capacity tier draws from it).
+    pub cxl_pool: u64,
+    /// Pool backplane bandwidth (shared by all nodes) and per-node CXL
+    /// link bandwidth; both feed `mem::bwmodel` contention factors.
+    pub cxl_pool_bw_gbps: f64,
+    pub cxl_link_bw_gbps: f64,
+    /// Averaging window for the pool bandwidth models.
+    pub bw_window_ns: u64,
+    /// Arrival shape: poisson | bursty | diurnal | replay.
+    pub arrivals: String,
+    /// Trace file for `arrivals = "replay"` (compact Azure-style bins).
+    pub trace_path: String,
+    /// Mean offered load and open-loop generation horizon.
+    pub rate_per_s: f64,
+    pub duration_s: f64,
+    /// Function population size (taken from the workload registry) and
+    /// invocation popularity skew.
+    pub functions: usize,
+    pub zipf_theta: f64,
+    /// PRNG seed: the whole fleet run is deterministic given this.
+    pub seed: u64,
+    /// Sandbox cold-start penalty added to un-hinted invocations.
+    pub cold_start_ns: u64,
+    /// Hint-locality routing: a node without a warm hint is charged this
+    /// many mean-service-times of phantom backlog at node-pick time.
+    pub hint_affinity: f64,
+    /// Autoscaler: enable, signal thresholds, evaluation cadence.
+    pub autoscale: bool,
+    /// Scale up when queued work per worker exceeds this many evaluation
+    /// intervals...
+    pub scale_up_backlog: f64,
+    /// ...or when the windowed SLO violation rate exceeds this.
+    pub scale_up_violation: f64,
+    /// Scale down when queued work per worker falls below this.
+    pub scale_down_idle: f64,
+    pub autoscale_interval_ns: u64,
+    pub cooldown_ns: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 2,
+            min_nodes: 1,
+            max_nodes: 16,
+            servers_per_node: 1,
+            workers_per_server: 4,
+            dram_per_node: 32 * GIB,
+            cxl_pool: 512 * GIB,
+            cxl_pool_bw_gbps: 64.0,
+            cxl_link_bw_gbps: 30.0,
+            bw_window_ns: 1_000_000,
+            arrivals: "poisson".to_string(),
+            trace_path: String::new(),
+            rate_per_s: 400.0,
+            duration_s: 1.0,
+            functions: 6,
+            zipf_theta: 0.9,
+            seed: 42,
+            cold_start_ns: 250_000,
+            hint_affinity: 2.0,
+            autoscale: true,
+            scale_up_backlog: 2.0,
+            scale_up_violation: 0.25,
+            scale_down_idle: 0.05,
+            autoscale_interval_ns: 100_000_000,
+            cooldown_ns: 200_000_000,
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub machine: MachineConfig,
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
+    pub cluster: ClusterConfig,
 }
 
 impl Config {
@@ -227,6 +314,41 @@ impl Config {
                 "porter.promote_threshold" => cfg.porter.promote_threshold = value.as_u64()? as u32,
                 "porter.demote_free_watermark" => cfg.porter.demote_free_watermark = value.as_f64()?,
                 "porter.slo_factor" => cfg.porter.slo_factor = value.as_f64()?,
+                "cluster.nodes" => cfg.cluster.nodes = value.as_u64()? as usize,
+                "cluster.min_nodes" => cfg.cluster.min_nodes = value.as_u64()? as usize,
+                "cluster.max_nodes" => cfg.cluster.max_nodes = value.as_u64()? as usize,
+                "cluster.servers_per_node" => {
+                    cfg.cluster.servers_per_node = value.as_u64()? as usize
+                }
+                "cluster.workers_per_server" => {
+                    cfg.cluster.workers_per_server = value.as_u64()? as usize
+                }
+                "cluster.dram_per_node" => {
+                    cfg.cluster.dram_per_node = parse_bytes(value.as_str()?)?
+                }
+                "cluster.cxl_pool" => cfg.cluster.cxl_pool = parse_bytes(value.as_str()?)?,
+                "cluster.cxl_pool_bw_gbps" => cfg.cluster.cxl_pool_bw_gbps = value.as_f64()?,
+                "cluster.cxl_link_bw_gbps" => cfg.cluster.cxl_link_bw_gbps = value.as_f64()?,
+                "cluster.bw_window_ns" => cfg.cluster.bw_window_ns = value.as_u64()?,
+                "cluster.arrivals" => cfg.cluster.arrivals = value.as_str()?.to_string(),
+                "cluster.trace_path" => cfg.cluster.trace_path = value.as_str()?.to_string(),
+                "cluster.rate_per_s" => cfg.cluster.rate_per_s = value.as_f64()?,
+                "cluster.duration_s" => cfg.cluster.duration_s = value.as_f64()?,
+                "cluster.functions" => cfg.cluster.functions = value.as_u64()? as usize,
+                "cluster.zipf_theta" => cfg.cluster.zipf_theta = value.as_f64()?,
+                "cluster.seed" => cfg.cluster.seed = value.as_u64()?,
+                "cluster.cold_start_ns" => cfg.cluster.cold_start_ns = value.as_u64()?,
+                "cluster.hint_affinity" => cfg.cluster.hint_affinity = value.as_f64()?,
+                "cluster.autoscale" => cfg.cluster.autoscale = value.as_bool()?,
+                "cluster.scale_up_backlog" => cfg.cluster.scale_up_backlog = value.as_f64()?,
+                "cluster.scale_up_violation" => {
+                    cfg.cluster.scale_up_violation = value.as_f64()?
+                }
+                "cluster.scale_down_idle" => cfg.cluster.scale_down_idle = value.as_f64()?,
+                "cluster.autoscale_interval_ns" => {
+                    cfg.cluster.autoscale_interval_ns = value.as_u64()?
+                }
+                "cluster.cooldown_ns" => cfg.cluster.cooldown_ns = value.as_u64()?,
                 _ => return Err(format!("unknown config key: {path}")),
             }
         }
@@ -275,6 +397,47 @@ impl Config {
         }
         if self.monitor.min_regions == 0 || self.monitor.max_regions < self.monitor.min_regions {
             return Err("monitor regions range invalid".into());
+        }
+        let c = &self.cluster;
+        if c.nodes == 0 || c.min_nodes == 0 {
+            return Err("cluster.nodes/min_nodes must be >= 1".into());
+        }
+        if c.min_nodes > c.nodes || c.nodes > c.max_nodes {
+            return Err("cluster node counts must satisfy min <= nodes <= max".into());
+        }
+        if c.servers_per_node == 0 || c.workers_per_server == 0 {
+            return Err("cluster.servers_per_node/workers_per_server must be >= 1".into());
+        }
+        if c.dram_per_node < m.page_bytes * c.servers_per_node as u64 {
+            return Err("cluster.dram_per_node too small for its servers".into());
+        }
+        if c.cxl_pool == 0 {
+            return Err("cluster.cxl_pool must be > 0".into());
+        }
+        if c.cxl_pool_bw_gbps <= 0.0 || c.cxl_link_bw_gbps <= 0.0 || c.bw_window_ns == 0 {
+            return Err("cluster bandwidth model parameters must be positive".into());
+        }
+        if c.rate_per_s <= 0.0 || c.duration_s <= 0.0 {
+            return Err("cluster.rate_per_s/duration_s must be > 0".into());
+        }
+        if c.functions == 0 {
+            return Err("cluster.functions must be >= 1".into());
+        }
+        if c.zipf_theta < 0.0 {
+            return Err("cluster.zipf_theta must be >= 0".into());
+        }
+        for (name, v) in [
+            ("hint_affinity", c.hint_affinity),
+            ("scale_up_backlog", c.scale_up_backlog),
+            ("scale_up_violation", c.scale_up_violation),
+            ("scale_down_idle", c.scale_down_idle),
+        ] {
+            if v < 0.0 {
+                return Err(format!("cluster.{name} must be >= 0"));
+            }
+        }
+        if c.autoscale_interval_ns == 0 {
+            return Err("cluster.autoscale_interval_ns must be > 0".into());
         }
         Ok(())
     }
@@ -325,6 +488,37 @@ migration_enabled = false
         assert!(Config::from_toml_str("[machine]\npage = \"3000\"\n").is_err()); // not pow2
         assert!(Config::from_toml_str("[porter]\ndram_budget_frac = 1.5\n").is_err());
         assert!(Config::from_toml_str("[machine]\ncxl_latency_ns = 10.0\n").is_err());
+    }
+
+    #[test]
+    fn parses_cluster_section() {
+        let text = r#"
+[cluster]
+nodes = 4
+max_nodes = 8
+dram_per_node = "16GB"
+cxl_pool = "1024GB"
+arrivals = "bursty"
+rate_per_s = 900.0
+autoscale = false
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.cluster.nodes, 4);
+        assert_eq!(c.cluster.max_nodes, 8);
+        assert_eq!(c.cluster.dram_per_node, 16 * GIB);
+        assert_eq!(c.cluster.cxl_pool, 1024 * GIB);
+        assert_eq!(c.cluster.arrivals, "bursty");
+        assert!(!c.cluster.autoscale);
+        // untouched fields keep defaults
+        assert_eq!(c.cluster.min_nodes, 1);
+    }
+
+    #[test]
+    fn rejects_invalid_cluster_values() {
+        assert!(Config::from_toml_str("[cluster]\nnodes = 0\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\nnodes = 4\nmax_nodes = 2\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\nrate_per_s = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\nzipf_theta = -1.0\n").is_err());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! A full reproduction of *"Understanding and Optimizing Serverless
 //! Workloads in CXL-Enabled Tiered Memory"* (Li & Yao, 2023) as a
-//! three-layer Rust + JAX + Pallas system:
+//! three-layer Rust + JAX + Pallas system, grown toward fleet scale:
 //!
 //! * **Layer 3 (this crate)** — the Porter middleware (gateway, balancer,
 //!   per-server engines, offline tuner, runtime migration) on top of a
@@ -14,14 +14,29 @@
 //! * **Layer 1 (python/compile/kernels/)** — Pallas tiled-matmul kernel
 //!   called by the L2 model, verified against a pure-jnp oracle.
 //!
-//! Python never runs on the request path: `runtime::` loads the HLO
-//! artifacts via PJRT and executes them natively.
+//! Python never runs on the request path: `runtime::` executes the AOT
+//! artifacts with a pure-Rust reference interpreter (the PJRT-backed
+//! executor lives in git history; the offline image ships no crate
+//! registry).
+//!
+//! ## The `cluster::` layer
+//!
+//! [`cluster`] scales the single-machine stack to a simulated fleet:
+//! every node wraps real Porter servers plus its own tuner/hint cache
+//! (hint locality), all nodes share one cluster-wide CXL pool (capacity
+//! leases + bandwidth contention via [`mem::bwmodel`]), an open-loop
+//! generator (Poisson / bursty / diurnal / Azure-style trace replay)
+//! drives the fleet, a two-level balancer routes node-then-server, and
+//! an autoscaler adds/drains nodes on queue-depth and SLO signals. The
+//! whole run is a deterministic virtual-time simulation: try
+//! `porter-cli cluster --nodes 8 --arrivals poisson`.
 //!
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod mem;
 pub mod metrics;

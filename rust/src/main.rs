@@ -5,7 +5,8 @@
 //!   run     <workload> [--tier dram|cxl] run one workload on one tier
 //!   profile <workload>                   DAMON heatmap + boundness
 //!   place   <workload>                   §3 profile → static placement
-//!   serve   [--requests N]               Porter serving demo (PJRT DL)
+//!   serve   [--requests N]               Porter serving demo (DL path)
+//!   cluster [--nodes N] [--arrivals S]   fleet simulation (open-loop)
 //!   list                                 workload registry
 //!
 //! The figure benches live under `cargo bench` (see rust/benches/).
@@ -33,9 +34,10 @@ fn main() {
         Some("profile") => cmd_profile(&args),
         Some("place") => cmd_place(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         _ => {
             eprintln!(
-                "usage: porter-cli <config|list|run|profile|place|serve> [options]\n\
+                "usage: porter-cli <config|list|run|profile|place|serve|cluster> [options]\n\
                  see `cargo bench` for the paper-figure harnesses"
             );
             2
@@ -180,6 +182,54 @@ fn cmd_place(args: &Args) -> i32 {
     0
 }
 
+/// Fleet simulation: open-loop arrivals over a multi-node Porter
+/// deployment with a shared CXL pool (see `cluster::`).
+fn cmd_cluster(args: &Args) -> i32 {
+    let mut cfg = load_config(args);
+    let parse_result = (|| -> Result<(), String> {
+        let c = &mut cfg.cluster;
+        c.nodes = args.opt_usize("nodes", c.nodes)?;
+        if c.max_nodes < c.nodes {
+            c.max_nodes = c.nodes;
+        }
+        c.max_nodes = args.opt_usize("max-nodes", c.max_nodes)?;
+        c.arrivals = args.opt_or("arrivals", &c.arrivals).to_string();
+        c.trace_path = args.opt_or("trace", &c.trace_path).to_string();
+        c.rate_per_s = args.opt_f64("rate", c.rate_per_s)?;
+        c.duration_s = args.opt_f64("duration", c.duration_s)?;
+        c.functions = args.opt_usize("functions", c.functions)?;
+        c.seed = args.opt_usize("seed", c.seed as usize)? as u64;
+        if args.flag("no-autoscale") {
+            c.autoscale = false;
+        }
+        Ok(())
+    })();
+    if let Err(e) = parse_result {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    println!(
+        "fleet: {} node(s) (max {}), {} functions, {} arrivals @ {:.0}/s for {:.2}s (seed {})",
+        cfg.cluster.nodes,
+        cfg.cluster.max_nodes,
+        cfg.cluster.functions,
+        cfg.cluster.arrivals,
+        cfg.cluster.rate_per_s,
+        cfg.cluster.duration_s,
+        cfg.cluster.seed
+    );
+    match porter::cluster::simulate(&cfg) {
+        Ok(report) => {
+            println!("{}", report.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("cluster error: {e}");
+            2
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     use porter::runtime::{MlpParams, ModelRuntime};
     let requests = args.opt_usize("requests", 32).unwrap_or(32);
@@ -190,7 +240,7 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
     let params = MlpParams::init(&rt.manifest.model_layers.clone(), 42);
     let sig = rt.manifest.get("mlp_infer").expect("mlp_infer artifact");
     let xin = sig.inputs.last().unwrap();

@@ -31,9 +31,18 @@ pub struct BandwidthModel {
 
 impl BandwidthModel {
     pub fn new(params: &TierParams) -> BandwidthModel {
+        BandwidthModel::with_window(params, 10_000.0)
+    }
+
+    /// A model with an explicit averaging window. The per-access default
+    /// (10 µs) suits line-granular traffic inside one run; coarser
+    /// consumers (the cluster-wide CXL pool records whole-invocation
+    /// byte counts) pick a window matching their event granularity.
+    pub fn with_window(params: &TierParams, window_ns: f64) -> BandwidthModel {
+        assert!(window_ns > 0.0);
         BandwidthModel {
             peak_bytes_per_ns: params.bw_gbps,
-            window_ns: 10_000.0,
+            window_ns,
             window_bytes: 0.0,
             demand: 0.0,
             window_start_ns: 0.0,

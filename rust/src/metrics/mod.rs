@@ -25,6 +25,23 @@ impl Counter {
     }
 }
 
+/// Last-written f64 value (occupancy fractions, rates). Stored as bits
+/// in an atomic so gauges share the lock-free registry.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
 /// Log₂-bucketed histogram (ns scale): cheap concurrent recording,
 /// percentile estimates good to ~2× within a bucket, which is plenty for
 /// latency reporting.
@@ -73,6 +90,17 @@ impl Histogram {
         self.max.load(Ordering::Relaxed)
     }
 
+    /// Fold another histogram into this one (fleet rollups aggregate
+    /// per-node histograms; log buckets merge exactly by addition).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (b, ob) in self.buckets.iter().zip(&other.buckets) {
+            b.fetch_add(ob.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Upper bound of the bucket containing the p-th percentile.
     pub fn percentile(&self, p: f64) -> u64 {
         let total = self.count();
@@ -95,12 +123,17 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
@@ -112,6 +145,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", crate::util::fmt_f64(g.get(), 4)));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -158,6 +194,32 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.percentile(99.0), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn gauge_roundtrips() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.75);
+        assert_eq!(g.get(), 0.75);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        a.record(100);
+        a.record(1000);
+        b.record(1000);
+        b.record(1 << 20);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max(), 1 << 20);
+        assert!((a.mean() - (100.0 + 1000.0 + 1000.0 + (1u64 << 20) as f64) / 4.0).abs() < 1.0);
+        // p100 bracketed by the top recorded bucket
+        assert!(a.percentile(100.0) >= 1 << 20);
     }
 
     #[test]

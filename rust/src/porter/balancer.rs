@@ -1,29 +1,61 @@
 //! Load balancer (Fig. 6's "load balancer (e.g. Kubernetes)"):
-//! least-loaded routing over the server pool.
+//! least-loaded routing over a pool of load-reporting targets.
+//!
+//! [`LeastLoaded`] is generic over [`Loaded`] so the same policy routes
+//! invocations across a server pool (the single-machine Porter path) and
+//! across fleet nodes (`cluster::`'s inner server pick).
 
 use crate::porter::server::Server;
 
-/// Route to the server with the fewest queued + running invocations;
-/// ties break round-robin so idle pools still spread work.
+/// Anything the balancer can route to.
+pub trait Loaded {
+    /// Queued + running invocations (lower is better).
+    fn load(&self) -> usize;
+}
+
+impl Loaded for Server {
+    fn load(&self) -> usize {
+        Server::load(self)
+    }
+}
+
+/// Route to the target with the fewest queued + running invocations.
+///
+/// Tie-breaking is true round-robin over the minimum-load set: the scan
+/// cursor advances *past the picked target*, so repeated picks visit the
+/// tied targets in cyclic order. (The previous cursor advanced by one
+/// per call regardless of the pick, which skewed tied subsets — e.g.
+/// with loads `[3, 1, 1]` it routed two thirds of the traffic to the
+/// first tied server.)
 #[derive(Debug, Default)]
 pub struct LeastLoaded {
     rr: std::sync::atomic::AtomicUsize,
 }
 
 impl LeastLoaded {
-    pub fn pick(&self, servers: &[Server]) -> usize {
+    pub fn pick<T: Loaded>(&self, servers: &[T]) -> usize {
         assert!(!servers.is_empty());
-        let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % servers.len();
+        let n = servers.len();
+        // fetch_add keeps concurrent pickers on distinct start offsets
+        // (Gateway::invoke races several threads through here)...
+        let start = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % n;
         let mut best = start;
         let mut best_load = servers[start].load();
-        for off in 1..servers.len() {
-            let i = (start + off) % servers.len();
+        for off in 1..n {
+            let i = (start + off) % n;
             let l = servers[i].load();
             if l < best_load {
                 best = i;
                 best_load = l;
             }
         }
+        // ...and advancing past the pick makes the next scan start
+        // after it, so equally-loaded targets are visited in cyclic
+        // order (the old cursor skewed tied subsets, e.g. two thirds
+        // of [3, 1, 1]'s traffic went to the first tied server). Under
+        // concurrency the store can lose a race, which only perturbs
+        // the cursor, never the least-loaded invariant.
+        self.rr.store(best + 1, std::sync::atomic::Ordering::Relaxed);
         best
     }
 }
@@ -34,6 +66,14 @@ mod tests {
     use crate::config::Config;
     use crate::porter::tuner::OfflineTuner;
     use std::sync::Arc;
+
+    struct Fixed(usize);
+
+    impl Loaded for Fixed {
+        fn load(&self) -> usize {
+            self.0
+        }
+    }
 
     #[test]
     fn picks_least_loaded() {
@@ -51,6 +91,29 @@ mod tests {
         assert_eq!(seen.len(), 3);
         for s in servers {
             s.shutdown();
+        }
+    }
+
+    #[test]
+    fn tied_subset_rotates_fairly() {
+        // loads [3, 1, 1]: all traffic goes to the tied {1, 2}, split
+        // evenly (the pre-fix cursor gave server 1 two thirds)
+        let servers = vec![Fixed(3), Fixed(1), Fixed(1)];
+        let lb = LeastLoaded::default();
+        let mut counts = [0usize; 3];
+        for _ in 0..10 {
+            counts[lb.pick(&servers)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], 5);
+        assert_eq!(counts[2], 5);
+    }
+
+    #[test]
+    fn single_target_always_zero() {
+        let lb = LeastLoaded::default();
+        for _ in 0..5 {
+            assert_eq!(lb.pick(&[Fixed(7)]), 0);
         }
     }
 }

@@ -39,12 +39,19 @@ impl FnSlo {
 
 impl SloTracker {
     pub fn record(&mut self, outcome: &InvocationOutcome) {
-        let e = self.per_function.entry(outcome.function.clone()).or_default();
+        self.record_latency(&outcome.function, outcome.report.wall_ns, outcome.slo_target_ns);
+    }
+
+    /// Record a raw latency sample against an optional target. The
+    /// cluster layer uses this for *end-to-end* latency (queue wait +
+    /// service), which has no single `InvocationOutcome`.
+    pub fn record_latency(&mut self, function: &str, latency_ns: f64, target_ns: Option<f64>) {
+        let e = self.per_function.entry(function.to_string()).or_default();
         e.invocations += 1;
-        e.total_wall_ns += outcome.report.wall_ns;
-        if let Some(met) = outcome.slo_met() {
+        e.total_wall_ns += latency_ns;
+        if let Some(t) = target_ns {
             e.judged += 1;
-            if !met {
+            if latency_ns > t {
                 e.violations += 1;
             }
         }

@@ -1,15 +1,23 @@
-//! Executable cache + typed entry points for the DL artifacts.
+//! Native reference executor for the DL artifacts.
 //!
-//! One `PjRtLoadedExecutable` per artifact, compiled once at startup and
-//! reused for every invocation — the request path never touches Python.
+//! Python still runs once at build time (`make artifacts`) to AOT-lower
+//! the JAX/Pallas model; this module is the request-path half. The
+//! original PJRT-backed executor (xla crate) lives in git history — the
+//! offline image ships no crate registry, so the default build executes
+//! the artifact *signatures* with a pure-Rust interpreter that computes
+//! exactly the math `python/compile/model.py` lowers: an MLP with ReLU
+//! hidden layers, softmax cross-entropy + SGD training (LEARNING_RATE =
+//! 0.05), and the raw matmul kernel. Numerics are validated against the
+//! same rust-side references as the PJRT path was
+//! (`rust/tests/integration_runtime.rs`).
 
-use std::collections::HashMap;
-
-use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
-use crate::runtime::artifacts::{ArtifactManifest, ArtifactSig};
+use crate::anyhow;
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
+
+/// SGD learning rate — must match `python/compile/model.py`.
+const LEARNING_RATE: f32 = 0.05;
 
 /// MLP parameters as flat (W, b) float vectors in layer order — the
 /// positional layout `python/compile/aot.py` records in the manifest.
@@ -23,7 +31,7 @@ pub struct MlpParams {
 impl MlpParams {
     /// Initialize with the same scheme as `model.init_params` (different
     /// RNG — numerical equivalence is established per-execution by
-    /// feeding identical literals, not by matching Python's init).
+    /// feeding identical inputs, not by matching Python's init).
     pub fn init(dims: &[usize], seed: u64) -> MlpParams {
         let mut rng = Rng::new(seed);
         let layers = dims
@@ -38,84 +46,76 @@ impl MlpParams {
         MlpParams { layers, dims: dims.to_vec() }
     }
 
-    /// Flatten into PJRT literals (W1, b1, W2, b2, ...).
-    pub fn to_literals(&self) -> Result<Vec<Literal>> {
-        let mut out = Vec::with_capacity(self.layers.len() * 2);
-        for (i, (w, b)) in self.layers.iter().enumerate() {
-            let (din, dout) = (self.dims[i] as i64, self.dims[i + 1] as i64);
-            out.push(Literal::vec1(w).reshape(&[din, dout])?);
-            out.push(Literal::vec1(b));
-        }
-        Ok(out)
-    }
-
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|(w, b)| w.len() + b.len()).sum()
     }
+
+    /// Forward pass for a (batch, dims[0]) row-major input: ReLU hidden
+    /// layers, linear output — identical to `model.mlp_forward`.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut h = x.to_vec();
+        let n_layers = self.layers.len();
+        for (l, (w, b)) in self.layers.iter().enumerate() {
+            let relu = l + 1 < n_layers;
+            h = dense_forward(&h, w, b, batch, self.dims[l], self.dims[l + 1], relu);
+        }
+        h
+    }
 }
 
-/// The runtime: PJRT client + compiled executables.
+/// out = act(x @ w + b); x is (batch, din), w is (din, dout) row-major.
+fn dense_forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    batch: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut out = vec![0f32; batch * dout];
+    for r in 0..batch {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        for k in 0..din {
+            let a = x[r * din + k];
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for (o, wv) in orow.iter_mut().zip(wrow) {
+                *o += a * wv;
+            }
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += b[j];
+            if relu && *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// The runtime: manifest + native interpreter state.
 pub struct ModelRuntime {
     pub manifest: ArtifactManifest,
-    client: PjRtClient,
-    executables: HashMap<String, PjRtLoadedExecutable>,
 }
 
 impl ModelRuntime {
-    /// Load and compile every artifact in the manifest directory.
+    /// Load the artifact manifest (shapes + layer geometry). The HLO
+    /// text files are not parsed by the native interpreter; the manifest
+    /// alone pins the artifact signatures the interpreter honours.
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<ModelRuntime> {
         let manifest = ArtifactManifest::load(dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut executables = HashMap::new();
-        for art in &manifest.artifacts {
-            let exe = Self::compile_artifact(&client, art)?;
-            executables.insert(art.name.clone(), exe);
-        }
-        Ok(ModelRuntime { manifest, client, executables })
-    }
-
-    fn compile_artifact(client: &PjRtClient, art: &ArtifactSig) -> Result<PjRtLoadedExecutable> {
-        let path = art
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", art.file))?;
-        let proto = HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {path}: {e:?}"))
-            .with_context(|| "HLO text artifact unreadable — rerun `make artifacts`")?;
-        let comp = XlaComputation::from_proto(&proto);
-        client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", art.name))
+        Ok(ModelRuntime { manifest })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu (reference interpreter)".to_string()
     }
 
     pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
-
-    /// Execute an artifact with positional inputs; returns the flattened
-    /// tuple outputs (aot.py lowers with return_tuple=True).
-    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let sig = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
-        if inputs.len() != sig.inputs.len() {
-            return Err(anyhow!(
-                "{name}: expected {} inputs, got {}",
-                sig.inputs.len(),
-                inputs.len()
-            ));
-        }
-        let exe = &self.executables[name];
-        let result = exe
-            .execute::<Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        tuple.to_tuple().map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+        self.manifest.get(name).is_some()
     }
 
     /// Serve one inference batch: logits for `x` of shape (batch, d_in).
@@ -123,57 +123,182 @@ impl ModelRuntime {
         self.mlp_infer_with("mlp_infer", params, x)
     }
 
-    /// Inference through a named artifact variant (`mlp_infer` embeds the
-    /// Pallas kernel; `mlp_infer_fused` is the XLA-native-fusion build —
-    /// see EXPERIMENTS.md §Perf for the comparison).
+    /// Inference through a named artifact variant (`mlp_infer` embeds
+    /// the Pallas kernel; `mlp_infer_fused` is the XLA-native-fusion
+    /// build). Both lower the same math, so the interpreter computes one
+    /// reference forward for either.
     pub fn mlp_infer_with(&self, artifact: &str, params: &MlpParams, x: &[f32]) -> Result<Vec<f32>> {
         let sig = self.manifest.get(artifact).ok_or_else(|| anyhow!("no {artifact} artifact"))?;
+        // positional layout: (W1, b1, ..., Wn, bn, x)
+        if sig.inputs.len() != params.layers.len() * 2 + 1 {
+            return Err(anyhow!(
+                "{artifact}: expected {} inputs, params supply {}",
+                sig.inputs.len(),
+                params.layers.len() * 2 + 1
+            ));
+        }
         let xin = &sig.inputs[sig.inputs.len() - 1];
         if x.len() != xin.elements() {
             return Err(anyhow!("x has {} elements, artifact wants {}", x.len(), xin.elements()));
         }
-        let mut inputs = params.to_literals()?;
-        inputs.push(Literal::vec1(x).reshape(&[xin.shape[0] as i64, xin.shape[1] as i64])?);
-        let out = self.execute(artifact, &inputs)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+        let (batch, d_in) = (xin.shape[0], xin.shape[1]);
+        if d_in != params.dims[0] {
+            return Err(anyhow!("artifact d_in {} vs params d_in {}", d_in, params.dims[0]));
+        }
+        for (l, (w, _)) in params.layers.iter().enumerate() {
+            if sig.inputs[2 * l].elements() != w.len() {
+                return Err(anyhow!(
+                    "{artifact}: layer {l} weights have {} elements, artifact wants {}",
+                    w.len(),
+                    sig.inputs[2 * l].elements()
+                ));
+            }
+        }
+        Ok(params.forward(x, batch))
     }
 
-    /// One SGD training step; updates `params` in place, returns loss.
+    /// One SGD training step; updates `params` in place, returns the
+    /// softmax cross-entropy loss (matches `model.mlp_train_step`).
     pub fn mlp_train_step(&self, params: &mut MlpParams, x: &[f32], y: &[i32]) -> Result<f32> {
         let sig = self.manifest.get("mlp_train").ok_or_else(|| anyhow!("no mlp_train artifact"))?;
+        // positional layout: (W1, b1, ..., Wn, bn, x, y)
+        if sig.inputs.len() != params.layers.len() * 2 + 2 {
+            return Err(anyhow!(
+                "mlp_train: expected {} inputs, params supply {}",
+                sig.inputs.len(),
+                params.layers.len() * 2 + 2
+            ));
+        }
         let xin = &sig.inputs[sig.inputs.len() - 2];
-        let mut inputs = params.to_literals()?;
-        inputs.push(Literal::vec1(x).reshape(&[xin.shape[0] as i64, xin.shape[1] as i64])?);
-        inputs.push(Literal::vec1(y));
-        let out = self.execute("mlp_train", &inputs)?;
-        // layout: (W1, b1, W2, b2, W3, b3, loss)
-        if out.len() != params.layers.len() * 2 + 1 {
-            return Err(anyhow!("unexpected train output arity {}", out.len()));
+        let (batch, d_in) = (xin.shape[0], xin.shape[1]);
+        if x.len() != batch * d_in {
+            return Err(anyhow!("x has {} elements, artifact wants {}", x.len(), batch * d_in));
         }
-        for (i, lw) in params.layers.iter_mut().enumerate() {
-            lw.0 = out[2 * i].to_vec::<f32>().map_err(|e| anyhow!("W{i}: {e:?}"))?;
-            lw.1 = out[2 * i + 1].to_vec::<f32>().map_err(|e| anyhow!("b{i}: {e:?}"))?;
+        if y.len() != batch {
+            return Err(anyhow!("y has {} labels, artifact wants {}", y.len(), batch));
         }
-        out.last().unwrap().get_first_element::<f32>().map_err(|e| anyhow!("loss: {e:?}"))
+        if d_in != params.dims[0] {
+            return Err(anyhow!("artifact d_in {} vs params d_in {}", d_in, params.dims[0]));
+        }
+        let n_layers = params.layers.len();
+        let n_classes = *params.dims.last().unwrap();
+
+        // forward, keeping every activation (acts[0] = x, acts[l+1] =
+        // layer l output post-ReLU)
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+        acts.push(x.to_vec());
+        for (l, (w, b)) in params.layers.iter().enumerate() {
+            let relu = l + 1 < n_layers;
+            let out = dense_forward(
+                acts.last().unwrap(),
+                w,
+                b,
+                batch,
+                params.dims[l],
+                params.dims[l + 1],
+                relu,
+            );
+            acts.push(out);
+        }
+
+        // softmax cross-entropy: loss and d(loss)/d(logits)
+        let logits = acts.last().unwrap();
+        let mut grad = vec![0f32; batch * n_classes];
+        let mut loss = 0f64;
+        for r in 0..batch {
+            let row = &logits[r * n_classes..(r + 1) * n_classes];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut denom = 0f64;
+            for &v in row {
+                denom += ((v - max) as f64).exp();
+            }
+            let label = y[r];
+            if label < 0 || label as usize >= n_classes {
+                return Err(anyhow!("label {} out of range 0..{}", label, n_classes));
+            }
+            let label = label as usize;
+            let logp_label = (row[label] - max) as f64 - denom.ln();
+            loss -= logp_label;
+            let grow = &mut grad[r * n_classes..(r + 1) * n_classes];
+            for (j, g) in grow.iter_mut().enumerate() {
+                let p = (((row[j] - max) as f64).exp() / denom) as f32;
+                *g = (p - if j == label { 1.0 } else { 0.0 }) / batch as f32;
+            }
+        }
+        let loss = (loss / batch as f64) as f32;
+
+        // backward: for layer l, dW = acts[l]^T @ g, db = Σ_rows g,
+        // g_prev = (g @ W^T) ∘ relu'(acts[l])
+        let mut g = grad;
+        for l in (0..n_layers).rev() {
+            let (din, dout) = (params.dims[l], params.dims[l + 1]);
+            let a = &acts[l];
+            let (w, b) = &mut params.layers[l];
+            // input gradient first (needs the pre-update weights)
+            let g_prev = if l > 0 {
+                let mut gp = vec![0f32; batch * din];
+                for r in 0..batch {
+                    let grow = &g[r * dout..(r + 1) * dout];
+                    let gprow = &mut gp[r * din..(r + 1) * din];
+                    for (k, gp_k) in gprow.iter_mut().enumerate() {
+                        if a[r * din + k] <= 0.0 {
+                            continue; // ReLU gate (acts[l] is post-ReLU)
+                        }
+                        let wrow = &w[k * dout..(k + 1) * dout];
+                        let mut s = 0f32;
+                        for (gv, wv) in grow.iter().zip(wrow) {
+                            s += gv * wv;
+                        }
+                        *gp_k = s;
+                    }
+                }
+                Some(gp)
+            } else {
+                None
+            };
+            // parameter update
+            for r in 0..batch {
+                let grow = &g[r * dout..(r + 1) * dout];
+                for k in 0..din {
+                    let av = a[r * din + k];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let wrow = &mut w[k * dout..(k + 1) * dout];
+                    for (wv, gv) in wrow.iter_mut().zip(grow) {
+                        *wv -= LEARNING_RATE * av * gv;
+                    }
+                }
+                for (bv, gv) in b.iter_mut().zip(grow) {
+                    *bv -= LEARNING_RATE * gv;
+                }
+            }
+            if let Some(gp) = g_prev {
+                g = gp;
+            }
+        }
+        Ok(loss)
     }
 
-    /// Run the standalone Pallas-matmul artifact.
+    /// Run the standalone Pallas-matmul artifact: plain (n,k)·(k,m).
     pub fn matmul(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
         let sig = self.manifest.get("matmul").ok_or_else(|| anyhow!("no matmul artifact"))?;
         let (a, b) = (&sig.inputs[0], &sig.inputs[1]);
-        let xs = Literal::vec1(x).reshape(&[a.shape[0] as i64, a.shape[1] as i64])?;
-        let ys = Literal::vec1(y).reshape(&[b.shape[0] as i64, b.shape[1] as i64])?;
-        let out = self.execute("matmul", &[xs, ys])?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("matmul out: {e:?}"))
+        let (n, k) = (a.shape[0], a.shape[1]);
+        let (k2, m) = (b.shape[0], b.shape[1]);
+        if x.len() != n * k || y.len() != k2 * m || k != k2 {
+            return Err(anyhow!("matmul shape mismatch: x {} y {}", x.len(), y.len()));
+        }
+        // x@y is one bias-free, activation-free dense layer
+        Ok(dense_forward(x, y, &vec![0f32; m], n, k, m, false))
     }
 }
 
 #[cfg(test)]
 mod tests {
-    //! These tests need `make artifacts` to have run; they are skipped
-    //! (not failed) when artifacts are absent so `cargo test` works in a
-    //! fresh checkout. `rust/tests/integration_runtime.rs` asserts the
-    //! full numerics.
+    //! Manifest-dependent tests are skipped (not failed) when `make
+    //! artifacts` has not run; `rust/tests/integration_runtime.rs`
+    //! asserts the full numerics against the rust-side references.
 
     use super::*;
 
@@ -187,13 +312,91 @@ mod tests {
     }
 
     #[test]
-    fn params_flatten_in_layer_order() {
+    fn params_layout_in_layer_order() {
         let p = MlpParams::init(&[4, 8, 2], 1);
         assert_eq!(p.param_count(), 4 * 8 + 8 + 8 * 2 + 2);
-        let lits = p.to_literals().unwrap();
-        assert_eq!(lits.len(), 4);
-        assert_eq!(lits[0].element_count(), 32);
-        assert_eq!(lits[1].element_count(), 8);
+        assert_eq!(p.layers.len(), 2);
+        assert_eq!(p.layers[0].0.len(), 32);
+        assert_eq!(p.layers[0].1.len(), 8);
+    }
+
+    #[test]
+    fn forward_identity_layer() {
+        // single layer, identity weights, zero bias → logits == x
+        let mut p = MlpParams::init(&[3, 3], 1);
+        p.layers[0].0 = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        p.layers[0].1 = vec![0.0; 3];
+        let x = vec![0.5, -1.5, 2.0];
+        // output layer is linear (no ReLU), so negatives pass through
+        assert_eq!(p.forward(&x, 1), x);
+    }
+
+    #[test]
+    fn train_step_reduces_loss_without_artifacts() {
+        // pure-math check of the interpreter: tiny net, fixed task
+        let dims = [4usize, 16, 3];
+        let mut params = MlpParams::init(&dims, 9);
+        let mut rng = Rng::new(31);
+        let batch = 16;
+        let mut step = |params: &mut MlpParams| -> f32 {
+            let mut x = vec![0f32; batch * 4];
+            let mut y = vec![0i32; batch];
+            for b in 0..batch {
+                for v in &mut x[b * 4..(b + 1) * 4] {
+                    *v = rng.normal() as f32;
+                }
+                // label = argmax of first 3 coords: linearly separable
+                let xs = &x[b * 4..(b + 1) * 4];
+                let mut best = 0;
+                for c in 1..3 {
+                    if xs[c] > xs[best] {
+                        best = c;
+                    }
+                }
+                y[b] = best as i32;
+            }
+            train_step_raw(params, &x, &y, batch).unwrap()
+        };
+        let first = step(&mut params);
+        let mut last = first;
+        for _ in 0..60 {
+            last = step(&mut params);
+        }
+        assert!(last < first * 0.8, "loss did not fall: {first} → {last}");
+    }
+
+    /// Train-step body without a manifest (test helper mirroring
+    /// `mlp_train_step`'s shape plumbing).
+    fn train_step_raw(
+        params: &mut MlpParams,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+    ) -> crate::util::error::Result<f32> {
+        // fabricate a runtime whose manifest declares the right shapes:
+        // (W1, b1, ..., Wn, bn, x, y), as aot.py records them
+        use crate::runtime::artifacts::{ArtifactSig, TensorSig};
+        let t = |shape: Vec<usize>, dtype: &str| TensorSig { shape, dtype: dtype.into() };
+        let mut inputs = Vec::new();
+        for w in params.dims.windows(2) {
+            inputs.push(t(vec![w[0], w[1]], "float32"));
+            inputs.push(t(vec![w[1]], "float32"));
+        }
+        inputs.push(t(vec![batch, params.dims[0]], "float32"));
+        inputs.push(t(vec![batch], "int32"));
+        let rt = ModelRuntime {
+            manifest: ArtifactManifest {
+                dir: std::path::PathBuf::new(),
+                model_layers: params.dims.clone(),
+                artifacts: vec![ArtifactSig {
+                    name: "mlp_train".into(),
+                    file: std::path::PathBuf::new(),
+                    inputs,
+                    outputs: vec![],
+                }],
+            },
+        };
+        rt.mlp_train_step(params, x, y)
     }
 
     #[test]

@@ -1,12 +1,16 @@
-//! PJRT runtime: load the AOT HLO artifacts and execute them natively.
+//! DL runtime: load the AOT artifact manifest and execute the model
+//! natively.
 //!
 //! Python runs once at build time (`make artifacts`); this module is the
-//! request-path half — `PjRtClient::cpu()` compiles each
-//! `artifacts/*.hlo.txt` once, then invocations execute the cached
-//! executable with concrete literals.
+//! request-path half. The artifact manifest pins each entry point's
+//! signature; [`executor::ModelRuntime`] executes the same math the HLO
+//! artifacts lower (MLP forward, softmax-CE SGD step, matmul) with a
+//! pure-Rust reference interpreter, so the request path needs neither
+//! Python nor an XLA runtime. The original PJRT-backed executor is in
+//! git history and can be reinstated by vendoring the `xla` crate.
 
 pub mod artifacts;
 pub mod executor;
 
 pub use artifacts::{ArtifactManifest, ArtifactSig, TensorSig};
-pub use executor::{ModelRuntime, MlpParams};
+pub use executor::{MlpParams, ModelRuntime};

@@ -1,0 +1,99 @@
+//! Minimal error type (`anyhow` substitute for the offline image).
+//!
+//! A string-chain error: `anyhow!("...")` creates one, [`Context`] wraps
+//! one with an outer description. `Display` shows the outermost message;
+//! the alternate form (`{:#}`) and `Debug` render the full chain
+//! outermost-first, which is what `main() -> Result<(), Error>` prints.
+
+use std::fmt;
+
+/// An error with a chain of context strings, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { chain: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context description.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The full outermost-first chain.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any displayable error (the `anyhow::Context` API
+/// subset the crate uses).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f()))
+    }
+}
+
+/// Format an [`Error`] in place (`anyhow!` substitute).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>("inner failure")
+            .context("outer context")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer context");
+        assert_eq!(format!("{e:#}"), "outer context: inner failure");
+        assert_eq!(format!("{e:?}"), "outer context: inner failure");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad thing {} at {}", 7, "site");
+        assert_eq!(format!("{e}"), "bad thing 7 at site");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<()> = Err(Error::msg("x")).with_context(|| format!("step {}", 2));
+        assert_eq!(format!("{:#}", r.unwrap_err()), "step 2: x");
+    }
+}

@@ -1,12 +1,14 @@
 //! Small self-contained substrates the rest of the crate builds on.
 //!
-//! The offline build image ships only the `xla` crate's dependency
-//! closure, so the usual ecosystem crates (`rand`, `serde`, `criterion`,
-//! `clap`, `proptest`) are unavailable. Everything here is a deliberate,
-//! tested stand-in: a deterministic PRNG, summary statistics, a JSON
-//! reader/writer, ASCII tables, and byte-size formatting.
+//! The offline build image ships no crates.io registry, so the usual
+//! ecosystem crates (`rand`, `serde`, `criterion`, `clap`, `proptest`,
+//! `anyhow`) are unavailable. Everything here is a deliberate, tested
+//! stand-in: a deterministic PRNG, summary statistics, a JSON
+//! reader/writer, ASCII tables, byte-size formatting, and a chained
+//! error type.
 
 pub mod bytes;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -1,0 +1,163 @@
+//! Integration: the fleet simulation end-to-end — open-loop arrivals
+//! routed across nodes, the shared CXL pool arbitrated, hints kept
+//! node-local, the autoscaler reacting to load, and the whole run
+//! deterministic under a fixed seed.
+
+use porter::cluster::{arrivals_from_config, default_population, simulate, Cluster};
+use porter::config::Config;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.min_nodes = 1;
+    cfg.cluster.max_nodes = 4;
+    cfg.cluster.functions = 3;
+    cfg.cluster.rate_per_s = 400.0;
+    cfg.cluster.duration_s = 0.05;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.seed = 0x5EED;
+    cfg
+}
+
+#[test]
+fn fleet_run_is_deterministic() {
+    let cfg = small_cfg();
+    let a = simulate(&cfg).unwrap();
+    let b = simulate(&cfg).unwrap();
+    assert_eq!(a.determinism_token, b.determinism_token);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.fleet_p99_ns, b.fleet_p99_ns);
+    assert_eq!(a.cold_runs, b.cold_runs);
+    // a different seed routes differently
+    let mut cfg2 = small_cfg();
+    cfg2.cluster.seed = 0xBEEF;
+    let c = simulate(&cfg2).unwrap();
+    assert_ne!(a.determinism_token, c.determinism_token);
+}
+
+#[test]
+fn all_arrivals_complete_and_accounting_holds() {
+    let cfg = small_cfg();
+    let schedule = arrivals_from_config(&cfg).unwrap();
+    let r = simulate(&cfg).unwrap();
+    assert_eq!(r.completed, schedule.arrivals.len() as u64);
+    assert!(r.completed > 0);
+    let per_node: u64 = r.nodes.iter().map(|n| n.invocations).sum();
+    assert_eq!(per_node, r.completed);
+    assert!(r.fleet_p99_ns >= r.fleet_p50_ns);
+    assert!(r.throughput_per_s > 0.0);
+    assert!(r.node_seconds > 0.0);
+    assert!(r.cost_units > 0.0);
+    assert!((0.0..=1.0).contains(&r.violation_rate));
+    assert!((0.0..=1.0).contains(&r.pool_peak_occupancy));
+}
+
+#[test]
+fn hints_are_node_local_and_bounded() {
+    let mut cfg = small_cfg();
+    cfg.cluster.rate_per_s = 1000.0; // ~50 arrivals
+    let r = simulate(&cfg).unwrap();
+    // each node profiles a function at most once: cold runs are bounded
+    // by nodes × functions, and the rest of the fleet traffic is warm
+    let max_cold = (r.nodes.len() * cfg.cluster.functions) as u64;
+    assert!(r.cold_runs <= max_cold, "cold {} > bound {max_cold}", r.cold_runs);
+    assert!(
+        r.completed > r.cold_runs * 2,
+        "most invocations should be warm: {} cold of {}",
+        r.cold_runs,
+        r.completed
+    );
+}
+
+/// Calibrated overload: measure the fleet's mean service time first, so
+/// the offered load is guaranteed past one node's capacity whatever the
+/// workloads' virtual service times turn out to be.
+fn overload_rate(base: &Config, factor: f64) -> f64 {
+    let mut cal = base.clone();
+    cal.cluster.nodes = 1;
+    cal.cluster.autoscale = false;
+    cal.cluster.rate_per_s = 500.0;
+    cal.cluster.duration_s = 0.2;
+    let r = simulate(&cal).unwrap();
+    let mean_service_s = (r.mean_service_ns / 1e9).max(1e-6);
+    let workers =
+        (base.cluster.servers_per_node * base.cluster.workers_per_server) as f64;
+    factor * workers / mean_service_s
+}
+
+#[test]
+fn autoscaler_grows_fleet_under_overload() {
+    let mut cfg = small_cfg();
+    cfg.cluster.nodes = 1;
+    cfg.cluster.max_nodes = 4;
+    cfg.cluster.autoscale = true;
+    cfg.cluster.autoscale_interval_ns = 5_000_000; // 5 ms
+    cfg.cluster.cooldown_ns = 10_000_000;
+    cfg.cluster.rate_per_s = overload_rate(&cfg, 6.0);
+    cfg.cluster.duration_s = 0.1;
+    let r = simulate(&cfg).unwrap();
+    assert!(
+        !r.events.is_empty(),
+        "overload produced no autoscaler events: wait {}",
+        r.mean_wait_ns
+    );
+    assert!(r.nodes.len() > 1, "fleet never grew past one node");
+    // and the grown fleet still completed everything
+    let schedule = arrivals_from_config(&cfg).unwrap();
+    assert_eq!(r.completed, schedule.arrivals.len() as u64);
+}
+
+#[test]
+fn more_nodes_relieve_queueing_under_fixed_load() {
+    let mut cfg = small_cfg();
+    cfg.cluster.rate_per_s = overload_rate(&cfg, 3.0);
+    cfg.cluster.duration_s = 0.05;
+    cfg.cluster.nodes = 1;
+    let one = simulate(&cfg).unwrap();
+    cfg.cluster.nodes = 4;
+    cfg.cluster.max_nodes = 4;
+    let four = simulate(&cfg).unwrap();
+    assert!(
+        four.mean_wait_ns <= one.mean_wait_ns * 1.05 + 10_000.0,
+        "4 nodes queued worse than 1: {} vs {}",
+        four.mean_wait_ns,
+        one.mean_wait_ns
+    );
+}
+
+#[test]
+fn tiny_pool_is_contended() {
+    let mut big = small_cfg();
+    big.cluster.seed = 3;
+    // scarce node DRAM forces real CXL spill, so invocations actually
+    // lease from the shared pool
+    big.cluster.dram_per_node = 4 << 20;
+    let mut tiny = big.clone();
+    tiny.cluster.cxl_pool = 256 << 10; // 256 KiB shared across the fleet
+    let r_big = simulate(&big).unwrap();
+    let r_tiny = simulate(&tiny).unwrap();
+    assert!(r_tiny.pool_peak_occupancy >= r_big.pool_peak_occupancy);
+    // capacity pressure surfaces as leases that wait or come up short
+    assert!(
+        r_tiny.pool_shortages > 0 || r_tiny.mean_wait_ns >= r_big.mean_wait_ns,
+        "tiny pool showed no pressure"
+    );
+}
+
+#[test]
+fn replay_arrivals_drive_the_fleet() {
+    let mut cfg = small_cfg();
+    cfg.cluster.arrivals = "replay".into();
+    cfg.cluster.trace_path = String::new(); // synthesized demo trace
+    let r = simulate(&cfg).unwrap();
+    assert!(r.completed > 0);
+    let again = simulate(&cfg).unwrap();
+    assert_eq!(r.determinism_token, again.determinism_token);
+}
+
+#[test]
+fn population_and_bad_names() {
+    assert_eq!(default_population(3).len(), 3);
+    let cfg = small_cfg();
+    assert!(Cluster::new(&cfg, &["no-such-fn".to_string()]).is_err());
+}

@@ -7,7 +7,7 @@ use porter::monitor::{Damon, ExactHeatmap, Heatmap, TopDown};
 use porter::placement::static_place::{profile_and_place, run_plain};
 use porter::placement::HeatClass;
 use porter::sim::{colocate, Machine};
-use porter::trace::TraceRecorder;
+use porter::trace::{NullSink, TraceRecorder};
 use porter::workloads::graph::rmat;
 use porter::workloads::kvstore::KvStore;
 use porter::workloads::pagerank::PageRank;
@@ -107,6 +107,44 @@ fn top_half(xs: &[f64]) -> Vec<usize> {
     idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
     idx.truncate(xs.len() / 2);
     idx
+}
+
+/// Recorder replay fidelity: record a workload, replay the recording
+/// into a second sink — the replay must reproduce the totals of a
+/// direct (unrecorded) run of the same deterministic workload exactly.
+#[test]
+fn trace_recorder_replay_matches_direct_run() {
+    let cfg = Config::default();
+    let w = KvStore::new(5_000, 25_000);
+    // recorded run
+    let mut rec = TraceRecorder::new();
+    {
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut rec);
+        w.run(&mut env);
+    }
+    let trace = rec.finish();
+    // direct run into a counting sink
+    let mut direct = NullSink::default();
+    {
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut direct);
+        w.run(&mut env);
+    }
+    // replay into a second sink
+    let mut replayed = NullSink::default();
+    trace.replay(&mut replayed);
+    assert_eq!(replayed.accesses, direct.accesses, "access totals drifted in replay");
+    assert_eq!(replayed.bytes, direct.bytes, "byte totals drifted in replay");
+    assert_eq!(replayed.compute_cycles, direct.compute_cycles, "compute drifted in replay");
+    assert_eq!(replayed.allocs, direct.allocs, "alloc events drifted in replay");
+    // the trace's own accessors agree with both
+    assert_eq!(trace.n_accesses(), direct.accesses);
+    assert_eq!(trace.bytes_accessed(), direct.bytes);
+    assert_eq!(trace.compute_cycles(), direct.compute_cycles);
+    // replaying a second time is idempotent
+    let mut again = NullSink::default();
+    trace.replay(&mut again);
+    assert_eq!(again.accesses, replayed.accesses);
+    assert_eq!(again.bytes, replayed.bytes);
 }
 
 /// Colocation: pairwise colocated runs are slower than solo and CXL

@@ -122,11 +122,18 @@ fn pallas_matmul_artifact_matches_reference() {
 }
 
 #[test]
-fn execute_rejects_wrong_arity() {
+fn runtime_rejects_wrong_shapes_and_unknown_artifacts() {
     let Some(rt) = runtime() else { return };
-    match rt.execute("matmul", &[]) {
-        Err(e) => assert!(format!("{e}").contains("expected")),
-        Ok(_) => panic!("zero-input execute must fail"),
-    }
-    assert!(rt.execute("nonexistent", &[]).is_err());
+    let params = MlpParams::init(&rt.manifest.model_layers.clone(), 1);
+    // empty input can never match the artifact's batch × d_in
+    assert!(rt.mlp_infer(&params, &[]).is_err());
+    assert!(rt.matmul(&[], &[]).is_err());
+    // params whose geometry disagrees with the artifact are rejected
+    let mismatched = MlpParams::init(&[8, 4, 2], 1);
+    let sig = rt.manifest.get("mlp_infer").unwrap();
+    let x = vec![0f32; sig.inputs.last().unwrap().elements()];
+    assert!(rt.mlp_infer(&mismatched, &x).is_err());
+    // unknown artifact names fail loudly
+    assert!(rt.mlp_infer_with("nonexistent", &params, &x).is_err());
+    assert!(!rt.has("nonexistent"));
 }

@@ -6,6 +6,7 @@ use porter::config::{Config, MachineConfig};
 use porter::mem::page::PageNo;
 use porter::mem::tier::TierKind;
 use porter::mem::tiered::{FixedPlacer, Migration, TieredMemory};
+use porter::porter::balancer::{LeastLoaded, Loaded};
 use porter::porter::sysload::SystemLoad;
 use porter::shim::intercept::{InterceptingAllocator, MMAP_THRESHOLD};
 use porter::shim::object::MemoryObject;
@@ -114,6 +115,68 @@ fn prop_cache_conservation() {
             c2.access_line(l);
         }
         assert_eq!(c2.misses, 0, "resident set must not miss (cap {capacity}, ways {ways})");
+    });
+}
+
+struct FixedLoad(usize);
+
+impl Loaded for FixedLoad {
+    fn load(&self) -> usize {
+        self.0
+    }
+}
+
+/// Balancer: on an equally loaded pool every server receives exactly the
+/// same share (true round-robin), whatever the pool size or load level —
+/// including a 1-server pool, which must never panic.
+#[test]
+fn prop_balancer_roundrobin_fair_on_equal_load() {
+    forall("balancer-fairness", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 9);
+        let load = g.usize_in(0, 6);
+        let servers: Vec<FixedLoad> = (0..n).map(|_| FixedLoad(load)).collect();
+        let lb = LeastLoaded::default();
+        let rounds = g.usize_in(1, 6);
+        let mut counts = vec![0usize; n];
+        for _ in 0..rounds * n {
+            counts[lb.pick(&servers)] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c == rounds),
+            "unfair rotation over {n} servers: {counts:?}"
+        );
+    });
+}
+
+/// Balancer: with mixed static loads, all traffic goes to the
+/// minimum-load subset, split within ±0 across full rotations (the
+/// pre-fix cursor skewed tied subsets).
+#[test]
+fn prop_balancer_tied_subset_gets_equal_share() {
+    forall("balancer-tied-subset", 60, |g: &mut Gen| {
+        let n = g.usize_in(2, 9);
+        let min_load = g.usize_in(0, 3);
+        // at least one server at min_load, the rest at min or above
+        let loads: Vec<usize> = (0..n)
+            .map(|i| if i == 0 { min_load } else { min_load + g.usize_in(0, 4) })
+            .collect();
+        let servers: Vec<FixedLoad> = loads.iter().map(|&l| FixedLoad(l)).collect();
+        let tied: Vec<usize> =
+            (0..n).filter(|&i| loads[i] == min_load).collect();
+        let lb = LeastLoaded::default();
+        let rounds = g.usize_in(1, 5);
+        let mut counts = vec![0usize; n];
+        for _ in 0..rounds * tied.len() {
+            counts[lb.pick(&servers)] += 1;
+        }
+        for i in 0..n {
+            let expect = if tied.contains(&i) { rounds } else { 0 };
+            assert_eq!(
+                counts[i], expect,
+                "server {i} (load {}) got {counts:?}, tied set {tied:?}",
+                loads[i]
+            );
+        }
     });
 }
 
