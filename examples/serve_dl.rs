@@ -68,7 +68,8 @@ fn main() -> porter::util::error::Result<()> {
     let mut rng = Rng::new(0xD1);
     let proj: Vec<f32> = (0..10 * d_in).map(|_| rng.normal() as f32).collect();
     let mut params = MlpParams::init(&layers, 7);
-    println!("\ntraining {}-param MLP for {steps} steps (batch {train_batch}) natively:", params.param_count());
+    let n_params = params.param_count();
+    println!("\ntraining {n_params}-param MLP for {steps} steps (batch {train_batch}) natively:");
     let t0 = std::time::Instant::now();
     let mut first_loss = None;
     let mut last_loss = 0.0;
@@ -116,7 +117,9 @@ fn main() -> porter::util::error::Result<()> {
     for r in 0..requests {
         let ticket = gw.invoke("dl_serve").expect("invoke");
         // real model execution for this batch
-        let x: Vec<f32> = (0..xin.elements()).map(|i| (((i * 7 + r * 131) % 29) as f32 - 14.0) * 0.07).collect();
+        let x: Vec<f32> = (0..xin.elements())
+            .map(|i| (((i * 7 + r * 131) % 29) as f32 - 14.0) * 0.07)
+            .collect();
         let q0 = std::time::Instant::now();
         let logits = rt.mlp_infer_with(infer_artifact, &params, &x)?;
         let outcome = ticket.wait();

@@ -37,11 +37,13 @@ fn main() {
     drop(env);
     let damon =
         machine.take_observers().pop().unwrap().into_any().downcast::<Damon>().unwrap();
-    let lo = objects.iter().map(|o| o.start).filter(|&s| s >= porter::shim::intercept::MMAP_BASE).min().unwrap();
+    let mmap_base = porter::shim::intercept::MMAP_BASE;
+    let lo = objects.iter().map(|o| o.start).filter(|&s| s >= mmap_base).min().unwrap();
     let hi = objects.iter().map(|o| o.end()).max().unwrap();
     let map = Heatmap::from_damon(&damon.snapshots, lo, hi, 72, 24);
     println!("{}", map.render_ascii());
-    println!("locality score: {:.2} (hot bands = the objects worth pinning to DRAM)\n", map.locality_score());
+    let score = map.locality_score();
+    println!("locality score: {score:.2} (hot bands = the objects worth pinning to DRAM)\n");
 
     // --- Fig. 5: static placement for PageRank and BFS ---
     for (name, w) in [

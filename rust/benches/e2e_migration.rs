@@ -1,0 +1,150 @@
+//! Migration policy sweep: the three `mem::migrate` policies (naive /
+//! tpp / hybrid) × three workloads (dl_train, pagerank, kvstore) ×
+//! DRAM:CXL capacity ratios, against the no-migration and all-DRAM
+//! endpoints.
+//!
+//! Setup per cell: a machine whose DRAM is a fraction of the workload's
+//! footprint (first-touch placement spills the rest to CXL), the epoch
+//! engine ticked at the aggregation interval. Reported per cell:
+//! slowdown vs the all-DRAM endpoint, promotions/demotions, ping-pongs,
+//! and migration traffic. The whole series lands in
+//! `BENCH_migration.json` at the repo root so policy regressions are
+//! diffable across PRs.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_migration
+
+use porter::bench::{fmt_ns, BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::migrate::MigrationEngine;
+use porter::mem::tier::TierKind;
+use porter::placement::policies::FirstTouchDram;
+use porter::sim::machine::RunReport;
+use porter::sim::Machine;
+use porter::util::json::Json;
+use porter::workloads::registry::{build, Scale};
+use porter::workloads::Workload;
+
+const POLICIES: [&str; 4] = ["none", "naive", "tpp", "hybrid"];
+const WORKLOADS: [&str; 3] = ["dl_train", "pagerank", "kvstore"];
+const DRAM_RATIOS: [f64; 3] = [0.125, 0.25, 0.5];
+
+/// One run: DRAM capped at `ratio` × footprint, first-touch placement,
+/// the configured migration engine attached.
+fn run_cell(w: &dyn Workload, cfg: &Config, ratio: f64, policy: &str) -> RunReport {
+    let mut mcfg = cfg.machine.clone();
+    let footprint = w.footprint_hint().max(mcfg.page_bytes);
+    mcfg.dram_bytes =
+        ((footprint as f64 * ratio) as u64 / mcfg.page_bytes).max(4) * mcfg.page_bytes;
+    let mut machine = Machine::new(&mcfg, Box::new(FirstTouchDram::default()));
+    let mut migration = cfg.migration.clone();
+    migration.policy = policy.to_string();
+    migration.enabled = policy != "none";
+    if let Some(engine) = MigrationEngine::from_config(&migration) {
+        machine.set_migrator(Box::new(engine));
+    }
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    let mut env = porter::shim::Env::new(mcfg.page_bytes, &mut machine);
+    let checksum = w.run(&mut env);
+    drop(env);
+    std::hint::black_box(checksum);
+    machine.report()
+}
+
+fn main() {
+    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let scale = if quick { Scale::Small } else { Scale::Default };
+    let cfg = Config::default();
+    let mut suite = BenchSuite::new("e2e: migration policy sweep (mem/migrate/)");
+
+    let mut fig = FigureReport::new(
+        "migration-sweep",
+        "slowdown vs all-DRAM (%) per (workload, DRAM ratio, policy)",
+        &["slowdown_pct", "promotions", "demotions", "ping_pongs", "migration_mib"],
+    );
+    let mut series = Vec::new();
+    for name in WORKLOADS {
+        let w = build(name, scale).expect("registry workload");
+        // all-DRAM endpoint for the slowdown baseline
+        let base = {
+            let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+            let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
+            std::hint::black_box(w.run(&mut env));
+            drop(env);
+            m.report()
+        };
+        for &ratio in &DRAM_RATIOS {
+            let mut outcomes: Vec<(String, RunReport)> = Vec::new();
+            for policy in POLICIES {
+                let t0 = std::time::Instant::now();
+                let r = run_cell(w.as_ref(), &cfg, ratio, policy);
+                eprintln!(
+                    "  {name}/{ratio}/{policy}: wall {} (+{:.1}%) {}↑ {}↓ (host {:.1}s)",
+                    fmt_ns(r.wall_ns),
+                    r.slowdown_pct_vs(&base),
+                    r.promotions,
+                    r.demotions,
+                    t0.elapsed().as_secs_f64()
+                );
+                outcomes.push((policy.to_string(), r));
+            }
+            for (policy, r) in &outcomes {
+                fig.row(
+                    &format!("{name}/dram={ratio}/{policy}"),
+                    vec![
+                        r.slowdown_pct_vs(&base),
+                        r.promotions as f64,
+                        r.demotions as f64,
+                        r.ping_pongs as f64,
+                        r.migration_bytes as f64 / (1 << 20) as f64,
+                    ],
+                );
+                series.push(Json::obj(vec![
+                    ("workload", Json::str(name)),
+                    ("dram_ratio", Json::num(ratio)),
+                    ("policy", Json::str(policy.clone())),
+                    ("wall_ns", Json::num(r.wall_ns)),
+                    ("slowdown_vs_dram_pct", Json::num(r.slowdown_pct_vs(&base))),
+                    ("promotions", Json::num(r.promotions as f64)),
+                    ("demotions", Json::num(r.demotions as f64)),
+                    ("ping_pongs", Json::num(r.ping_pongs as f64)),
+                    ("migration_bytes", Json::num(r.migration_bytes as f64)),
+                    ("migration_stall_ns", Json::num(r.migration_stall_ns)),
+                    ("peak_dram_bytes", Json::num(r.peak_dram_bytes as f64)),
+                    ("cxl_miss_frac", {
+                        let misses = (r.dram_misses + r.cxl_misses).max(1);
+                        Json::num(r.cxl_misses as f64 / misses as f64)
+                    }),
+                ]));
+            }
+            // the sweep's reason to exist: policies must differ
+            let distinct = {
+                let sig = |r: &RunReport| (r.promotions, r.demotions, r.wall_ns.round() as u64);
+                let mut sigs: Vec<_> = outcomes.iter().map(|(_, r)| sig(r)).collect();
+                sigs.sort_unstable();
+                sigs.dedup();
+                sigs.len()
+            };
+            if distinct <= 1 {
+                eprintln!("  NOTE {name}/dram={ratio}: all policies identical (no tier pressure)");
+            }
+        }
+    }
+    suite.section(fig.render());
+
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_migration")),
+        ("quick", Json::Bool(quick)),
+        ("scale", Json::str(if quick { "small" } else { "default" })),
+        ("policies", Json::arr(POLICIES.iter().map(|p| Json::str(*p)))),
+        ("dram_ratios", Json::arr(DRAM_RATIOS.iter().map(|r| Json::num(*r)))),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_migration.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    suite.run();
+}

@@ -79,7 +79,8 @@ fn main() {
     gw.shutdown();
 
     // PJRT inference on the same path, if artifacts exist.
-    if let Ok(rt) = porter::runtime::ModelRuntime::load(porter::runtime::ArtifactManifest::default_dir()) {
+    let artifact_dir = porter::runtime::ArtifactManifest::default_dir();
+    if let Ok(rt) = porter::runtime::ModelRuntime::load(artifact_dir) {
         let params = porter::runtime::MlpParams::init(&rt.manifest.model_layers.clone(), 3);
         let sig = rt.manifest.get("mlp_infer").unwrap();
         let xin = sig.inputs.last().unwrap().clone();

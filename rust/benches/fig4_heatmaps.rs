@@ -56,7 +56,8 @@ fn main() {
     for name in WORKLOADS {
         let (map, samples) = profile(name, scale, &cfg);
         let score = map.locality_score();
-        bench.section(format!("--- {name} ---\n{}locality score: {score:.2}\n", map.render_ascii()));
+        let ascii = map.render_ascii();
+        bench.section(format!("--- {name} ---\n{ascii}locality score: {score:.2}\n"));
         fig.row(name, vec![score, samples as f64]);
         scores.push((name, score));
     }

@@ -20,7 +20,8 @@ fn main() {
     let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
     let scale = if quick { Scale::Small } else { Scale::Default };
     let cfg = Config::default();
-    let mut bench = BenchSuite::new("fig5: static placement vs pure CXL (BFS + PageRank, Twitter-like RMAT)");
+    let mut bench =
+        BenchSuite::new("fig5: static placement vs pure CXL (BFS + PageRank, Twitter-like RMAT)");
 
     let mut fig = FigureReport::new(
         "Figure 5",

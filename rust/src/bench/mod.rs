@@ -76,7 +76,12 @@ impl BenchSuite {
             config.sample_iters = 3;
             config.max_time = Duration::from_secs(10);
         }
-        BenchSuite { title: title.to_string(), config, results: Vec::new(), extra_sections: Vec::new() }
+        BenchSuite {
+            title: title.to_string(),
+            config,
+            results: Vec::new(),
+            extra_sections: Vec::new(),
+        }
     }
 
     pub fn with_config(mut self, config: BenchConfig) -> BenchSuite {
@@ -92,11 +97,23 @@ impl BenchSuite {
 
     /// Time `f`, reporting `units` work items per iteration as
     /// throughput.
-    pub fn bench_with_throughput<T>(&mut self, name: &str, units: f64, unit_name: &str, mut f: impl FnMut() -> T) {
+    pub fn bench_with_throughput<T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        unit_name: &str,
+        mut f: impl FnMut() -> T,
+    ) {
         self.bench_units(name, Some(units), unit_name, &mut f);
     }
 
-    fn bench_units<T>(&mut self, name: &str, units: Option<f64>, unit_name: &str, f: &mut impl FnMut() -> T) {
+    fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        unit_name: &str,
+        f: &mut impl FnMut() -> T,
+    ) {
         let cfg = &self.config;
         for _ in 0..cfg.warmup_iters {
             std::hint::black_box(f());
@@ -133,7 +150,8 @@ impl BenchSuite {
             println!("{s}");
         }
         if !self.results.is_empty() {
-            let mut t = Table::new(&["bench", "mean", "p50", "σ", "min", "max", "throughput"]).left_first();
+            let headers = ["bench", "mean", "p50", "σ", "min", "max", "throughput"];
+            let mut t = Table::new(&headers).left_first();
             for r in &self.results {
                 let s = r.summary();
                 t.row(vec![
@@ -172,7 +190,10 @@ impl BenchSuite {
 fn one_line(r: &BenchResult) -> String {
     let s = r.summary();
     match r.throughput_per_sec() {
-        Some(tp) => format!("{} ± {} ({} {}/s)", fmt_ns(s.mean), fmt_ns(s.std), human_count(tp), r.unit_name),
+        Some(tp) => {
+            let rate = human_count(tp);
+            format!("{} ± {} ({} {}/s)", fmt_ns(s.mean), fmt_ns(s.std), rate, r.unit_name)
+        }
         None => format!("{} ± {}", fmt_ns(s.mean), fmt_ns(s.std)),
     }
 }
@@ -235,7 +256,9 @@ impl FigureReport {
     pub fn render(&self) -> String {
         let mut out = format!("--- {}: {} ---\n", self.figure, self.caption);
         let mut t = Table::new(
-            &std::iter::once("series").chain(self.columns.iter().map(|s| s.as_str())).collect::<Vec<_>>(),
+            &std::iter::once("series")
+                .chain(self.columns.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
         )
         .left_first();
         for (label, vals) in &self.rows {
@@ -253,7 +276,9 @@ impl FigureReport {
             out.push_str(&format!("bars: {}\n", self.columns[0]));
             for (label, vals) in &self.rows {
                 let bar_len = ((vals[0] / max) * 50.0).round().max(0.0) as usize;
-                out.push_str(&format!("  {label:width$} |{} {}\n", "#".repeat(bar_len), crate::util::fmt_f64(vals[0], 2)));
+                let bar = "#".repeat(bar_len);
+                let v0 = crate::util::fmt_f64(vals[0], 2);
+                out.push_str(&format!("  {label:width$} |{bar} {v0}\n"));
             }
         }
         // machine-readable line

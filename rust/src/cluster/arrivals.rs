@@ -208,7 +208,13 @@ impl AzureTrace {
 
     /// Synthesize a trace with Zipf-popular functions and per-bin jitter
     /// (demo input for `porter cluster --arrivals replay`).
-    pub fn synthesize(names: &[String], bins: usize, bin_ms: u64, mean_per_bin: f64, seed: u64) -> AzureTrace {
+    pub fn synthesize(
+        names: &[String],
+        bins: usize,
+        bin_ms: u64,
+        mean_per_bin: f64,
+        seed: u64,
+    ) -> AzureTrace {
         let mut rng = Rng::new(seed ^ 0x7AACE);
         let rows = names
             .iter()

@@ -58,7 +58,11 @@ const POPULATION_ORDER: [&str; 13] = [
 
 /// The first `n` registry functions of the serving population.
 pub fn default_population(n: usize) -> Vec<String> {
-    POPULATION_ORDER.iter().take(n.clamp(1, POPULATION_ORDER.len())).map(|s| s.to_string()).collect()
+    POPULATION_ORDER
+        .iter()
+        .take(n.clamp(1, POPULATION_ORDER.len()))
+        .map(|s| s.to_string())
+        .collect()
 }
 
 /// Build the open-loop schedule a config describes.
@@ -84,8 +88,9 @@ pub fn arrivals_from_config(cfg: &Config) -> Result<ArrivalSpec, String> {
         };
         return Ok(trace.expand(cl.seed));
     }
-    let shape = Shape::parse(&cl.arrivals)
-        .ok_or_else(|| format!("unknown arrival shape {:?} (poisson|bursty|diurnal|replay)", cl.arrivals))?;
+    let shape = Shape::parse(&cl.arrivals).ok_or_else(|| {
+        format!("unknown arrival shape {:?} (poisson|bursty|diurnal|replay)", cl.arrivals)
+    })?;
     Ok(arrivals::synthetic(
         shape,
         &default_population(cl.functions),
@@ -126,6 +131,13 @@ pub struct ClusterReport {
     pub pool_mean_occupancy: f64,
     pub pool_peak_occupancy: f64,
     pub pool_shortages: u64,
+    /// Fleet-wide page-migration rollup (replayed shapes included): the
+    /// engine's promotions/demotions/ping-pongs, and the migration
+    /// traffic debited against the nodes' CXL links.
+    pub promotions: u64,
+    pub demotions: u64,
+    pub ping_pongs: u64,
+    pub migration_bytes: u64,
     pub node_seconds: f64,
     /// DRAM + pooled-CXL provisioning cost (relative units; see
     /// [`DRAM_COST_PER_GIB_S`]).
@@ -172,6 +184,16 @@ impl ClusterReport {
                 self.pool_shortages
             ),
         ]);
+        t.row(vec![
+            "page migration".into(),
+            format!(
+                "{}↑ {}↓ ({} ping-pongs, {} over CXL links)",
+                self.promotions,
+                self.demotions,
+                self.ping_pongs,
+                crate::util::bytes::fmt_bytes(self.migration_bytes)
+            ),
+        ]);
         t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
         t.row(vec!["cost proxy".into(), format!("{:.1} units", self.cost_units)]);
         t.row(vec![
@@ -180,8 +202,8 @@ impl ClusterReport {
         ]);
         out.push_str(&t.render());
 
-        let mut nt = Table::new(&["node", "invocations", "cold", "p50", "p99", "active", "peak DRAM"])
-            .left_first();
+        let headers = ["node", "invocations", "cold", "p50", "p99", "active", "peak DRAM"];
+        let mut nt = Table::new(&headers).left_first();
         for n in &self.nodes {
             nt.row(vec![
                 format!("n{}{}", n.id, if n.retired { " (drained)" } else { "" }),
@@ -229,6 +251,10 @@ pub struct Cluster {
     wait_sum_ns: f64,
     service_sum_ns: f64,
     completed: u64,
+    promotions: u64,
+    demotions: u64,
+    ping_pongs: u64,
+    migration_bytes: u64,
     end_ns: u64,
     token: u64,
     next_node_id: usize,
@@ -273,6 +299,10 @@ impl Cluster {
             wait_sum_ns: 0.0,
             service_sum_ns: 0.0,
             completed: 0,
+            promotions: 0,
+            demotions: 0,
+            ping_pongs: 0,
+            migration_bytes: 0,
             end_ns: 0,
             token: 0x0C1A57E5,
         })
@@ -326,7 +356,13 @@ impl Cluster {
             self.cfg.cluster.cold_start_ns,
         );
         self.pool.release_at(d.finish_ns, granted);
-        self.pool.record_traffic(node_id, d.start_ns, d.cxl_bytes);
+        // demand traffic AND migration copies share the node's CXL link:
+        // an aggressive policy's page churn inflates neighbours' stalls
+        self.pool.record_traffic(node_id, d.start_ns, d.cxl_bytes + d.migration_bytes);
+        self.promotions += d.promotions;
+        self.demotions += d.demotions;
+        self.ping_pongs += d.ping_pongs;
+        self.migration_bytes += d.migration_bytes;
 
         let e2e_ns = d.finish_ns - t;
         self.fleet_hist.record(e2e_ns);
@@ -444,21 +480,30 @@ impl Cluster {
             })
             .collect();
         let judged: u64 = self.slo.functions().map(|(_, f)| f.judged).sum();
+        let completed_f = self.completed as f64;
+        let throughput_per_s = if duration_s > 0.0 { completed_f / duration_s } else { 0.0 };
+        let mean_wait_ns = if self.completed == 0 { 0.0 } else { self.wait_sum_ns / completed_f };
+        let mean_service_ns =
+            if self.completed == 0 { 0.0 } else { self.service_sum_ns / completed_f };
         ClusterReport {
             completed: self.completed,
             virtual_duration_s: duration_s,
-            throughput_per_s: if duration_s > 0.0 { self.completed as f64 / duration_s } else { 0.0 },
+            throughput_per_s,
             fleet_p50_ns: self.fleet_hist.percentile(50.0),
             fleet_p99_ns: self.fleet_hist.percentile(99.0),
             fleet_mean_ns: self.fleet_hist.mean(),
-            mean_wait_ns: if self.completed == 0 { 0.0 } else { self.wait_sum_ns / self.completed as f64 },
-            mean_service_ns: if self.completed == 0 { 0.0 } else { self.service_sum_ns / self.completed as f64 },
+            mean_wait_ns,
+            mean_service_ns,
             judged,
             violation_rate: self.slo.overall_violation_rate(),
             cold_runs: self.nodes.iter().map(|n| n.cold_runs).sum(),
             pool_mean_occupancy: self.pool.mean_occupancy(),
             pool_peak_occupancy: self.pool.peak_occupancy(),
             pool_shortages: self.pool.shortages,
+            promotions: self.promotions,
+            demotions: self.demotions,
+            ping_pongs: self.ping_pongs,
+            migration_bytes: self.migration_bytes,
             node_seconds,
             cost_units,
             nodes,

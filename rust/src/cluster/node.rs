@@ -36,6 +36,13 @@ pub struct ServiceShape {
     pub cxl_stall_ns: f64,
     /// Line traffic to the CXL tier (fed to the pool bandwidth models).
     pub cxl_bytes: u64,
+    /// Page-migration traffic: every promotion/demotion copies one page
+    /// across the node's CXL link, so this debits the link alongside
+    /// `cxl_bytes`.
+    pub migration_bytes: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub ping_pongs: u64,
     /// Peak CXL residency (leased from the shared pool while running).
     pub peak_cxl_bytes: u64,
     pub checksum: u64,
@@ -53,6 +60,10 @@ impl ServiceShape {
             wall_ns: out.report.wall_ns,
             cxl_stall_ns: out.report.stall_ns * cxl_frac,
             cxl_bytes: out.report.cxl_misses * cache_line,
+            migration_bytes: out.report.migration_bytes,
+            promotions: out.report.promotions,
+            demotions: out.report.demotions,
+            ping_pongs: out.report.ping_pongs,
             peak_cxl_bytes: out.report.peak_cxl_bytes,
             checksum: out.checksum,
         }
@@ -85,6 +96,11 @@ pub struct Dispatch {
     pub server: usize,
     pub slo_target_ns: Option<f64>,
     pub cxl_bytes: u64,
+    /// Migration traffic of the replayed shape (debits the CXL link).
+    pub migration_bytes: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub ping_pongs: u64,
     pub checksum: u64,
 }
 
@@ -260,6 +276,10 @@ impl Node {
             server: s,
             slo_target_ns,
             cxl_bytes: shape.cxl_bytes,
+            migration_bytes: shape.migration_bytes,
+            promotions: shape.promotions,
+            demotions: shape.demotions,
+            ping_pongs: shape.ping_pongs,
             checksum: shape.checksum,
         }
     }

@@ -91,11 +91,21 @@ impl MachineConfig {
         t.row(vec!["L3 cache".into(), crate::util::bytes::fmt_bytes(self.l3_bytes)]);
         t.row(vec![
             "Memory (DRAM tier)".into(),
-            format!("{} @ {}ns / {}GB/s", crate::util::bytes::fmt_bytes(self.dram_bytes), self.dram_latency_ns, self.dram_bw_gbps),
+            format!(
+                "{} @ {}ns / {}GB/s",
+                crate::util::bytes::fmt_bytes(self.dram_bytes),
+                self.dram_latency_ns,
+                self.dram_bw_gbps
+            ),
         ]);
         t.row(vec![
             "Memory (CXL tier)".into(),
-            format!("{} @ {}ns / {}GB/s", crate::util::bytes::fmt_bytes(self.cxl_bytes), self.cxl_latency_ns, self.cxl_bw_gbps),
+            format!(
+                "{} @ {}ns / {}GB/s",
+                crate::util::bytes::fmt_bytes(self.cxl_bytes),
+                self.cxl_latency_ns,
+                self.cxl_bw_gbps
+            ),
         ]);
         t.row(vec!["Page size".into(), crate::util::bytes::fmt_bytes(self.page_bytes)]);
         t.render()
@@ -174,6 +184,98 @@ impl Default for PorterConfig {
             demote_free_watermark: 0.10,
             slo_factor: 1.10,
         }
+    }
+}
+
+/// Runtime page-migration engine knobs (`mem::migrate` — the epoch loop
+/// behind §4's promotion/demotion thread). The engine consumes per-page
+/// access samples at every aggregation tick, closes an *epoch* every
+/// `epoch_ticks` ticks, asks the configured policy for a plan, and
+/// throttles the plan to the per-epoch bandwidth budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationConfig {
+    /// Master switch (combined with `porter.migration_enabled` on the
+    /// serving path).
+    pub enabled: bool,
+    /// Which policy plans migrations: "tpp" (active/inactive lists with
+    /// demotion watermarks), "hybrid" (frequency buckets with an
+    /// occupancy-adaptive promotion threshold), "naive" (flat hot
+    /// threshold), or "none".
+    pub policy: String,
+    /// Epoch length, in aggregation ticks.
+    pub epoch_ticks: u32,
+    /// Per-epoch migration bandwidth budget in bytes (page moves beyond
+    /// it are deferred to later epochs).
+    pub budget_bytes: u64,
+    /// Decayed-heat score a CXL page needs to qualify for promotion
+    /// (naive policy; also the hybrid bucket floor).
+    pub promote_heat: f64,
+    /// Samples within one epoch to qualify for promotion (tpp policy —
+    /// TPP's "second NUMA-hint fault" filter).
+    pub promote_samples: u32,
+    /// Demotion watermarks on free DRAM: demote below `watermark_low`
+    /// free until `watermark_high` free is restored.
+    pub watermark_low: f64,
+    pub watermark_high: f64,
+    /// Epochs without an access before an active page turns inactive
+    /// (tpp policy).
+    pub active_epochs: u32,
+    /// Number of log₂ heat buckets (hybrid policy).
+    pub buckets: usize,
+    /// DRAM occupancy the hybrid policy steers toward.
+    pub target_occupancy: f64,
+    /// A page re-migrated within this many epochs counts as a ping-pong.
+    pub ping_pong_epochs: u64,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        MigrationConfig {
+            enabled: true,
+            policy: "tpp".to_string(),
+            epoch_ticks: 4,
+            budget_bytes: 8 * MIB,
+            // promote/watermark defaults deliberately equal the legacy
+            // `[porter]` defaults (promote_threshold = 3,
+            // demote_free_watermark = 0.10) so the porter-fallback
+            // bridge is a no-op on a default config.
+            promote_heat: 3.0,
+            promote_samples: 3,
+            watermark_low: 0.10,
+            watermark_high: 0.15,
+            active_epochs: 2,
+            buckets: 8,
+            target_occupancy: 0.90,
+            ping_pong_epochs: 2,
+        }
+    }
+}
+
+impl MigrationConfig {
+    /// Honour the legacy `[porter]` migration knobs
+    /// (`promote_threshold`, `demote_free_watermark`) that tuned the
+    /// pre-engine migrator: whenever the corresponding `[migration]`
+    /// key was left at its default, the porter value takes over, so
+    /// existing configs keep steering the serving path instead of being
+    /// silently ignored. The "was it set?" test is value-equality with
+    /// the default — and because the two sections' defaults are kept
+    /// identical, a fully-default config is unaffected; only a config
+    /// that tunes `[porter]` while leaving `[migration]` alone is
+    /// bridged.
+    pub fn with_porter_fallbacks(&self, porter: &PorterConfig) -> MigrationConfig {
+        let defaults = MigrationConfig::default();
+        let mut cfg = self.clone();
+        if cfg.promote_samples == defaults.promote_samples {
+            cfg.promote_samples = porter.promote_threshold.max(1);
+        }
+        if cfg.promote_heat == defaults.promote_heat {
+            cfg.promote_heat = porter.promote_threshold as f64;
+        }
+        if cfg.watermark_low == defaults.watermark_low {
+            cfg.watermark_low = porter.demote_free_watermark;
+            cfg.watermark_high = cfg.watermark_high.max(cfg.watermark_low);
+        }
+        cfg
     }
 }
 
@@ -269,6 +371,7 @@ pub struct Config {
     pub machine: MachineConfig,
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
+    pub migration: MigrationConfig,
     pub cluster: ClusterConfig,
 }
 
@@ -297,23 +400,47 @@ impl Config {
                 "machine.page" => cfg.machine.page_bytes = parse_bytes(value.as_str()?)?,
                 "machine.mlp" => cfg.machine.mlp = value.as_f64()?,
                 "machine.l3_hit_ns" => cfg.machine.l3_hit_ns = value.as_f64()?,
-                "machine.migration_stall_frac" => cfg.machine.migration_stall_frac = value.as_f64()?,
+                "machine.migration_stall_frac" => {
+                    cfg.machine.migration_stall_frac = value.as_f64()?
+                }
                 "monitor.sample_interval_ns" => cfg.monitor.sample_interval_ns = value.as_u64()?,
-                "monitor.aggregation_interval_ns" => cfg.monitor.aggregation_interval_ns = value.as_u64()?,
+                "monitor.aggregation_interval_ns" => {
+                    cfg.monitor.aggregation_interval_ns = value.as_u64()?
+                }
                 "monitor.min_regions" => cfg.monitor.min_regions = value.as_u64()? as usize,
                 "monitor.max_regions" => cfg.monitor.max_regions = value.as_u64()? as usize,
                 "monitor.heatmap_bins" => cfg.monitor.heatmap_bins = value.as_u64()? as usize,
-                "monitor.heatmap_time_bins" => cfg.monitor.heatmap_time_bins = value.as_u64()? as usize,
+                "monitor.heatmap_time_bins" => {
+                    cfg.monitor.heatmap_time_bins = value.as_u64()? as usize
+                }
                 "porter.servers" => cfg.porter.servers = value.as_u64()? as usize,
-                "porter.workers_per_server" => cfg.porter.workers_per_server = value.as_u64()? as usize,
+                "porter.workers_per_server" => {
+                    cfg.porter.workers_per_server = value.as_u64()? as usize
+                }
                 "porter.dram_budget_frac" => cfg.porter.dram_budget_frac = value.as_f64()?,
                 "porter.hot_threshold" => cfg.porter.hot_threshold = value.as_f64()?,
                 "porter.first_touch_dram" => cfg.porter.first_touch_dram = value.as_bool()?,
                 "porter.dram_pressure_high" => cfg.porter.dram_pressure_high = value.as_f64()?,
                 "porter.migration_enabled" => cfg.porter.migration_enabled = value.as_bool()?,
                 "porter.promote_threshold" => cfg.porter.promote_threshold = value.as_u64()? as u32,
-                "porter.demote_free_watermark" => cfg.porter.demote_free_watermark = value.as_f64()?,
+                "porter.demote_free_watermark" => {
+                    cfg.porter.demote_free_watermark = value.as_f64()?
+                }
                 "porter.slo_factor" => cfg.porter.slo_factor = value.as_f64()?,
+                "migration.enabled" => cfg.migration.enabled = value.as_bool()?,
+                "migration.policy" => cfg.migration.policy = value.as_str()?.to_string(),
+                "migration.epoch_ticks" => cfg.migration.epoch_ticks = value.as_u64()? as u32,
+                "migration.budget" => cfg.migration.budget_bytes = parse_bytes(value.as_str()?)?,
+                "migration.promote_heat" => cfg.migration.promote_heat = value.as_f64()?,
+                "migration.promote_samples" => {
+                    cfg.migration.promote_samples = value.as_u64()? as u32
+                }
+                "migration.watermark_low" => cfg.migration.watermark_low = value.as_f64()?,
+                "migration.watermark_high" => cfg.migration.watermark_high = value.as_f64()?,
+                "migration.active_epochs" => cfg.migration.active_epochs = value.as_u64()? as u32,
+                "migration.buckets" => cfg.migration.buckets = value.as_u64()? as usize,
+                "migration.target_occupancy" => cfg.migration.target_occupancy = value.as_f64()?,
+                "migration.ping_pong_epochs" => cfg.migration.ping_pong_epochs = value.as_u64()?,
                 "cluster.nodes" => cfg.cluster.nodes = value.as_u64()? as usize,
                 "cluster.min_nodes" => cfg.cluster.min_nodes = value.as_u64()? as usize,
                 "cluster.max_nodes" => cfg.cluster.max_nodes = value.as_u64()? as usize,
@@ -397,6 +524,37 @@ impl Config {
         }
         if self.monitor.min_regions == 0 || self.monitor.max_regions < self.monitor.min_regions {
             return Err("monitor regions range invalid".into());
+        }
+        let mg = &self.migration;
+        if !matches!(mg.policy.as_str(), "tpp" | "hybrid" | "naive" | "none") {
+            return Err(format!(
+                "migration.policy must be one of tpp|hybrid|naive|none, got {:?}",
+                mg.policy
+            ));
+        }
+        if mg.epoch_ticks == 0 {
+            return Err("migration.epoch_ticks must be >= 1".into());
+        }
+        if mg.budget_bytes < m.page_bytes {
+            return Err("migration.budget must cover at least one page".into());
+        }
+        for (name, v) in [
+            ("watermark_low", mg.watermark_low),
+            ("watermark_high", mg.watermark_high),
+            ("target_occupancy", mg.target_occupancy),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("migration.{name} must be in [0,1]"));
+            }
+        }
+        if mg.watermark_low > mg.watermark_high {
+            return Err("migration.watermark_low must be <= watermark_high".into());
+        }
+        if mg.promote_heat < 0.0 {
+            return Err("migration.promote_heat must be >= 0".into());
+        }
+        if mg.buckets == 0 {
+            return Err("migration.buckets must be >= 1".into());
         }
         let c = &self.cluster;
         if c.nodes == 0 || c.min_nodes == 0 {
@@ -488,6 +646,72 @@ migration_enabled = false
         assert!(Config::from_toml_str("[machine]\npage = \"3000\"\n").is_err()); // not pow2
         assert!(Config::from_toml_str("[porter]\ndram_budget_frac = 1.5\n").is_err());
         assert!(Config::from_toml_str("[machine]\ncxl_latency_ns = 10.0\n").is_err());
+    }
+
+    #[test]
+    fn parses_migration_section() {
+        let text = r#"
+[migration]
+policy = "hybrid"
+epoch_ticks = 8
+budget = "2MB"
+watermark_low = 0.05
+watermark_high = 0.2
+target_occupancy = 0.8
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.migration.policy, "hybrid");
+        assert_eq!(c.migration.epoch_ticks, 8);
+        assert_eq!(c.migration.budget_bytes, 2 * MIB);
+        assert_eq!(c.migration.watermark_low, 0.05);
+        assert_eq!(c.migration.target_occupancy, 0.8);
+        // untouched fields keep defaults
+        assert!(c.migration.enabled);
+        assert_eq!(c.migration.promote_samples, 3);
+    }
+
+    #[test]
+    fn migration_defaults_mirror_legacy_porter_knobs() {
+        // keeps the with_porter_fallbacks sentinel a no-op on defaults
+        let c = Config::default();
+        assert_eq!(c.migration.promote_samples, c.porter.promote_threshold);
+        assert_eq!(c.migration.promote_heat, c.porter.promote_threshold as f64);
+        assert_eq!(c.migration.watermark_low, c.porter.demote_free_watermark);
+        let bridged = c.migration.with_porter_fallbacks(&c.porter);
+        assert_eq!(bridged, c.migration, "default config must not be rewritten by the bridge");
+    }
+
+    #[test]
+    fn porter_fallbacks_feed_default_migration_keys() {
+        // legacy porter knobs steer the engine when [migration] keys are
+        // left at their defaults...
+        let text = "[porter]\npromote_threshold = 8\ndemote_free_watermark = 0.2\n";
+        let c = Config::from_toml_str(text).unwrap();
+        let m = c.migration.with_porter_fallbacks(&c.porter);
+        assert_eq!(m.promote_samples, 8);
+        assert_eq!(m.promote_heat, 8.0);
+        assert_eq!(m.watermark_low, 0.2);
+        assert!(m.watermark_high >= m.watermark_low);
+        // ...but explicit [migration] keys win
+        let text = concat!(
+            "[porter]\npromote_threshold = 8\n\n",
+            "[migration]\npromote_samples = 5\npromote_heat = 6.0\n",
+        );
+        let c = Config::from_toml_str(text).unwrap();
+        let m = c.migration.with_porter_fallbacks(&c.porter);
+        assert_eq!(m.promote_samples, 5);
+        assert_eq!(m.promote_heat, 6.0);
+    }
+
+    #[test]
+    fn rejects_invalid_migration_values() {
+        assert!(Config::from_toml_str("[migration]\npolicy = \"lru\"\n").is_err());
+        assert!(Config::from_toml_str("[migration]\nepoch_ticks = 0\n").is_err());
+        assert!(Config::from_toml_str("[migration]\nbudget = \"1KB\"\n").is_err()); // < one page
+        assert!(Config::from_toml_str(
+            "[migration]\nwatermark_low = 0.5\nwatermark_high = 0.1\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   config  --show                       print the Table-1 machine spec
-//!   run     <workload> [--tier dram|cxl] run one workload on one tier
+//!   run     <workload> [--tier dram|cxl] [--policy tpp|hybrid|naive|none]
+//!           run one workload on one tier; with a migration policy (from
+//!           the `[migration]` config section or --policy) the epoch
+//!           engine promotes/demotes pages at runtime
 //!   profile <workload>                   DAMON heatmap + boundness
 //!   place   <workload>                   §3 profile → static placement
 //!   serve   [--requests N]               Porter serving demo (DL path)
@@ -15,7 +18,7 @@ use porter::cli::Args;
 use porter::config::Config;
 use porter::mem::tier::TierKind;
 use porter::monitor::TopDown;
-use porter::placement::static_place::{profile_and_place, run_plain};
+use porter::placement::static_place::profile_and_place;
 use porter::util::table::Table;
 use porter::workloads::registry::{build, Scale, NAMES};
 
@@ -78,7 +81,9 @@ fn cmd_list() -> i32 {
     0
 }
 
-fn workload_arg(args: &Args, scale: Scale) -> Option<Box<dyn porter::workloads::Workload + Send + Sync>> {
+type WorkloadBox = Box<dyn porter::workloads::Workload + Send + Sync>;
+
+fn workload_arg(args: &Args, scale: Scale) -> Option<WorkloadBox> {
     let name = args.positional.first()?;
     match build(name, scale) {
         Some(w) => Some(w),
@@ -90,7 +95,9 @@ fn workload_arg(args: &Args, scale: Scale) -> Option<Box<dyn porter::workloads::
 }
 
 fn cmd_run(args: &Args) -> i32 {
-    let cfg = load_config(args);
+    use porter::mem::migrate::MigrationEngine;
+    use porter::sim::Machine;
+    let mut cfg = load_config(args);
     let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
     let tier = match args.opt_or("tier", "dram") {
         "dram" => TierKind::Dram,
@@ -100,15 +107,52 @@ fn cmd_run(args: &Args) -> i32 {
             return 2;
         }
     };
-    let (report, checksum) = run_plain(&cfg, w.as_ref(), tier);
+    if let Some(policy) = args.opt("policy") {
+        cfg.migration.policy = policy.to_string();
+        cfg.migration.enabled = policy != "none";
+        if let Err(e) = cfg.validate() {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    }
+    // the epoch engine only matters when it is enabled: pages start in
+    // `tier` and migrate as heatmap samples accumulate. Legacy [porter]
+    // knobs bridge in exactly as on the serving path, so `run` numbers
+    // stay comparable to `serve`/`cluster` for the same config file.
+    let mut machine = Machine::all_in(&cfg.machine, tier);
+    let mig_cfg = cfg.migration.with_porter_fallbacks(&cfg.porter);
+    let engine = MigrationEngine::from_config(&mig_cfg);
+    let policy_name = engine.as_ref().map(|e| e.policy_name().to_string());
+    if let Some(engine) = engine {
+        machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+        machine.set_migrator(Box::new(engine));
+    }
+    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+    let checksum = w.run(&mut env);
+    drop(env);
+    let report = machine.report();
     let td = TopDown::from_report(&report);
     let mut t = Table::new(&["metric", "value"]).left_first();
     t.row(vec!["workload".into(), w.name().into()]);
     t.row(vec!["tier".into(), tier.name().into()]);
+    t.row(vec![
+        "migration policy".into(),
+        policy_name.unwrap_or_else(|| "off".to_string()),
+    ]);
     t.row(vec!["virtual time".into(), porter::bench::fmt_ns(report.wall_ns)]);
     t.row(vec!["accesses".into(), report.accesses.to_string()]);
     t.row(vec!["l3 hit rate".into(), format!("{:.1}%", report.l3_hit_rate() * 100.0)]);
     t.row(vec!["memory-bound".into(), format!("{:.1}%", td.memory_bound_pct())]);
+    t.row(vec![
+        "page migration".into(),
+        format!(
+            "{}↑ {}↓ ({} ping-pongs, {})",
+            report.promotions,
+            report.demotions,
+            report.ping_pongs,
+            porter::util::bytes::fmt_bytes(report.migration_bytes)
+        ),
+    ]);
     t.row(vec!["checksum".into(), format!("{checksum:#018x}")]);
     println!("{}", t.render());
     0

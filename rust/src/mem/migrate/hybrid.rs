@@ -1,0 +1,258 @@
+//! HybridTier-style policy (arXiv 2312.04789): frequency buckets with a
+//! promotion threshold that adapts to DRAM occupancy.
+//!
+//! Every mapped page is dropped into a log₂ bucket of its decayed heat
+//! (`bucket = floor(log2(1 + heat))`, clamped to `buckets`). The policy
+//! then picks the *promotion threshold bucket* from current DRAM
+//! occupancy relative to `target_occupancy`:
+//!
+//! * plenty of headroom (occupancy < ½·target) → threshold at the base
+//!   bucket: even mildly warm pages promote;
+//! * nearing the target → threshold climbs one bucket, so only clearly
+//!   hot pages move;
+//! * past the target → threshold climbs two buckets *and* the coldest
+//!   DRAM buckets demote until occupancy is back at the target.
+//!
+//! The result is frequency-aware bidirectional flow: hot CXL pages
+//! displace cold DRAM pages instead of promotions simply stopping when
+//! DRAM fills (the failure mode of the naive threshold).
+
+use crate::config::MigrationConfig;
+use crate::mem::migrate::{EpochView, MigrationPolicy};
+use crate::mem::page::PageNo;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::Migration;
+
+pub struct HybridTier {
+    /// Number of log₂ heat buckets.
+    pub buckets: usize,
+    /// DRAM occupancy the policy steers toward.
+    pub target_occupancy: f64,
+    /// Minimum heat (bucket floor) for any promotion.
+    pub base_heat: f64,
+}
+
+impl HybridTier {
+    pub fn new(buckets: usize, target_occupancy: f64, base_heat: f64) -> HybridTier {
+        HybridTier { buckets: buckets.max(2), target_occupancy, base_heat }
+    }
+
+    pub fn from_config(cfg: &MigrationConfig) -> HybridTier {
+        HybridTier::new(cfg.buckets, cfg.target_occupancy, cfg.promote_heat)
+    }
+
+    fn bucket_of(&self, heat: f64) -> usize {
+        ((1.0 + heat.max(0.0)).log2() as usize).min(self.buckets - 1)
+    }
+
+    /// The promotion threshold bucket for the current occupancy.
+    fn threshold_bucket(&self, occupancy: f64) -> usize {
+        let base = self.bucket_of(self.base_heat);
+        let extra = if occupancy >= self.target_occupancy {
+            2
+        } else if occupancy >= 0.5 * self.target_occupancy {
+            1
+        } else {
+            0
+        };
+        (base + extra).min(self.buckets - 1)
+    }
+}
+
+impl MigrationPolicy for HybridTier {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn plan(&mut self, view: &EpochView) -> Vec<Migration> {
+        let mem = view.mem;
+        let page_bytes = mem.page_bytes().max(1);
+        let dram = mem.tier(TierKind::Dram);
+        let capacity = dram.params.capacity.max(1);
+        let occupancy = dram.occupancy();
+        let thr = self.threshold_bucket(occupancy);
+
+        // bucketize both tiers
+        let mut cxl_hot: Vec<(PageNo, usize, f64)> = Vec::new();
+        let mut dram_by_bucket: Vec<Vec<PageNo>> = vec![Vec::new(); self.buckets];
+        for (p, m) in mem.pages.iter_mapped() {
+            let heat = view.heat.heat(p);
+            let b = self.bucket_of(heat);
+            match m.tier() {
+                Some(TierKind::Cxl) => {
+                    if b >= thr && heat >= self.base_heat {
+                        cxl_hot.push((p, b, heat));
+                    }
+                }
+                Some(TierKind::Dram) => {
+                    if view.heat.epoch_samples(p) == 0 {
+                        dram_by_bucket[b].push(p);
+                    }
+                }
+                None => {}
+            }
+        }
+
+        // promotions: hottest buckets first; demotions are sized so
+        // that used + promotions - demotions lands on the target
+        // occupancy — hot CXL pages *displace* cold DRAM pages instead
+        // of promotions stalling once DRAM fills
+        cxl_hot.sort_by(|a, b| {
+            b.1.cmp(&a.1).then(b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let target_bytes = (capacity as f64 * self.target_occupancy) as u64;
+        let used = dram.used_bytes;
+        let promo_wanted = cxl_hot.len().min(view.budget_pages);
+
+        // drain the coldest buckets until the target holds even after
+        // the promotions land
+        let mut demotions: Vec<Migration> = Vec::new();
+        let projected = used + promo_wanted as u64 * page_bytes;
+        if projected > target_bytes {
+            let mut need = ((projected - target_bytes) / page_bytes) as usize;
+            'drain: for bucket in dram_by_bucket.iter() {
+                for &p in bucket {
+                    if need == 0 {
+                        break 'drain;
+                    }
+                    demotions.push(Migration { page: p, from: TierKind::Dram, to: TierKind::Cxl });
+                    need -= 1;
+                }
+            }
+        }
+        let freed = demotions.len() as u64 * page_bytes;
+
+        let headroom = target_bytes.saturating_sub(used.saturating_sub(freed));
+        // hard floor: never plan promotions past physical free space
+        // plus what this epoch's demotions release
+        let physically_free = ((dram.free_bytes() + freed) / page_bytes) as usize;
+        let promo_budget =
+            ((headroom / page_bytes) as usize).min(physically_free).min(promo_wanted);
+        let promotions = cxl_hot
+            .into_iter()
+            .take(promo_budget)
+            .map(|(page, _, _)| Migration { page, from: TierKind::Cxl, to: TierKind::Dram });
+
+        // interleave demote/promote pairs so the engine's head-first
+        // budget truncation keeps the displacement balanced: any prefix
+        // of the plan carries (roughly) one freed slot per promotion,
+        // instead of a tiny budget draining DRAM without promoting
+        let mut moves = Vec::with_capacity(demotions.len() + promo_budget);
+        let mut demotions = demotions.into_iter();
+        let mut promotions = promotions;
+        loop {
+            match (demotions.next(), promotions.next()) {
+                (None, None) => break,
+                (d, p) => {
+                    moves.extend(d);
+                    moves.extend(p);
+                }
+            }
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::mem::tiered::{FixedPlacer, TieredMemory};
+    use crate::monitor::heatmap::PageHeat;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn mem_with(dram_pages: u64, cxl_pages: u64, dram_obj_pages: u64) -> TieredMemory {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = dram_pages * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        let mut mem = TieredMemory::new(&cfg);
+        if cxl_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(0),
+                start: crate::shim::intercept::MMAP_BASE,
+                bytes: cxl_pages * cfg.page_bytes,
+                site: "c".into(),
+                seq: 0,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        }
+        if dram_obj_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(1),
+                start: crate::shim::intercept::MMAP_BASE + (1 << 24),
+                bytes: dram_obj_pages * cfg.page_bytes,
+                site: "d".into(),
+                seq: 1,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        }
+        mem
+    }
+
+    #[test]
+    fn threshold_adapts_to_occupancy() {
+        let pol = HybridTier::new(8, 0.8, 3.0);
+        let base = pol.bucket_of(3.0);
+        assert_eq!(pol.threshold_bucket(0.1), base, "empty DRAM: base threshold");
+        assert_eq!(pol.threshold_bucket(0.5), base + 1, "half-way to target: one up");
+        assert_eq!(pol.threshold_bucket(0.9), base + 2, "past target: two up");
+    }
+
+    #[test]
+    fn empty_dram_promotes_warm_pages() {
+        let mem = mem_with(100, 4, 0);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE);
+        let mut heat = PageHeat::new();
+        heat.record(first, 8);
+        heat.record(PageNo { index: first.index + 1, ..first }, 4);
+        let mut pol = HybridTier::new(8, 0.9, 3.0);
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].page, first, "hottest page promotes first");
+        assert!(plan.iter().all(|m| m.to == TierKind::Dram));
+    }
+
+    #[test]
+    fn past_target_demotes_cold_and_still_promotes_hot() {
+        // DRAM 10 pages, 10 resident cold pages (past the 0.8 target);
+        // one very hot CXL page should displace a cold page
+        let mem = mem_with(10, 1, 10);
+        let cxl_page = mem.pages.page_of(crate::shim::intercept::MMAP_BASE);
+        let mut heat = PageHeat::new();
+        heat.record(cxl_page, 200); // bucket ~7, above any threshold
+        let mut pol = HybridTier::new(8, 0.8, 3.0);
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        let demotions: Vec<_> = plan.iter().filter(|m| m.to == TierKind::Cxl).collect();
+        let promotions: Vec<_> = plan.iter().filter(|m| m.to == TierKind::Dram).collect();
+        // drain to the 80% target with room for the incoming promotion:
+        // 10 used + 1 promoted - 3 demoted = 8 = target
+        assert_eq!(demotions.len(), 3);
+        assert_eq!(promotions.len(), 1);
+        assert_eq!(promotions[0].page, cxl_page);
+    }
+
+    #[test]
+    fn lukewarm_pages_blocked_when_dram_tight() {
+        // occupancy at 100%: threshold climbs two buckets above base, so
+        // a heat-4 page (bucket 2) no longer qualifies
+        let mem = mem_with(4, 1, 4);
+        let cxl_page = mem.pages.page_of(crate::shim::intercept::MMAP_BASE);
+        let mut heat = PageHeat::new();
+        heat.record(cxl_page, 4);
+        // DRAM pages are all active (sampled) → no demotion candidates
+        let dram_first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE + (1 << 24));
+        for i in 0..4u32 {
+            heat.record(PageNo { index: dram_first.index + i, ..dram_first }, 2);
+        }
+        let mut pol = HybridTier::new(8, 0.8, 3.0);
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        assert!(
+            pol.plan(&view).is_empty(),
+            "tight DRAM must raise the bar past lukewarm pages"
+        );
+    }
+}

@@ -1,0 +1,483 @@
+//! Epoch-driven page-migration engine with pluggable promotion policies.
+//!
+//! The paper's §4 promotion/demotion thread, generalized: the machine
+//! ticks the engine at every aggregation interval; the engine folds that
+//! tick's per-page access samples into a decayed [`PageHeat`] signal,
+//! and every `epoch_ticks` ticks it closes an *epoch* — it hands the
+//! heat map plus tier occupancy to a [`MigrationPolicy`], throttles the
+//! returned plan to the per-epoch bandwidth budget, and issues the
+//! survivors through `TieredMemory::migrate` (via the machine's
+//! [`Migrator`] hook, which also charges copy stalls and tier
+//! bandwidth).
+//!
+//! Three policies ship, spanning the design space the paper positions
+//! against:
+//! * [`naive::NaiveThreshold`] — flat hot-threshold promotion + idle
+//!   demotion under a free-DRAM watermark (the repo's original
+//!   `TppMigrator` behaviour, refactored behind the trait);
+//! * [`tpp::TppLists`] — TPP-style (arXiv 2206.02878) active/inactive
+//!   lists: promotion on the second sample within an epoch, demotion of
+//!   inactive pages between low/high free watermarks;
+//! * [`hybrid::HybridTier`] — HybridTier-style (arXiv 2312.04789) log₂
+//!   frequency buckets with a promotion threshold that adapts to DRAM
+//!   occupancy.
+
+pub mod hybrid;
+pub mod naive;
+pub mod tpp;
+
+use std::collections::HashMap;
+
+use crate::config::MigrationConfig;
+use crate::mem::page::PageNo;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::{Migration, TieredMemory};
+use crate::monitor::heatmap::PageHeat;
+use crate::sim::machine::Migrator;
+
+pub use hybrid::HybridTier;
+pub use naive::NaiveThreshold;
+pub use tpp::TppLists;
+
+/// What a policy sees at an epoch boundary.
+pub struct EpochView<'a> {
+    /// Epochs completed before this one.
+    pub epoch: u64,
+    pub mem: &'a TieredMemory,
+    /// Decayed per-page hotness accumulated from access samples.
+    pub heat: &'a PageHeat,
+    /// Pages the engine will move at most this epoch; policies should
+    /// order plans most-valuable-first since the excess is deferred.
+    pub budget_pages: usize,
+}
+
+impl EpochView<'_> {
+    /// Free-DRAM fraction, the demotion-watermark signal.
+    pub fn dram_free_frac(&self) -> f64 {
+        let t = self.mem.tier(TierKind::Dram);
+        t.free_bytes() as f64 / t.params.capacity.max(1) as f64
+    }
+}
+
+/// A promotion/demotion planner evaluated once per epoch.
+pub trait MigrationPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Plan this epoch's migrations, most-valuable first.
+    fn plan(&mut self, view: &EpochView) -> Vec<Migration>;
+}
+
+/// Lifetime counters of one engine (one invocation). Apart from
+/// `epochs`/`deferred` (plan-time), every counter is fed by
+/// [`Migrator::note_applied`] — i.e. from the moves the machine actually
+/// applied, never from plans.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationMetrics {
+    /// Epochs closed.
+    pub epochs: u64,
+    /// Applied CXL→DRAM moves.
+    pub promotions: u64,
+    /// Applied DRAM→CXL moves.
+    pub demotions: u64,
+    /// Pages re-migrated within the ping-pong window.
+    pub ping_pongs: u64,
+    /// Plan entries dropped by the bandwidth budget.
+    pub deferred: u64,
+    /// Bytes actually copied between tiers.
+    pub migrated_bytes: u64,
+}
+
+/// The engine: heat ingestion + epoch cadence + budget throttle around a
+/// boxed policy. Plugs into [`crate::sim::Machine::set_migrator`].
+pub struct MigrationEngine {
+    policy: Box<dyn MigrationPolicy>,
+    heat: PageHeat,
+    epoch_ticks: u32,
+    ticks_into_epoch: u32,
+    budget_bytes: u64,
+    ping_pong_epochs: u64,
+    /// page → epoch of its most recent applied move.
+    last_move: HashMap<PageNo, u64>,
+    metrics: MigrationMetrics,
+    /// Epoch/page size of the most recent plan, for `note_applied`.
+    last_plan_epoch: u64,
+    last_page_bytes: u64,
+}
+
+impl MigrationEngine {
+    pub fn new(policy: Box<dyn MigrationPolicy>, epoch_ticks: u32, budget_bytes: u64) -> Self {
+        assert!(epoch_ticks >= 1);
+        MigrationEngine {
+            policy,
+            heat: PageHeat::new(),
+            epoch_ticks,
+            ticks_into_epoch: 0,
+            budget_bytes,
+            ping_pong_epochs: 2,
+            last_move: HashMap::new(),
+            metrics: MigrationMetrics::default(),
+            last_plan_epoch: 0,
+            last_page_bytes: 0,
+        }
+    }
+
+    /// Build the configured engine, or `None` when the config disables
+    /// migration (`enabled = false` or `policy = "none"`).
+    pub fn from_config(cfg: &MigrationConfig) -> Option<MigrationEngine> {
+        if !cfg.enabled {
+            return None;
+        }
+        let policy: Box<dyn MigrationPolicy> = match cfg.policy.as_str() {
+            "naive" => Box::new(NaiveThreshold::from_config(cfg)),
+            "tpp" => Box::new(TppLists::from_config(cfg)),
+            "hybrid" => Box::new(HybridTier::from_config(cfg)),
+            _ => return None, // "none" (validation rejects other strings)
+        };
+        let mut engine = MigrationEngine::new(policy, cfg.epoch_ticks, cfg.budget_bytes);
+        engine.ping_pong_epochs = cfg.ping_pong_epochs;
+        Some(engine)
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Invocation boundary: clear hotness, move history, and counters
+    /// so nothing leaks into the next run on the same server.
+    pub fn reset(&mut self) {
+        self.heat.reset();
+        self.last_move.clear();
+        self.ticks_into_epoch = 0;
+        self.metrics = MigrationMetrics::default();
+        self.last_plan_epoch = 0;
+    }
+}
+
+impl Migrator for MigrationEngine {
+    fn plan(&mut self, mem: &TieredMemory) -> Vec<Migration> {
+        // ingest this tick's per-page access samples (the machine resets
+        // window counters right after the migration pass)
+        for (p, m) in mem.pages.iter_mapped() {
+            if m.window_accesses > 0 {
+                self.heat.record(p, m.window_accesses as u32);
+            }
+        }
+        self.ticks_into_epoch += 1;
+        if self.ticks_into_epoch < self.epoch_ticks {
+            return Vec::new();
+        }
+        self.ticks_into_epoch = 0;
+
+        let page_bytes = mem.page_bytes().max(1);
+        let budget_pages = ((self.budget_bytes / page_bytes) as usize).max(1);
+        let epoch = self.heat.epoch();
+        let mut plan = {
+            let view = EpochView { epoch, mem, heat: &self.heat, budget_pages };
+            self.policy.plan(&view)
+        };
+        if plan.len() > budget_pages {
+            self.metrics.deferred += (plan.len() - budget_pages) as u64;
+            plan.truncate(budget_pages);
+        }
+        // drop entries `TieredMemory::migrate` would reject, simulating
+        // the machine's in-order application (a demotion frees room for
+        // a later promotion in the same plan) — hygiene only, so the
+        // bandwidth budget and copy stalls are not wasted on no-ops;
+        // the *counters* come from note_applied, never from the plan
+        let mut free = [
+            mem.tier(TierKind::Dram).free_bytes(),
+            mem.tier(TierKind::Cxl).free_bytes(),
+        ];
+        let mut seen: std::collections::HashSet<PageNo> = std::collections::HashSet::new();
+        plan.retain(|m| {
+            let valid = m.from != m.to
+                && seen.insert(m.page)
+                && mem.pages.get(m.page).tier() == Some(m.from)
+                && free[m.to.index()] >= page_bytes;
+            if valid {
+                free[m.to.index()] -= page_bytes;
+                free[m.from.index()] += page_bytes;
+            }
+            valid
+        });
+        self.last_plan_epoch = epoch;
+        self.last_page_bytes = page_bytes;
+        self.metrics.epochs += 1;
+        self.heat.roll_epoch();
+        plan
+    }
+
+    /// Count exactly what the machine applied (ground truth — plans can
+    /// still be rejected by rules this engine does not model).
+    fn note_applied(&mut self, applied: &[Migration]) {
+        let epoch = self.last_plan_epoch;
+        for m in applied {
+            match (m.from, m.to) {
+                (TierKind::Cxl, TierKind::Dram) => self.metrics.promotions += 1,
+                (TierKind::Dram, TierKind::Cxl) => self.metrics.demotions += 1,
+                _ => {}
+            }
+            if let Some(&prev) = self.last_move.get(&m.page) {
+                if epoch.saturating_sub(prev) <= self.ping_pong_epochs {
+                    self.metrics.ping_pongs += 1;
+                }
+            }
+            self.last_move.insert(m.page, epoch);
+            self.metrics.migrated_bytes += self.last_page_bytes;
+        }
+    }
+
+    fn name(&self) -> &str {
+        self.policy.name()
+    }
+
+    fn metrics(&self) -> Option<MigrationMetrics> {
+        Some(self.metrics)
+    }
+}
+
+/// Shared helper: demotion candidates, coldest first. Returns DRAM pages
+/// whose current-epoch samples are zero, sorted by ascending decayed
+/// heat (ties: higher page-table idle_ticks first).
+pub(crate) fn cold_dram_pages(view: &EpochView) -> Vec<(PageNo, f64)> {
+    let mut cold: Vec<(PageNo, f64, u8)> = view
+        .mem
+        .pages
+        .iter_mapped()
+        .filter(|(p, m)| {
+            m.tier() == Some(TierKind::Dram) && view.heat.epoch_samples(*p) == 0
+        })
+        .map(|(p, m)| (p, view.heat.heat(p), m.idle_ticks))
+        .collect();
+    cold.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(b.2.cmp(&a.2))
+    });
+    cold.into_iter().map(|(p, h, _)| (p, h)).collect()
+}
+
+/// Shared helper: watermark-reserving promotion plan. Walks `candidates`
+/// (already sorted most-valuable first) and promotes to DRAM while its
+/// free space stays above the `watermark_low` reserve.
+pub(crate) fn promote_above_watermark(
+    view: &EpochView,
+    candidates: impl IntoIterator<Item = PageNo>,
+    watermark_low: f64,
+) -> Vec<Migration> {
+    let page_bytes = view.mem.page_bytes().max(1);
+    let dram = view.mem.tier(TierKind::Dram);
+    let reserve = (dram.params.capacity as f64 * watermark_low) as u64;
+    let mut dram_free = dram.free_bytes();
+    let mut moves = Vec::new();
+    for page in candidates {
+        if dram_free < page_bytes + reserve {
+            break;
+        }
+        moves.push(Migration { page, from: TierKind::Cxl, to: TierKind::Dram });
+        dram_free -= page_bytes;
+    }
+    moves
+}
+
+/// Shared helper: how many pages must leave DRAM to lift the free
+/// fraction to `target_free`, given the current view.
+pub(crate) fn pages_to_free(view: &EpochView, target_free: f64) -> usize {
+    let t = view.mem.tier(TierKind::Dram);
+    let want_free = (t.params.capacity as f64 * target_free) as u64;
+    let have_free = t.free_bytes();
+    if have_free >= want_free {
+        0
+    } else {
+        ((want_free - have_free) / view.mem.page_bytes().max(1)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::mem::tiered::FixedPlacer;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn cfg(dram_pages: u64) -> MachineConfig {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = dram_pages * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        cfg
+    }
+
+    fn obj(start: u64, pages: u64, page_bytes: u64) -> MemoryObject {
+        MemoryObject {
+            id: ObjectId(0),
+            start,
+            bytes: pages * page_bytes,
+            site: "t".into(),
+            seq: 0,
+            via_mmap: true,
+        }
+    }
+
+    fn touch(mem: &mut TieredMemory, page: PageNo, times: u32) {
+        for _ in 0..times {
+            mem.pages.entry(page).touch();
+        }
+    }
+
+    /// Trivial policy for engine-mechanics tests: promote every CXL page
+    /// that has any heat.
+    struct PromoteHot;
+
+    impl MigrationPolicy for PromoteHot {
+        fn name(&self) -> &'static str {
+            "promote-hot"
+        }
+
+        fn plan(&mut self, view: &EpochView) -> Vec<Migration> {
+            let mut hot: Vec<(PageNo, f64)> = view
+                .mem
+                .pages
+                .iter_mapped()
+                .filter(|(p, m)| m.tier() == Some(TierKind::Cxl) && view.heat.heat(*p) > 0.0)
+                .map(|(p, _)| (p, view.heat.heat(p)))
+                .collect();
+            hot.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            hot.into_iter()
+                .map(|(page, _)| Migration { page, from: TierKind::Cxl, to: TierKind::Dram })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn engine_waits_for_epoch_boundary() {
+        let c = cfg(64);
+        let mut mem = TieredMemory::new(&c);
+        let o = obj(crate::shim::intercept::MMAP_BASE, 4, c.page_bytes);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        let p0 = mem.pages.page_of(o.start);
+        let mut eng = MigrationEngine::new(Box::new(PromoteHot), 3, 1 << 30);
+        touch(&mut mem, p0, 5);
+        assert!(eng.plan(&mem).is_empty(), "tick 1 of 3: no epoch yet");
+        assert!(eng.plan(&mem).is_empty(), "tick 2 of 3: no epoch yet");
+        let plan = eng.plan(&mem);
+        assert_eq!(plan.len(), 1, "epoch boundary must produce the promotion");
+        assert_eq!(plan[0].page, p0);
+        eng.note_applied(&plan);
+        let m = Migrator::metrics(&eng).unwrap();
+        assert_eq!(m.epochs, 1);
+        assert_eq!(m.promotions, 1);
+        assert_eq!(m.demotions, 0);
+    }
+
+    #[test]
+    fn engine_throttles_to_budget_and_counts_deferred() {
+        let c = cfg(1024);
+        let mut mem = TieredMemory::new(&c);
+        let o = obj(crate::shim::intercept::MMAP_BASE, 16, c.page_bytes);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        let first = mem.pages.page_of(o.start);
+        for i in 0..16u32 {
+            touch(&mut mem, PageNo { index: first.index + i, ..first }, 3);
+        }
+        // budget: 4 pages per epoch
+        let mut eng = MigrationEngine::new(Box::new(PromoteHot), 1, 4 * c.page_bytes);
+        let plan = eng.plan(&mem);
+        assert_eq!(plan.len(), 4, "plan must be truncated to the budget");
+        eng.note_applied(&plan);
+        let m = Migrator::metrics(&eng).unwrap();
+        assert_eq!(m.deferred, 12);
+        assert_eq!(m.promotions, 4);
+        assert_eq!(m.migrated_bytes, 4 * c.page_bytes);
+    }
+
+    #[test]
+    fn engine_counts_ping_pongs() {
+        let c = cfg(64);
+        let mut mem = TieredMemory::new(&c);
+        let o = obj(crate::shim::intercept::MMAP_BASE, 1, c.page_bytes);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        let p0 = mem.pages.page_of(o.start);
+        let mut eng = MigrationEngine::new(Box::new(PromoteHot), 1, 1 << 30);
+        touch(&mut mem, p0, 3);
+        let plan = eng.plan(&mem);
+        assert_eq!(plan.len(), 1);
+        // apply, then push it back to CXL as if demoted elsewhere, and
+        // heat it again: the second applied move is a ping-pong
+        assert!(mem.migrate(plan[0]));
+        eng.note_applied(&plan);
+        assert!(mem.migrate(Migration { page: p0, from: TierKind::Dram, to: TierKind::Cxl }));
+        mem.end_window();
+        touch(&mut mem, p0, 3);
+        let plan = eng.plan(&mem);
+        assert_eq!(plan.len(), 1);
+        assert!(mem.migrate(plan[0]));
+        eng.note_applied(&plan);
+        let m = Migrator::metrics(&eng).unwrap();
+        assert_eq!(m.ping_pongs, 1, "re-migration within the window is a ping-pong");
+    }
+
+    /// Plans demotion of every DRAM page, valid or not.
+    struct DemoteAll;
+
+    impl MigrationPolicy for DemoteAll {
+        fn name(&self) -> &'static str {
+            "demote-all"
+        }
+
+        fn plan(&mut self, view: &EpochView) -> Vec<Migration> {
+            view.mem
+                .pages
+                .iter_mapped()
+                .filter(|(_, m)| m.tier() == Some(TierKind::Dram))
+                .map(|(page, _)| Migration { page, from: TierKind::Dram, to: TierKind::Cxl })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn engine_drops_moves_the_memory_would_reject() {
+        // CXL has zero capacity: every planned demotion is unappliable
+        // and must not reach the plan or the counters
+        let mut c = cfg(8);
+        c.cxl_bytes = 0;
+        let mut mem = TieredMemory::new(&c);
+        let o = obj(crate::shim::intercept::MMAP_BASE, 4, c.page_bytes);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        let mut eng = MigrationEngine::new(Box::new(DemoteAll), 1, 1 << 30);
+        assert!(eng.plan(&mem).is_empty(), "unappliable moves must be filtered out");
+        let m = Migrator::metrics(&eng).unwrap();
+        assert_eq!(m.demotions, 0, "rejected moves must not count");
+        assert_eq!(m.ping_pongs, 0);
+        assert_eq!(m.migrated_bytes, 0);
+        assert_eq!(m.epochs, 1);
+    }
+
+    #[test]
+    fn engine_reset_drops_history() {
+        let c = cfg(64);
+        let mut mem = TieredMemory::new(&c);
+        let o = obj(crate::shim::intercept::MMAP_BASE, 2, c.page_bytes);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        let p0 = mem.pages.page_of(o.start);
+        let mut eng = MigrationEngine::new(Box::new(PromoteHot), 1, 1 << 30);
+        touch(&mut mem, p0, 9);
+        assert_eq!(eng.plan(&mem).len(), 1);
+        eng.reset();
+        mem.end_window();
+        // after reset no residual heat: an idle tick plans nothing
+        assert!(eng.plan(&mem).is_empty(), "stale heat must not survive reset");
+    }
+
+    #[test]
+    fn from_config_respects_policy_and_switch() {
+        let mut mc = crate::config::MigrationConfig::default();
+        assert_eq!(MigrationEngine::from_config(&mc).unwrap().policy_name(), "tpp");
+        mc.policy = "hybrid".into();
+        assert_eq!(MigrationEngine::from_config(&mc).unwrap().policy_name(), "hybrid");
+        mc.policy = "naive".into();
+        assert_eq!(MigrationEngine::from_config(&mc).unwrap().policy_name(), "naive");
+        mc.policy = "none".into();
+        assert!(MigrationEngine::from_config(&mc).is_none());
+        mc.policy = "tpp".into();
+        mc.enabled = false;
+        assert!(MigrationEngine::from_config(&mc).is_none());
+    }
+}

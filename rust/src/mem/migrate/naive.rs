@@ -1,0 +1,147 @@
+//! The flat hot-threshold policy — the repo's original reactive
+//! migrator (`placement::policies::TppMigrator`) refactored behind
+//! [`MigrationPolicy`]: promote any CXL page whose decayed heat clears a
+//! fixed threshold, demote idle DRAM pages when free DRAM falls below
+//! the watermark. No adaptivity — the baseline the smarter policies are
+//! swept against.
+
+use crate::config::MigrationConfig;
+use crate::mem::migrate::{
+    cold_dram_pages, pages_to_free, promote_above_watermark, EpochView, MigrationPolicy,
+};
+use crate::mem::page::PageNo;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::Migration;
+
+pub struct NaiveThreshold {
+    /// Decayed heat a CXL page needs to be promoted.
+    pub promote_heat: f64,
+    /// Free-DRAM fraction below which idle pages are demoted...
+    pub watermark_low: f64,
+    /// ...until this free fraction is restored.
+    pub watermark_high: f64,
+}
+
+impl NaiveThreshold {
+    pub fn from_config(cfg: &MigrationConfig) -> NaiveThreshold {
+        NaiveThreshold {
+            promote_heat: cfg.promote_heat,
+            watermark_low: cfg.watermark_low,
+            watermark_high: cfg.watermark_high,
+        }
+    }
+}
+
+impl MigrationPolicy for NaiveThreshold {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn plan(&mut self, view: &EpochView) -> Vec<Migration> {
+        // promotion scan: hot CXL pages, hottest first, while DRAM has
+        // room above the low watermark
+        let mut hot: Vec<(PageNo, f64)> = view
+            .mem
+            .pages
+            .iter_mapped()
+            .filter(|(p, m)| {
+                m.tier() == Some(TierKind::Cxl) && view.heat.heat(*p) >= self.promote_heat
+            })
+            .map(|(p, _)| (p, view.heat.heat(p)))
+            .collect();
+        hot.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let mut moves =
+            promote_above_watermark(view, hot.into_iter().map(|(p, _)| p), self.watermark_low);
+
+        // demotion scan: restore the high watermark with the coldest
+        // idle pages
+        if view.dram_free_frac() < self.watermark_low {
+            let need = pages_to_free(view, self.watermark_high);
+            for (page, _) in cold_dram_pages(view).into_iter().take(need) {
+                moves.push(Migration { page, from: TierKind::Dram, to: TierKind::Cxl });
+            }
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::mem::tiered::{FixedPlacer, TieredMemory};
+    use crate::monitor::heatmap::PageHeat;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn setup(dram_pages: u64, cxl_obj_pages: u64, dram_obj_pages: u64) -> (TieredMemory, u64) {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = dram_pages * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        let mut mem = TieredMemory::new(&cfg);
+        if cxl_obj_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(0),
+                start: crate::shim::intercept::MMAP_BASE,
+                bytes: cxl_obj_pages * cfg.page_bytes,
+                site: "cxl".into(),
+                seq: 0,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        }
+        if dram_obj_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(1),
+                start: crate::shim::intercept::MMAP_BASE + (1 << 24),
+                bytes: dram_obj_pages * cfg.page_bytes,
+                site: "dram".into(),
+                seq: 1,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        }
+        (mem, cfg.page_bytes)
+    }
+
+    #[test]
+    fn promotes_only_above_threshold() {
+        let (mem, _) = setup(100, 4, 0);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE);
+        let mut heat = PageHeat::new();
+        heat.record(first, 10); // hot
+        heat.record(PageNo { index: first.index + 1, ..first }, 1); // lukewarm
+        let mut pol = NaiveThreshold { promote_heat: 4.0, watermark_low: 0.1, watermark_high: 0.2 };
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].page, first);
+        assert_eq!(plan[0].to, TierKind::Dram);
+    }
+
+    #[test]
+    fn demotes_idle_pages_below_watermark() {
+        // DRAM completely full of idle pages → demote toward the high
+        // watermark
+        let (mem, _) = setup(10, 0, 10);
+        let heat = PageHeat::new();
+        let mut pol = NaiveThreshold { promote_heat: 4.0, watermark_low: 0.2, watermark_high: 0.4 };
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert_eq!(plan.len(), 4, "restore 40% free of a 10-page DRAM");
+        assert!(plan.iter().all(|m| m.to == TierKind::Cxl));
+    }
+
+    #[test]
+    fn hot_dram_pages_are_never_demoted() {
+        let (mem, _) = setup(4, 0, 4);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE + (1 << 24));
+        let mut heat = PageHeat::new();
+        // every DRAM page sampled this epoch → no demotion candidates
+        for i in 0..4u32 {
+            heat.record(PageNo { index: first.index + i, ..first }, 5);
+        }
+        let mut pol = NaiveThreshold { promote_heat: 4.0, watermark_low: 0.5, watermark_high: 0.9 };
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        assert!(pol.plan(&view).is_empty());
+    }
+}

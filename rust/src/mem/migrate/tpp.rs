@@ -1,0 +1,227 @@
+//! TPP-style policy (Transparent Page Placement, arXiv 2206.02878):
+//! active/inactive page lists with demotion watermarks.
+//!
+//! * A page that takes samples in an epoch enters (or refreshes) the
+//!   **active list**; a page unsampled for `active_epochs` epochs falls
+//!   to **inactive**.
+//! * **Promotion** mirrors TPP's NUMA-hint-fault filter: a CXL page is
+//!   promoted only once it takes `promote_samples`+ samples within a
+//!   single epoch (one-off touches stay in CXL), hottest first, while
+//!   DRAM stays above the low watermark.
+//! * **Demotion** runs only when free DRAM drops below `watermark_low`,
+//!   and pushes *inactive* pages out (oldest activity first) until
+//!   `watermark_high` free is restored — TPP's kswapd-style watermark
+//!   reclaim, never touching the active list.
+
+use std::collections::HashMap;
+
+use crate::config::MigrationConfig;
+use crate::mem::migrate::{pages_to_free, promote_above_watermark, EpochView, MigrationPolicy};
+use crate::mem::page::PageNo;
+use crate::mem::tier::TierKind;
+use crate::mem::tiered::Migration;
+
+pub struct TppLists {
+    /// Samples within one epoch that qualify a CXL page for promotion.
+    pub promote_samples: u32,
+    /// Epochs without a sample before an active page turns inactive.
+    pub active_epochs: u64,
+    pub watermark_low: f64,
+    pub watermark_high: f64,
+    /// page → epoch of its last observed sample (the active list; pages
+    /// older than `active_epochs` are the inactive list).
+    last_active: HashMap<PageNo, u64>,
+}
+
+impl TppLists {
+    pub fn new(promote_samples: u32, active_epochs: u64, low: f64, high: f64) -> TppLists {
+        TppLists {
+            promote_samples: promote_samples.max(1),
+            active_epochs: active_epochs.max(1),
+            watermark_low: low,
+            watermark_high: high,
+            last_active: HashMap::new(),
+        }
+    }
+
+    pub fn from_config(cfg: &MigrationConfig) -> TppLists {
+        TppLists::new(
+            cfg.promote_samples,
+            cfg.active_epochs as u64,
+            cfg.watermark_low,
+            cfg.watermark_high,
+        )
+    }
+
+    /// Pages on the active list as of `epoch` (test/introspection hook).
+    pub fn active_len(&self, epoch: u64) -> usize {
+        self.last_active
+            .values()
+            .filter(|&&e| epoch.saturating_sub(e) < self.active_epochs)
+            .count()
+    }
+}
+
+impl MigrationPolicy for TppLists {
+    fn name(&self) -> &'static str {
+        "tpp"
+    }
+
+    fn plan(&mut self, view: &EpochView) -> Vec<Migration> {
+        let epoch = view.epoch;
+        // 1. refresh the active list from this epoch's samples
+        for (p, m) in view.mem.pages.iter_mapped() {
+            if m.is_mapped() && view.heat.epoch_samples(p) > 0 {
+                self.last_active.insert(p, epoch);
+            }
+        }
+        // prune entries long past inactive (bounds the map to the
+        // recently-touched working set)
+        let horizon = self.active_epochs * 4 + 1;
+        self.last_active.retain(|_, &mut e| epoch.saturating_sub(e) < horizon);
+
+        // 2. promotion: CXL pages with >= promote_samples this epoch,
+        // hottest first, respecting the low watermark
+        let mut hot: Vec<(PageNo, u32)> = view
+            .mem
+            .pages
+            .iter_mapped()
+            .filter(|(p, m)| {
+                m.tier() == Some(TierKind::Cxl)
+                    && view.heat.epoch_samples(*p) >= self.promote_samples
+            })
+            .map(|(p, _)| (p, view.heat.epoch_samples(p)))
+            .collect();
+        hot.sort_by_key(|&(_, s)| std::cmp::Reverse(s));
+        let mut moves =
+            promote_above_watermark(view, hot.into_iter().map(|(p, _)| p), self.watermark_low);
+
+        // 3. demotion: below the low watermark, evict inactive DRAM
+        // pages (oldest activity first) until the high watermark holds
+        if view.dram_free_frac() < self.watermark_low {
+            let need = pages_to_free(view, self.watermark_high);
+            let mut inactive: Vec<(PageNo, u64)> = view
+                .mem
+                .pages
+                .iter_mapped()
+                .filter(|(p, m)| {
+                    m.tier() == Some(TierKind::Dram) && view.heat.epoch_samples(*p) == 0
+                })
+                .filter(|(p, _)| {
+                    let last = self.last_active.get(p).copied();
+                    match last {
+                        Some(e) => epoch.saturating_sub(e) >= self.active_epochs,
+                        None => true, // never sampled: inactive by definition
+                    }
+                })
+                .map(|(p, _)| (p, self.last_active.get(&p).copied().unwrap_or(0)))
+                .collect();
+            inactive.sort_by_key(|&(_, e)| e);
+            for (page, _) in inactive.into_iter().take(need) {
+                moves.push(Migration { page, from: TierKind::Dram, to: TierKind::Cxl });
+            }
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::mem::tiered::{FixedPlacer, TieredMemory};
+    use crate::monitor::heatmap::PageHeat;
+    use crate::shim::object::{MemoryObject, ObjectId};
+
+    fn mem_with(dram_pages: u64, cxl_pages: u64, dram_obj_pages: u64) -> (TieredMemory, u64) {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = dram_pages * cfg.page_bytes;
+        cfg.cxl_bytes = 1 << 30;
+        let mut mem = TieredMemory::new(&cfg);
+        if cxl_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(0),
+                start: crate::shim::intercept::MMAP_BASE,
+                bytes: cxl_pages * cfg.page_bytes,
+                site: "c".into(),
+                seq: 0,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Cxl });
+        }
+        if dram_obj_pages > 0 {
+            let o = MemoryObject {
+                id: ObjectId(1),
+                start: crate::shim::intercept::MMAP_BASE + (1 << 24),
+                bytes: dram_obj_pages * cfg.page_bytes,
+                site: "d".into(),
+                seq: 1,
+                via_mmap: true,
+            };
+            mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        }
+        (mem, cfg.page_bytes)
+    }
+
+    #[test]
+    fn single_touch_stays_in_cxl_second_touch_promotes() {
+        let (mem, _) = mem_with(100, 2, 0);
+        let p0 = mem.pages.page_of(crate::shim::intercept::MMAP_BASE);
+        let mut pol = TppLists::new(2, 2, 0.05, 0.1);
+        let mut heat = PageHeat::new();
+        heat.record(p0, 1); // one sample: below the fault filter
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        assert!(pol.plan(&view).is_empty(), "one touch must not promote");
+        heat.record(p0, 1); // second sample in the same epoch
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].page, p0);
+        assert_eq!(plan[0].to, TierKind::Dram);
+    }
+
+    #[test]
+    fn demotes_only_inactive_pages() {
+        // DRAM full: 4 pages, 2 active (sampled this epoch), 2 never
+        // sampled → only the inactive ones may be demoted
+        let (mem, _) = mem_with(4, 0, 4);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE + (1 << 24));
+        let mut heat = PageHeat::new();
+        heat.record(first, 3);
+        heat.record(PageNo { index: first.index + 1, ..first }, 3);
+        let mut pol = TppLists::new(2, 2, 0.3, 0.6);
+        let view = EpochView { epoch: 5, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert!(!plan.is_empty(), "full DRAM must trigger demotion");
+        for m in &plan {
+            assert_eq!(m.to, TierKind::Cxl);
+            assert!(
+                m.page.index >= first.index + 2,
+                "active page {:?} must not be demoted",
+                m.page
+            );
+        }
+    }
+
+    #[test]
+    fn active_list_expires_after_active_epochs() {
+        let (mem, _) = mem_with(4, 0, 4);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE + (1 << 24));
+        let mut pol = TppLists::new(2, 2, 0.3, 0.6);
+        // epoch 0: all four pages active
+        let mut heat = PageHeat::new();
+        for i in 0..4u32 {
+            heat.record(PageNo { index: first.index + i, ..first }, 2);
+        }
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        assert!(pol.plan(&view).is_empty(), "everything active: nothing to demote");
+        assert_eq!(pol.active_len(0), 4);
+        // two epochs later with no samples: the list has gone inactive
+        heat.roll_epoch();
+        heat.roll_epoch();
+        let view = EpochView { epoch: 2, mem: &mem, heat: &heat, budget_pages: 64 };
+        let plan = pol.plan(&view);
+        assert!(!plan.is_empty(), "expired pages are demotable");
+        assert!(plan.iter().all(|m| m.to == TierKind::Cxl));
+    }
+}

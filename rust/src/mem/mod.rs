@@ -8,11 +8,13 @@
 //! operations Porter drives.
 
 pub mod bwmodel;
+pub mod migrate;
 pub mod page;
 pub mod tier;
 pub mod tiered;
 
 pub use bwmodel::BandwidthModel;
+pub use migrate::{MigrationEngine, MigrationMetrics, MigrationPolicy};
 pub use page::{PageMap, PageMeta};
 pub use tier::{TierKind, TierParams};
 pub use tiered::{Migration, PagePlacer, TieredMemory};

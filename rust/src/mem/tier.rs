@@ -97,7 +97,8 @@ mod tests {
 
     #[test]
     fn transfer_time() {
-        let t = TierParams { kind: TierKind::Dram, latency_ns: 90.0, bw_gbps: 64.0, capacity: 1 << 30 };
+        let t =
+            TierParams { kind: TierKind::Dram, latency_ns: 90.0, bw_gbps: 64.0, capacity: 1 << 30 };
         // 64 bytes at 64 GB/s = 1 ns
         assert!((t.transfer_ns(64) - 1.0).abs() < 1e-9);
     }

@@ -60,7 +60,8 @@ impl TieredMemory {
         let params = TierParams::from_config(cfg);
         TieredMemory {
             pages: PageMap::new(cfg.page_bytes),
-            tiers: params.map(|p| TierState { bw: BandwidthModel::new(&p), params: p, used_bytes: 0 }),
+            tiers: params
+                .map(|p| TierState { bw: BandwidthModel::new(&p), params: p, used_bytes: 0 }),
             page_bytes: cfg.page_bytes,
             promotions: 0,
             demotions: 0,
@@ -127,22 +128,31 @@ impl TieredMemory {
         }
     }
 
-    /// Move one page between tiers; returns false if the target is full.
+    /// Move one page between tiers. Returns false — leaving occupancy,
+    /// free bytes, and the promotion/demotion counters strictly
+    /// untouched — when the move is degenerate (`from == to`), the page
+    /// is not currently mapped in `from`, or the target tier is full.
+    /// Every accepted move bumps exactly one counter: promotions for
+    /// CXL→DRAM, demotions for DRAM→CXL (symmetric accounting).
     pub fn migrate(&mut self, m: Migration) -> bool {
+        if m.from == m.to {
+            return false;
+        }
+        // validate via the read-only view: a rejected migration must not
+        // even grow the page table
+        if self.pages.get(m.page).tier() != Some(m.from) {
+            return false;
+        }
         if self.tier(m.to).free_bytes() < self.page_bytes {
             return false;
         }
-        let entry = self.pages.entry(m.page);
-        if entry.tier() != Some(m.from) {
-            return false;
-        }
-        entry.set_tier(m.to);
+        self.pages.entry(m.page).set_tier(m.to);
         self.tiers[m.from.index()].used_bytes -= self.page_bytes;
         self.tiers[m.to.index()].used_bytes += self.page_bytes;
         match (m.from, m.to) {
             (TierKind::Cxl, TierKind::Dram) => self.promotions += 1,
             (TierKind::Dram, TierKind::Cxl) => self.demotions += 1,
-            _ => {}
+            _ => unreachable!("from == to rejected above"),
         }
         true
     }
@@ -192,7 +202,14 @@ mod tests {
     }
 
     fn obj(id: u32, start: u64, bytes: u64) -> MemoryObject {
-        MemoryObject { id: ObjectId(id), start, bytes, site: "t".into(), seq: id as u64, via_mmap: true }
+        MemoryObject {
+            id: ObjectId(id),
+            start,
+            bytes,
+            site: "t".into(),
+            seq: id as u64,
+            via_mmap: true,
+        }
     }
 
     #[test]
@@ -235,8 +252,47 @@ mod tests {
         let o = obj(1, crate::shim::intercept::MMAP_BASE, 2 * 4096);
         mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
         // page 0 in DRAM (full), page 1 overflowed to CXL
-        let p1 = PageNo { index: mem.pages.page_of(o.start).index + 1, ..mem.pages.page_of(o.start) };
+        let p0 = mem.pages.page_of(o.start);
+        let p1 = PageNo { index: p0.index + 1, ..p0 };
         assert!(!mem.migrate(Migration { page: p1, from: TierKind::Cxl, to: TierKind::Dram }));
+    }
+
+    #[test]
+    fn rejected_migrations_touch_nothing() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 2 * 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        let p = mem.pages.page_of(o.start);
+        let snapshot = |m: &TieredMemory| {
+            (
+                m.used(TierKind::Dram),
+                m.used(TierKind::Cxl),
+                m.promotions,
+                m.demotions,
+                m.pages.mapped_count(),
+            )
+        };
+        let before = snapshot(&mem);
+        // same-tier "move"
+        assert!(!mem.migrate(Migration { page: p, from: TierKind::Dram, to: TierKind::Dram }));
+        // wrong source tier
+        assert!(!mem.migrate(Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram }));
+        // unmapped page far past the object (must not grow the table)
+        let far = PageNo { index: p.index + 10_000, ..p };
+        assert!(!mem.migrate(Migration { page: far, from: TierKind::Dram, to: TierKind::Cxl }));
+        assert_eq!(snapshot(&mem), before, "rejected migrations must leave all accounting intact");
+    }
+
+    #[test]
+    fn demotion_counted_symmetrically() {
+        let mut mem = TieredMemory::new(&small_cfg());
+        let o = obj(1, crate::shim::intercept::MMAP_BASE, 4096);
+        mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
+        let p = mem.pages.page_of(o.start);
+        assert!(mem.migrate(Migration { page: p, from: TierKind::Dram, to: TierKind::Cxl }));
+        assert_eq!((mem.promotions, mem.demotions), (0, 1));
+        assert!(mem.migrate(Migration { page: p, from: TierKind::Cxl, to: TierKind::Dram }));
+        assert_eq!((mem.promotions, mem.demotions), (1, 1));
     }
 
     #[test]

@@ -68,6 +68,8 @@ mod tests {
             cxl_misses: cxl,
             promotions: 0,
             demotions: 0,
+            ping_pongs: 0,
+            migration_bytes: 0,
             peak_dram_bytes: 0,
             peak_cxl_bytes: 0,
         }

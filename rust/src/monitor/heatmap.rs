@@ -1,12 +1,19 @@
-//! Address×time heatmaps — the paper's Fig. 4, as DAMO renders them.
+//! Address×time heatmaps — the paper's Fig. 4, as DAMO renders them —
+//! plus the per-page epoch hotness tracker the migration engine consumes.
 //!
-//! Two sources:
+//! Three sources:
 //! * [`Heatmap::from_damon`] — what the paper's toolchain produces:
 //!   bins region snapshot counts over (address, time).
 //! * [`ExactHeatmap`] — a machine observer that bins every access; the
 //!   ablation benchmark compares DAMON's picture against this ground
 //!   truth to quantify sampling fidelity.
+//! * [`PageHeat`] — page-granular access samples aggregated per *epoch*
+//!   with exponential decay at every rollover; this is the hotness
+//!   signal `mem::migrate`'s policies rank pages by.
 
+use std::collections::HashMap;
+
+use crate::mem::page::PageNo;
 use crate::monitor::damon::RegionSnapshot;
 use crate::sim::machine::AccessObserver;
 
@@ -188,6 +195,109 @@ impl AccessObserver for ExactHeatmap {
     }
 }
 
+/// Per-page hotness entry: decayed cumulative heat + the samples seen in
+/// the current (not-yet-rolled) epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct HeatEntry {
+    heat: f64,
+    epoch_samples: u32,
+}
+
+/// Page-granular epoch hotness: per-page access samples accumulate into
+/// a decayed heat score. At every epoch rollover the score is multiplied
+/// by `decay` (0.5 by default — **counts halve**), and entries whose heat
+/// falls below `min_heat` are dropped, so a page that stops being
+/// touched ages out in a handful of epochs.
+///
+/// One `PageHeat` tracks one invocation on one machine; [`PageHeat::reset`]
+/// clears everything (heat *and* the epoch counter) so no stale hotness
+/// leaks across invocations on the same server.
+#[derive(Debug, Clone)]
+pub struct PageHeat {
+    entries: HashMap<PageNo, HeatEntry>,
+    epoch: u64,
+    decay: f64,
+    min_heat: f64,
+}
+
+impl Default for PageHeat {
+    fn default() -> Self {
+        PageHeat::new()
+    }
+}
+
+impl PageHeat {
+    /// Documented default: heat halves each epoch, entries below half an
+    /// access worth of heat are dropped.
+    pub fn new() -> PageHeat {
+        PageHeat::with_decay(0.5)
+    }
+
+    pub fn with_decay(decay: f64) -> PageHeat {
+        assert!((0.0..1.0).contains(&decay), "decay must be in [0,1)");
+        PageHeat { entries: HashMap::new(), epoch: 0, decay, min_heat: 0.5 }
+    }
+
+    /// Record `samples` accesses to `page` within the current epoch.
+    pub fn record(&mut self, page: PageNo, samples: u32) {
+        if samples == 0 {
+            return;
+        }
+        let e = self.entries.entry(page).or_default();
+        e.heat += samples as f64;
+        e.epoch_samples = e.epoch_samples.saturating_add(samples);
+    }
+
+    /// Decayed cumulative heat of a page (0.0 if never sampled).
+    pub fn heat(&self, page: PageNo) -> f64 {
+        self.entries.get(&page).map(|e| e.heat).unwrap_or(0.0)
+    }
+
+    /// Samples recorded for `page` in the current epoch only — the
+    /// "accessed this epoch" signal TPP-style policies key off.
+    pub fn epoch_samples(&self, page: PageNo) -> u32 {
+        self.entries.get(&page).map(|e| e.epoch_samples).unwrap_or(0)
+    }
+
+    /// Close the current epoch: heat decays (halves by default), the
+    /// per-epoch sample counters reset, cold entries age out.
+    pub fn roll_epoch(&mut self) {
+        self.epoch += 1;
+        let min = self.min_heat;
+        let decay = self.decay;
+        self.entries.retain(|_, e| {
+            e.heat *= decay;
+            e.epoch_samples = 0;
+            e.heat >= min
+        });
+    }
+
+    /// Epochs completed so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Invocation boundary: drop all hotness and restart the epoch count.
+    pub fn reset(&mut self) {
+        self.entries.clear();
+        self.epoch = 0;
+    }
+
+    /// Number of pages currently tracked.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate over (page, decayed heat).
+    pub fn iter(&self) -> impl Iterator<Item = (PageNo, f64)> + '_ {
+        self.entries.iter().map(|(p, e)| (*p, e.heat))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +369,73 @@ mod tests {
         let csv = m.render_csv();
         assert!(csv.lines().count() >= 2);
         assert!(!csv.contains(",9,")); // bin 9 untouched
+    }
+
+    fn page(i: u32) -> PageNo {
+        PageNo { segment: crate::mem::page::Segment::Mmap, index: i }
+    }
+
+    #[test]
+    fn page_heat_accumulates_within_epoch() {
+        let mut h = PageHeat::new();
+        h.record(page(1), 3);
+        h.record(page(1), 2);
+        assert_eq!(h.heat(page(1)), 5.0);
+        assert_eq!(h.epoch_samples(page(1)), 5);
+        assert_eq!(h.heat(page(2)), 0.0);
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn page_heat_halves_at_rollover_as_documented() {
+        let mut h = PageHeat::new();
+        h.record(page(7), 8);
+        h.roll_epoch();
+        assert_eq!(h.epoch(), 1);
+        assert_eq!(h.heat(page(7)), 4.0, "counts must halve at the epoch boundary");
+        assert_eq!(h.epoch_samples(page(7)), 0, "per-epoch samples must reset");
+        h.roll_epoch();
+        assert_eq!(h.heat(page(7)), 2.0);
+        // heat from a new epoch stacks on the decayed residue
+        h.record(page(7), 2);
+        assert_eq!(h.heat(page(7)), 4.0);
+        assert_eq!(h.epoch_samples(page(7)), 2);
+    }
+
+    #[test]
+    fn page_heat_cold_entries_age_out() {
+        let mut h = PageHeat::new();
+        h.record(page(3), 1);
+        // 1.0 → 0.5 → 0.25 < min_heat: dropped on the second rollover
+        h.roll_epoch();
+        assert_eq!(h.len(), 1);
+        h.roll_epoch();
+        assert_eq!(h.len(), 0, "cold page should have aged out");
+        assert_eq!(h.heat(page(3)), 0.0);
+    }
+
+    #[test]
+    fn page_heat_reset_leaks_nothing_across_invocations() {
+        let mut h = PageHeat::new();
+        h.record(page(1), 100);
+        h.record(page(2), 50);
+        h.roll_epoch();
+        h.reset();
+        assert!(h.is_empty(), "stale hotness must not survive an invocation boundary");
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.heat(page(1)), 0.0);
+        assert_eq!(h.epoch_samples(page(2)), 0);
+    }
+
+    #[test]
+    fn page_heat_iter_reports_decayed_scores() {
+        let mut h = PageHeat::new();
+        h.record(page(1), 4);
+        h.record(page(2), 16);
+        h.roll_epoch();
+        let mut got: Vec<(PageNo, f64)> = h.iter().collect();
+        got.sort_by_key(|(p, _)| *p);
+        assert_eq!(got, vec![(page(1), 2.0), (page(2), 8.0)]);
     }
 }

@@ -4,7 +4,8 @@
 //!   sampling with adaptive region adjustment (Park et al.,
 //!   Middleware'19; the kernel feature the paper records with).
 //! * [`heatmap`] — DAMO-style address×time heatmaps (Fig. 4), from DAMON
-//!   snapshots or exact access streams.
+//!   snapshots or exact access streams, plus the per-page epoch hotness
+//!   tracker ([`heatmap::PageHeat`]) the migration engine consumes.
 //! * [`boundness`] — the VTune "memory backend-boundness" proxy (Fig. 2's
 //!   blue line) computed from the machine's stall accounting.
 
@@ -14,4 +15,4 @@ pub mod heatmap;
 
 pub use boundness::TopDown;
 pub use damon::{Damon, RegionSnapshot};
-pub use heatmap::{ExactHeatmap, Heatmap};
+pub use heatmap::{ExactHeatmap, Heatmap, PageHeat};

@@ -192,7 +192,8 @@ impl PlacementHint {
                     Some("cold") => HeatClass::Cold,
                     _ => return Err("class".into()),
                 };
-                Ok(ObjectHeat { site, seq, bytes, heat, density: heat / bytes.max(1) as f64, class })
+                let density = heat / bytes.max(1) as f64;
+                Ok(ObjectHeat { site, seq, bytes, heat, density, class })
             })
             .collect::<Result<Vec<_>, _>>()?;
         let mut hint = PlacementHint {
@@ -214,7 +215,14 @@ mod tests {
     use crate::sim::machine::AccessObserver;
 
     fn obj(id: u32, start: u64, bytes: u64, site: &str) -> MemoryObject {
-        MemoryObject { id: ObjectId(id), start, bytes, site: site.into(), seq: id as u64, via_mmap: true }
+        MemoryObject {
+            id: ObjectId(id),
+            start,
+            bytes,
+            site: site.into(),
+            seq: id as u64,
+            via_mmap: true,
+        }
     }
 
     fn profiled_hint(hot_frac_budget: f64) -> (PlacementHint, MemoryObject, MemoryObject) {

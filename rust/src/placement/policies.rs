@@ -107,7 +107,10 @@ impl Migrator for TppMigrator {
         let mut promote: Vec<(PageNo, u32)> = mem
             .pages
             .iter_mapped()
-            .filter(|(_, m)| m.tier() == Some(TierKind::Cxl) && m.window_accesses >= self.promote_threshold as u16)
+            .filter(|(_, m)| {
+                m.tier() == Some(TierKind::Cxl)
+                    && m.window_accesses >= self.promote_threshold as u16
+            })
             .map(|(p, m)| (p, m.window_accesses as u32))
             .collect();
         promote.sort_by_key(|&(_, w)| std::cmp::Reverse(w));
@@ -157,7 +160,14 @@ mod tests {
     use crate::shim::object::ObjectId;
 
     fn obj(id: u32, start: u64, bytes: u64, site: &str) -> MemoryObject {
-        MemoryObject { id: ObjectId(id), start, bytes, site: site.into(), seq: id as u64, via_mmap: true }
+        MemoryObject {
+            id: ObjectId(id),
+            start,
+            bytes,
+            site: site.into(),
+            seq: id as u64,
+            via_mmap: true,
+        }
     }
 
     fn tiny_cfg(dram_pages: u64) -> MachineConfig {

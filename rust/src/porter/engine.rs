@@ -11,10 +11,11 @@
 
 use std::time::Instant;
 
-use crate::config::{Config, MachineConfig, MonitorConfig, PorterConfig};
+use crate::config::{Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig};
+use crate::mem::migrate::MigrationEngine;
 use crate::mem::tier::TierKind;
 use crate::monitor::damon::Damon;
-use crate::placement::policies::{FirstTouchDram, HintedPlacer, TppMigrator};
+use crate::placement::policies::{FirstTouchDram, HintedPlacer};
 use crate::porter::gateway::FunctionSpec;
 use crate::porter::sysload::SystemLoad;
 use crate::porter::tuner::{OfflineTuner, ProfileData};
@@ -26,6 +27,7 @@ pub struct EngineConfig {
     pub machine: MachineConfig,
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
+    pub migration: MigrationConfig,
 }
 
 impl From<&Config> for EngineConfig {
@@ -34,6 +36,7 @@ impl From<&Config> for EngineConfig {
             machine: cfg.machine.clone(),
             monitor: cfg.monitor.clone(),
             porter: cfg.porter.clone(),
+            migration: cfg.migration.clone(),
         }
     }
 }
@@ -107,8 +110,8 @@ pub fn run_invocation(
             } else {
                 0.0
             };
-            let machine =
-                Machine::new(&mcfg, Box::new(FirstTouchDram { pressure: pressure_limit.max(0.01) }));
+            let placer = FirstTouchDram { pressure: pressure_limit.max(0.01) };
+            let machine = Machine::new(&mcfg, Box::new(placer));
             (machine, false, true)
         }
     };
@@ -120,13 +123,16 @@ pub fn run_invocation(
             0xDA110 ^ id,
         )));
     }
-    // ⑦ runtime promotion/demotion thread
+    // ⑦ runtime promotion/demotion thread: the epoch-driven engine,
+    // per-invocation (a fresh engine per run — no stale hotness leaks
+    // across invocations on the same server), ticked every aggregation
+    // interval and closing an epoch every `migration.epoch_ticks` ticks.
+    // Legacy `[porter]` migration knobs flow in as fallbacks.
     if cfg.porter.migration_enabled {
-        machine.set_migrator(Box::new(TppMigrator {
-            promote_threshold: cfg.porter.promote_threshold,
-            free_watermark: cfg.porter.demote_free_watermark,
-            ..Default::default()
-        }));
+        let mig_cfg = cfg.migration.with_porter_fallbacks(&cfg.porter);
+        if let Some(engine) = MigrationEngine::from_config(&mig_cfg) {
+            machine.set_migrator(Box::new(engine));
+        }
     }
 
     // run the function
@@ -211,6 +217,43 @@ mod tests {
         let second = run_invocation(2, &spec, &ecfg, &sysload, &tuner);
         let ratio = second.report.wall_ns / first.report.wall_ns;
         assert!(ratio < 1.6, "hinted run {ratio:.2}x the DRAM-first run");
+    }
+
+    #[test]
+    fn migration_engine_promotes_on_tiny_dram_grant() {
+        // A server that can grant almost no DRAM forces the footprint
+        // into CXL; with the engine enabled, heatmap samples must drive
+        // promotions of the hot pages back into the granted DRAM.
+        let run = |policy: &str| {
+            let (mut ecfg, _, tuner) = setup();
+            ecfg.machine.dram_bytes = 128 * ecfg.machine.page_bytes;
+            ecfg.migration.policy = policy.to_string();
+            ecfg.migration.epoch_ticks = 1;
+            let sysload = Arc::new(SystemLoad::new(&ecfg.machine));
+            let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(50_000, 100_000)));
+            run_invocation(1, &spec, &ecfg, &sysload, &tuner)
+        };
+        for policy in ["naive", "tpp", "hybrid"] {
+            let out = run(policy);
+            assert!(
+                out.report.promotions > 0,
+                "{policy}: heatmap samples should drive promotions"
+            );
+            assert_eq!(
+                out.report.migration_bytes,
+                (out.report.promotions + out.report.demotions) * 4096,
+                "{policy}: migration bytes must match applied moves"
+            );
+        }
+        let off = {
+            let (mut ecfg, _, tuner) = setup();
+            ecfg.machine.dram_bytes = 128 * ecfg.machine.page_bytes;
+            ecfg.migration.policy = "none".to_string();
+            let sysload = Arc::new(SystemLoad::new(&ecfg.machine));
+            let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(50_000, 100_000)));
+            run_invocation(1, &spec, &ecfg, &sysload, &tuner)
+        };
+        assert_eq!(off.report.promotions, 0);
     }
 
     #[test]

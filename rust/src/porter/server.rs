@@ -8,6 +8,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::Config;
+use crate::metrics::Registry;
 use crate::porter::engine::{run_invocation, EngineConfig, InvocationOutcome};
 use crate::porter::gateway::FunctionSpec;
 use crate::porter::sysload::SystemLoad;
@@ -18,14 +19,16 @@ enum Job {
     Stop,
 }
 
-/// One simulated server: queue, engine workers, and its own memory-load
-/// accounting shared by the workers.
+/// One simulated server: queue, engine workers, its own memory-load
+/// accounting, and a metrics registry the workers feed (invocation and
+/// migration counters, virtual-latency histogram).
 pub struct Server {
     pub index: usize,
     tx: Sender<Job>,
     workers: Vec<JoinHandle<()>>,
     outstanding: Arc<AtomicUsize>,
     pub sysload: Arc<SystemLoad>,
+    pub metrics: Arc<Registry>,
 }
 
 impl Server {
@@ -34,6 +37,7 @@ impl Server {
         let rx = Arc::new(Mutex::new(rx));
         let outstanding = Arc::new(AtomicUsize::new(0));
         let sysload = Arc::new(SystemLoad::new(&cfg.machine));
+        let metrics = Arc::new(Registry::default());
         let engine_cfg = EngineConfig::from(cfg);
         let workers = (0..cfg.porter.workers_per_server)
             .map(|w| {
@@ -41,6 +45,7 @@ impl Server {
                 let outstanding = Arc::clone(&outstanding);
                 let sysload = Arc::clone(&sysload);
                 let tuner = Arc::clone(&tuner);
+                let metrics = Arc::clone(&metrics);
                 let engine_cfg = engine_cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("porter-s{index}w{w}"))
@@ -53,6 +58,13 @@ impl Server {
                             Ok(Job::Invoke { id, spec, done }) => {
                                 let outcome =
                                     run_invocation(id, &spec, &engine_cfg, &sysload, &tuner);
+                                let r = &outcome.report;
+                                metrics.counter("invocations").inc();
+                                metrics.counter("migration.promotions").add(r.promotions);
+                                metrics.counter("migration.demotions").add(r.demotions);
+                                metrics.counter("migration.ping_pongs").add(r.ping_pongs);
+                                metrics.counter("migration.bytes").add(r.migration_bytes);
+                                metrics.histogram("invocation.wall_ns").record(r.wall_ns as u64);
                                 outstanding.fetch_sub(1, Ordering::Relaxed);
                                 let _ = done.send(outcome);
                             }
@@ -62,7 +74,7 @@ impl Server {
                     .expect("spawn worker")
             })
             .collect();
-        Server { index, tx, workers, outstanding, sysload }
+        Server { index, tx, workers, outstanding, sysload, metrics }
     }
 
     /// Push an invocation; returns the completion channel.
@@ -107,6 +119,26 @@ mod tests {
             assert_eq!(out.function, "json");
         }
         assert_eq!(server.load(), 0);
+        assert_eq!(server.metrics.counter("invocations").get(), 8);
+        assert_eq!(server.metrics.histogram("invocation.wall_ns").count(), 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn migration_counters_flow_into_server_metrics() {
+        // a DRAM-starved server running a kvstore must log promotions
+        let mut cfg = Config::default();
+        cfg.porter.workers_per_server = 1;
+        cfg.machine.dram_bytes = 128 * cfg.machine.page_bytes;
+        cfg.migration.epoch_ticks = 1;
+        let tuner = Arc::new(OfflineTuner::new(&cfg));
+        let server = Server::spawn(0, &cfg, tuner);
+        let store = crate::workloads::kvstore::KvStore::new(50_000, 100_000);
+        let spec = FunctionSpec::new("kv", Arc::new(store));
+        let out = server.enqueue(1, spec).recv().unwrap();
+        assert!(out.report.promotions > 0);
+        assert_eq!(server.metrics.counter("migration.promotions").get(), out.report.promotions);
+        assert_eq!(server.metrics.counter("migration.bytes").get(), out.report.migration_bytes);
         server.shutdown();
     }
 }

@@ -99,6 +99,8 @@ mod tests {
                 cxl_misses: 0,
                 promotions: 0,
                 demotions: 0,
+                ping_pongs: 0,
+                migration_bytes: 0,
                 peak_dram_bytes: 0,
                 peak_cxl_bytes: 0,
             },

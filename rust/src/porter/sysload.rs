@@ -36,8 +36,12 @@ impl SystemLoad {
 
     pub fn occupancy(&self, tier: TierKind) -> f64 {
         match tier {
-            TierKind::Dram => self.dram_used.load(Ordering::Relaxed) as f64 / self.dram_capacity as f64,
-            TierKind::Cxl => self.cxl_used.load(Ordering::Relaxed) as f64 / self.cxl_capacity as f64,
+            TierKind::Dram => {
+                self.dram_used.load(Ordering::Relaxed) as f64 / self.dram_capacity as f64
+            }
+            TierKind::Cxl => {
+                self.cxl_used.load(Ordering::Relaxed) as f64 / self.cxl_capacity as f64
+            }
         }
     }
 
@@ -46,7 +50,9 @@ impl SystemLoad {
             TierKind::Dram => {
                 self.dram_capacity.saturating_sub(self.dram_used.load(Ordering::Relaxed))
             }
-            TierKind::Cxl => self.cxl_capacity.saturating_sub(self.cxl_used.load(Ordering::Relaxed)),
+            TierKind::Cxl => {
+                self.cxl_capacity.saturating_sub(self.cxl_used.load(Ordering::Relaxed))
+            }
         }
     }
 

@@ -127,7 +127,12 @@ impl ModelRuntime {
     /// the Pallas kernel; `mlp_infer_fused` is the XLA-native-fusion
     /// build). Both lower the same math, so the interpreter computes one
     /// reference forward for either.
-    pub fn mlp_infer_with(&self, artifact: &str, params: &MlpParams, x: &[f32]) -> Result<Vec<f32>> {
+    pub fn mlp_infer_with(
+        &self,
+        artifact: &str,
+        params: &MlpParams,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
         let sig = self.manifest.get(artifact).ok_or_else(|| anyhow!("no {artifact} artifact"))?;
         // positional layout: (W1, b1, ..., Wn, bn, x)
         if sig.inputs.len() != params.layers.len() * 2 + 1 {

@@ -33,6 +33,16 @@ pub trait Migrator {
     /// Inspect page metadata and return the migrations to perform.
     fn plan(&mut self, mem: &TieredMemory) -> Vec<Migration>;
     fn name(&self) -> &str;
+    /// Called right after the machine applies a plan, with exactly the
+    /// moves `TieredMemory::migrate` accepted — the ground truth for
+    /// any counters the migrator keeps (predicting acceptance would
+    /// drift the moment migrate() grows a new rejection rule).
+    fn note_applied(&mut self, _applied: &[Migration]) {}
+    /// Engine-level counters (epoch/ping-pong/deferred accounting);
+    /// plain migrators report none.
+    fn metrics(&self) -> Option<crate::mem::migrate::MigrationMetrics> {
+        None
+    }
 }
 
 /// Final accounting of one run.
@@ -51,6 +61,11 @@ pub struct RunReport {
     pub cxl_misses: u64,
     pub promotions: u64,
     pub demotions: u64,
+    /// Pages the migration engine re-moved within its ping-pong window
+    /// (0 for plain migrators).
+    pub ping_pongs: u64,
+    /// Bytes actually copied between tiers by applied migrations.
+    pub migration_bytes: u64,
     pub peak_dram_bytes: u64,
     pub peak_cxl_bytes: u64,
 }
@@ -192,18 +207,20 @@ impl Machine {
             // migration pass
             if let Some(mut mig) = self.migrator.take() {
                 let plan = mig.plan(&self.mem);
-                let mut moved = 0u64;
+                let mut applied = Vec::with_capacity(plan.len());
                 for m in plan {
                     if self.mem.migrate(m) {
-                        moved += 1;
                         // a page copy reads from the source tier and
                         // writes to the destination tier
                         let pb = self.mem.page_bytes();
                         let t = self.clock_ns;
                         self.mem.tier_mut(m.from).bw.record(t, pb);
                         self.mem.tier_mut(m.to).bw.record(t, pb);
+                        applied.push(m);
                     }
                 }
+                mig.note_applied(&applied);
+                let moved = applied.len() as u64;
                 if moved > 0 {
                     // copy cost: page transfer at the slower tier's
                     // bandwidth + one latency each way; only a fraction
@@ -227,6 +244,8 @@ impl Machine {
 
     /// Finish the run and produce the report.
     pub fn report(&self) -> RunReport {
+        let ping_pongs =
+            self.migrator.as_ref().and_then(|m| m.metrics()).map(|m| m.ping_pongs).unwrap_or(0);
         RunReport {
             policy: self.placer.name().to_string(),
             wall_ns: self.clock_ns,
@@ -241,6 +260,8 @@ impl Machine {
             cxl_misses: self.cxl_misses,
             promotions: self.mem.promotions,
             demotions: self.mem.demotions,
+            ping_pongs,
+            migration_bytes: (self.mem.promotions + self.mem.demotions) * self.mem.page_bytes(),
             peak_dram_bytes: self.peak_dram,
             peak_cxl_bytes: self.peak_cxl,
         }

@@ -60,7 +60,13 @@ impl RecordedTrace {
     /// tenants are separate processes whose identical virtual layouts map
     /// to distinct physical pages; relocation reproduces that distinction
     /// on the shared machine. `offset` must be page-aligned.
-    pub fn replay_range_relocated(&self, sink: &mut dyn Sink, start: usize, end: usize, offset: u64) {
+    pub fn replay_range_relocated(
+        &self,
+        sink: &mut dyn Sink,
+        start: usize,
+        end: usize,
+        offset: u64,
+    ) {
         for e in &self.events[start..end.min(self.events.len())] {
             match e.kind {
                 KIND_READ => sink.access(e.a + offset, e.b, false),
@@ -135,7 +141,8 @@ impl TraceRecorder {
 
     fn flush_compute(&mut self) {
         if self.pending_compute > 0 {
-            self.trace.events.push(PackedEvent { a: self.pending_compute, b: 0, kind: KIND_COMPUTE });
+            let ev = PackedEvent { a: self.pending_compute, b: 0, kind: KIND_COMPUTE };
+            self.trace.events.push(ev);
             self.pending_compute = 0;
         }
     }

@@ -25,11 +25,14 @@ pub fn fmt_bytes(n: u64) -> String {
 pub fn parse_bytes(s: &str) -> Result<u64, String> {
     let t = s.trim();
     let lower = t.to_ascii_lowercase();
-    let (num_part, mult) = if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")).or(lower.strip_suffix("g")) {
+    let strip3 = |a: &'static str, b: &'static str, c: &'static str| {
+        lower.strip_suffix(a).or(lower.strip_suffix(b)).or(lower.strip_suffix(c))
+    };
+    let (num_part, mult) = if let Some(p) = strip3("gib", "gb", "g") {
         (p, GIB)
-    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")).or(lower.strip_suffix("m")) {
+    } else if let Some(p) = strip3("mib", "mb", "m") {
         (p, MIB)
-    } else if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")).or(lower.strip_suffix("k")) {
+    } else if let Some(p) = strip3("kib", "kb", "k") {
         (p, KIB)
     } else if let Some(p) = lower.strip_suffix("b") {
         (p, 1)

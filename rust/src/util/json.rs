@@ -183,12 +183,19 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],
@@ -319,7 +326,8 @@ impl<'a> Parser<'a> {
                             }
                             let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             // BMP only; surrogate pairs are out of scope for
                             // our own artifacts (we never emit them).
                             s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));

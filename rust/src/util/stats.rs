@@ -17,7 +17,16 @@ impl Summary {
     /// Compute a summary; returns a zeroed summary for an empty slice.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            };
         }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;

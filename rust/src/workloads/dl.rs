@@ -61,7 +61,8 @@ impl Workload for DlTrain {
         let grads = env.tvec::<f32>(p, 0.0, "dl_train/grads");
         let moment = env.tvec::<f32>(p, 0.0, "dl_train/momentum");
         let acts = env.tvec::<f32>(act_elems, 0.0, "dl_train/activations");
-        let batches = env.tvec::<f32>(self.batch * self.layers[0] * 4, 0.5, "dl_train/input_batches");
+        let batches =
+            env.tvec::<f32>(self.batch * self.layers[0] * 4, 0.5, "dl_train/input_batches");
 
         let mut h = 0u64;
         for step in 0..self.steps {

@@ -29,7 +29,10 @@ impl JsonSer {
                 ("active", Json::Bool(rng.chance(0.5))),
                 (
                     "tags",
-                    Json::arr((0..rng.gen_range(4)).map(|_| Json::str(format!("t{}", rng.gen_range(100))))),
+                    Json::arr(
+                        (0..rng.gen_range(4))
+                            .map(|_| Json::str(format!("t{}", rng.gen_range(100)))),
+                    ),
                 ),
             ])
         }))

@@ -139,6 +139,8 @@ mod tests {
 
     #[test]
     fn footprint_scales_with_keys() {
-        assert!(KvStore::new(100_000, 1).footprint_hint() > 10 * KvStore::new(5_000, 1).footprint_hint());
+        let big = KvStore::new(100_000, 1).footprint_hint();
+        let small = KvStore::new(5_000, 1).footprint_hint();
+        assert!(big > 10 * small);
     }
 }

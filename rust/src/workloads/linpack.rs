@@ -149,13 +149,15 @@ impl Workload for Linpack {
                 a.touch_range(i * n + k1, i * n + n, false, env);
                 a.touch_range(i * n + k1, i * n + n, true, env);
             }
-            env.compute(((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2 / self.simd_flops_per_cycle);
+            let panel_flops = ((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2;
+            env.compute(panel_flops / self.simd_flops_per_cycle);
             // column panel
             for i in k1..n {
                 a.touch_range(i * n + k0, i * n + k1, false, env);
                 a.touch_range(i * n + k0, i * n + k1, true, env);
             }
-            env.compute(((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2 / self.simd_flops_per_cycle);
+            let panel_flops = ((k1 - k0) as u64).pow(2) * (n - k1) as u64 / 2;
+            env.compute(panel_flops / self.simd_flops_per_cycle);
             // trailing update: for each row i and panel row k, stream the
             // U12 row and the target row
             for i in k1..n {

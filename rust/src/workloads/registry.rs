@@ -71,11 +71,17 @@ pub fn build(name: &str, scale: Scale) -> Option<Box<dyn Workload + Send + Sync>
         "chameleon" => {
             Box::new(if small { Chameleon::new(64, 16) } else { Chameleon::new(2000, 24) })
         }
-        "image" => Box::new(if small { ImageProc::new(128, 96) } else { ImageProc::new(3840, 2160) }),
+        "image" => {
+            Box::new(if small { ImageProc::new(128, 96) } else { ImageProc::new(3840, 2160) })
+        }
         "compression" => Box::new(Compression::new(if small { 64 << 10 } else { 24 << 20 })),
         "json" => Box::new(JsonSer::new(if small { 200 } else { 40_000 })),
         "kvstore" => {
-            Box::new(if small { KvStore::new(4_000, 20_000) } else { KvStore::new(6_000_000, 2_000_000) })
+            Box::new(if small {
+                KvStore::new(4_000, 20_000)
+            } else {
+                KvStore::new(6_000_000, 2_000_000)
+            })
         }
         "sort" => Box::new(Sort::new(if small { 20_000 } else { 8_000_000 })),
         "dl_train" => {
@@ -84,13 +90,23 @@ pub fn build(name: &str, scale: Scale) -> Option<Box<dyn Workload + Send + Sync>
             Box::new(if small {
                 DlTrain::new(2)
             } else {
-                DlTrain { layers: vec![768, 4096, 4096, 10], batch: 64, steps: 10, flops_per_cycle: 16 }
+                DlTrain {
+                    layers: vec![768, 4096, 4096, 10],
+                    batch: 64,
+                    steps: 10,
+                    flops_per_cycle: 16,
+                }
             })
         }
         "dl_serve" => Box::new(if small {
             DlServe::new(4)
         } else {
-            DlServe { layers: vec![768, 4096, 4096, 10], batch: 8, requests: 30, flops_per_cycle: 16 }
+            DlServe {
+                layers: vec![768, 4096, 4096, 10],
+                batch: 8,
+                requests: 30,
+                flops_per_cycle: 16,
+            }
         }),
         _ => return None,
     })

@@ -59,8 +59,7 @@ impl Workload for Sort {
         while width < n {
             // one merge pass: stream src (two runs at a time) → dst
             {
-                let (src, dst): (&mut crate::shim::env::TVec<u64>, &mut crate::shim::env::TVec<u64>) =
-                    if src_is_a { (&mut a, &mut b) } else { (&mut b, &mut a) };
+                let (src, dst) = if src_is_a { (&mut a, &mut b) } else { (&mut b, &mut a) };
                 let mut lo = 0usize;
                 while lo < n {
                     let mid = (lo + width).min(n);

@@ -145,6 +145,37 @@ fn tiny_pool_is_contended() {
 }
 
 #[test]
+fn migration_traffic_debits_the_cxl_link() {
+    // DRAM-starved nodes force the kvstore's footprint into CXL; with
+    // the engine on, the fleet must log migrations whose bytes ride the
+    // nodes' CXL links (added to record_traffic alongside demand bytes)
+    use porter::cluster::arrivals::{synthetic, Shape};
+    let mut cfg = small_cfg();
+    cfg.cluster.dram_per_node = 64 * cfg.machine.page_bytes; // 256 KiB
+    cfg.migration.epoch_ticks = 1;
+    let names = vec!["kvstore".to_string()];
+    let schedule = synthetic(Shape::Poisson, &names, 400.0, 0.05, 0.0, 7);
+    assert!(!schedule.arrivals.is_empty());
+
+    let with = Cluster::new(&cfg, &names).unwrap().run(&schedule);
+    assert!(
+        with.promotions > 0,
+        "starved DRAM + hot pages should drive promotions in the fleet"
+    );
+    assert_eq!(
+        with.migration_bytes,
+        (with.promotions + with.demotions) * cfg.machine.page_bytes,
+        "migration link traffic must match applied moves"
+    );
+
+    let mut off = cfg.clone();
+    off.migration.policy = "none".to_string();
+    let without = Cluster::new(&off, &names).unwrap().run(&schedule);
+    assert_eq!(without.promotions, 0);
+    assert_eq!(without.migration_bytes, 0);
+}
+
+#[test]
 fn replay_arrivals_drive_the_fleet() {
     let mut cfg = small_cfg();
     cfg.cluster.arrivals = "replay".into();

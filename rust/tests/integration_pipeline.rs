@@ -156,7 +156,14 @@ fn colocation_invariants() {
     let record = |seed: u64| {
         let mut rec = TraceRecorder::new();
         let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut rec);
-        let w = KvStore { keys: 800_000, ops: 120_000, theta: 0.6, write_frac: 0.2, value_words: 4, seed };
+        let w = KvStore {
+            keys: 800_000,
+            ops: 120_000,
+            theta: 0.6,
+            write_frac: 0.2,
+            value_words: 4,
+            seed,
+        };
         w.run(&mut env);
         rec.finish()
     };

@@ -87,6 +87,81 @@ fn prop_tier_accounting_balances() {
     });
 }
 
+/// Migration accounting: across arbitrary (often invalid) migrate
+/// sequences, per-tier occupancy always equals page_bytes × pages mapped
+/// there, promotions/demotions count exactly the successful CXL→DRAM /
+/// DRAM→CXL moves (symmetric), and every rejected call leaves the whole
+/// state — occupancy, free bytes, counters, page table — untouched.
+#[test]
+fn prop_migrate_accounting_invariant() {
+    forall("migrate-accounting", 60, |g: &mut Gen| {
+        let mut cfg = MachineConfig::default();
+        cfg.dram_bytes = g.u64_in(2, 24) * cfg.page_bytes;
+        cfg.cxl_bytes = g.u64_in(8, 48) * cfg.page_bytes;
+        let mut mem = TieredMemory::new(&cfg);
+        let pages = g.u64_in(1, 30);
+        let o = MemoryObject {
+            id: porter::shim::object::ObjectId(0),
+            start: porter::shim::intercept::MMAP_BASE,
+            bytes: pages * cfg.page_bytes,
+            site: "o".into(),
+            seq: 0,
+            via_mmap: true,
+        };
+        let kind = if g.bool() { TierKind::Dram } else { TierKind::Cxl };
+        mem.map_object(&o, &mut FixedPlacer { kind });
+
+        let first = mem.pages.page_of(o.start);
+        let mut expected_promotions = 0u64;
+        let mut expected_demotions = 0u64;
+        for _ in 0..g.usize_in(0, 80) {
+            // random page (sometimes unmapped), random from/to
+            // (sometimes equal, sometimes wrong)
+            let p = PageNo { index: first.index + g.u64_in(0, pages + 6) as u32, ..first };
+            let from = if g.bool() { TierKind::Dram } else { TierKind::Cxl };
+            let to = if g.bool() { from } else { from.other() };
+            let before = (
+                mem.used(TierKind::Dram),
+                mem.used(TierKind::Cxl),
+                mem.promotions,
+                mem.demotions,
+                mem.pages.mapped_count(),
+            );
+            let valid_page = mem.pages.get(p).tier() == Some(from);
+            let ok = mem.migrate(Migration { page: p, from, to });
+            if ok {
+                assert_ne!(from, to, "same-tier moves must be rejected");
+                assert!(valid_page, "accepted move of a page not mapped in `from`");
+                match to {
+                    TierKind::Dram => expected_promotions += 1,
+                    TierKind::Cxl => expected_demotions += 1,
+                }
+            } else {
+                let after = (
+                    mem.used(TierKind::Dram),
+                    mem.used(TierKind::Cxl),
+                    mem.promotions,
+                    mem.demotions,
+                    mem.pages.mapped_count(),
+                );
+                assert_eq!(after, before, "rejected migration mutated state");
+            }
+            // occupancy invariant after every call
+            for k in TierKind::ALL {
+                let mapped = mem
+                    .pages
+                    .iter_mapped()
+                    .filter(|(_, m)| m.tier() == Some(k))
+                    .count() as u64;
+                assert_eq!(mem.used(k), mapped * cfg.page_bytes, "{k:?} occupancy drifted");
+                assert!(mem.used(k) <= mem.tier(k).params.capacity, "{k:?} over capacity");
+            }
+        }
+        assert_eq!(mem.promotions, expected_promotions, "promotions miscounted");
+        assert_eq!(mem.demotions, expected_demotions, "demotions miscounted");
+    });
+}
+
 /// Cache: hits+misses == line-accesses; a repeat pass over a small
 /// working set hits; capacity is never exceeded.
 #[test]
