@@ -29,7 +29,7 @@ fn workload(quick: bool) -> PageRank {
 }
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let w = workload(quick);
     let mut bench = BenchSuite::new("ablations: hint generation + placement policies");
 

@@ -28,7 +28,7 @@ fn base_cfg() -> Config {
 }
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let node_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
     let shapes = ["poisson", "bursty", "diurnal"];
     let duration_s = if quick { 0.25 } else { 0.5 };

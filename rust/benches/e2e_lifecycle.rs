@@ -1,0 +1,196 @@
+//! End-to-end lifecycle bench: keep-alive policy × warm-pool budget ×
+//! arrival pattern, over a 2-node fleet with snapshots demoted into the
+//! shared CXL pool.
+//!
+//! The sweep quantifies what the warm path buys: sandbox cold starts,
+//! per-kind (cold/warm/restored) p50 latency, snapshot/restore traffic,
+//! and the pool capacity the snapshot store leases. The zero-budget
+//! column is the "warm pool disabled" baseline — every invocation pays
+//! the full cold start (restores only when snapshots are on), so the
+//! cold-start amortization trend is directly visible across budgets.
+//! Writes the series to `BENCH_lifecycle.json` at the repo root so
+//! future PRs have a trajectory to compare against.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_lifecycle
+
+use porter::bench::{fmt_ns, BenchConfig, BenchSuite, FigureReport};
+use porter::cluster::simulate;
+use porter::config::Config;
+use porter::util::json::Json;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.functions = 6;
+    cfg.cluster.zipf_theta = 0.9;
+    cfg.cluster.rate_per_s = 500.0;
+    cfg.cluster.seed = 0x11FE;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.min_nodes = 1;
+    cfg.cluster.max_nodes = 4;
+    cfg
+}
+
+fn lifecycle_cfg(policy: &str, budget_mb: u64, shape: &str, duration_s: f64) -> Config {
+    let mut cfg = base_cfg();
+    cfg.cluster.arrivals = shape.to_string();
+    cfg.cluster.duration_s = duration_s;
+    cfg.lifecycle.enabled = true;
+    cfg.lifecycle.policy = policy.to_string();
+    cfg.lifecycle.warm_pool_bytes = budget_mb << 20;
+    cfg.lifecycle.snapshot = true;
+    cfg
+}
+
+fn main() {
+    let quick = porter::bench::quick_mode();
+    let policies = ["ttl", "lru", "histogram"];
+    let budgets_mb: &[u64] = if quick { &[0, 512] } else { &[0, 64, 512] };
+    let shapes: &[&str] = if quick { &["poisson"] } else { &["poisson", "bursty"] };
+    let duration_s = if quick { 0.2 } else { 0.5 };
+
+    let mut suite = BenchSuite::new(
+        "e2e: function lifecycle (lifecycle/) — keep-alive policy × pool budget × arrivals",
+    )
+    .with_config(BenchConfig {
+        warmup_iters: 1,
+        sample_iters: 3,
+        max_time: std::time::Duration::from_secs(60),
+    });
+
+    // ---- legacy reference: lifecycle modeling off ----
+    let mut legacy = base_cfg();
+    legacy.cluster.arrivals = "poisson".to_string();
+    legacy.cluster.duration_s = duration_s;
+    let legacy_report = simulate(&legacy).expect("legacy run");
+    suite.section(format!(
+        "legacy (implicit infinite keep-alive): p50 {} with {} hint-cold dispatches of {}",
+        fmt_ns(legacy_report.fleet_p50_ns as f64),
+        legacy_report.cold_starts,
+        legacy_report.completed
+    ));
+
+    // ---- the sweep ----
+    let mut fig = FigureReport::new(
+        "lifecycle-amortization",
+        "sandbox cold starts and p50 vs keep-alive policy / budget / arrivals",
+        &["cold_starts", "warm_starts", "restores", "p50_ms", "snapshot_mb"],
+    );
+    let mut series = Vec::new();
+    for shape in shapes {
+        for policy in policies {
+            for &mb in budgets_mb {
+                let cfg = lifecycle_cfg(policy, mb, shape, duration_s);
+                let r = simulate(&cfg).expect("lifecycle run");
+                assert_eq!(
+                    r.cold_starts + r.warm_starts + r.restores,
+                    r.completed,
+                    "start-kind accounting must be exhaustive"
+                );
+                fig.row(
+                    &format!("{shape}/{policy}/{mb}MB"),
+                    vec![
+                        r.cold_starts as f64,
+                        r.warm_starts as f64,
+                        r.restores as f64,
+                        r.fleet_p50_ns as f64 / 1e6,
+                        r.snapshot_bytes as f64 / (1u64 << 20) as f64,
+                    ],
+                );
+                series.push(Json::obj(vec![
+                    ("shape", Json::str(*shape)),
+                    ("policy", Json::str(policy)),
+                    ("warm_pool_mb", Json::num(mb as f64)),
+                    ("completed", Json::num(r.completed as f64)),
+                    ("cold_starts", Json::num(r.cold_starts as f64)),
+                    ("warm_starts", Json::num(r.warm_starts as f64)),
+                    ("restores", Json::num(r.restores as f64)),
+                    ("p50_ns", Json::num(r.fleet_p50_ns as f64)),
+                    ("p99_ns", Json::num(r.fleet_p99_ns as f64)),
+                    ("cold_p50_ns", Json::num(r.cold_p50_ns as f64)),
+                    ("warm_p50_ns", Json::num(r.warm_p50_ns as f64)),
+                    ("restore_p50_ns", Json::num(r.restore_p50_ns as f64)),
+                    ("snapshot_bytes", Json::num(r.snapshot_bytes as f64)),
+                    ("restore_bytes", Json::num(r.restore_bytes as f64)),
+                    (
+                        "snapshot_leased_bytes",
+                        Json::num(r.snapshot_leased_bytes as f64),
+                    ),
+                    ("pool_mean_occupancy", Json::num(r.pool_mean_occupancy)),
+                    ("pool_peak_occupancy", Json::num(r.pool_peak_occupancy)),
+                    ("warm_pool_peak_bytes", Json::num(r.warm_pool_peak_bytes as f64)),
+                    ("determinism_token", Json::str(format!("{:#018x}", r.determinism_token))),
+                ]));
+                eprintln!(
+                    "  {shape}/{policy}/{mb}MB: cold {} warm {} restored {} p50 {}",
+                    r.cold_starts,
+                    r.warm_starts,
+                    r.restores,
+                    fmt_ns(r.fleet_p50_ns as f64)
+                );
+            }
+        }
+    }
+    suite.section(fig.render());
+
+    // ---- the acceptance trend: a funded warm pool must beat zero ----
+    for shape in shapes {
+        let zero = simulate(&lifecycle_cfg("ttl", 0, shape, duration_s)).expect("zero run");
+        let funded =
+            simulate(&lifecycle_cfg("ttl", 512, shape, duration_s)).expect("funded run");
+        assert!(
+            funded.cold_starts < zero.cold_starts,
+            "{shape}: 512MB pool must cut cold starts ({} vs {})",
+            funded.cold_starts,
+            zero.cold_starts
+        );
+        assert!(
+            funded.fleet_p50_ns < zero.fleet_p50_ns,
+            "{shape}: 512MB pool must cut p50 ({} vs {})",
+            funded.fleet_p50_ns,
+            zero.fleet_p50_ns
+        );
+        suite.section(format!(
+            "{shape}: cold starts {} → {} and p50 {} → {} (0MB → 512MB warm pool)",
+            zero.cold_starts,
+            funded.cold_starts,
+            fmt_ns(zero.fleet_p50_ns as f64),
+            fmt_ns(funded.fleet_p50_ns as f64)
+        ));
+    }
+
+    // ---- determinism under the lifecycle layer ----
+    let check = lifecycle_cfg("histogram", 64, "poisson", duration_s.min(0.2));
+    let a = simulate(&check).expect("determinism A");
+    let b = simulate(&check).expect("determinism B");
+    assert_eq!(
+        a.determinism_token, b.determinism_token,
+        "lifecycle runs must stay deterministic under a fixed seed"
+    );
+
+    // ---- host-side timing of one mid-size configuration ----
+    let host_cfg = lifecycle_cfg("ttl", 512, "poisson", 0.2);
+    let arrivals = host_cfg.cluster.rate_per_s * 0.2;
+    suite.bench_with_throughput("simulate_2n_warmpool", arrivals, "arrival", || {
+        simulate(&host_cfg).unwrap()
+    });
+
+    // ---- persist the series for future PRs ----
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_lifecycle")),
+        ("quick", Json::Bool(quick)),
+        ("duration_s", Json::num(duration_s)),
+        ("legacy_p50_ns", Json::num(legacy_report.fleet_p50_ns as f64)),
+        ("policies", Json::arr(policies.iter().map(|p| Json::str(*p)))),
+        ("budgets_mb", Json::arr(budgets_mb.iter().map(|b| Json::num(*b as f64)))),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_lifecycle.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    suite.run();
+}

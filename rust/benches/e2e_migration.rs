@@ -51,7 +51,7 @@ fn run_cell(w: &dyn Workload, cfg: &Config, ratio: f64, policy: &str) -> RunRepo
 }
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let scale = if quick { Scale::Small } else { Scale::Default };
     let cfg = Config::default();
     let mut suite = BenchSuite::new("e2e: migration policy sweep (mem/migrate/)");

@@ -17,7 +17,7 @@ use porter::util::table::Table;
 use porter::workloads::registry::{build, Scale};
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let rounds = if quick { 3 } else { 12 };
     let mut cfg = Config::default();
     cfg.porter.servers = 2;

@@ -18,7 +18,7 @@ use porter::placement::static_place::run_plain;
 use porter::workloads::registry::{suite, Scale};
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let scale = if quick { Scale::Small } else { Scale::Default };
     let cfg = Config::default();
     let mut bench = BenchSuite::new("fig2: CXL slowdown across the serverless suite");

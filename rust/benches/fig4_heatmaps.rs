@@ -42,7 +42,7 @@ fn profile(name: &str, scale: Scale, cfg: &Config) -> (Heatmap, u64) {
 }
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let scale = if quick { Scale::Small } else { Scale::Default };
     let cfg = Config::default();
     let mut bench = BenchSuite::new("fig4: DAMON access heatmaps");

@@ -17,7 +17,7 @@ use porter::placement::static_place::profile_and_place;
 use porter::workloads::registry::{build, Scale};
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let scale = if quick { Scale::Small } else { Scale::Default };
     let cfg = Config::default();
     let mut bench =

@@ -26,7 +26,7 @@ fn record(w: &dyn Workload, cfg: &Config) -> RecordedTrace {
 }
 
 fn main() {
-    let quick = std::env::var("PORTER_BENCH_QUICK").is_ok();
+    let quick = porter::bench::quick_mode();
     let cfg = Config::default();
     // ResNet-scale weights (80MiB/tenant) so tenants genuinely contend;
     // see examples/colocation.rs for the same scenario with commentary.

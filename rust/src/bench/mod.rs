@@ -67,11 +67,19 @@ pub struct BenchSuite {
     extra_sections: Vec<String>,
 }
 
+/// Quick-mode switch shared by every bench: set `PORTER_BENCH_QUICK`
+/// (any value) to shrink scales/iterations so CI smoke runs stay fast.
+/// All `rust/benches/*.rs` consult this one helper instead of sniffing
+/// the environment themselves.
+pub fn quick_mode() -> bool {
+    std::env::var("PORTER_BENCH_QUICK").is_ok()
+}
+
 impl BenchSuite {
     pub fn new(title: &str) -> BenchSuite {
         let mut config = BenchConfig::default();
-        // Honour a quick mode so `cargo bench` smoke runs stay fast.
-        if std::env::var("PORTER_BENCH_QUICK").is_ok() {
+        // Honour the quick mode so `cargo bench` smoke runs stay fast.
+        if quick_mode() {
             config.warmup_iters = 1;
             config.sample_iters = 3;
             config.max_time = Duration::from_secs(10);

@@ -2,14 +2,24 @@
 //! inside the node (`porter::balancer::LeastLoaded` over its virtual
 //! servers).
 //!
-//! Node choice extends least-loaded with *hint locality*: a node whose
-//! `HintCache` is cold for the invoked function would pay the profile
-//! run + cold start, so it is charged a phantom backlog (a configurable
-//! multiple of the fleet's mean service time) at pick time. Warm nodes
-//! therefore attract repeat invocations of "their" functions, while a
-//! sufficiently overloaded warm node still sheds traffic to cold ones —
-//! locality is a bonus, not an affinity pin. Ties rotate round-robin
-//! with the same advance-past-the-pick cursor as `LeastLoaded`.
+//! Node choice extends least-loaded with two locality signals:
+//!
+//! * **hint locality** — a node whose `HintCache` is cold for the
+//!   invoked function would pay the profile run, so it is charged a
+//!   phantom backlog (a configurable multiple of the fleet's mean
+//!   service time) at pick time;
+//! * **sandbox locality** — a node without a live warm sandbox pays the
+//!   startup the lifecycle layer predicts for it: the full cold start,
+//!   or only the snapshot-restore cost when a CXL-resident snapshot of
+//!   the function exists (snapshots are pool-resident, so every node
+//!   restores at the same predicted price — the signal shrinks the
+//!   warm node's advantage exactly when a cheap restore is available).
+//!
+//! Warm nodes therefore attract repeat invocations of "their"
+//! functions, while a sufficiently overloaded warm node still sheds
+//! traffic — locality is a bonus, not an affinity pin. Ties rotate
+//! round-robin with the same advance-past-the-pick cursor as
+//! `LeastLoaded`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -20,6 +30,8 @@ pub struct NodeView {
     pub backlog_ns: u64,
     /// Node holds a warm hint for the invoked function.
     pub warm: bool,
+    /// Node holds a live warm sandbox for the invoked function.
+    pub sandbox_warm: bool,
     /// Draining or retired nodes receive no new work.
     pub draining: bool,
 }
@@ -31,10 +43,17 @@ pub struct ClusterBalancer {
 }
 
 impl ClusterBalancer {
-    /// Pick a node for one arrival; `cold_penalty_ns` is the phantom
-    /// backlog charged to nodes without a warm hint. `None` only when
-    /// every node is draining.
-    pub fn pick(&self, views: &[NodeView], cold_penalty_ns: u64) -> Option<usize> {
+    /// Pick a node for one arrival. `hint_penalty_ns` is the phantom
+    /// backlog charged to nodes without a warm hint; `startup_penalty_ns`
+    /// the predicted sandbox startup (cold start, or restore when a
+    /// snapshot exists) charged to nodes without a live sandbox.
+    /// `None` only when every node is draining.
+    pub fn pick(
+        &self,
+        views: &[NodeView],
+        hint_penalty_ns: u64,
+        startup_penalty_ns: u64,
+    ) -> Option<usize> {
         if views.is_empty() {
             return None;
         }
@@ -47,7 +66,10 @@ impl ClusterBalancer {
             if v.draining {
                 continue;
             }
-            let score = v.backlog_ns.saturating_add(if v.warm { 0 } else { cold_penalty_ns });
+            let score = v
+                .backlog_ns
+                .saturating_add(if v.warm { 0 } else { hint_penalty_ns })
+                .saturating_add(if v.sandbox_warm { 0 } else { startup_penalty_ns });
             match best {
                 Some((_, s)) if s <= score => {}
                 _ => best = Some((i, score)),
@@ -65,7 +87,7 @@ mod tests {
     use super::*;
 
     fn view(backlog_ns: u64, warm: bool) -> NodeView {
-        NodeView { backlog_ns, warm, draining: false }
+        NodeView { backlog_ns, warm, sandbox_warm: warm, draining: false }
     }
 
     #[test]
@@ -73,7 +95,7 @@ mod tests {
         let b = ClusterBalancer::default();
         let views = [view(1000, false), view(1000, true), view(1000, false)];
         for _ in 0..5 {
-            assert_eq!(b.pick(&views, 500), Some(1));
+            assert_eq!(b.pick(&views, 500, 0), Some(1));
         }
     }
 
@@ -81,7 +103,7 @@ mod tests {
     fn overloaded_warm_node_sheds_to_cold() {
         let b = ClusterBalancer::default();
         let views = [view(10_000, true), view(100, false)];
-        assert_eq!(b.pick(&views, 500), Some(1));
+        assert_eq!(b.pick(&views, 500, 0), Some(1));
     }
 
     #[test]
@@ -90,9 +112,21 @@ mod tests {
         let views = [view(0, true), view(0, true), view(0, true)];
         let mut counts = [0usize; 3];
         for _ in 0..9 {
-            counts[b.pick(&views, 500).unwrap()] += 1;
+            counts[b.pick(&views, 500, 0).unwrap()] += 1;
         }
         assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn sandbox_warm_node_attracts_under_cold_start_penalty() {
+        let b = ClusterBalancer::default();
+        let mut views = [view(1000, true), view(1000, true)];
+        views[1].sandbox_warm = false;
+        // same hint state, but node 1 would pay a 250µs cold start
+        assert_eq!(b.pick(&views, 0, 250_000), Some(0));
+        // a small restore penalty (snapshot exists) lets backlog win again
+        views[0].backlog_ns = 100_000;
+        assert_eq!(b.pick(&views, 0, 5_000), Some(1));
     }
 
     #[test]
@@ -100,9 +134,9 @@ mod tests {
         let b = ClusterBalancer::default();
         let mut views = [view(0, true), view(99, true)];
         views[0].draining = true;
-        assert_eq!(b.pick(&views, 0), Some(1));
+        assert_eq!(b.pick(&views, 0, 0), Some(1));
         views[1].draining = true;
-        assert_eq!(b.pick(&views, 0), None);
-        assert_eq!(b.pick(&[], 0), None);
+        assert_eq!(b.pick(&views, 0, 0), None);
+        assert_eq!(b.pick(&[], 0, 0), None);
     }
 }

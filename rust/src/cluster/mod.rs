@@ -12,8 +12,18 @@
 //!   link/backplane bandwidth contention via `mem::bwmodel`);
 //! * [`arrivals`] — open-loop load generation (Poisson, bursty,
 //!   diurnal, Azure-style trace replay), PRNG-seeded and deterministic;
-//! * [`balancer`] — two-level routing with hint-locality awareness;
+//! * [`balancer`] — two-level routing with hint- and sandbox-locality
+//!   awareness;
 //! * [`autoscaler`] — node add/drain on queue-depth and SLO signals.
+//!
+//! With `[lifecycle] enabled = true` the warm path is modeled
+//! explicitly (see [`crate::lifecycle`]): every arrival is classified
+//! warm / restored / cold against the picked node's
+//! [`crate::lifecycle::WarmPool`] and the cluster
+//! [`SnapshotStore`]; snapshots lease capacity from the
+//! shared CXL pool and their transfer bytes debit link bandwidth like
+//! migration traffic, so the report's pool occupancy and per-kind
+//! latency breakout show exactly what keep-alive buys.
 //!
 //! The simulation is a discrete-event loop over the arrival schedule in
 //! virtual time. Real engine runs (on real server threads) measure each
@@ -28,18 +38,21 @@ pub mod balancer;
 pub mod node;
 pub mod pool;
 
+use std::collections::{HashMap, HashSet};
+
 use crate::config::Config;
+use crate::lifecycle::{AdmitOutcome, Sandbox, SnapshotStore, StartKind};
 use crate::metrics::Histogram;
 use crate::porter::gateway::FunctionSpec;
 use crate::porter::slo::SloTracker;
-use crate::util::bytes::GIB;
+use crate::util::bytes::{fmt_bytes, GIB};
 use crate::workloads::mix;
 use crate::workloads::registry::{build, Scale};
 
 use arrivals::{ArrivalSpec, AzureTrace, Shape};
 use autoscaler::{Autoscaler, FleetSignal, ScaleDirection, ScaleEvent};
 use balancer::{ClusterBalancer, NodeView};
-use node::Node;
+use node::{Node, ServiceShape};
 use pool::CxlPool;
 
 /// Cost proxy, in relative $/GiB-second: local DRAM versus pooled CXL
@@ -107,6 +120,9 @@ pub struct NodeSummary {
     pub id: usize,
     pub invocations: u64,
     pub cold_runs: u64,
+    pub warm_starts: u64,
+    pub restores: u64,
+    pub cold_starts: u64,
     pub p50_ns: u64,
     pub p99_ns: u64,
     pub active_s: f64,
@@ -138,6 +154,30 @@ pub struct ClusterReport {
     pub demotions: u64,
     pub ping_pongs: u64,
     pub migration_bytes: u64,
+    /// Sandbox-lifecycle rollup. With the lifecycle layer disabled the
+    /// start counters fall back to the legacy hint-based cold/warm
+    /// split and the snapshot fields stay zero.
+    pub lifecycle_enabled: bool,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub restores: u64,
+    pub cold_p50_ns: u64,
+    pub warm_p50_ns: u64,
+    pub restore_p50_ns: u64,
+    pub warm_hits: u64,
+    pub warm_evictions: u64,
+    pub warm_rejected: u64,
+    pub warm_pool_peak_bytes: u64,
+    pub snapshots_taken: u64,
+    /// Bytes written over CXL links creating snapshots.
+    pub snapshot_bytes: u64,
+    /// Bytes read over CXL links restoring snapshots.
+    pub restore_bytes: u64,
+    /// Pool capacity currently leased by (and peak-leased to) snapshots.
+    pub snapshot_leased_bytes: u64,
+    pub snapshot_peak_leased_bytes: u64,
+    pub snapshot_lease_denied: u64,
+    pub snapshot_evicted: u64,
     pub node_seconds: f64,
     /// DRAM + pooled-CXL provisioning cost (relative units; see
     /// [`DRAM_COST_PER_GIB_S`]).
@@ -176,6 +216,47 @@ impl ClusterReport {
         ]);
         t.row(vec!["cold (profile) runs".into(), self.cold_runs.to_string()]);
         t.row(vec![
+            "sandbox starts".into(),
+            format!(
+                "{} cold / {} warm / {} restored",
+                self.cold_starts, self.warm_starts, self.restores
+            ),
+        ]);
+        if self.lifecycle_enabled {
+            t.row(vec![
+                "startup p50".into(),
+                format!(
+                    "cold {} / warm {} / restored {}",
+                    fmt_ns(self.cold_p50_ns as f64),
+                    fmt_ns(self.warm_p50_ns as f64),
+                    fmt_ns(self.restore_p50_ns as f64)
+                ),
+            ]);
+            t.row(vec![
+                "warm pools".into(),
+                format!(
+                    "{} hits, {} evictions (+{} oversized), peak {}",
+                    self.warm_hits,
+                    self.warm_evictions,
+                    self.warm_rejected,
+                    fmt_bytes(self.warm_pool_peak_bytes)
+                ),
+            ]);
+            t.row(vec![
+                "snapshot store".into(),
+                format!(
+                    "{} taken ({} evicted, {} denied), wrote {} read {}, leased {} peak {}",
+                    self.snapshots_taken,
+                    self.snapshot_evicted,
+                    self.snapshot_lease_denied,
+                    fmt_bytes(self.snapshot_bytes),
+                    fmt_bytes(self.restore_bytes),
+                    fmt_bytes(self.snapshot_leased_bytes),
+                    fmt_bytes(self.snapshot_peak_leased_bytes)
+                ),
+            ]);
+        }
+        t.row(vec![
             "CXL pool occupancy".into(),
             format!(
                 "mean {:.1}% peak {:.1}% ({} shortages)",
@@ -191,7 +272,7 @@ impl ClusterReport {
                 self.promotions,
                 self.demotions,
                 self.ping_pongs,
-                crate::util::bytes::fmt_bytes(self.migration_bytes)
+                fmt_bytes(self.migration_bytes)
             ),
         ]);
         t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
@@ -202,17 +283,19 @@ impl ClusterReport {
         ]);
         out.push_str(&t.render());
 
-        let headers = ["node", "invocations", "cold", "p50", "p99", "active", "peak DRAM"];
+        let headers =
+            ["node", "invocations", "cold", "w/r/c", "p50", "p99", "active", "peak DRAM"];
         let mut nt = Table::new(&headers).left_first();
         for n in &self.nodes {
             nt.row(vec![
                 format!("n{}{}", n.id, if n.retired { " (drained)" } else { "" }),
                 n.invocations.to_string(),
                 n.cold_runs.to_string(),
+                format!("{}/{}/{}", n.warm_starts, n.restores, n.cold_starts),
                 fmt_ns(n.p50_ns as f64),
                 fmt_ns(n.p99_ns as f64),
                 format!("{:.3}s", n.active_s),
-                crate::util::bytes::fmt_bytes(n.peak_dram_bytes),
+                fmt_bytes(n.peak_dram_bytes),
             ]);
         }
         out.push('\n');
@@ -242,8 +325,20 @@ pub struct Cluster {
     pool: CxlPool,
     balancer: ClusterBalancer,
     autoscaler: Option<Autoscaler>,
+    /// Cluster-wide snapshot store (lifecycle layer with snapshots on).
+    snapshots: Option<SnapshotStore>,
+    /// Replay shapes travelling with snapshots: what a restoring node
+    /// seeds so it never pays a profile run. Shapes are node-independent
+    /// (identical node configs), so one entry per function suffices.
+    snapshot_shapes: HashMap<String, ServiceShape>,
+    /// Functions whose image can never fit the snapshot store — stop
+    /// retrying admission for them on every arrival.
+    snapshot_skip: HashSet<String>,
     slo: SloTracker,
     fleet_hist: Histogram,
+    cold_hist: Histogram,
+    warm_hist: Histogram,
+    restore_hist: Histogram,
     node_hists: Vec<Histogram>,
     events: Vec<ScaleEvent>,
     window_judged: u64,
@@ -282,6 +377,13 @@ impl Cluster {
             cl.nodes,
             cl.bw_window_ns,
         );
+        let lc = &cfg.lifecycle;
+        let snapshots = if lc.enabled && lc.snapshot {
+            let capacity = (cl.cxl_pool as f64 * lc.snapshot_capacity_frac) as u64;
+            Some(SnapshotStore::new(capacity, lc.snapshot_min_uses, lc.restore_overhead_ns))
+        } else {
+            None
+        };
         Ok(Cluster {
             cfg: cfg.clone(),
             specs,
@@ -290,8 +392,14 @@ impl Cluster {
             pool,
             balancer: ClusterBalancer::default(),
             autoscaler: if cl.autoscale { Some(Autoscaler::new(cl)) } else { None },
+            snapshots,
+            snapshot_shapes: HashMap::new(),
+            snapshot_skip: HashSet::new(),
             slo: SloTracker::default(),
             fleet_hist: Histogram::default(),
+            cold_hist: Histogram::default(),
+            warm_hist: Histogram::default(),
+            restore_hist: Histogram::default(),
             node_hists,
             events: Vec::new(),
             window_judged: 0,
@@ -318,24 +426,107 @@ impl Cluster {
         }
     }
 
+    /// Offer evicted sandboxes to the snapshot store (lease pool
+    /// capacity, debit the write over the evicting node's link).
+    fn demote(&mut self, ni: usize, evicted: Vec<Sandbox>, t_ns: u64) {
+        if self.snapshots.is_none() {
+            return;
+        }
+        let node_id = self.nodes[ni].id;
+        for sb in evicted {
+            if self.snapshot_skip.contains(&sb.function) {
+                continue;
+            }
+            let shape = self.nodes[ni].shape_of(&sb.function).cloned();
+            let Some(shape) = shape else { continue };
+            let st = self.snapshots.as_mut().expect("checked above");
+            match st.admit(&sb, t_ns, node_id, &mut self.pool) {
+                AdmitOutcome::Admitted => {
+                    self.snapshot_shapes.entry(sb.function.clone()).or_insert(shape);
+                }
+                AdmitOutcome::TooBig => {
+                    self.snapshot_skip.insert(sb.function.clone());
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Classify one arrival's sandbox outcome on the picked node and
+    /// return the startup latency to charge.
+    fn classify(&mut self, ni: usize, function: &str, t_ns: u64) -> (StartKind, u64) {
+        if !self.cfg.lifecycle.enabled {
+            // legacy model: a node that has run the function keeps its
+            // sandbox forever; the hint state is the cold/warm split
+            return if self.nodes[ni].warm_for(function) {
+                (StartKind::Warm, 0)
+            } else {
+                (StartKind::Cold, self.cfg.cluster.cold_start_ns)
+            };
+        }
+        // reclaim expired sandboxes first so they can snapshot out
+        let expired = self.nodes[ni].lifecycle_advance(t_ns);
+        self.demote(ni, expired, t_ns);
+        if self.nodes[ni].lifecycle_lookup(function, t_ns) {
+            return (StartKind::Warm, 0);
+        }
+        let node_id = self.nodes[ni].id;
+        let contention = self.pool.factor(node_id);
+        let restorable = self
+            .snapshots
+            .as_ref()
+            .is_some_and(|st| st.has(function) && self.snapshot_shapes.contains_key(function));
+        if restorable {
+            let st = self.snapshots.as_mut().expect("checked above");
+            if let Some((latency_ns, _bytes)) = st.restore(
+                function,
+                t_ns,
+                node_id,
+                &mut self.pool,
+                self.cfg.cluster.cxl_link_bw_gbps,
+                contention,
+            ) {
+                let shape = self.snapshot_shapes.get(function).expect("checked above").clone();
+                self.nodes[ni].seed_shape(function, &shape);
+                return (StartKind::Restored, latency_ns);
+            }
+        }
+        (StartKind::Cold, self.cfg.cluster.cold_start_ns)
+    }
+
     /// Route and dispatch one arrival.
     fn step(&mut self, a: arrivals::Arrival) {
         let t = a.t_ns;
         let spec = self.specs[a.function].clone();
         self.pool.advance(t);
         self.pool.sample();
+        let lifecycle = self.cfg.lifecycle.enabled;
         let bonus =
             (self.cfg.cluster.hint_affinity * self.mean_service_ns()).round().max(0.0) as u64;
+        // sandbox-locality penalty: a node without a live sandbox pays a
+        // full cold start — unless a snapshot makes a cheap restore
+        // available to everyone (the snapshot-locality signal).
+        let startup_penalty = if lifecycle {
+            self.snapshots
+                .as_ref()
+                .and_then(|st| {
+                    st.restore_estimate_ns(&spec.name, self.cfg.cluster.cxl_link_bw_gbps)
+                })
+                .unwrap_or(self.cfg.cluster.cold_start_ns)
+        } else {
+            0
+        };
         let views: Vec<NodeView> = self
             .nodes
             .iter()
             .map(|n| NodeView {
                 backlog_ns: n.backlog_ns(t),
-                warm: n.warm_for(&spec.name),
+                warm: n.knows(&spec.name),
+                sandbox_warm: lifecycle && n.sandbox_warm_for(&spec.name, t),
                 draining: n.draining || n.retired(),
             })
             .collect();
-        let ni = match self.balancer.pick(&views, bonus) {
+        let ni = match self.balancer.pick(&views, bonus, startup_penalty) {
             Some(i) => i,
             // defensive: everything draining (should not happen — the
             // autoscaler keeps min_nodes active); use any live node
@@ -345,19 +536,15 @@ impl Cluster {
             },
         };
         let node_id = self.nodes[ni].id;
+        let (kind, startup_ns) = self.classify(ni, &spec.name, t);
         let spill = self.nodes[ni].spill_estimate(&spec);
         let (grant_ns, granted) = self.pool.acquire(t, spill);
         let factor = self.pool.factor(node_id);
-        let d = self.nodes[ni].dispatch(
-            t,
-            grant_ns.max(t),
-            &spec,
-            factor,
-            self.cfg.cluster.cold_start_ns,
-        );
+        let d = self.nodes[ni].dispatch(t, grant_ns.max(t), &spec, factor, startup_ns, kind);
         self.pool.release_at(d.finish_ns, granted);
         // demand traffic AND migration copies share the node's CXL link:
         // an aggressive policy's page churn inflates neighbours' stalls
+        // (snapshot/restore transfers were debited by the store already)
         self.pool.record_traffic(node_id, d.start_ns, d.cxl_bytes + d.migration_bytes);
         self.promotions += d.promotions;
         self.demotions += d.demotions;
@@ -367,6 +554,11 @@ impl Cluster {
         let e2e_ns = d.finish_ns - t;
         self.fleet_hist.record(e2e_ns);
         self.node_hists[ni].record(e2e_ns);
+        match kind {
+            StartKind::Warm => self.warm_hist.record(e2e_ns),
+            StartKind::Restored => self.restore_hist.record(e2e_ns),
+            StartKind::Cold => self.cold_hist.record(e2e_ns),
+        }
         self.slo.record_latency(&spec.name, e2e_ns as f64, d.slo_target_ns);
         if let Some(target) = d.slo_target_ns {
             self.window_judged += 1;
@@ -382,6 +574,40 @@ impl Cluster {
         self.token = mix(self.token, node_id as u64);
         self.token = mix(self.token, d.start_ns);
         self.token = mix(self.token, d.finish_ns);
+
+        if lifecycle {
+            match kind {
+                StartKind::Warm => self.nodes[ni].lifecycle_touch(&spec.name, d.finish_ns),
+                _ => {
+                    let evicted = self.nodes[ni].lifecycle_keep(&spec.name, d.finish_ns);
+                    self.demote(ni, evicted, d.finish_ns);
+                }
+            }
+            // eager checkpoint: the first kept sandbox of a function is
+            // snapshotted fleet-wide (TrEnv-style capture-once), so peer
+            // nodes restore instead of cold-starting from scratch
+            if !self.snapshot_skip.contains(&spec.name)
+                && self.snapshots.as_ref().is_some_and(|st| !st.has(&spec.name))
+            {
+                let candidate = self.nodes[ni].shape_of(&spec.name).map(|shape| {
+                    let mut sb = Sandbox::new(&spec.name, shape.image.clone(), d.finish_ns);
+                    sb.uses = self.nodes[ni].sandbox_uses(&spec.name);
+                    (sb, shape.clone())
+                });
+                if let Some((sb, shape)) = candidate {
+                    let st = self.snapshots.as_mut().expect("checked above");
+                    match st.admit(&sb, d.finish_ns, node_id, &mut self.pool) {
+                        AdmitOutcome::Admitted => {
+                            self.snapshot_shapes.entry(spec.name.clone()).or_insert(shape);
+                        }
+                        AdmitOutcome::TooBig => {
+                            self.snapshot_skip.insert(spec.name.clone());
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
     }
 
     /// One autoscaler evaluation at virtual time `t`.
@@ -472,6 +698,9 @@ impl Cluster {
                 id: n.id,
                 invocations: n.invocations,
                 cold_runs: n.cold_runs,
+                warm_starts: n.warm_starts,
+                restores: n.restores,
+                cold_starts: n.cold_starts,
                 p50_ns: self.node_hists[i].percentile(50.0),
                 p99_ns: self.node_hists[i].percentile(99.0),
                 active_s: n.active_seconds(end),
@@ -485,6 +714,19 @@ impl Cluster {
         let mean_wait_ns = if self.completed == 0 { 0.0 } else { self.wait_sum_ns / completed_f };
         let mean_service_ns =
             if self.completed == 0 { 0.0 } else { self.service_sum_ns / completed_f };
+        let mut warm_hits = 0u64;
+        let mut warm_evictions = 0u64;
+        let mut warm_rejected = 0u64;
+        let mut warm_pool_peak_bytes = 0u64;
+        for n in &self.nodes {
+            if let Some(m) = n.warm_pool_metrics() {
+                warm_hits += m.hits;
+                warm_evictions += m.evictions_expired + m.evictions_pressure;
+                warm_rejected += m.rejected_oversized;
+                warm_pool_peak_bytes = warm_pool_peak_bytes.max(m.peak_used_bytes);
+            }
+        }
+        let snap = self.snapshots.as_ref();
         ClusterReport {
             completed: self.completed,
             virtual_duration_s: duration_s,
@@ -504,6 +746,24 @@ impl Cluster {
             demotions: self.demotions,
             ping_pongs: self.ping_pongs,
             migration_bytes: self.migration_bytes,
+            lifecycle_enabled: self.cfg.lifecycle.enabled,
+            cold_starts: self.nodes.iter().map(|n| n.cold_starts).sum(),
+            warm_starts: self.nodes.iter().map(|n| n.warm_starts).sum(),
+            restores: self.nodes.iter().map(|n| n.restores).sum(),
+            cold_p50_ns: self.cold_hist.percentile(50.0),
+            warm_p50_ns: self.warm_hist.percentile(50.0),
+            restore_p50_ns: self.restore_hist.percentile(50.0),
+            warm_hits,
+            warm_evictions,
+            warm_rejected,
+            warm_pool_peak_bytes,
+            snapshots_taken: snap.map(|s| s.metrics.snapshots_taken).unwrap_or(0),
+            snapshot_bytes: snap.map(|s| s.metrics.snapshot_bytes).unwrap_or(0),
+            restore_bytes: snap.map(|s| s.metrics.restore_bytes).unwrap_or(0),
+            snapshot_leased_bytes: snap.map(|s| s.leased_bytes()).unwrap_or(0),
+            snapshot_peak_leased_bytes: snap.map(|s| s.metrics.peak_leased_bytes).unwrap_or(0),
+            snapshot_lease_denied: snap.map(|s| s.metrics.lease_denied).unwrap_or(0),
+            snapshot_evicted: snap.map(|s| s.metrics.evicted).unwrap_or(0),
             node_seconds,
             cost_units,
             nodes,
@@ -536,6 +796,14 @@ mod tests {
         cfg
     }
 
+    fn lifecycle_cfg(warm_pool_bytes: u64, snapshot: bool) -> Config {
+        let mut cfg = small_cfg();
+        cfg.lifecycle.enabled = true;
+        cfg.lifecycle.warm_pool_bytes = warm_pool_bytes;
+        cfg.lifecycle.snapshot = snapshot;
+        cfg
+    }
+
     #[test]
     fn population_defaults_are_registry_names() {
         for name in default_population(13) {
@@ -559,6 +827,12 @@ mod tests {
         for n in &r.nodes {
             assert!(n.cold_runs <= cfg.cluster.functions as u64);
         }
+        // legacy model: the start split mirrors the hint split and no
+        // snapshot machinery runs
+        assert!(!r.lifecycle_enabled);
+        assert_eq!(r.cold_starts + r.warm_starts, r.completed);
+        assert_eq!(r.restores, 0);
+        assert_eq!(r.snapshot_bytes, 0);
         assert!(!r.render().is_empty());
     }
 
@@ -577,5 +851,73 @@ mod tests {
         cfg.cluster.functions = POPULATION_ORDER.len() + 1;
         let err = arrivals_from_config(&cfg).unwrap_err();
         assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn warm_pool_cuts_cold_starts_and_latency() {
+        // the acceptance scenario: warm pool + snapshots versus the same
+        // run with keep-alive disabled (zero budget)
+        let disabled = simulate(&lifecycle_cfg(0, false)).unwrap();
+        let enabled = simulate(&lifecycle_cfg(512 * 1024 * 1024, true)).unwrap();
+        assert_eq!(disabled.completed, enabled.completed);
+        assert_eq!(
+            disabled.cold_starts, disabled.completed,
+            "zero budget: every invocation cold-starts"
+        );
+        assert!(
+            enabled.cold_starts < disabled.cold_starts,
+            "warm pool must cut cold starts: {} vs {}",
+            enabled.cold_starts,
+            disabled.cold_starts
+        );
+        assert!(enabled.warm_starts > 0);
+        assert!(
+            enabled.fleet_p50_ns < disabled.fleet_p50_ns,
+            "warm pool must cut p50: {} vs {}",
+            enabled.fleet_p50_ns,
+            disabled.fleet_p50_ns
+        );
+        // snapshots were taken and their leases are visible in the pool
+        assert!(enabled.snapshots_taken > 0);
+        assert!(enabled.snapshot_bytes > 0);
+        assert!(enabled.snapshot_leased_bytes > 0);
+        assert!(enabled.pool_peak_occupancy > 0.0);
+        // start-kind accounting is exhaustive
+        assert_eq!(
+            enabled.cold_starts + enabled.warm_starts + enabled.restores,
+            enabled.completed
+        );
+    }
+
+    #[test]
+    fn snapshots_enable_cross_node_restores() {
+        // 2 nodes, zero keep-alive budget, snapshots on: after the first
+        // node checkpoints a function, later arrivals restore instead of
+        // cold-starting — even on the peer node.
+        let r = simulate(&lifecycle_cfg(0, true)).unwrap();
+        assert!(r.restores > 0, "snapshot-only mode must restore");
+        assert!(r.restore_bytes > 0);
+        assert!(
+            r.restore_p50_ns < r.cold_p50_ns,
+            "restore p50 {} must beat cold p50 {}",
+            r.restore_p50_ns,
+            r.cold_p50_ns
+        );
+        // profile runs stay bounded by node × function even though
+        // sandbox cold starts are per-invocation
+        for n in &r.nodes {
+            assert!(n.cold_runs <= 2);
+        }
+    }
+
+    #[test]
+    fn lifecycle_runs_are_deterministic() {
+        let cfg = lifecycle_cfg(64 * 1024 * 1024, true);
+        let a = simulate(&cfg).unwrap();
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.determinism_token, b.determinism_token);
+        assert_eq!(a.cold_starts, b.cold_starts);
+        assert_eq!(a.restores, b.restores);
+        assert_eq!(a.snapshot_bytes, b.snapshot_bytes);
     }
 }

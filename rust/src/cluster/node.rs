@@ -16,16 +16,25 @@
 //! This keeps a 16-node × thousands-of-arrivals fleet run fast and —
 //! because shapes, hints, and queues evolve only with the deterministic
 //! arrival order — exactly reproducible under a fixed seed.
+//!
+//! With the lifecycle layer enabled (`[lifecycle] enabled = true`),
+//! each node additionally owns a [`WarmPool`] of finished sandboxes:
+//! the cluster classifies every arrival as warm / restored / cold and
+//! passes the resulting startup cost into [`Node::dispatch`]; the node
+//! keeps the finished sandbox afterwards (under the pool's byte
+//! budget) and hands evictions back for snapshot demotion.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::config::Config;
+use crate::lifecycle::{policy_from_config, Sandbox, StartKind, WarmPool, WarmPoolMetrics};
 use crate::porter::balancer::{LeastLoaded, Loaded};
 use crate::porter::engine::InvocationOutcome;
 use crate::porter::gateway::FunctionSpec;
 use crate::porter::server::Server;
 use crate::porter::tuner::OfflineTuner;
+use crate::shim::SandboxImage;
 
 /// Deterministic service-time shape measured from a real engine run.
 #[derive(Debug, Clone)]
@@ -43,8 +52,15 @@ pub struct ServiceShape {
     pub promotions: u64,
     pub demotions: u64,
     pub ping_pongs: u64,
+    /// Peak DRAM residency (what a kept sandbox pins node-locally).
+    pub peak_dram_bytes: u64,
     /// Peak CXL residency (leased from the shared pool while running).
     pub peak_cxl_bytes: u64,
+    /// Shim-captured sandbox image (object list + per-tier residency) —
+    /// what the warm pool keeps and the snapshot store persists.
+    /// `Arc`-shared: shapes are cloned on every replayed dispatch, and
+    /// the image must not deep-copy with them.
+    pub image: Arc<SandboxImage>,
     pub checksum: u64,
 }
 
@@ -64,7 +80,9 @@ impl ServiceShape {
             promotions: out.report.promotions,
             demotions: out.report.demotions,
             ping_pongs: out.report.ping_pongs,
+            peak_dram_bytes: out.report.peak_dram_bytes,
             peak_cxl_bytes: out.report.peak_cxl_bytes,
+            image: Arc::new(out.sandbox.clone()),
             checksum: out.checksum,
         }
     }
@@ -92,6 +110,12 @@ pub struct Dispatch {
     pub service_ns: u64,
     /// No hint was cached on this node — the profiled path ran.
     pub cold: bool,
+    /// How the sandbox was obtained (always `Warm`/`Cold` by hint state
+    /// when the lifecycle layer is disabled).
+    pub kind: StartKind,
+    /// Startup latency charged on top of the replayed shape (cold start
+    /// or snapshot restore).
+    pub startup_ns: u64,
     /// Which of the node's servers executed it.
     pub server: usize,
     pub slo_target_ns: Option<f64>,
@@ -113,6 +137,8 @@ pub struct Node {
     picker: LeastLoaded,
     cold_shapes: HashMap<String, ServiceShape>,
     warm_shapes: HashMap<String, ServiceShape>,
+    /// Keep-alive pool (lifecycle layer enabled).
+    warm_pool: Option<WarmPool>,
     /// Drain mode: the balancer stops routing here; the node retires
     /// once its backlog empties.
     pub draining: bool,
@@ -120,6 +146,10 @@ pub struct Node {
     pub retired_ns: Option<u64>,
     pub invocations: u64,
     pub cold_runs: u64,
+    /// Sandbox-start outcome counters (see [`StartKind`]).
+    pub warm_starts: u64,
+    pub restores: u64,
+    pub cold_starts: u64,
     pub peak_dram_bytes: u64,
     next_exec_id: u64,
 }
@@ -146,6 +176,11 @@ impl Node {
                 cached_backlog: 0,
             })
             .collect();
+        let warm_pool = if cfg.lifecycle.enabled {
+            Some(WarmPool::new(cfg.lifecycle.warm_pool_bytes, policy_from_config(&cfg.lifecycle)))
+        } else {
+            None
+        };
         Node {
             id,
             cfg,
@@ -154,11 +189,15 @@ impl Node {
             picker: LeastLoaded::default(),
             cold_shapes: HashMap::new(),
             warm_shapes: HashMap::new(),
+            warm_pool,
             draining: false,
             joined_ns,
             retired_ns: None,
             invocations: 0,
             cold_runs: 0,
+            warm_starts: 0,
+            restores: 0,
+            cold_starts: 0,
             peak_dram_bytes: 0,
             next_exec_id: 0,
         }
@@ -167,6 +206,15 @@ impl Node {
     /// Does this node hold a warm hint for `function`?
     pub fn warm_for(&self, function: &str) -> bool {
         self.tuner.hints().get(function).is_some()
+    }
+
+    /// Can this node serve `function` without a profile run? True when
+    /// a hint is cached *or* a restore seeded the service shape — the
+    /// routing layer's "hint locality" signal.
+    pub fn knows(&self, function: &str) -> bool {
+        self.warm_for(function)
+            || self.cold_shapes.contains_key(function)
+            || self.warm_shapes.contains_key(function)
     }
 
     /// Queued-but-unfinished virtual work at time `t_ns`, summed over
@@ -209,6 +257,7 @@ impl Node {
         let rx = self.vservers[s].server.enqueue(id, spec.clone());
         let out = rx.recv().expect("node server worker died");
         if out.profiled {
+            self.cold_runs += 1;
             self.tuner.drain();
         }
         self.peak_dram_bytes = self.peak_dram_bytes.max(out.report.peak_dram_bytes);
@@ -230,14 +279,18 @@ impl Node {
     /// Dispatch one arrival: pick a server (least-loaded, round-robin
     /// ties), queue it on that server's earliest-free engine worker, and
     /// return the virtual timeline. `earliest_ns` ≥ the arrival time —
-    /// it carries any pool-capacity delay.
+    /// it carries any pool-capacity delay. `startup_ns` is the sandbox
+    /// startup the cluster's lifecycle classification charges (0 for a
+    /// warm hit, the restore latency, or the full cold start), `kind`
+    /// the matching outcome for the per-kind counters.
     pub fn dispatch(
         &mut self,
         arrival_ns: u64,
         earliest_ns: u64,
         spec: &FunctionSpec,
         pool_factor: f64,
-        cold_start_ns: u64,
+        startup_ns: u64,
+        kind: StartKind,
     ) -> Dispatch {
         debug_assert!(earliest_ns >= arrival_ns);
         debug_assert!(!self.retired(), "dispatch to retired node {}", self.id);
@@ -245,12 +298,15 @@ impl Node {
             self.tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
         let warm = self.warm_for(&spec.name);
         let shape = self.shape_for(spec, warm);
-        let mut service = shape.wall_ns + shape.cxl_stall_ns * (pool_factor - 1.0).max(0.0);
-        if !warm {
-            self.cold_runs += 1;
-            service += cold_start_ns as f64;
-        }
+        let service = shape.wall_ns
+            + shape.cxl_stall_ns * (pool_factor - 1.0).max(0.0)
+            + startup_ns as f64;
         let service_ns = (service.round() as u64).max(1);
+        match kind {
+            StartKind::Warm => self.warm_starts += 1,
+            StartKind::Restored => self.restores += 1,
+            StartKind::Cold => self.cold_starts += 1,
+        }
 
         for v in &mut self.vservers {
             v.cached_backlog = v.free_ns.iter().filter(|&&f| f > earliest_ns).count();
@@ -273,6 +329,8 @@ impl Node {
             wait_ns: start_ns - arrival_ns,
             service_ns,
             cold: !warm,
+            kind,
+            startup_ns,
             server: s,
             slo_target_ns,
             cxl_bytes: shape.cxl_bytes,
@@ -282,6 +340,89 @@ impl Node {
             ping_pongs: shape.ping_pongs,
             checksum: shape.checksum,
         }
+    }
+
+    // ---- lifecycle layer ------------------------------------------------
+
+    pub fn lifecycle_enabled(&self) -> bool {
+        self.warm_pool.is_some()
+    }
+
+    /// Non-mutating: would an arrival of `function` at `t_ns` find a
+    /// live sandbox? (The balancer's sandbox-locality signal.)
+    pub fn sandbox_warm_for(&self, function: &str, t_ns: u64) -> bool {
+        self.warm_pool.as_ref().is_some_and(|p| p.contains(function, t_ns))
+    }
+
+    /// Claim a warm sandbox for an arrival (feeds the keep-alive
+    /// policy's learning hook either way). True = warm hit.
+    pub fn lifecycle_lookup(&mut self, function: &str, t_ns: u64) -> bool {
+        match &mut self.warm_pool {
+            Some(p) => {
+                p.note_invocation(function, t_ns);
+                p.lookup(function, t_ns)
+            }
+            None => false,
+        }
+    }
+
+    /// Reclaim keep-alive-expired sandboxes as of `t_ns` (snapshot
+    /// candidates for the cluster layer).
+    pub fn lifecycle_advance(&mut self, t_ns: u64) -> Vec<Sandbox> {
+        self.warm_pool.as_mut().map(|p| p.advance(t_ns)).unwrap_or_default()
+    }
+
+    /// Keep the sandbox of a just-finished cold/restored invocation,
+    /// returning whatever the byte budget evicted to make room.
+    pub fn lifecycle_keep(&mut self, function: &str, finish_ns: u64) -> Vec<Sandbox> {
+        let image = self
+            .warm_shapes
+            .get(function)
+            .or_else(|| self.cold_shapes.get(function))
+            .map(|s| s.image.clone())
+            .unwrap_or_default();
+        match &mut self.warm_pool {
+            Some(p) => p.insert(Sandbox::new(function, image, finish_ns)),
+            None => Vec::new(),
+        }
+    }
+
+    /// Refresh the live sandbox after a warm invocation finished.
+    pub fn lifecycle_touch(&mut self, function: &str, finish_ns: u64) {
+        if let Some(p) = &mut self.warm_pool {
+            p.touch(function, finish_ns);
+        }
+    }
+
+    /// Seed the replay shape a restore carries (the donor node's
+    /// measured shape), so serving the restored function never needs a
+    /// profile run here.
+    pub fn seed_shape(&mut self, function: &str, shape: &ServiceShape) {
+        self.cold_shapes.entry(function.to_string()).or_insert_with(|| shape.clone());
+    }
+
+    /// The node's best measured shape for `function` (what a snapshot
+    /// of it should carry).
+    pub fn shape_of(&self, function: &str) -> Option<&ServiceShape> {
+        self.warm_shapes.get(function).or_else(|| self.cold_shapes.get(function))
+    }
+
+    /// Completed uses of the live sandbox for `function` (1 when none
+    /// is kept — a just-finished sandbox has served one invocation).
+    pub fn sandbox_uses(&self, function: &str) -> u64 {
+        self.warm_pool
+            .as_ref()
+            .and_then(|p| p.sandboxes().iter().find(|s| s.function == function))
+            .map(|s| s.uses)
+            .unwrap_or(1)
+    }
+
+    pub fn warm_pool_metrics(&self) -> Option<WarmPoolMetrics> {
+        self.warm_pool.as_ref().map(|p| p.metrics)
+    }
+
+    pub fn warm_pool_used_bytes(&self) -> u64 {
+        self.warm_pool.as_ref().map(|p| p.used_bytes()).unwrap_or(0)
     }
 
     /// Shut the node's real servers down (drained or end of run).
@@ -321,25 +462,39 @@ mod tests {
         Node::spawn(0, &cfg, 0)
     }
 
+    fn lifecycle_node(budget: u64) -> Node {
+        let mut cfg = Config::default();
+        cfg.cluster.workers_per_server = 2;
+        cfg.lifecycle.enabled = true;
+        cfg.lifecycle.warm_pool_bytes = budget;
+        Node::spawn(0, &cfg, 0)
+    }
+
     #[test]
     fn cold_then_warm_then_replay() {
         let mut n = node();
         let f = spec("json");
         assert!(!n.warm_for("json"));
-        let d1 = n.dispatch(0, 0, &f, 1.0, 1000);
+        assert!(!n.knows("json"));
+        let d1 = n.dispatch(0, 0, &f, 1.0, 1000, StartKind::Cold);
         assert!(d1.cold);
+        assert_eq!(d1.kind, StartKind::Cold);
+        assert_eq!(d1.startup_ns, 1000);
         assert!(d1.slo_target_ns.is_none());
         // the profiled run published a hint on this node
         assert!(n.warm_for("json"));
-        let d2 = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 1000);
+        assert!(n.knows("json"));
+        let d2 = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 0, StartKind::Warm);
         assert!(!d2.cold);
         assert!(d2.slo_target_ns.is_some());
         assert_eq!(d1.checksum, d2.checksum, "placement must not change results");
         // third invocation replays the warm shape exactly
-        let d3 = n.dispatch(d2.finish_ns, d2.finish_ns, &f, 1.0, 1000);
+        let d3 = n.dispatch(d2.finish_ns, d2.finish_ns, &f, 1.0, 0, StartKind::Warm);
         assert_eq!(d3.service_ns, d2.service_ns);
         assert_eq!(n.cold_runs, 1);
         assert_eq!(n.invocations, 3);
+        assert_eq!(n.cold_starts, 1);
+        assert_eq!(n.warm_starts, 2);
         n.retire(d3.finish_ns);
     }
 
@@ -347,9 +502,10 @@ mod tests {
     fn pool_contention_inflates_service() {
         let mut n = node();
         let f = spec("kvstore");
-        let d1 = n.dispatch(0, 0, &f, 1.0, 0);
-        let warm = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 0);
-        let contended = n.dispatch(warm.finish_ns, warm.finish_ns, &f, 3.0, 0);
+        let d1 = n.dispatch(0, 0, &f, 1.0, 0, StartKind::Cold);
+        let warm = n.dispatch(d1.finish_ns, d1.finish_ns, &f, 1.0, 0, StartKind::Warm);
+        let contended =
+            n.dispatch(warm.finish_ns, warm.finish_ns, &f, 3.0, 0, StartKind::Warm);
         assert!(
             contended.service_ns >= warm.service_ns,
             "contended {} < uncontended {}",
@@ -364,13 +520,13 @@ mod tests {
         let mut n = node(); // 1 server × 2 workers
         let f = spec("json");
         // warm the shape caches first
-        let w = n.dispatch(0, 0, &f, 1.0, 0);
-        let w2 = n.dispatch(w.finish_ns, w.finish_ns, &f, 1.0, 0);
+        let w = n.dispatch(0, 0, &f, 1.0, 0, StartKind::Cold);
+        let w2 = n.dispatch(w.finish_ns, w.finish_ns, &f, 1.0, 0, StartKind::Warm);
         let t0 = w2.finish_ns;
         // three simultaneous arrivals on two workers: the third waits
-        let a = n.dispatch(t0, t0, &f, 1.0, 0);
-        let b = n.dispatch(t0, t0, &f, 1.0, 0);
-        let c = n.dispatch(t0, t0, &f, 1.0, 0);
+        let a = n.dispatch(t0, t0, &f, 1.0, 0, StartKind::Warm);
+        let b = n.dispatch(t0, t0, &f, 1.0, 0, StartKind::Warm);
+        let c = n.dispatch(t0, t0, &f, 1.0, 0, StartKind::Warm);
         assert_eq!(a.wait_ns, 0);
         assert_eq!(b.wait_ns, 0);
         assert!(c.wait_ns > 0);
@@ -387,5 +543,53 @@ mod tests {
         assert_eq!(n.workers(), 0);
         assert_eq!(n.backlog_ns(0), 0);
         assert!((n.active_seconds(1_000_000_000) - 5e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifecycle_keep_then_warm_hit() {
+        let mut n = lifecycle_node(512 * 1024 * 1024);
+        let f = spec("json");
+        assert!(!n.sandbox_warm_for("json", 0));
+        assert!(!n.lifecycle_lookup("json", 0));
+        let d = n.dispatch(0, 0, &f, 1.0, 1000, StartKind::Cold);
+        let evicted = n.lifecycle_keep("json", d.finish_ns);
+        assert!(evicted.is_empty());
+        // before the sandbox finished there is no warm hit…
+        assert!(!n.sandbox_warm_for("json", d.finish_ns - 1));
+        // …after it there is
+        assert!(n.sandbox_warm_for("json", d.finish_ns + 1));
+        assert!(n.lifecycle_lookup("json", d.finish_ns + 1));
+        n.retire(d.finish_ns);
+    }
+
+    #[test]
+    fn lifecycle_zero_budget_never_warms() {
+        let mut n = lifecycle_node(0);
+        let f = spec("json");
+        let d = n.dispatch(0, 0, &f, 1.0, 1000, StartKind::Cold);
+        let evicted = n.lifecycle_keep("json", d.finish_ns);
+        assert_eq!(evicted.len(), 1, "zero budget returns the sandbox as evicted");
+        assert!(!evicted[0].image.objects.is_empty(), "shim image travels with the sandbox");
+        assert!(!n.sandbox_warm_for("json", d.finish_ns + 1));
+        n.retire(d.finish_ns);
+    }
+
+    #[test]
+    fn seeded_shape_avoids_profile_run() {
+        let mut donor = node();
+        let f = spec("json");
+        let d = donor.dispatch(0, 0, &f, 1.0, 0, StartKind::Cold);
+        let shape = donor.shape_of("json").unwrap().clone();
+        donor.retire(d.finish_ns);
+
+        let mut n = lifecycle_node(512 * 1024 * 1024);
+        n.seed_shape("json", &shape);
+        assert!(n.knows("json"), "seeded node is warm for routing");
+        assert!(!n.warm_for("json"), "…but has no hint");
+        let d2 = n.dispatch(0, 0, &f, 1.0, 500, StartKind::Restored);
+        assert_eq!(n.cold_runs, 0, "restore must not trigger a profile run");
+        assert_eq!(n.restores, 1);
+        assert_eq!(d2.checksum, d.checksum);
+        n.retire(d2.finish_ns);
     }
 }

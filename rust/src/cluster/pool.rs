@@ -148,6 +148,23 @@ impl CxlPool {
         }
     }
 
+    /// Charge a long-lived lease immediately, **without advancing
+    /// virtual time**. Snapshot admissions happen at invocation
+    /// *finish* times — calling [`CxlPool::acquire`] there would drain
+    /// releases scheduled before that future instant and free
+    /// in-flight capacity early for arrivals still being processed at
+    /// earlier virtual times. Conservative by design: pending releases
+    /// do not count as free capacity, and an unfittable lease is simply
+    /// refused (no delayed grant).
+    pub fn try_lease(&mut self, bytes: u64) -> bool {
+        if self.used.saturating_add(bytes) > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
+        true
+    }
+
     /// Record an invocation's CXL byte traffic on its node's link and
     /// the shared backplane.
     pub fn record_traffic(&mut self, node: usize, t_ns: u64, bytes: u64) {
@@ -269,6 +286,24 @@ mod tests {
         let (_, g2) = p.acquire(1, 500);
         assert_eq!(g2, 0);
         assert_eq!(p.shortages, 1);
+    }
+
+    #[test]
+    fn try_lease_never_advances_time() {
+        let mut p = pool(1000);
+        p.acquire(0, 600);
+        p.release_at(500, 600);
+        // a future-timestamped admission must NOT drain the t=500
+        // release: only 400 bytes are genuinely free right now
+        assert!(!p.try_lease(500));
+        assert!(p.try_lease(400));
+        assert!((p.occupancy() - 1.0).abs() < 1e-9);
+        // the queued release still fires on advance
+        p.advance(500);
+        assert!((p.occupancy() - 0.4).abs() < 1e-9);
+        p.release_at(600, 400);
+        p.advance(600);
+        assert_eq!(p.occupancy(), 0.0);
     }
 
     #[test]

@@ -279,6 +279,63 @@ impl MigrationConfig {
     }
 }
 
+/// Function-lifecycle knobs (`lifecycle::` — warm pools, keep-alive
+/// policies, and CXL-resident snapshots).
+///
+/// When `enabled`, sandbox lifetime is modeled explicitly: every
+/// invocation either hits a live sandbox in the node's warm pool
+/// (no startup cost), restores a CXL-resident snapshot (transfer +
+/// `restore_overhead_ns`), or pays the full `cluster.cold_start_ns`.
+/// When disabled (the default), the fleet keeps the legacy optimistic
+/// model — a sandbox is implicitly kept forever once a node has run
+/// the function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleConfig {
+    pub enabled: bool,
+    /// Per-node warm-pool byte budget (0 = keep-alive disabled; every
+    /// invocation cold-starts or restores).
+    pub warm_pool_bytes: u64,
+    /// Keep-alive policy: "ttl" | "lru" | "histogram".
+    pub policy: String,
+    /// Fixed keep-alive window (ttl policy; histogram fallback).
+    pub ttl_ns: u64,
+    /// Histogram policy: keep-alive at this percentile of the observed
+    /// per-function inter-arrival times, clamped to [min, max].
+    pub histogram_percentile: f64,
+    pub histogram_min_ns: u64,
+    pub histogram_max_ns: u64,
+    /// Demote evicted sandboxes into the shared CXL pool as snapshots.
+    pub snapshot: bool,
+    /// Fraction of the cluster CXL pool snapshots may lease at once.
+    pub snapshot_capacity_frac: f64,
+    /// Completed uses before a sandbox counts as likely-to-return.
+    pub snapshot_min_uses: u64,
+    /// Fixed restore cost on top of the snapshot transfer time.
+    pub restore_overhead_ns: u64,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            enabled: false,
+            warm_pool_bytes: 512 * MIB,
+            policy: "ttl".to_string(),
+            // 10 virtual seconds: generous against the benches' sub-second
+            // horizons, so budget pressure (not expiry) dominates there.
+            ttl_ns: 10_000_000_000,
+            histogram_percentile: 0.99,
+            histogram_min_ns: 1_000_000,
+            histogram_max_ns: 60_000_000_000,
+            snapshot: false,
+            snapshot_capacity_frac: 0.25,
+            snapshot_min_uses: 1,
+            // half-RTT handshake + page-table setup; the dominant restore
+            // cost is the transfer itself, debited against the link.
+            restore_overhead_ns: 50_000,
+        }
+    }
+}
+
 /// Fleet-simulation knobs (`cluster::` — multi-node Porter with an
 /// open-loop load generator and a shared cross-node CXL pool).
 #[derive(Debug, Clone, PartialEq)]
@@ -372,6 +429,7 @@ pub struct Config {
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
     pub migration: MigrationConfig,
+    pub lifecycle: LifecycleConfig,
     pub cluster: ClusterConfig,
 }
 
@@ -441,6 +499,27 @@ impl Config {
                 "migration.buckets" => cfg.migration.buckets = value.as_u64()? as usize,
                 "migration.target_occupancy" => cfg.migration.target_occupancy = value.as_f64()?,
                 "migration.ping_pong_epochs" => cfg.migration.ping_pong_epochs = value.as_u64()?,
+                "lifecycle.enabled" => cfg.lifecycle.enabled = value.as_bool()?,
+                "lifecycle.warm_pool" => {
+                    cfg.lifecycle.warm_pool_bytes = parse_bytes(value.as_str()?)?
+                }
+                "lifecycle.policy" => cfg.lifecycle.policy = value.as_str()?.to_string(),
+                "lifecycle.ttl_ns" => cfg.lifecycle.ttl_ns = value.as_u64()?,
+                "lifecycle.histogram_percentile" => {
+                    cfg.lifecycle.histogram_percentile = value.as_f64()?
+                }
+                "lifecycle.histogram_min_ns" => cfg.lifecycle.histogram_min_ns = value.as_u64()?,
+                "lifecycle.histogram_max_ns" => cfg.lifecycle.histogram_max_ns = value.as_u64()?,
+                "lifecycle.snapshot" => cfg.lifecycle.snapshot = value.as_bool()?,
+                "lifecycle.snapshot_capacity_frac" => {
+                    cfg.lifecycle.snapshot_capacity_frac = value.as_f64()?
+                }
+                "lifecycle.snapshot_min_uses" => {
+                    cfg.lifecycle.snapshot_min_uses = value.as_u64()?
+                }
+                "lifecycle.restore_overhead_ns" => {
+                    cfg.lifecycle.restore_overhead_ns = value.as_u64()?
+                }
                 "cluster.nodes" => cfg.cluster.nodes = value.as_u64()? as usize,
                 "cluster.min_nodes" => cfg.cluster.min_nodes = value.as_u64()? as usize,
                 "cluster.max_nodes" => cfg.cluster.max_nodes = value.as_u64()? as usize,
@@ -555,6 +634,25 @@ impl Config {
         }
         if mg.buckets == 0 {
             return Err("migration.buckets must be >= 1".into());
+        }
+        let lc = &self.lifecycle;
+        if !matches!(lc.policy.as_str(), "ttl" | "lru" | "histogram") {
+            return Err(format!(
+                "lifecycle.policy must be one of ttl|lru|histogram, got {:?}",
+                lc.policy
+            ));
+        }
+        if !(0.0..=1.0).contains(&lc.snapshot_capacity_frac) {
+            return Err("lifecycle.snapshot_capacity_frac must be in [0,1]".into());
+        }
+        if !(lc.histogram_percentile > 0.0 && lc.histogram_percentile <= 1.0) {
+            return Err("lifecycle.histogram_percentile must be in (0,1]".into());
+        }
+        if lc.histogram_min_ns > lc.histogram_max_ns {
+            return Err("lifecycle.histogram_min_ns must be <= histogram_max_ns".into());
+        }
+        if lc.ttl_ns == 0 {
+            return Err("lifecycle.ttl_ns must be > 0".into());
         }
         let c = &self.cluster;
         if c.nodes == 0 || c.min_nodes == 0 {
@@ -710,6 +808,49 @@ target_occupancy = 0.8
         assert!(Config::from_toml_str("[migration]\nbudget = \"1KB\"\n").is_err()); // < one page
         assert!(Config::from_toml_str(
             "[migration]\nwatermark_low = 0.5\nwatermark_high = 0.1\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_lifecycle_section() {
+        let text = r#"
+[lifecycle]
+enabled = true
+warm_pool = "256MB"
+policy = "histogram"
+snapshot = true
+snapshot_capacity_frac = 0.5
+restore_overhead_ns = 10000
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.lifecycle.enabled);
+        assert_eq!(c.lifecycle.warm_pool_bytes, 256 * MIB);
+        assert_eq!(c.lifecycle.policy, "histogram");
+        assert!(c.lifecycle.snapshot);
+        assert_eq!(c.lifecycle.snapshot_capacity_frac, 0.5);
+        assert_eq!(c.lifecycle.restore_overhead_ns, 10_000);
+        // untouched fields keep defaults
+        assert_eq!(c.lifecycle.snapshot_min_uses, 1);
+        assert_eq!(c.lifecycle.ttl_ns, 10_000_000_000);
+    }
+
+    #[test]
+    fn lifecycle_disabled_by_default() {
+        let c = Config::default();
+        assert!(!c.lifecycle.enabled, "legacy fleet behaviour must be the default");
+        assert!(!c.lifecycle.snapshot);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_lifecycle_values() {
+        assert!(Config::from_toml_str("[lifecycle]\npolicy = \"fifo\"\n").is_err());
+        assert!(Config::from_toml_str("[lifecycle]\nsnapshot_capacity_frac = 1.5\n").is_err());
+        assert!(Config::from_toml_str("[lifecycle]\nhistogram_percentile = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[lifecycle]\nttl_ns = 0\n").is_err());
+        assert!(Config::from_toml_str(
+            "[lifecycle]\nhistogram_min_ns = 10\nhistogram_max_ns = 5\n"
         )
         .is_err());
     }

@@ -31,6 +31,15 @@
 //! whole run is a deterministic virtual-time simulation: try
 //! `porter-cli cluster --nodes 8 --arrivals poisson`.
 //!
+//! ## The `lifecycle::` layer
+//!
+//! [`lifecycle`] makes sandbox lifetime explicit — per-node warm pools
+//! with pluggable keep-alive policies (fixed TTL, LRU-under-pressure,
+//! inter-arrival histogram) and a cluster-wide snapshot store that
+//! demotes evicted sandboxes into the shared CXL pool, so any node can
+//! restore a peer's snapshot instead of paying a full cold start +
+//! profile run: try `porter-cli cluster --warm-pool-mb 512 --snapshot`.
+//!
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -38,6 +47,7 @@ pub mod bench;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod lifecycle;
 pub mod mem;
 pub mod metrics;
 pub mod monitor;

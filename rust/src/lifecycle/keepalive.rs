@@ -1,0 +1,233 @@
+//! Pluggable keep-alive policies for the per-node warm pool.
+//!
+//! A policy answers two questions about a warm sandbox:
+//!
+//! 1. *How long is it worth keeping while idle?* — [`KeepAlivePolicy::
+//!    keep_until`] gives the deadline after which the pool reclaims it
+//!    even without memory pressure.
+//! 2. *Who goes first under pressure?* — [`KeepAlivePolicy::
+//!    victim_rank`] orders live sandboxes when the pool exceeds its
+//!    byte budget (lower rank = evicted earlier).
+//!
+//! Three policies ship, mirroring the keep-alive literature:
+//! fixed TTL (the classic 10-minute rule), pure LRU-under-pressure
+//! (never expire, evict least-recently-used when space is needed), and
+//! a per-function inter-arrival histogram that sizes each function's
+//! keep-alive window to a percentile of its observed idle times
+//! (à la "Serverless in the Wild").
+
+use std::collections::HashMap;
+
+use crate::config::LifecycleConfig;
+use crate::lifecycle::Sandbox;
+
+/// A keep-alive policy: pure decision logic, no pool state.
+pub trait KeepAlivePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Observe one arrival of `function` at virtual time `t_ns`
+    /// (learning hook; the histogram policy builds its inter-arrival
+    /// distribution from this).
+    fn note_invocation(&mut self, function: &str, t_ns: u64);
+
+    /// Deadline (virtual ns) after which an idle sandbox may be
+    /// reclaimed without pressure. `u64::MAX` = keep forever.
+    fn keep_until(&self, sandbox: &Sandbox) -> u64;
+
+    /// Pressure-eviction order: the live sandbox with the lowest rank
+    /// is evicted first. Ties break on pool insertion order.
+    fn victim_rank(&self, sandbox: &Sandbox, now_ns: u64) -> f64;
+}
+
+/// Fixed TTL: every sandbox lives exactly `ttl_ns` past its last use;
+/// pressure evictions go least-recently-used first.
+pub struct FixedTtl {
+    pub ttl_ns: u64,
+}
+
+impl KeepAlivePolicy for FixedTtl {
+    fn name(&self) -> &'static str {
+        "ttl"
+    }
+
+    fn note_invocation(&mut self, _function: &str, _t_ns: u64) {}
+
+    fn keep_until(&self, sandbox: &Sandbox) -> u64 {
+        sandbox.last_used_ns.saturating_add(self.ttl_ns)
+    }
+
+    fn victim_rank(&self, sandbox: &Sandbox, _now_ns: u64) -> f64 {
+        sandbox.last_used_ns as f64
+    }
+}
+
+/// LRU under pressure: sandboxes never expire on their own; the pool
+/// only reclaims them when the byte budget forces it, least recently
+/// used first.
+pub struct LruUnderPressure;
+
+impl KeepAlivePolicy for LruUnderPressure {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn note_invocation(&mut self, _function: &str, _t_ns: u64) {}
+
+    fn keep_until(&self, _sandbox: &Sandbox) -> u64 {
+        u64::MAX
+    }
+
+    fn victim_rank(&self, sandbox: &Sandbox, _now_ns: u64) -> f64 {
+        sandbox.last_used_ns as f64
+    }
+}
+
+/// Histogram keep-alive: per-function inter-arrival times are binned in
+/// log₂ buckets; a sandbox is kept until the configured percentile of
+/// its function's observed idle times (clamped to `[min_ns, max_ns]`),
+/// so chatty functions get short windows and bursty-but-returning ones
+/// long windows. Before any data exists the window is `fallback_ns`
+/// (wired to `lifecycle.ttl_ns`, then clamped like any learned window).
+pub struct IatHistogram {
+    pub percentile: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub fallback_ns: u64,
+    /// function → (last arrival, log₂-binned IAT counts).
+    seen: HashMap<String, (u64, [u64; 64])>,
+}
+
+impl IatHistogram {
+    pub fn new(percentile: f64, min_ns: u64, max_ns: u64, fallback_ns: u64) -> IatHistogram {
+        IatHistogram { percentile, min_ns, max_ns, fallback_ns, seen: HashMap::new() }
+    }
+
+    /// Upper edge of the histogram bin at `self.percentile`, or `None`
+    /// with no observations yet.
+    fn percentile_iat(&self, function: &str) -> Option<u64> {
+        let (_, bins) = self.seen.get(function)?;
+        let total: u64 = bins.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let target = (total as f64 * self.percentile).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in bins.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // bin i holds IATs in [2^i, 2^(i+1)): keep to the upper edge
+                return Some(1u64 << (i + 1).min(63));
+            }
+        }
+        None
+    }
+
+    fn window_ns(&self, function: &str) -> u64 {
+        self.percentile_iat(function)
+            .unwrap_or(self.fallback_ns)
+            .clamp(self.min_ns, self.max_ns)
+    }
+}
+
+impl KeepAlivePolicy for IatHistogram {
+    fn name(&self) -> &'static str {
+        "histogram"
+    }
+
+    fn note_invocation(&mut self, function: &str, t_ns: u64) {
+        let entry = self.seen.entry(function.to_string()).or_insert((t_ns, [0u64; 64]));
+        let (last, bins) = entry;
+        if t_ns > *last {
+            let iat = t_ns - *last;
+            let bin = (63 - iat.leading_zeros() as usize).min(63);
+            bins[bin] += 1;
+        }
+        *last = (*last).max(t_ns);
+    }
+
+    fn keep_until(&self, sandbox: &Sandbox) -> u64 {
+        sandbox.last_used_ns.saturating_add(self.window_ns(&sandbox.function))
+    }
+
+    fn victim_rank(&self, sandbox: &Sandbox, _now_ns: u64) -> f64 {
+        // evict the sandbox whose window expires soonest
+        self.keep_until(sandbox) as f64
+    }
+}
+
+/// Build the policy a `[lifecycle]` config names. The config is
+/// validated before this is called, so unknown names are unreachable;
+/// they still fall back to fixed TTL defensively.
+pub fn policy_from_config(cfg: &LifecycleConfig) -> Box<dyn KeepAlivePolicy> {
+    match cfg.policy.as_str() {
+        "lru" => Box::new(LruUnderPressure),
+        "histogram" => Box::new(IatHistogram::new(
+            cfg.histogram_percentile,
+            cfg.histogram_min_ns,
+            cfg.histogram_max_ns,
+            cfg.ttl_ns,
+        )),
+        _ => Box::new(FixedTtl { ttl_ns: cfg.ttl_ns }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::SandboxImage;
+
+    fn sandbox(t: u64) -> Sandbox {
+        Sandbox::new("f", SandboxImage::default(), t)
+    }
+
+    #[test]
+    fn fixed_ttl_expires_after_last_use() {
+        let p = FixedTtl { ttl_ns: 100 };
+        let mut sb = sandbox(50);
+        assert_eq!(p.keep_until(&sb), 150);
+        sb.last_used_ns = 200;
+        assert_eq!(p.keep_until(&sb), 300);
+    }
+
+    #[test]
+    fn lru_never_expires_and_ranks_by_recency() {
+        let p = LruUnderPressure;
+        let old = sandbox(10);
+        let fresh = sandbox(1000);
+        assert_eq!(p.keep_until(&old), u64::MAX);
+        assert!(p.victim_rank(&old, 2000) < p.victim_rank(&fresh, 2000));
+    }
+
+    #[test]
+    fn histogram_learns_interarrival_window() {
+        let mut p = IatHistogram::new(0.99, 1, u64::MAX, 5_000);
+        // no data: fallback window
+        assert_eq!(p.window_ns("f"), 5_000);
+        // regular arrivals every ~1000ns → window is the 2^10 bin edge
+        for i in 0..50u64 {
+            p.note_invocation("f", i * 1000);
+        }
+        let w = p.window_ns("f");
+        assert!(w >= 1000 && w <= 2048, "window {w} should cover the 1µs IAT");
+        // a different function is unaffected
+        assert_eq!(p.window_ns("g"), 5_000);
+    }
+
+    #[test]
+    fn histogram_clamps_window() {
+        let mut p = IatHistogram::new(0.99, 10_000, 20_000, 15_000);
+        for i in 0..10u64 {
+            p.note_invocation("f", i * 10); // tiny IATs
+        }
+        assert_eq!(p.window_ns("f"), 10_000); // clamped up to min
+    }
+
+    #[test]
+    fn config_builds_named_policies() {
+        let mut cfg = LifecycleConfig::default();
+        for (name, expect) in [("ttl", "ttl"), ("lru", "lru"), ("histogram", "histogram")] {
+            cfg.policy = name.to_string();
+            assert_eq!(policy_from_config(&cfg).name(), expect);
+        }
+    }
+}

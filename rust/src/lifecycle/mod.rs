@@ -1,0 +1,138 @@
+//! Function lifecycle: cold → warm → snapshotted → evicted.
+//!
+//! The paper's premise is that serverless invocations are short,
+//! memory-intensive, and repeat often, so re-building a function's
+//! working set dominates — Porter's shim profiles objects precisely so
+//! later invocations skip rediscovery. TrEnv-style systems take the
+//! next step: keep finished execution environments alive and share
+//! their memory state across invocations *and nodes* through the CXL
+//! pool. This module models that warm path:
+//!
+//! * [`warmpool`] — a per-node [`WarmPool`] keeps finished sandboxes
+//!   alive under a byte budget, governed by a pluggable
+//!   [`keepalive::KeepAlivePolicy`] (fixed TTL, LRU-under-pressure,
+//!   or a per-function inter-arrival histogram);
+//! * [`snapshot`] — a cluster-wide [`SnapshotStore`] demotes
+//!   evicted-but-likely-to-return sandboxes into the shared cross-node
+//!   CXL pool (leasing capacity from `cluster::pool::CxlPool` and
+//!   debiting link bandwidth on snapshot/restore, exactly like
+//!   migration bytes), so any node can restore a peer's snapshot
+//!   instead of paying a full cold start + profile run.
+//!
+//! The state machine a sandbox moves through:
+//!
+//! ```text
+//!             invoke (miss)                    finish
+//!   [Cold] ──────────────────► running ──────────────────► [Warm]
+//!     ▲                                                      │
+//!     │ snapshot evicted /               TTL expiry / budget │
+//!     │ never snapshotted                pressure (policy)   │
+//!     │                                                      ▼
+//!  [Evicted] ◄──────────────────────────────────── [Snapshotted]
+//!                 store eviction (LRU / lease denied)   │
+//!                                                       │ invoke on
+//!                                                       ▼ any node
+//!                                                    restore
+//! ```
+//!
+//! Everything here is single-threaded virtual-time state (`&mut`
+//! plumbing, `Vec` not `HashMap` where iteration order matters), so a
+//! fleet run stays exactly reproducible under a fixed seed.
+
+pub mod keepalive;
+pub mod snapshot;
+pub mod warmpool;
+
+pub use keepalive::{policy_from_config, KeepAlivePolicy};
+pub use snapshot::{AdmitOutcome, Snapshot, SnapshotMetrics, SnapshotStore};
+pub use warmpool::{WarmPool, WarmPoolMetrics};
+
+use std::sync::Arc;
+
+use crate::shim::SandboxImage;
+
+/// How an invocation's sandbox was obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartKind {
+    /// A live sandbox was waiting in the node's warm pool.
+    Warm,
+    /// Restored from a CXL-resident snapshot (any node's).
+    Restored,
+    /// Full cold start: new sandbox, working set rebuilt from scratch.
+    Cold,
+}
+
+impl StartKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StartKind::Warm => "warm",
+            StartKind::Restored => "restored",
+            StartKind::Cold => "cold",
+        }
+    }
+}
+
+/// A kept-alive execution environment: the shim's captured memory image
+/// plus the lifecycle bookkeeping the keep-alive policies need.
+///
+/// The image is `Arc`-shared with the measured `ServiceShape` it came
+/// from — keeping/evicting/snapshotting a sandbox on every finish must
+/// not deep-copy the object list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sandbox {
+    pub function: String,
+    pub image: Arc<SandboxImage>,
+    /// Virtual time the sandbox finished its (latest) invocation and
+    /// entered the pool — arrivals earlier than this cannot use it.
+    pub created_ns: u64,
+    /// A claimed sandbox is busy until its invocation finishes: a
+    /// second concurrent arrival of the same function cannot share it
+    /// and must cold-start (or restore) its own transient sandbox.
+    pub busy_until_ns: u64,
+    pub last_used_ns: u64,
+    /// Completed invocations this environment has served.
+    pub uses: u64,
+}
+
+impl Sandbox {
+    pub fn new(function: &str, image: impl Into<Arc<SandboxImage>>, t_ns: u64) -> Sandbox {
+        Sandbox {
+            function: function.to_string(),
+            image: image.into(),
+            created_ns: t_ns,
+            busy_until_ns: t_ns,
+            last_used_ns: t_ns,
+            uses: 1,
+        }
+    }
+
+    /// Bytes the sandbox pins while warm (both tiers).
+    pub fn bytes(&self) -> u64 {
+        self.image.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_kind_names() {
+        assert_eq!(StartKind::Warm.name(), "warm");
+        assert_eq!(StartKind::Restored.name(), "restored");
+        assert_eq!(StartKind::Cold.name(), "cold");
+    }
+
+    #[test]
+    fn sandbox_bytes_follow_image() {
+        let img = SandboxImage {
+            dram_resident_bytes: 100,
+            cxl_resident_bytes: 50,
+            ..SandboxImage::default()
+        };
+        let sb = Sandbox::new("f", img, 7);
+        assert_eq!(sb.bytes(), 150);
+        assert_eq!(sb.uses, 1);
+        assert_eq!(sb.created_ns, 7);
+    }
+}

@@ -1,0 +1,312 @@
+//! The per-node warm pool: finished sandboxes kept alive under a byte
+//! budget.
+//!
+//! The pool holds at most one sandbox per function (the node's kept
+//! execution environment; overlapping invocations of the same function
+//! each cold-start their own transient sandbox and only the latest
+//! finisher is kept). Lookup at dispatch time is a *warm hit* when a
+//! sandbox for the function is present, already finished
+//! (`created_ns <= t`), not claimed by a still-running invocation
+//! (`busy_until_ns <= t`), and still inside its policy keep-alive
+//! window.
+//!
+//! Two eviction paths, both returning the evicted sandboxes to the
+//! caller so the cluster layer can demote them into the snapshot store:
+//!
+//! * **expiry** — [`WarmPool::advance`] reclaims sandboxes whose
+//!   policy deadline passed;
+//! * **pressure** — [`WarmPool::insert`] evicts lowest-rank sandboxes
+//!   until the new total fits the budget (a sandbox larger than the
+//!   whole budget is rejected outright and returned as evicted).
+//!
+//! Invariant (property-tested): `used_bytes() <= budget_bytes()` after
+//! every operation, and `used_bytes()` equals the sum of live sandbox
+//! sizes. State is plain `Vec`s so iteration order — and therefore the
+//! fleet's determinism token — is reproducible.
+
+use crate::lifecycle::keepalive::KeepAlivePolicy;
+use crate::lifecycle::Sandbox;
+
+/// Warm-pool counters, reported per node and rolled up fleet-wide.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WarmPoolMetrics {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions_expired: u64,
+    pub evictions_pressure: u64,
+    pub rejected_oversized: u64,
+    pub peak_used_bytes: u64,
+}
+
+/// A node's keep-alive pool.
+pub struct WarmPool {
+    budget_bytes: u64,
+    policy: Box<dyn KeepAlivePolicy>,
+    live: Vec<Sandbox>,
+    used_bytes: u64,
+    pub metrics: WarmPoolMetrics,
+}
+
+impl WarmPool {
+    pub fn new(budget_bytes: u64, policy: Box<dyn KeepAlivePolicy>) -> WarmPool {
+        WarmPool {
+            budget_bytes,
+            policy,
+            live: Vec::new(),
+            used_bytes: 0,
+            metrics: WarmPoolMetrics::default(),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Learning hook: observe one arrival (hit or miss) of `function`.
+    pub fn note_invocation(&mut self, function: &str, t_ns: u64) {
+        self.policy.note_invocation(function, t_ns);
+    }
+
+    fn usable(&self, sb: &Sandbox, t_ns: u64) -> bool {
+        t_ns >= sb.created_ns && t_ns >= sb.busy_until_ns && t_ns <= self.policy.keep_until(sb)
+    }
+
+    /// Non-mutating peek: would an arrival of `function` at `t_ns` hit?
+    pub fn contains(&self, function: &str, t_ns: u64) -> bool {
+        self.live.iter().any(|sb| sb.function == function && self.usable(sb, t_ns))
+    }
+
+    /// Claim a warm sandbox for an arrival of `function` at `t_ns`.
+    /// On a hit the sandbox's recency/use counters advance; a sandbox
+    /// already claimed by an unfinished invocation (`busy_until_ns`)
+    /// cannot be shared — the concurrent arrival misses.
+    pub fn lookup(&mut self, function: &str, t_ns: u64) -> bool {
+        let keep = &self.policy;
+        let hit = self
+            .live
+            .iter_mut()
+            .find(|sb| {
+                sb.function == function
+                    && t_ns >= sb.created_ns
+                    && t_ns >= sb.busy_until_ns
+                    && t_ns <= keep.keep_until(sb)
+            })
+            .map(|sb| {
+                sb.last_used_ns = t_ns;
+                sb.uses += 1;
+            })
+            .is_some();
+        if hit {
+            self.metrics.hits += 1;
+        } else {
+            self.metrics.misses += 1;
+        }
+        hit
+    }
+
+    /// Refresh a live sandbox after an invocation finished on it at
+    /// `t_ns`: extends the keep-alive window and marks the sandbox busy
+    /// through the finish time, so arrivals that overlapped the
+    /// invocation miss instead of sharing one environment.
+    pub fn touch(&mut self, function: &str, t_ns: u64) {
+        if let Some(sb) = self.live.iter_mut().find(|sb| sb.function == function) {
+            sb.last_used_ns = sb.last_used_ns.max(t_ns);
+            sb.busy_until_ns = sb.busy_until_ns.max(t_ns);
+        }
+    }
+
+    /// Reclaim every sandbox whose keep-alive deadline passed by
+    /// `t_ns`, returning them (eviction candidates for the snapshot
+    /// store).
+    pub fn advance(&mut self, t_ns: u64) -> Vec<Sandbox> {
+        let mut evicted = Vec::new();
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.policy.keep_until(&self.live[i]) < t_ns {
+                let sb = self.live.remove(i);
+                self.used_bytes -= sb.bytes();
+                self.metrics.evictions_expired += 1;
+                evicted.push(sb);
+            } else {
+                i += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Keep a finished sandbox. An existing sandbox for the same
+    /// function is merged (newest image wins, use counts accumulate).
+    /// Returns everything evicted to make room — including the new
+    /// sandbox itself when it alone exceeds the whole budget.
+    pub fn insert(&mut self, mut sb: Sandbox) -> Vec<Sandbox> {
+        self.metrics.insertions += 1;
+        if let Some(i) = self.live.iter().position(|s| s.function == sb.function) {
+            let old = self.live.remove(i);
+            self.used_bytes -= old.bytes();
+            if old.created_ns > sb.created_ns {
+                // an overlapping invocation finished later and was kept
+                // first; preserve its fresher image
+                sb.image = old.image;
+                sb.created_ns = old.created_ns;
+            }
+            sb.uses += old.uses;
+            sb.last_used_ns = sb.last_used_ns.max(old.last_used_ns);
+            sb.busy_until_ns = sb.busy_until_ns.max(old.busy_until_ns);
+        }
+        let mut evicted = Vec::new();
+        if sb.bytes() > self.budget_bytes {
+            self.metrics.rejected_oversized += 1;
+            evicted.push(sb);
+            return evicted;
+        }
+        while self.used_bytes + sb.bytes() > self.budget_bytes {
+            let victim = self
+                .live
+                .iter()
+                .enumerate()
+                .min_by(|(ai, a), (bi, b)| {
+                    let (ra, rb) = (
+                        self.policy.victim_rank(a, sb.last_used_ns),
+                        self.policy.victim_rank(b, sb.last_used_ns),
+                    );
+                    ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal).then(ai.cmp(bi))
+                })
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    let v = self.live.remove(i);
+                    self.used_bytes -= v.bytes();
+                    self.metrics.evictions_pressure += 1;
+                    evicted.push(v);
+                }
+                None => break, // empty pool: sb fits by the check above
+            }
+        }
+        self.used_bytes += sb.bytes();
+        self.live.push(sb);
+        self.metrics.peak_used_bytes = self.metrics.peak_used_bytes.max(self.used_bytes);
+        debug_assert!(self.used_bytes <= self.budget_bytes);
+        evicted
+    }
+
+    /// Live sandboxes, in insertion order (oldest first).
+    pub fn sandboxes(&self) -> &[Sandbox] {
+        &self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lifecycle::keepalive::{FixedTtl, LruUnderPressure};
+    use crate::shim::SandboxImage;
+
+    fn sb(function: &str, bytes: u64, t: u64) -> Sandbox {
+        let image = SandboxImage {
+            dram_resident_bytes: bytes,
+            cxl_resident_bytes: 0,
+            ..SandboxImage::default()
+        };
+        Sandbox::new(function, image, t)
+    }
+
+    fn pool(budget: u64, ttl: u64) -> WarmPool {
+        WarmPool::new(budget, Box::new(FixedTtl { ttl_ns: ttl }))
+    }
+
+    #[test]
+    fn hit_within_ttl_miss_after() {
+        let mut p = pool(1000, 100);
+        assert!(p.insert(sb("f", 10, 50)).is_empty());
+        assert!(!p.lookup("f", 40), "arrival before the sandbox finished");
+        assert!(p.lookup("f", 60));
+        assert!(p.lookup("f", 160), "ttl refreshed by the hit at t=60");
+        assert!(!p.lookup("f", 300));
+        assert_eq!(p.metrics.hits, 2);
+        assert_eq!(p.metrics.misses, 2);
+    }
+
+    #[test]
+    fn busy_sandbox_not_shared_by_concurrent_arrivals() {
+        let mut p = pool(1000, 10_000);
+        p.insert(sb("f", 10, 100));
+        // first arrival claims the sandbox; its invocation runs to 900
+        assert!(p.lookup("f", 200));
+        p.touch("f", 900);
+        // overlapping arrival cannot share the claimed environment…
+        assert!(!p.contains("f", 500));
+        assert!(!p.lookup("f", 500));
+        // …but once the invocation finished the sandbox is free again
+        assert!(p.contains("f", 900));
+        assert!(p.lookup("f", 901));
+    }
+
+    #[test]
+    fn advance_expires_and_returns() {
+        let mut p = pool(1000, 100);
+        p.insert(sb("a", 10, 0));
+        p.insert(sb("b", 20, 50));
+        let evicted = p.advance(120);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].function, "a");
+        assert_eq!(p.used_bytes(), 20);
+        assert_eq!(p.metrics.evictions_expired, 1);
+    }
+
+    #[test]
+    fn pressure_evicts_lru_first() {
+        let mut p = WarmPool::new(100, Box::new(LruUnderPressure));
+        p.insert(sb("old", 40, 10));
+        p.insert(sb("mid", 40, 20));
+        let evicted = p.insert(sb("new", 40, 30));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].function, "old");
+        assert!(p.used_bytes() <= 100);
+        assert!(p.contains("mid", 30) && p.contains("new", 30));
+    }
+
+    #[test]
+    fn oversized_sandbox_rejected() {
+        let mut p = pool(100, 1000);
+        let evicted = p.insert(sb("big", 200, 0));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(p.used_bytes(), 0);
+        assert_eq!(p.metrics.rejected_oversized, 1);
+    }
+
+    #[test]
+    fn zero_budget_keeps_nothing() {
+        let mut p = pool(0, 1000);
+        let evicted = p.insert(sb("f", 1, 0));
+        assert_eq!(evicted.len(), 1);
+        assert!(!p.contains("f", 1));
+    }
+
+    #[test]
+    fn reinsert_merges_uses() {
+        let mut p = pool(1000, 1000);
+        p.insert(sb("f", 10, 0));
+        assert!(p.lookup("f", 5));
+        p.insert(sb("f", 30, 50));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.used_bytes(), 30);
+        assert_eq!(p.sandboxes()[0].uses, 3); // 1 + hit + reinsert
+    }
+}

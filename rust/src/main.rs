@@ -3,13 +3,18 @@
 //! Subcommands:
 //!   config  --show                       print the Table-1 machine spec
 //!   run     <workload> [--tier dram|cxl] [--policy tpp|hybrid|naive|none]
-//!           run one workload on one tier; with a migration policy (from
-//!           the `[migration]` config section or --policy) the epoch
-//!           engine promotes/demotes pages at runtime
+//!           [--keep-warm] run one workload on one tier; with a migration
+//!           policy (from the `[migration]` config section or --policy)
+//!           the epoch engine promotes/demotes pages at runtime; with
+//!           --keep-warm the shim's sandbox capture + warm-pool replay
+//!           report what keep-alive amortizes
 //!   profile <workload>                   DAMON heatmap + boundness
 //!   place   <workload>                   §3 profile → static placement
 //!   serve   [--requests N]               Porter serving demo (DL path)
 //!   cluster [--nodes N] [--arrivals S]   fleet simulation (open-loop)
+//!           [--warm-pool-mb N] [--snapshot] [--keepalive ttl|lru|histogram]
+//!           enable the lifecycle layer: per-node warm pools and
+//!           CXL-resident snapshots in the shared pool
 //!   list                                 workload registry
 //!
 //! The figure benches live under `cargo bench` (see rust/benches/).
@@ -129,6 +134,9 @@ fn cmd_run(args: &Args) -> i32 {
     }
     let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
     let checksum = w.run(&mut env);
+    // the object log is only needed for the --keep-warm sandbox capture
+    let objects: Vec<porter::shim::MemoryObject> =
+        if args.flag("keep-warm") { env.objects().to_vec() } else { Vec::new() };
     drop(env);
     let report = machine.report();
     let td = TopDown::from_report(&report);
@@ -137,7 +145,7 @@ fn cmd_run(args: &Args) -> i32 {
     t.row(vec!["tier".into(), tier.name().into()]);
     t.row(vec![
         "migration policy".into(),
-        policy_name.unwrap_or_else(|| "off".to_string()),
+        policy_name.clone().unwrap_or_else(|| "off".to_string()),
     ]);
     t.row(vec!["virtual time".into(), porter::bench::fmt_ns(report.wall_ns)]);
     t.row(vec!["accesses".into(), report.accesses.to_string()]);
@@ -155,7 +163,66 @@ fn cmd_run(args: &Args) -> i32 {
     ]);
     t.row(vec!["checksum".into(), format!("{checksum:#018x}")]);
     println!("{}", t.render());
+    // stable machine-readable counter line (CI smoke greps this — a
+    // silently-zero metric must fail the build, not pass vacuously)
+    println!(
+        "COUNTERS policy={} promotions={} demotions={} ping_pongs={} migration_bytes={}",
+        policy_name.as_deref().unwrap_or("off"),
+        report.promotions,
+        report.demotions,
+        report.ping_pongs,
+        report.migration_bytes
+    );
+    if args.flag("keep-warm") {
+        keep_warm_report(&cfg, w.name(), &objects, &report);
+    }
     0
+}
+
+/// `run --keep-warm`: capture the sandbox image the shim saw, keep it in
+/// a warm pool, and replay a second invocation against it — the
+/// single-machine view of what the cluster's lifecycle layer amortizes.
+fn keep_warm_report(
+    cfg: &Config,
+    name: &str,
+    objects: &[porter::shim::MemoryObject],
+    report: &porter::sim::machine::RunReport,
+) {
+    use porter::lifecycle::{policy_from_config, Sandbox, WarmPool};
+    use porter::shim::SandboxImage;
+    let image =
+        SandboxImage::capture(objects, report.peak_dram_bytes, report.peak_cxl_bytes);
+    println!(
+        "keep-warm: sandbox captured objects={} heap={} mmap={} dram_resident={} \
+         cxl_resident={}",
+        image.objects.len(),
+        porter::util::bytes::fmt_bytes(image.heap_bytes),
+        porter::util::bytes::fmt_bytes(image.mmap_bytes),
+        porter::util::bytes::fmt_bytes(image.dram_resident_bytes),
+        porter::util::bytes::fmt_bytes(image.cxl_resident_bytes)
+    );
+    let mut lc = cfg.lifecycle.clone();
+    lc.enabled = true;
+    let mut pool = WarmPool::new(lc.warm_pool_bytes, policy_from_config(&lc));
+    let finish_ns = report.wall_ns.round().max(0.0) as u64;
+    let evicted = pool.insert(Sandbox::new(name, image, finish_ns));
+    let warm_hit = evicted.is_empty() && pool.lookup(name, finish_ns + 1);
+    let cold_wall_ns = report.wall_ns + cfg.cluster.cold_start_ns as f64;
+    let warm_wall_ns = if warm_hit { report.wall_ns } else { cold_wall_ns };
+    println!(
+        "keep-warm: warm replay {} (cold {} vs warm {}, saved {})",
+        if warm_hit { "hit" } else { "miss (pool budget too small)" },
+        porter::bench::fmt_ns(cold_wall_ns),
+        porter::bench::fmt_ns(warm_wall_ns),
+        porter::bench::fmt_ns(cold_wall_ns - warm_wall_ns)
+    );
+    println!(
+        "LIFECYCLE warm_hits={} cold_starts=1 pool_used={} pool_budget={} policy={}",
+        pool.metrics.hits,
+        pool.used_bytes(),
+        pool.budget_bytes(),
+        pool.policy_name()
+    );
 }
 
 fn cmd_profile(args: &Args) -> i32 {
@@ -246,6 +313,24 @@ fn cmd_cluster(args: &Args) -> i32 {
         if args.flag("no-autoscale") {
             c.autoscale = false;
         }
+        // lifecycle layer: any of these flags turns explicit sandbox
+        // lifetime modeling on
+        let lc = &mut cfg.lifecycle;
+        if let Some(mb) = args.opt("warm-pool-mb") {
+            let mb: u64 = mb
+                .parse()
+                .map_err(|_| format!("--warm-pool-mb expects an integer, got {mb:?}"))?;
+            lc.warm_pool_bytes = mb * (1 << 20);
+            lc.enabled = true;
+        }
+        if args.flag("snapshot") {
+            lc.snapshot = true;
+            lc.enabled = true;
+        }
+        if let Some(p) = args.opt("keepalive") {
+            lc.policy = p.to_string();
+            lc.enabled = true;
+        }
         Ok(())
     })();
     if let Err(e) = parse_result {
@@ -262,9 +347,30 @@ fn cmd_cluster(args: &Args) -> i32 {
         cfg.cluster.duration_s,
         cfg.cluster.seed
     );
+    if cfg.lifecycle.enabled {
+        println!(
+            "lifecycle: warm pool {} per node ({} policy), snapshots {}",
+            porter::util::bytes::fmt_bytes(cfg.lifecycle.warm_pool_bytes),
+            cfg.lifecycle.policy,
+            if cfg.lifecycle.snapshot { "on (shared CXL pool)" } else { "off" }
+        );
+    }
     match porter::cluster::simulate(&cfg) {
         Ok(report) => {
             println!("{}", report.render());
+            // stable machine-readable counter line (CI smoke greps this)
+            println!(
+                "LIFECYCLE enabled={} cold_starts={} warm_starts={} restores={} \
+                 snapshot_bytes={} restore_bytes={} snapshot_leased={} p50_ns={}",
+                report.lifecycle_enabled,
+                report.cold_starts,
+                report.warm_starts,
+                report.restores,
+                report.snapshot_bytes,
+                report.restore_bytes,
+                report.snapshot_leased_bytes,
+                report.fleet_p50_ns
+            );
             0
         }
         Err(e) => {

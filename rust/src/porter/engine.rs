@@ -54,6 +54,9 @@ pub struct InvocationOutcome {
     pub profiled: bool,
     /// SLO target in effect before the run (best wall × slo_factor).
     pub slo_target_ns: Option<f64>,
+    /// Shim-captured sandbox state (object list + per-tier residency)
+    /// — what a warm pool keeps alive and a snapshot persists.
+    pub sandbox: crate::shim::SandboxImage,
     /// Host-side execution time of the simulation (engine overhead
     /// accounting, not part of the simulated metric).
     pub host_micros: u64,
@@ -141,9 +144,17 @@ pub fn run_invocation(
     let objects: Vec<_> = env.objects().to_vec();
     drop(env);
     let report = machine.report();
-
-    // ④ ship the profile to the offline tuner
-    if profiled {
+    // sandbox state capture: the object list plus where the run's
+    // working set peaked — the lifecycle layer keeps/snapshots this.
+    // ④ the profiled path also ships the objects to the offline tuner,
+    // so only it pays a clone (one-off per function); the hot serving
+    // path consumes the vec without copying.
+    let sandbox = if profiled {
+        let sandbox = crate::shim::SandboxImage::capture(
+            &objects,
+            report.peak_dram_bytes,
+            report.peak_cxl_bytes,
+        );
         if let Some(obs) = machine.take_observers().pop() {
             if let Ok(damon) = obs.into_any().downcast::<Damon>() {
                 tuner.submit(ProfileData {
@@ -154,7 +165,14 @@ pub fn run_invocation(
                 });
             }
         }
-    }
+        sandbox
+    } else {
+        crate::shim::SandboxImage::capture_owned(
+            objects,
+            report.peak_dram_bytes,
+            report.peak_cxl_bytes,
+        )
+    };
     tuner.hints().record_wall(&spec.name, report.wall_ns);
     drop(reservation);
 
@@ -166,6 +184,7 @@ pub fn run_invocation(
         used_hint,
         profiled,
         slo_target_ns,
+        sandbox,
         host_micros: started.elapsed().as_micros() as u64,
     }
 }
@@ -193,6 +212,13 @@ mod tests {
         assert!(first.profiled);
         assert!(!first.used_hint);
         assert!(first.slo_target_ns.is_none());
+        // the shim captured the sandbox image alongside the profile
+        assert!(!first.sandbox.objects.is_empty());
+        assert!(first.sandbox.resident_bytes() > 1);
+        assert_eq!(
+            first.sandbox.heap_bytes + first.sandbox.mmap_bytes,
+            first.sandbox.objects.iter().map(|o| o.bytes).sum::<u64>()
+        );
 
         tuner.drain();
         assert!(tuner.hints().get("kv").is_some());

@@ -108,6 +108,7 @@ mod tests {
             used_hint: false,
             profiled: false,
             slo_target_ns: target,
+            sandbox: crate::shim::SandboxImage::default(),
             host_micros: 0,
         }
     }

@@ -16,7 +16,9 @@
 pub mod env;
 pub mod intercept;
 pub mod object;
+pub mod snapshot;
 
 pub use env::{Env, TVec};
 pub use intercept::{InterceptingAllocator, MMAP_THRESHOLD};
 pub use object::{MemoryObject, ObjectId};
+pub use snapshot::{ObjectRecord, SandboxImage};

@@ -1,0 +1,130 @@
+//! Sandbox state capture — what the shim knows about a finished
+//! invocation's memory image.
+//!
+//! The paper's shim records *memory objects* so later invocations can
+//! skip rediscovery; TrEnv-style warm pools go one step further and keep
+//! (or snapshot) the whole execution environment. A [`SandboxImage`] is
+//! the shim-level summary of that environment: the object list (site,
+//! size, mmap-vs-brk) plus the per-tier residency the run peaked at.
+//! The lifecycle layer (`crate::lifecycle`) stores images in warm pools
+//! and demotes them into the shared CXL pool as snapshots.
+
+use crate::shim::object::MemoryObject;
+
+/// One entry of a captured object list — the durable subset of
+/// [`MemoryObject`] (addresses are regenerated deterministically on
+/// restore, so only identity + size + segment matter).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectRecord {
+    pub site: String,
+    pub bytes: u64,
+    pub via_mmap: bool,
+}
+
+/// Captured memory state of one sandbox after an invocation.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SandboxImage {
+    /// Allocation-site records, in shim log (allocation) order.
+    pub objects: Vec<ObjectRecord>,
+    /// Bytes allocated via the brk heap (small allocations).
+    pub heap_bytes: u64,
+    /// Bytes allocated via the mmap segment (large allocations).
+    pub mmap_bytes: u64,
+    /// Peak residency per tier during the run — what keeping the
+    /// sandbox warm pins in memory.
+    pub dram_resident_bytes: u64,
+    pub cxl_resident_bytes: u64,
+}
+
+impl SandboxImage {
+    /// Capture from the shim's allocation log plus the run's per-tier
+    /// peaks (from the machine report).
+    pub fn capture(
+        objects: &[MemoryObject],
+        dram_resident_bytes: u64,
+        cxl_resident_bytes: u64,
+    ) -> SandboxImage {
+        Self::capture_owned(objects.to_vec(), dram_resident_bytes, cxl_resident_bytes)
+    }
+
+    /// Capture by consuming the object log — no per-record `String`
+    /// clones. The serving path builds an image on every invocation, so
+    /// the common case must not deep-copy allocation sites.
+    pub fn capture_owned(
+        objects: Vec<MemoryObject>,
+        dram_resident_bytes: u64,
+        cxl_resident_bytes: u64,
+    ) -> SandboxImage {
+        let mut heap_bytes = 0u64;
+        let mut mmap_bytes = 0u64;
+        let records = objects
+            .into_iter()
+            .map(|o| {
+                if o.via_mmap {
+                    mmap_bytes += o.bytes;
+                } else {
+                    heap_bytes += o.bytes;
+                }
+                ObjectRecord { site: o.site, bytes: o.bytes, via_mmap: o.via_mmap }
+            })
+            .collect();
+        SandboxImage {
+            objects: records,
+            heap_bytes,
+            mmap_bytes,
+            dram_resident_bytes,
+            cxl_resident_bytes,
+        }
+    }
+
+    /// Memory a warm sandbox pins (both tiers). Never zero: even an
+    /// empty sandbox occupies its runtime's base footprint of one page.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.dram_resident_bytes + self.cxl_resident_bytes).max(1)
+    }
+
+    /// Bytes that must cross a CXL link when this image is snapshotted
+    /// into (or restored out of) the shared pool. CXL-resident pages are
+    /// already pool-backed media in the snapshot model, so only the
+    /// DRAM-resident hot set is copied.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.dram_resident_bytes.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shim::object::ObjectId;
+
+    fn obj(site: &str, bytes: u64, via_mmap: bool) -> MemoryObject {
+        MemoryObject { id: ObjectId(0), start: 0, bytes, site: site.into(), seq: 0, via_mmap }
+    }
+
+    #[test]
+    fn capture_splits_heap_and_mmap() {
+        let objs =
+            [obj("a", 100, false), obj("b", 4096, true), obj("c", 50, false)];
+        let img = SandboxImage::capture(&objs, 3000, 1196);
+        assert_eq!(img.objects.len(), 3);
+        assert_eq!(img.heap_bytes, 150);
+        assert_eq!(img.mmap_bytes, 4096);
+        assert_eq!(img.resident_bytes(), 4196);
+        assert_eq!(img.transfer_bytes(), 3000);
+    }
+
+    #[test]
+    fn empty_image_still_occupies() {
+        let img = SandboxImage::capture(&[], 0, 0);
+        assert_eq!(img.resident_bytes(), 1);
+        assert_eq!(img.transfer_bytes(), 1);
+    }
+
+    #[test]
+    fn roundtrip_equality_is_exact() {
+        let objs = [obj("x", 7, false), obj("y", 1 << 20, true)];
+        let a = SandboxImage::capture(&objs, 10, 20);
+        let b = a.clone();
+        assert_eq!(a, b);
+    }
+}

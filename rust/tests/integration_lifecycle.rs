@@ -1,0 +1,133 @@
+//! Integration: the function-lifecycle layer end-to-end — warm pools
+//! cutting cold starts, snapshots leasing shared-pool capacity and
+//! enabling cross-node restores, and the whole thing deterministic and
+//! strictly opt-in (legacy runs are bit-identical with the layer off).
+
+use porter::cluster::simulate;
+use porter::config::Config;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.min_nodes = 1;
+    cfg.cluster.max_nodes = 4;
+    cfg.cluster.functions = 3;
+    cfg.cluster.rate_per_s = 400.0;
+    cfg.cluster.duration_s = 0.05;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.seed = 0x11FE;
+    cfg
+}
+
+fn lifecycle_cfg(warm_pool_bytes: u64, snapshot: bool, policy: &str) -> Config {
+    let mut cfg = base_cfg();
+    cfg.lifecycle.enabled = true;
+    cfg.lifecycle.warm_pool_bytes = warm_pool_bytes;
+    cfg.lifecycle.snapshot = snapshot;
+    cfg.lifecycle.policy = policy.to_string();
+    cfg
+}
+
+/// The PR's acceptance scenario: `--warm-pool-mb 512 --snapshot` must
+/// report strictly fewer cold starts and lower p50 than the same run
+/// with the warm pool disabled, with snapshot/restore bytes visibly
+/// debited from the shared CXL pool.
+#[test]
+fn warm_pool_with_snapshots_beats_disabled_pool() {
+    let disabled = simulate(&lifecycle_cfg(0, false, "ttl")).unwrap();
+    let warm = simulate(&lifecycle_cfg(512 << 20, true, "ttl")).unwrap();
+    assert_eq!(disabled.completed, warm.completed);
+    assert!(
+        warm.cold_starts < disabled.cold_starts,
+        "cold starts {} must be strictly fewer than {}",
+        warm.cold_starts,
+        disabled.cold_starts
+    );
+    assert!(
+        warm.fleet_p50_ns < disabled.fleet_p50_ns,
+        "p50 {} must be strictly lower than {}",
+        warm.fleet_p50_ns,
+        disabled.fleet_p50_ns
+    );
+    // snapshot machinery visibly used the shared pool
+    assert!(warm.snapshots_taken > 0);
+    assert!(warm.snapshot_bytes > 0, "snapshot writes must debit the pool links");
+    assert!(warm.snapshot_leased_bytes > 0, "snapshot leases must hold pool capacity");
+    assert!(warm.pool_peak_occupancy > 0.0);
+    // and the disabled run has no snapshot activity at all
+    assert_eq!(disabled.snapshot_bytes, 0);
+    assert_eq!(disabled.restores, 0);
+}
+
+#[test]
+fn every_keepalive_policy_amortizes_cold_starts() {
+    for policy in ["ttl", "lru", "histogram"] {
+        let zero = simulate(&lifecycle_cfg(0, false, policy)).unwrap();
+        let funded = simulate(&lifecycle_cfg(512 << 20, false, policy)).unwrap();
+        assert_eq!(zero.cold_starts, zero.completed, "{policy}: zero budget is all-cold");
+        assert!(
+            funded.warm_starts > 0 && funded.cold_starts < zero.cold_starts,
+            "{policy}: funded pool must produce warm starts \
+             (cold {} of {}, warm {})",
+            funded.cold_starts,
+            funded.completed,
+            funded.warm_starts
+        );
+    }
+}
+
+#[test]
+fn snapshot_only_mode_restores_across_nodes() {
+    // zero keep-alive budget but snapshots on: every sandbox demotes to
+    // the store on finish, so later arrivals — on either node — restore
+    let r = simulate(&lifecycle_cfg(0, true, "ttl")).unwrap();
+    assert!(r.restores > 0, "snapshot-only mode must restore");
+    assert!(r.restore_bytes > 0);
+    assert_eq!(r.cold_starts + r.warm_starts + r.restores, r.completed);
+    // restores replay seeded shapes: profile runs stay bounded by
+    // node × function even though keep-alive is off
+    let max_profiles = (r.nodes.len() * 3) as u64;
+    assert!(r.cold_runs <= max_profiles, "{} profile runs", r.cold_runs);
+}
+
+#[test]
+fn lifecycle_layer_is_opt_in_and_deterministic() {
+    // legacy runs are unaffected by the layer existing
+    let legacy_a = simulate(&base_cfg()).unwrap();
+    let legacy_b = simulate(&base_cfg()).unwrap();
+    assert_eq!(legacy_a.determinism_token, legacy_b.determinism_token);
+    assert!(!legacy_a.lifecycle_enabled);
+    assert_eq!(legacy_a.snapshot_bytes, 0);
+    // lifecycle runs are deterministic too, and differ from legacy
+    let cfg = lifecycle_cfg(64 << 20, true, "histogram");
+    let a = simulate(&cfg).unwrap();
+    let b = simulate(&cfg).unwrap();
+    assert_eq!(a.determinism_token, b.determinism_token);
+    assert_eq!(a.cold_starts, b.cold_starts);
+    assert_eq!(a.restores, b.restores);
+    assert_eq!(a.snapshot_bytes, b.snapshot_bytes);
+    assert_ne!(
+        a.determinism_token, legacy_a.determinism_token,
+        "explicit sandbox lifetimes must change the virtual timeline"
+    );
+}
+
+#[test]
+fn tiny_snapshot_budget_denies_or_evicts_without_leaking() {
+    let mut cfg = lifecycle_cfg(0, true, "ttl");
+    // a store capped at a sliver of the pool: admissions must be denied
+    // or evict predecessors, never over-lease
+    cfg.lifecycle.snapshot_capacity_frac = 1e-6; // ~0.5 MiB of 512 GiB
+    let r = simulate(&cfg).unwrap();
+    let cap = (cfg.cluster.cxl_pool as f64 * cfg.lifecycle.snapshot_capacity_frac) as u64;
+    assert!(
+        r.snapshot_leased_bytes <= cap,
+        "leased {} exceeds the store budget {}",
+        r.snapshot_leased_bytes,
+        cap
+    );
+    assert!(
+        r.snapshot_lease_denied > 0 || r.snapshot_evicted > 0 || r.snapshots_taken == 0,
+        "a starved store must deny or evict"
+    );
+}

@@ -378,3 +378,125 @@ fn prop_pagemap_roundtrip() {
         assert!(start <= addr && addr < start + page, "{addr:#x} not in page [{start:#x},+{page})");
     });
 }
+
+/// Warm pool: whatever sequence of insert/lookup/advance a random
+/// schedule produces, the pool never exceeds its byte budget and its
+/// used-bytes ledger equals the sum of the live sandboxes exactly.
+#[test]
+fn prop_warm_pool_never_exceeds_budget() {
+    use porter::lifecycle::{policy_from_config, Sandbox, WarmPool};
+    use porter::shim::SandboxImage;
+    forall("warm-pool-budget", 60, |g: &mut Gen| {
+        let lc = porter::config::LifecycleConfig {
+            policy: ["ttl", "lru", "histogram"][g.usize_in(0, 3)].to_string(),
+            ttl_ns: g.u64_in(10, 10_000),
+            ..Default::default()
+        };
+        let budget = g.u64_in(0, 4096);
+        let mut pool = WarmPool::new(budget, policy_from_config(&lc));
+        let mut t = 0u64;
+        for i in 0..g.usize_in(1, 60) {
+            t += g.u64_in(0, 500);
+            let f = format!("f{}", g.usize_in(0, 6));
+            match g.usize_in(0, 3) {
+                0 => {
+                    let image = SandboxImage {
+                        dram_resident_bytes: g.u64_in(0, 1500),
+                        cxl_resident_bytes: g.u64_in(0, 1500),
+                        ..SandboxImage::default()
+                    };
+                    let evicted = pool.insert(Sandbox::new(&f, image, t));
+                    for sb in &evicted {
+                        assert!(
+                            !pool.contains(&sb.function, t) || sb.function == f,
+                            "case {i}: evicted sandbox still live"
+                        );
+                    }
+                }
+                1 => {
+                    pool.note_invocation(&f, t);
+                    pool.lookup(&f, t);
+                }
+                _ => {
+                    pool.advance(t);
+                }
+            }
+            assert!(
+                pool.used_bytes() <= pool.budget_bytes(),
+                "case {i}: used {} > budget {}",
+                pool.used_bytes(),
+                pool.budget_bytes()
+            );
+            let live_sum: u64 = pool.sandboxes().iter().map(|s| s.bytes()).sum();
+            assert_eq!(pool.used_bytes(), live_sum, "case {i}: ledger drifted");
+        }
+    });
+}
+
+/// Snapshot store: snapshot→restore round-trips preserve the sandbox's
+/// object list and per-tier occupancy accounting exactly, and no pool
+/// lease survives eviction (the pool returns to its baseline occupancy
+/// once every snapshot is gone).
+#[test]
+fn prop_snapshot_roundtrip_and_no_leaked_leases() {
+    use porter::cluster::pool::CxlPool;
+    use porter::lifecycle::{Sandbox, SnapshotStore};
+    use porter::shim::{ObjectRecord, SandboxImage};
+    forall("snapshot-roundtrip", 60, |g: &mut Gen| {
+        let pool_cap = g.u64_in(10_000, 100_000);
+        let mut pool = CxlPool::new(pool_cap, 64.0, 30.0, 2, 1_000_000);
+        let store_cap = g.u64_in(1_000, pool_cap);
+        let mut store = SnapshotStore::new(store_cap, 1, g.u64_in(0, 10_000));
+        let mut t = 0u64;
+        let mut originals: Vec<(String, SandboxImage)> = Vec::new();
+        for i in 0..g.usize_in(1, 20) {
+            t += g.u64_in(1, 1_000);
+            let f = format!("f{i}");
+            let objects = (0..g.usize_in(0, 8))
+                .map(|j| ObjectRecord {
+                    site: format!("{f}/site{j}"),
+                    bytes: g.u64_in(1, 10_000),
+                    via_mmap: g.bool(),
+                })
+                .collect::<Vec<_>>();
+            let image = SandboxImage {
+                heap_bytes: objects.iter().filter(|o| !o.via_mmap).map(|o| o.bytes).sum(),
+                mmap_bytes: objects.iter().filter(|o| o.via_mmap).map(|o| o.bytes).sum(),
+                objects,
+                dram_resident_bytes: g.u64_in(1, 3_000),
+                cxl_resident_bytes: g.u64_in(0, 3_000),
+            };
+            let mut sb = Sandbox::new(&f, image.clone(), t);
+            sb.uses = g.u64_in(1, 5);
+            if store.admit(&sb, t, g.usize_in(0, 2), &mut pool).admitted() {
+                originals.push((f, image));
+            }
+            // the store never leases beyond its own budget
+            assert!(store.leased_bytes() <= store_cap);
+        }
+        // restore round-trip: every still-resident snapshot's image is
+        // bit-identical to what was admitted
+        let mut restored = 0;
+        for (f, original) in &originals {
+            if let Some(img) = store.image(f) {
+                assert_eq!(img, original, "{f}: image drifted through snapshot/restore");
+                t += 1;
+                let (_latency, bytes) =
+                    store.restore(f, t, 0, &mut pool, 30.0, 1.0).expect("resident snapshot");
+                assert_eq!(bytes, original.transfer_bytes());
+                restored += 1;
+            }
+        }
+        assert!(originals.is_empty() || restored > 0 || store.metrics.evicted > 0);
+        // evict everything: all leases must return to the pool
+        t += 1;
+        store.release_all(t, &mut pool);
+        assert_eq!(store.leased_bytes(), 0);
+        pool.advance(t);
+        assert_eq!(
+            pool.occupancy(),
+            0.0,
+            "snapshot leases leaked pool capacity after eviction"
+        );
+    });
+}

@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Bench-gate: validate freshly produced BENCH_*.json files against the
+committed baselines' schemas.
+
+CI runs the quick-mode benches (which overwrite the BENCH_*.json files
+in place at the repo root) and then calls this script with the committed
+copies saved aside::
+
+    python3 tools/bench_check.py \
+        --baseline-dir ci-baseline --fresh-dir . \
+        BENCH_migration.json BENCH_cluster.json BENCH_lifecycle.json
+
+Hard failures (exit 1 — schema drift):
+  * fresh file missing, unparsable, or not produced by the same suite;
+  * fresh series empty, or rows missing keys the baseline promises
+    (either the placeholder's ``schema.series[]`` spec or, once a
+    measured baseline is committed, the keys of its first series row);
+  * NaN/Infinity anywhere, negative counts/sizes, rates or occupancies
+    outside [0, 1], p50 > p99, or all-zero metric rows (a silently-dead
+    metric must fail, not pass vacuously).
+
+Perf deltas stay advisory: when the baseline carries measured rows, the
+script prints per-row latency deltas (and writes them to
+``$GITHUB_STEP_SUMMARY`` when set) without failing the job.
+
+stdlib-only by design — the CI image has no pip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+FAILURES: list[str] = []
+SUMMARY_LINES: list[str] = []
+
+
+def fail(msg: str) -> None:
+    FAILURES.append(msg)
+    print(f"SCHEMA-DRIFT: {msg}", file=sys.stderr)
+
+
+def note(msg: str) -> None:
+    SUMMARY_LINES.append(msg)
+    print(msg)
+
+
+def load_json(path: str, *, required: bool):
+    if not os.path.exists(path):
+        if required:
+            fail(f"{path}: file missing")
+        return None
+    try:
+        with open(path, encoding="utf-8") as fh:
+            # reject NaN/Infinity tokens outright: the Rust writer never
+            # emits them, so their presence means a broken metric
+            return json.load(fh, parse_constant=lambda c: fail(f"{path}: non-finite constant {c}"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        fail(f"{path}: unparsable JSON ({e})")
+        return None
+
+
+def expected_row_keys(baseline: dict, path: str) -> set[str] | None:
+    """The keys every fresh series row must carry, from the committed
+    baseline: a placeholder documents them under schema."series[]"; a
+    measured baseline shows them in its first series row."""
+    schema = baseline.get("schema")
+    if isinstance(schema, dict):
+        spec = schema.get("series[]")
+        if isinstance(spec, dict) and spec:
+            return set(spec.keys())
+    series = baseline.get("series")
+    if isinstance(series, list) and series and isinstance(series[0], dict):
+        return set(series[0].keys())
+    note(f"  {path}: baseline declares no series schema; key check skipped")
+    return None
+
+
+def check_value(path: str, row_id: str, key: str, value) -> None:
+    if isinstance(value, bool) or value is None:
+        return
+    if isinstance(value, float) and not math.isfinite(value):
+        fail(f"{path}: {row_id}.{key} is non-finite ({value})")
+        return
+    if not isinstance(value, (int, float)):
+        return  # strings (labels, tokens) are free-form
+    lk = key.lower()
+    if any(tag in lk for tag in ("slowdown", "delta", "pct")):
+        return  # legitimately signed metrics: finiteness is enough
+    if any(tag in lk for tag in ("rate", "occupancy", "frac")):
+        if not 0.0 <= float(value) <= 1.0 + 1e-9:
+            fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
+    elif float(value) < 0.0:
+        fail(f"{path}: {row_id}.{key} = {value} is negative")
+
+
+def check_rows(path: str, rows: list, want_keys: set[str] | None) -> None:
+    for i, row in enumerate(rows):
+        row_id = f"series[{i}]"
+        if not isinstance(row, dict):
+            fail(f"{path}: {row_id} is not an object")
+            continue
+        if want_keys is not None:
+            missing = want_keys - set(row.keys())
+            if missing:
+                fail(f"{path}: {row_id} missing keys {sorted(missing)}")
+        numerics = []
+        for key, value in row.items():
+            check_value(path, row_id, key, value)
+            if isinstance(value, (int, float)) and not isinstance(value, bool):
+                numerics.append(float(value))
+        if numerics and all(v == 0.0 for v in numerics):
+            fail(f"{path}: {row_id} is all-zero — a dead metric row")
+        p50, p99 = row.get("p50_ns"), row.get("p99_ns")
+        if isinstance(p50, (int, float)) and isinstance(p99, (int, float)) and p50 > p99:
+            fail(f"{path}: {row_id} has p50 {p50} > p99 {p99}")
+
+
+# numeric fields that identify a sweep cell rather than measure it
+IDENTITY_NUMERICS = {"nodes", "warm_pool_mb", "budget_mb", "dram_ratio"}
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a series row for baseline↔fresh matching: label-ish
+    string fields plus the numeric sweep coordinates (node count, pool
+    budget, DRAM ratio) — without these, every row of one shape would
+    collapse to a single key and deltas would compare mismatched cells."""
+    return tuple(
+        (k, v)
+        for k, v in sorted(row.items())
+        if (isinstance(v, str) and k != "determinism_token") or k in IDENTITY_NUMERICS
+    )
+
+
+def advisory_deltas(path: str, baseline: dict, fresh: dict) -> None:
+    base_rows = baseline.get("series") or []
+    fresh_rows = fresh.get("series") or []
+    if not base_rows or baseline.get("status") == "baseline-pending":
+        note(f"  {path}: no measured baseline yet; perf deltas skipped")
+        return
+    by_key = {row_key(r): r for r in base_rows if isinstance(r, dict)}
+    shown = 0
+    for row in fresh_rows:
+        if not isinstance(row, dict):
+            continue
+        base = by_key.get(row_key(row))
+        if base is None:
+            continue
+        for metric in ("p50_ns", "p99_ns", "mean_ns", "wall_ns"):
+            b, f = base.get(metric), row.get(metric)
+            if isinstance(b, (int, float)) and isinstance(f, (int, float)) and b > 0:
+                delta = (f - b) / b * 100.0
+                if abs(delta) >= 1.0:
+                    note(f"  {path}: {dict(row_key(row))} {metric}: {delta:+.1f}% (advisory)")
+                    shown += 1
+    if shown == 0:
+        note(f"  {path}: no perf deltas ≥1% against the committed baseline")
+
+
+def check_file(name: str, baseline_dir: str, fresh_dir: str) -> None:
+    baseline_path = os.path.join(baseline_dir, name)
+    fresh_path = os.path.join(fresh_dir, name)
+    note(f"bench-gate: {name}")
+    baseline = load_json(baseline_path, required=True)
+    fresh = load_json(fresh_path, required=True)
+    if baseline is None or fresh is None:
+        return
+    b_suite, f_suite = baseline.get("suite"), fresh.get("suite")
+    if b_suite != f_suite:
+        fail(f"{fresh_path}: suite {f_suite!r} != committed {b_suite!r}")
+    rows = fresh.get("series")
+    if not isinstance(rows, list) or not rows:
+        fail(f"{fresh_path}: empty or missing series — the bench produced nothing")
+        return
+    check_rows(fresh_path, rows, expected_row_keys(baseline, fresh_path))
+    advisory_deltas(name, baseline, fresh)
+    note(f"  {name}: {len(rows)} series rows checked")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="+", help="BENCH_*.json file names to validate")
+    ap.add_argument("--baseline-dir", default="ci-baseline", help="committed copies")
+    ap.add_argument("--fresh-dir", default=".", help="freshly produced copies")
+    args = ap.parse_args()
+    for name in args.files:
+        check_file(name, args.baseline_dir, args.fresh_dir)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as fh:
+            fh.write("## bench-gate\n\n")
+            for line in SUMMARY_LINES:
+                fh.write(f"- {line.strip()}\n")
+            if FAILURES:
+                fh.write("\n**schema drift:**\n\n")
+                for line in FAILURES:
+                    fh.write(f"- ❌ {line}\n")
+            else:
+                fh.write("\n✅ no schema drift\n")
+    if FAILURES:
+        print(f"bench-gate: FAILED with {len(FAILURES)} schema problem(s)", file=sys.stderr)
+        return 1
+    print("bench-gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
