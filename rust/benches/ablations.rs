@@ -8,14 +8,20 @@
 //! 4. Policy shoot-out — all-DRAM / all-CXL / first-touch / static-hint
 //!    / TPP-like reactive migration on the same workload.
 //!
+//! Record-once/replay-many: the PageRank instance executes exactly once
+//! (the Trace-IR recording); all 20+ sweep cells replay the stored
+//! stream, so the sweep is O(cells × replay) instead of
+//! O(cells × live-execution).
+//!
 //! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench ablations
 
 use porter::bench::{BenchSuite, FigureReport};
 use porter::config::Config;
 use porter::mem::tier::TierKind;
 use porter::placement::policies::{FirstTouchDram, TppMigrator};
-use porter::placement::static_place::profile_and_place;
+use porter::placement::static_place::{profile_and_place_trace, replay_plain};
 use porter::sim::Machine;
+use porter::trace::record_workload;
 use porter::workloads::graph::rmat;
 use porter::workloads::pagerank::PageRank;
 use porter::workloads::registry::GRAPH_SEED;
@@ -33,6 +39,9 @@ fn main() {
     let w = workload(quick);
     let mut bench = BenchSuite::new("ablations: hint generation + placement policies");
 
+    // the single live execution of the sweep
+    let trace = record_workload(&w, Config::default().machine.page_bytes);
+
     // --- 1. DRAM budget sweep ---
     let mut fig = FigureReport::new(
         "Ablation 1",
@@ -42,7 +51,7 @@ fn main() {
     for budget in [0.0, 0.1, 0.2, 0.35, 0.5, 0.75, 1.0] {
         let mut cfg = Config::default();
         cfg.porter.dram_budget_frac = budget;
-        let r = profile_and_place(&cfg, &w);
+        let r = profile_and_place_trace(&cfg, &trace);
         fig.row(
             &format!("budget={budget}"),
             vec![r.hinted_slowdown_pct(), r.improvement_over_cxl_pct()],
@@ -59,7 +68,7 @@ fn main() {
     for thr in [0.005, 0.02, 0.1, 0.3, 0.8] {
         let mut cfg = Config::default();
         cfg.porter.hot_threshold = thr;
-        let r = profile_and_place(&cfg, &w);
+        let r = profile_and_place_trace(&cfg, &trace);
         fig.row(
             &format!("thr={thr}"),
             vec![r.hinted_slowdown_pct(), r.hint.hot_bytes() as f64 / (1 << 20) as f64],
@@ -78,7 +87,7 @@ fn main() {
         let mut cfg = Config::default();
         cfg.monitor.sample_interval_ns = interval;
         cfg.monitor.aggregation_interval_ns = interval * 20;
-        let r = profile_and_place(&cfg, &w);
+        let r = profile_and_place_trace(&cfg, &trace);
         // overhead proxy: DAMON samples scale inversely with interval;
         // report relative to the finest setting
         let samples = 1e9 / interval as f64;
@@ -97,22 +106,10 @@ fn main() {
         "slowdown vs all-DRAM (%) per placement policy",
         &["slowdown_pct", "promotions", "demotions"],
     );
-    let base = {
-        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
-        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
-        w.run(&mut env);
-        drop(env);
-        m.report()
-    };
+    let base = replay_plain(&cfg, &trace, TierKind::Dram);
     fig.row("all-dram", vec![0.0, 0.0, 0.0]);
     // all-cxl
-    let r = {
-        let mut m = Machine::all_in(&cfg.machine, TierKind::Cxl);
-        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
-        w.run(&mut env);
-        drop(env);
-        m.report()
-    };
+    let r = replay_plain(&cfg, &trace, TierKind::Cxl);
     fig.row("all-cxl", vec![r.slowdown_pct_vs(&base), 0.0, 0.0]);
     // first-touch with a DRAM cap (tight server: 25% of footprint)
     let footprint = w.footprint_hint();
@@ -120,9 +117,7 @@ fn main() {
     tight.dram_bytes = footprint / 4;
     let r = {
         let mut m = Machine::new(&tight, Box::new(FirstTouchDram::default()));
-        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
-        w.run(&mut env);
-        drop(env);
+        m.replay(&trace);
         m.report()
     };
     fig.row("first-touch (25% dram)", vec![r.slowdown_pct_vs(&base), 0.0, 0.0]);
@@ -131,9 +126,7 @@ fn main() {
         let mut m = Machine::new(&tight, Box::new(FirstTouchDram::default()));
         m.set_migrator(Box::new(TppMigrator::default()));
         m.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
-        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
-        w.run(&mut env);
-        drop(env);
+        m.replay(&trace);
         m.report()
     };
     fig.row(
@@ -144,7 +137,7 @@ fn main() {
     let mut cfg_tight = cfg.clone();
     cfg_tight.machine.dram_bytes = footprint / 4;
     cfg_tight.porter.dram_budget_frac = 0.25;
-    let rr = profile_and_place(&cfg_tight, &w);
+    let rr = profile_and_place_trace(&cfg_tight, &trace);
     let hinted_slowdown = rr.hinted.wall_ns / base.wall_ns * 100.0 - 100.0;
     fig.row("static-hint (25% dram)", vec![hinted_slowdown, 0.0, 0.0]);
     bench.section(fig.render());

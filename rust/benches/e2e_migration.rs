@@ -18,21 +18,30 @@ use porter::config::Config;
 use porter::mem::migrate::MigrationEngine;
 use porter::mem::tier::TierKind;
 use porter::placement::policies::FirstTouchDram;
+use porter::placement::static_place::replay_plain;
 use porter::sim::machine::RunReport;
 use porter::sim::Machine;
+use porter::trace::{record_workload, AccessTrace};
 use porter::util::json::Json;
 use porter::workloads::registry::{build, Scale};
-use porter::workloads::Workload;
 
 const POLICIES: [&str; 4] = ["none", "naive", "tpp", "hybrid"];
 const WORKLOADS: [&str; 3] = ["dl_train", "pagerank", "kvstore"];
 const DRAM_RATIOS: [f64; 3] = [0.125, 0.25, 0.5];
 
-/// One run: DRAM capped at `ratio` × footprint, first-touch placement,
-/// the configured migration engine attached.
-fn run_cell(w: &dyn Workload, cfg: &Config, ratio: f64, policy: &str) -> RunReport {
+/// One cell: DRAM capped at `ratio` × footprint, first-touch placement,
+/// the configured migration engine attached, the workload's Trace-IR
+/// replayed (the workload itself executed exactly once, at record
+/// time).
+fn run_cell(
+    trace: &AccessTrace,
+    footprint: u64,
+    cfg: &Config,
+    ratio: f64,
+    policy: &str,
+) -> RunReport {
     let mut mcfg = cfg.machine.clone();
-    let footprint = w.footprint_hint().max(mcfg.page_bytes);
+    let footprint = footprint.max(mcfg.page_bytes);
     mcfg.dram_bytes =
         ((footprint as f64 * ratio) as u64 / mcfg.page_bytes).max(4) * mcfg.page_bytes;
     let mut machine = Machine::new(&mcfg, Box::new(FirstTouchDram::default()));
@@ -43,10 +52,7 @@ fn run_cell(w: &dyn Workload, cfg: &Config, ratio: f64, policy: &str) -> RunRepo
         machine.set_migrator(Box::new(engine));
     }
     machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
-    let mut env = porter::shim::Env::new(mcfg.page_bytes, &mut machine);
-    let checksum = w.run(&mut env);
-    drop(env);
-    std::hint::black_box(checksum);
+    machine.replay(trace);
     machine.report()
 }
 
@@ -64,19 +70,17 @@ fn main() {
     let mut series = Vec::new();
     for name in WORKLOADS {
         let w = build(name, scale).expect("registry workload");
+        // record once; the 13 cells below (1 endpoint + 3 ratios × 4
+        // policies) all replay this stream
+        let trace = record_workload(w.as_ref(), cfg.machine.page_bytes);
+        let footprint = w.footprint_hint();
         // all-DRAM endpoint for the slowdown baseline
-        let base = {
-            let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
-            let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut m);
-            std::hint::black_box(w.run(&mut env));
-            drop(env);
-            m.report()
-        };
+        let base = replay_plain(&cfg, &trace, TierKind::Dram);
         for &ratio in &DRAM_RATIOS {
             let mut outcomes: Vec<(String, RunReport)> = Vec::new();
             for policy in POLICIES {
                 let t0 = std::time::Instant::now();
-                let r = run_cell(w.as_ref(), &cfg, ratio, policy);
+                let r = run_cell(&trace, footprint, &cfg, ratio, policy);
                 eprintln!(
                     "  {name}/{ratio}/{policy}: wall {} (+{:.1}%) {}↑ {}↓ (host {:.1}s)",
                     fmt_ns(r.wall_ns),

@@ -78,6 +78,16 @@ fn main() {
     bench.section(t.render());
     gw.shutdown();
 
+    // record-once/replay-many on the serving path: only the fleet-wide
+    // first invocation of each (function, size) executed its body; all
+    // repeats replayed the stored Trace-IR
+    let (records, replays, bytes) = porter::trace::TraceStore::global().counts();
+    bench.section(format!(
+        "trace IR: {records} recorded ({}), {replays} replays — \
+         {total} invocations paid {records} live workload executions",
+        porter::util::bytes::fmt_bytes(bytes)
+    ));
+
     // PJRT inference on the same path, if artifacts exist.
     let artifact_dir = porter::runtime::ArtifactManifest::default_dir();
     if let Ok(rt) = porter::runtime::ModelRuntime::load(artifact_dir) {

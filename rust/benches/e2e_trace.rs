@@ -1,0 +1,205 @@
+//! End-to-end Trace-IR bench: record-once-replay-N vs execute-N.
+//!
+//! The tentpole claim of the trace layer is that a sweep of N cells
+//! (policy × DRAM-ratio × config) needs one live workload execution,
+//! not N: every cell replays the stored stream, and the replay-identity
+//! invariant guarantees the replayed cells report exactly what live
+//! cells would have. This bench measures both arms on the same cells,
+//! asserts the reports are field-for-field identical, asserts the reuse
+//! counter (live executions saved) is strictly positive, and times the
+//! host-side cost of each arm. The transform section exercises
+//! `truncated` (quick-mode prefixes), `scaled` (N warm invocations),
+//! and `interleave` (colocated tenants merged into one stream).
+//!
+//! Writes the series to `BENCH_trace.json` at the repo root so future
+//! PRs have a replay-speedup trajectory to compare against.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_trace
+
+use porter::bench::{fmt_ns, BenchConfig, BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::migrate::MigrationEngine;
+use porter::mem::tier::TierKind;
+use porter::placement::policies::FirstTouchDram;
+use porter::sim::machine::RunReport;
+use porter::sim::Machine;
+use porter::trace::{interleave, record_workload};
+use porter::util::json::Json;
+use porter::workloads::registry::{build, Scale};
+
+const WORKLOADS: [&str; 3] = ["pagerank", "kvstore", "dl_serve"];
+const POLICIES: [&str; 2] = ["none", "tpp"];
+const DRAM_RATIOS: [f64; 2] = [0.25, 0.5];
+
+/// Build one sweep-cell machine: DRAM capped at `ratio` × footprint,
+/// first-touch placement, the configured migration engine attached.
+fn cell_machine(cfg: &Config, footprint: u64, ratio: f64, policy: &str) -> Machine {
+    let mut mcfg = cfg.machine.clone();
+    let footprint = footprint.max(mcfg.page_bytes);
+    mcfg.dram_bytes =
+        ((footprint as f64 * ratio) as u64 / mcfg.page_bytes).max(4) * mcfg.page_bytes;
+    let mut machine = Machine::new(&mcfg, Box::new(FirstTouchDram::default()));
+    let mut migration = cfg.migration.clone();
+    migration.policy = policy.to_string();
+    migration.enabled = policy != "none";
+    if let Some(engine) = MigrationEngine::from_config(&migration) {
+        machine.set_migrator(Box::new(engine));
+    }
+    machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    machine
+}
+
+fn main() {
+    let quick = porter::bench::quick_mode();
+    let scale = if quick { Scale::Small } else { Scale::Default };
+    let cfg = Config::default();
+    let mut suite = BenchSuite::new("e2e: Trace-IR record-once-replay-N vs execute-N")
+        .with_config(BenchConfig {
+            warmup_iters: 1,
+            sample_iters: 3,
+            max_time: std::time::Duration::from_secs(60),
+        });
+
+    let cells: Vec<(f64, &str)> = DRAM_RATIOS
+        .iter()
+        .flat_map(|&r| POLICIES.iter().map(move |&p| (r, p)))
+        .collect();
+
+    let mut fig = FigureReport::new(
+        "trace-replay-speedup",
+        "host time per sweep: execute every cell vs record once + replay",
+        &["speedup_x", "execute_ms", "record_ms", "replay_ms", "reuse"],
+    );
+    let mut series = Vec::new();
+    for name in WORKLOADS {
+        let w = build(name, scale).expect("registry workload");
+        let footprint = w.footprint_hint();
+
+        // ---- arm A: execute every cell live ----
+        let t0 = std::time::Instant::now();
+        let mut live_reports: Vec<RunReport> = Vec::new();
+        for &(ratio, policy) in &cells {
+            let mut machine = cell_machine(&cfg, footprint, ratio, policy);
+            let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+            std::hint::black_box(w.run(&mut env));
+            drop(env);
+            live_reports.push(machine.report());
+        }
+        let execute_ns = t0.elapsed().as_nanos() as f64;
+
+        // ---- arm B: record once, replay every cell ----
+        let t0 = std::time::Instant::now();
+        let trace = record_workload(w.as_ref(), cfg.machine.page_bytes);
+        let record_ns = t0.elapsed().as_nanos() as f64;
+        let t0 = std::time::Instant::now();
+        let mut replay_reports: Vec<RunReport> = Vec::new();
+        for &(ratio, policy) in &cells {
+            let mut machine = cell_machine(&cfg, footprint, ratio, policy);
+            machine.replay(&trace);
+            replay_reports.push(machine.report());
+        }
+        let replay_ns = t0.elapsed().as_nanos() as f64;
+
+        // ---- the invariant and the reuse counter ----
+        for (i, (live, replayed)) in live_reports.iter().zip(&replay_reports).enumerate() {
+            assert_eq!(
+                replayed, live,
+                "{name} cell {i} ({:?}): replayed report diverged from live",
+                cells[i]
+            );
+        }
+        let live_execs_execute = cells.len() as u64;
+        let live_execs_replay = 1u64; // the recording
+        let reuse = live_execs_execute - live_execs_replay;
+        assert!(
+            reuse > 0,
+            "{name}: replayed cells must pay strictly fewer live executions than cells"
+        );
+        let speedup = execute_ns / (record_ns + replay_ns).max(1.0);
+        eprintln!(
+            "  {name:9} {} cells: execute {} vs record {} + replay {} ({speedup:.2}x, \
+             reuse {reuse})",
+            cells.len(),
+            fmt_ns(execute_ns),
+            fmt_ns(record_ns),
+            fmt_ns(replay_ns)
+        );
+        fig.row(
+            name,
+            vec![speedup, execute_ns / 1e6, record_ns / 1e6, replay_ns / 1e6, reuse as f64],
+        );
+        series.push(Json::obj(vec![
+            ("workload", Json::str(name)),
+            ("cells", Json::num(cells.len() as f64)),
+            ("live_execs_execute", Json::num(live_execs_execute as f64)),
+            ("live_execs_replay", Json::num(live_execs_replay as f64)),
+            ("reuse", Json::num(reuse as f64)),
+            ("execute_host_ns", Json::num(execute_ns)),
+            ("record_host_ns", Json::num(record_ns)),
+            ("replay_host_ns", Json::num(replay_ns)),
+            ("speedup_x", Json::num(speedup)),
+            ("events", Json::num(trace.len() as f64)),
+            ("trace_bytes", Json::num(trace.encoded_bytes() as f64)),
+            ("wall_ns", Json::num(replay_reports[0].wall_ns)),
+        ]));
+        eprintln!("TRACE-REUSE workload={name} cells={} live_execs=1 reuse={reuse}", cells.len());
+    }
+    suite.section(fig.render());
+
+    // ---- transforms: derive new streams without re-executing ----
+    let a = record_workload(build("kvstore", Scale::Small).unwrap().as_ref(), 4096);
+    let b = record_workload(build("json", Scale::Small).unwrap().as_ref(), 4096);
+    // truncate: quick-mode prefix
+    let cut = a.truncated(a.len() / 2);
+    let cut_report = {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+        m.replay(&cut);
+        m.report()
+    };
+    // scale: three warm invocations back-to-back
+    let tripled = a.scaled(3);
+    assert_eq!(tripled.n_accesses(), a.n_accesses() * 3);
+    // interleave: two tenants merged into one relocated stream
+    let merged = interleave(&[&a, &b], 256, cfg.machine.page_bytes);
+    assert_eq!(merged.n_accesses(), a.n_accesses() + b.n_accesses());
+    let merged_report = {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Cxl);
+        m.replay(&merged);
+        m.report()
+    };
+    suite.section(format!(
+        "transforms: truncate(1/2) replayed {} events in {}, scale(3) = {} accesses, \
+         interleave(kvstore+json) = {} accesses in {}",
+        cut.len(),
+        fmt_ns(cut_report.wall_ns),
+        tripled.n_accesses(),
+        merged_report.accesses,
+        fmt_ns(merged_report.wall_ns)
+    ));
+
+    // ---- host-side timing of one replay cell ----
+    let trace = record_workload(build("kvstore", Scale::Small).unwrap().as_ref(), 4096);
+    suite.bench_with_throughput("replay_kvstore_small_dram", trace.len() as f64, "event", || {
+        let mut m = Machine::all_in(&cfg.machine, TierKind::Dram);
+        m.replay(&trace);
+        m.report().accesses
+    });
+
+    // ---- persist the series for future PRs ----
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_trace")),
+        ("quick", Json::Bool(quick)),
+        ("scale", Json::str(if quick { "small" } else { "default" })),
+        ("policies", Json::arr(POLICIES.iter().map(|p| Json::str(*p)))),
+        ("dram_ratios", Json::arr(DRAM_RATIOS.iter().map(|r| Json::num(*r)))),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    suite.run();
+}

@@ -1,8 +1,14 @@
 //! Fig. 2 — "CXL has various latency impact to Serverless workloads."
 //!
-//! For every workload in the suite: run pure-CXL vs all-local-DRAM,
-//! report percent execution-time slowdown (sorted descending, like the
-//! paper's x-axis) alongside memory backend-boundness (the blue line).
+//! For every workload in the suite: execute once on the all-DRAM
+//! machine with the Trace-IR recording teed off the live run, then
+//! replay the stream for the pure-CXL endpoint (the workload algorithm
+//! executes once per workload, not once per tier). A DRAM replay is
+//! asserted field-for-field equal to the live DRAM run — the
+//! replay-identity invariant, checked here at full figure scale on all
+//! 13 workloads. Reports percent execution-time slowdown (sorted
+//! descending, like the paper's x-axis) alongside memory
+//! backend-boundness (the blue line).
 //!
 //! Paper shape to hold: slowdowns spread roughly 1–44%, ordered by
 //! boundness; graphs / linear-equation solving / DL training at the
@@ -14,7 +20,8 @@ use porter::bench::{BenchSuite, FigureReport};
 use porter::config::Config;
 use porter::mem::tier::TierKind;
 use porter::monitor::TopDown;
-use porter::placement::static_place::run_plain;
+use porter::placement::static_place::replay_plain;
+use porter::sim::Machine;
 use porter::workloads::registry::{suite, Scale};
 
 fn main() {
@@ -26,9 +33,19 @@ fn main() {
     let mut rows: Vec<(String, f64, f64, u64)> = Vec::new();
     for w in suite(scale) {
         let t0 = std::time::Instant::now();
-        let (dram, sum_d) = run_plain(&cfg, w.as_ref(), TierKind::Dram);
-        let (cxl, sum_c) = run_plain(&cfg, w.as_ref(), TierKind::Cxl);
-        assert_eq!(sum_d, sum_c, "{}: tier must not change results", w.name());
+        // live DRAM run doubles as the canonical recording
+        let mut machine = Machine::all_in(&cfg.machine, TierKind::Dram);
+        let mut env = porter::shim::Env::new_recording(cfg.machine.page_bytes, &mut machine);
+        let checksum = w.run(&mut env);
+        let mut trace = env.finish_recording().expect("recording env");
+        trace.workload = w.name().to_string();
+        trace.checksum = checksum;
+        let dram = machine.report();
+        // replay-identity at figure scale: a DRAM replay must reproduce
+        // the live DRAM report exactly before we trust the CXL replay
+        let dram_replay = replay_plain(&cfg, &trace, TierKind::Dram);
+        assert_eq!(dram_replay, dram, "{}: replay diverged from live run", w.name());
+        let cxl = replay_plain(&cfg, &trace, TierKind::Cxl);
         let slowdown = cxl.slowdown_pct_vs(&dram);
         let boundness = TopDown::from_report(&dram).offchip_bound_pct();
         eprintln!(

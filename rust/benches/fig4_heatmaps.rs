@@ -15,28 +15,32 @@ use porter::config::Config;
 use porter::mem::tier::TierKind;
 use porter::monitor::{Damon, Heatmap};
 use porter::sim::Machine;
+use porter::trace::record_workload;
 use porter::workloads::registry::{build, Scale};
 
 const WORKLOADS: [&str; 6] = ["dl_train", "linpack", "bfs", "pagerank", "chameleon", "image"];
 
+/// Record the workload's Trace-IR once, then replay it through a
+/// DAMON-observed CXL machine — the record-once/replay-many shape of
+/// the paper's own profile phase.
 fn profile(name: &str, scale: Scale, cfg: &Config) -> (Heatmap, u64) {
     let w = build(name, scale).expect("workload");
+    let trace = record_workload(w.as_ref(), cfg.machine.page_bytes);
     let mut machine = Machine::all_in(&cfg.machine, TierKind::Cxl);
     machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
     machine.attach_observer(Box::new(Damon::new(&cfg.monitor, cfg.machine.page_bytes, 0xF16)));
-    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
-    w.run(&mut env);
-    let objects: Vec<_> = env.objects().to_vec();
-    drop(env);
+    machine.replay(&trace);
     let damon =
         machine.take_observers().pop().unwrap().into_any().downcast::<Damon>().unwrap();
-    let lo = objects
+    let lo = trace
+        .objects
         .iter()
         .filter(|o| o.via_mmap)
         .map(|o| o.start)
         .min()
         .unwrap_or(porter::shim::intercept::MMAP_BASE);
-    let hi = objects.iter().filter(|o| o.via_mmap).map(|o| o.end()).max().unwrap_or(lo + 1);
+    let hi =
+        trace.objects.iter().filter(|o| o.via_mmap).map(|o| o.end()).max().unwrap_or(lo + 1);
     let map = Heatmap::from_damon(&damon.snapshots, lo, hi, 72, 20);
     (map, damon.samples_taken)
 }

@@ -1,10 +1,12 @@
 //! Fig. 5 — "Performance improvement of static placement over pure CXL
 //! for PageRank and BFS on Twitter dataset."
 //!
-//! Runs the full §3 pipeline (record with DAMON on pure CXL → hint →
-//! replay with hot objects pinned to DRAM) for BFS and PageRank on the
-//! Twitter-like RMAT graph, plus the §1 headline check: hinted placement
-//! pulls the pure-CXL slowdown down toward the all-DRAM line.
+//! Runs the full §3 pipeline (record the Trace-IR once → replay with
+//! DAMON on pure CXL → hint → replay with hot objects pinned to DRAM)
+//! for BFS and PageRank on the Twitter-like RMAT graph, plus the §1
+//! headline check: hinted placement pulls the pure-CXL slowdown down
+//! toward the all-DRAM line. Each workload algorithm executes exactly
+//! once; every pass is an IR replay.
 //!
 //! Paper shape: PageRank up to ~26% execution-time reduction vs pure
 //! CXL; headline: ~30% slowdown (pure CXL) cut to a small residual.

@@ -13,34 +13,32 @@ use porter::bench::{BenchSuite, FigureReport};
 use porter::config::Config;
 use porter::mem::tier::TierKind;
 use porter::sim::colocate;
-use porter::trace::{RecordedTrace, TraceRecorder};
+use porter::trace::{record_workload, AccessTrace};
 use porter::workloads::dl::{DlServe, DlTrain};
 use porter::workloads::matmul::MatMul;
-use porter::workloads::Workload;
-
-fn record(w: &dyn Workload, cfg: &Config) -> RecordedTrace {
-    let mut rec = TraceRecorder::new();
-    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut rec);
-    w.run(&mut env);
-    rec.finish()
-}
 
 fn main() {
     let quick = porter::bench::quick_mode();
     let cfg = Config::default();
     // ResNet-scale weights (80MiB/tenant) so tenants genuinely contend;
     // see examples/colocation.rs for the same scenario with commentary.
+    // Each tenant's Trace-IR is recorded once; every colocation cell
+    // (pair × tier) is a relocated replay of the same recordings. Quick
+    // mode additionally truncates the training stream instead of
+    // re-recording a smaller instance.
     let layers = vec![768, 4096, 4096, 10];
-    let (req, steps, mm_n) = if quick { (6, 1, 512) } else { (30, 4, 1536) };
-    let serve = record(
+    let (req, mm_n) = if quick { (6, 512) } else { (30, 1536) };
+    let serve = record_workload(
         &DlServe { layers: layers.clone(), batch: 8, requests: req, flops_per_cycle: 16 },
-        &cfg,
+        cfg.machine.page_bytes,
     );
-    let train = record(
-        &DlTrain { layers: layers.clone(), batch: 64, steps, flops_per_cycle: 16 },
-        &cfg,
+    let full_train = record_workload(
+        &DlTrain { layers: layers.clone(), batch: 64, steps: 4, flops_per_cycle: 16 },
+        cfg.machine.page_bytes,
     );
-    let mm = record(&MatMul::new(mm_n), &cfg);
+    let train: AccessTrace =
+        if quick { full_train.truncated(full_train.len() / 4) } else { full_train };
+    let mm = record_workload(&MatMul::new(mm_n), cfg.machine.page_bytes);
 
     let mut bench = BenchSuite::new("fig7: colocation slowdown, DRAM vs CXL");
     let mut fig = FigureReport::new(
@@ -48,7 +46,7 @@ fn main() {
         "dl_serve slowdown (%) when colocated, vs running standalone",
         &["cxl_slowdown_pct", "dram_slowdown_pct"],
     );
-    let pairs: [(&str, &RecordedTrace); 3] =
+    let pairs: [(&str, &AccessTrace); 3] =
         [("with dl_serve", &serve), ("with dl_train", &train), ("with matmul", &mm)];
     let mut all_hold = true;
     for (label, other) in pairs {

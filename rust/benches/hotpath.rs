@@ -123,5 +123,14 @@ fn main() {
         m.report().accesses
     });
 
+    // 7. trace-IR serialization round-trip (delta-encoded JSON) over a
+    //    truncated stream — the `porter-cli trace record --out` path
+    let ir_slice = trace.truncated(100_000);
+    bench.bench_with_throughput("trace_ir_json_roundtrip", ir_slice.len() as f64, "event", || {
+        let text = ir_slice.to_json().to_string_compact();
+        let parsed = porter::util::json::Json::parse(&text).unwrap();
+        porter::trace::AccessTrace::from_json(&parsed).unwrap().len()
+    });
+
     bench.run();
 }

@@ -154,6 +154,12 @@ pub struct ClusterReport {
     pub demotions: u64,
     pub ping_pongs: u64,
     pub migration_bytes: u64,
+    /// Trace-IR rollup over the fleet's real engine runs: canonical
+    /// recordings, replays served from the process-wide store (a node
+    /// replaying a peer's profile run counts here), and recorded bytes.
+    pub trace_records: u64,
+    pub trace_replays: u64,
+    pub trace_bytes: u64,
     /// Sandbox-lifecycle rollup. With the lifecycle layer disabled the
     /// start counters fall back to the legacy hint-based cold/warm
     /// split and the snapshot fields stay zero.
@@ -273,6 +279,15 @@ impl ClusterReport {
                 self.demotions,
                 self.ping_pongs,
                 fmt_bytes(self.migration_bytes)
+            ),
+        ]);
+        t.row(vec![
+            "trace IR".into(),
+            format!(
+                "{} recorded ({}), {} replays",
+                self.trace_records,
+                fmt_bytes(self.trace_bytes),
+                self.trace_replays
             ),
         ]);
         t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
@@ -746,6 +761,9 @@ impl Cluster {
             demotions: self.demotions,
             ping_pongs: self.ping_pongs,
             migration_bytes: self.migration_bytes,
+            trace_records: self.nodes.iter().map(|n| n.trace_records).sum(),
+            trace_replays: self.nodes.iter().map(|n| n.trace_replays).sum(),
+            trace_bytes: self.nodes.iter().map(|n| n.trace_bytes).sum(),
             lifecycle_enabled: self.cfg.lifecycle.enabled,
             cold_starts: self.nodes.iter().map(|n| n.cold_starts).sum(),
             warm_starts: self.nodes.iter().map(|n| n.warm_starts).sum(),
@@ -851,6 +869,22 @@ mod tests {
         cfg.cluster.functions = POPULATION_ORDER.len() + 1;
         let err = arrivals_from_config(&cfg).unwrap_err();
         assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn trace_ir_amortizes_engine_runs() {
+        let r = simulate(&small_cfg()).unwrap();
+        // every (function, placement-mode) shape needs a real engine
+        // run, but only the fleet-wide first one per function executes
+        // the workload — the rest replay the stored trace (cross-node
+        // included), so replays must dominate records
+        assert!(r.trace_replays > 0, "warm/cross-node engine runs must replay");
+        assert!(
+            r.trace_records <= small_cfg().cluster.functions as u64,
+            "at most one canonical recording per function fleet-wide, got {}",
+            r.trace_records
+        );
+        assert!(r.render().contains("trace IR"));
     }
 
     #[test]

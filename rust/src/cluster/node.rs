@@ -13,6 +13,13 @@
 //! engine on the node's servers, producing a measured [`ServiceShape`];
 //! repeat invocations replay that shape in virtual time, with the
 //! CXL-stall portion inflated by the current pool contention factor.
+//! The engine runs themselves consult the process-wide
+//! [`crate::trace::TraceStore`]: only the fleet-wide first execution of
+//! a `(workload, size)` pair runs the algorithm live (recording its
+//! Trace-IR); every other engine run — including another node's profile
+//! run of the same function — replays the stored stream, with
+//! replay-identity guaranteeing bit-equal reports (counted in
+//! `trace_records` / `trace_replays` / `trace_bytes`).
 //! This keeps a 16-node × thousands-of-arrivals fleet run fast and —
 //! because shapes, hints, and queues evolve only with the deterministic
 //! arrival order — exactly reproducible under a fixed seed.
@@ -151,6 +158,13 @@ pub struct Node {
     pub restores: u64,
     pub cold_starts: u64,
     pub peak_dram_bytes: u64,
+    /// Trace-IR counters over this node's real engine runs: canonical
+    /// recordings captured here, replays served from the process-wide
+    /// store (including traces recorded by *other* nodes — the
+    /// cross-node profile-run amortization), and recorded bytes.
+    pub trace_records: u64,
+    pub trace_replays: u64,
+    pub trace_bytes: u64,
     next_exec_id: u64,
 }
 
@@ -199,6 +213,9 @@ impl Node {
             restores: 0,
             cold_starts: 0,
             peak_dram_bytes: 0,
+            trace_records: 0,
+            trace_replays: 0,
+            trace_bytes: 0,
             next_exec_id: 0,
         }
     }
@@ -259,6 +276,12 @@ impl Node {
         if out.profiled {
             self.cold_runs += 1;
             self.tuner.drain();
+        }
+        if out.trace_replayed {
+            self.trace_replays += 1;
+        } else if out.trace_recorded_bytes > 0 {
+            self.trace_records += 1;
+            self.trace_bytes += out.trace_recorded_bytes;
         }
         self.peak_dram_bytes = self.peak_dram_bytes.max(out.report.peak_dram_bytes);
         out

@@ -279,6 +279,31 @@ impl MigrationConfig {
     }
 }
 
+/// Trace-IR knobs (`trace::` — the record-once/replay-many core).
+///
+/// Default-on: the first execution of a `(workload, size)` pair records
+/// its canonical [`crate::trace::AccessTrace`]; every later invocation
+/// replays it, with the replay-identity invariant guaranteeing
+/// identical `RunReport`s and checksums. `live_execution = true` is the
+/// escape hatch that restores legacy re-execution on every invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch for the Trace-IR record/replay path.
+    pub enabled: bool,
+    /// Force live workload execution on every invocation (bypasses the
+    /// `TraceStore` entirely; legacy behaviour).
+    pub live_execution: bool,
+    /// Upper bound on cached canonical traces; keys beyond the bound
+    /// record but are not retained.
+    pub max_cached: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, live_execution: false, max_cached: 128 }
+    }
+}
+
 /// Function-lifecycle knobs (`lifecycle::` — warm pools, keep-alive
 /// policies, and CXL-resident snapshots).
 ///
@@ -429,6 +454,7 @@ pub struct Config {
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
     pub migration: MigrationConfig,
+    pub trace: TraceConfig,
     pub lifecycle: LifecycleConfig,
     pub cluster: ClusterConfig,
 }
@@ -499,6 +525,9 @@ impl Config {
                 "migration.buckets" => cfg.migration.buckets = value.as_u64()? as usize,
                 "migration.target_occupancy" => cfg.migration.target_occupancy = value.as_f64()?,
                 "migration.ping_pong_epochs" => cfg.migration.ping_pong_epochs = value.as_u64()?,
+                "trace.enabled" => cfg.trace.enabled = value.as_bool()?,
+                "trace.live_execution" => cfg.trace.live_execution = value.as_bool()?,
+                "trace.max_cached" => cfg.trace.max_cached = value.as_u64()? as usize,
                 "lifecycle.enabled" => cfg.lifecycle.enabled = value.as_bool()?,
                 "lifecycle.warm_pool" => {
                     cfg.lifecycle.warm_pool_bytes = parse_bytes(value.as_str()?)?
@@ -634,6 +663,9 @@ impl Config {
         }
         if mg.buckets == 0 {
             return Err("migration.buckets must be >= 1".into());
+        }
+        if self.trace.max_cached == 0 {
+            return Err("trace.max_cached must be >= 1".into());
         }
         let lc = &self.lifecycle;
         if !matches!(lc.policy.as_str(), "ttl" | "lru" | "histogram") {
@@ -810,6 +842,29 @@ target_occupancy = 0.8
             "[migration]\nwatermark_low = 0.5\nwatermark_high = 0.1\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_trace_section() {
+        let text = "[trace]\nlive_execution = true\nmax_cached = 16\n";
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.trace.enabled, "untouched fields keep defaults");
+        assert!(c.trace.live_execution);
+        assert_eq!(c.trace.max_cached, 16);
+    }
+
+    #[test]
+    fn trace_replay_is_the_default() {
+        let c = Config::default();
+        assert!(c.trace.enabled);
+        assert!(!c.trace.live_execution, "replay is default-on; live_execution is the escape");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_trace_values() {
+        assert!(Config::from_toml_str("[trace]\nmax_cached = 0\n").is_err());
+        assert!(Config::from_toml_str("[trace]\nnonsense = 1\n").is_err());
     }
 
     #[test]

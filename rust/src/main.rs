@@ -7,7 +7,12 @@
 //!           policy (from the `[migration]` config section or --policy)
 //!           the epoch engine promotes/demotes pages at runtime; with
 //!           --keep-warm the shim's sandbox capture + warm-pool replay
-//!           report what keep-alive amortizes
+//!           report what keep-alive amortizes; with the Trace-IR on
+//!           (default) the run records its stream and verifies replay
+//!           identity (TRACE counter line)
+//!   trace   record <workload> [--out F]  capture the canonical Trace-IR
+//!           replay [<w>|--in F] [--tier]  drive a machine from the IR
+//!           info   [<w>|--in F]           IR stats + per-phase summary
 //!   profile <workload>                   DAMON heatmap + boundness
 //!   place   <workload>                   §3 profile → static placement
 //!   serve   [--requests N]               Porter serving demo (DL path)
@@ -39,13 +44,14 @@ fn main() {
         Some("config") => cmd_config(&args),
         Some("list") => cmd_list(),
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("profile") => cmd_profile(&args),
         Some("place") => cmd_place(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         _ => {
             eprintln!(
-                "usage: porter-cli <config|list|run|profile|place|serve|cluster> [options]\n\
+                "usage: porter-cli <config|list|run|trace|profile|place|serve|cluster> [options]\n\
                  see `cargo bench` for the paper-figure harnesses"
             );
             2
@@ -99,31 +105,14 @@ fn workload_arg(args: &Args, scale: Scale) -> Option<WorkloadBox> {
     }
 }
 
-fn cmd_run(args: &Args) -> i32 {
+/// Build the `run`/`trace replay` machine: everything in `tier`, the
+/// epoch migration engine attached when enabled. Deterministic — two
+/// calls with the same config produce machines whose runs over the same
+/// stream are bit-identical, which is what the replay verification in
+/// [`cmd_run`] relies on.
+fn build_run_machine(cfg: &Config, tier: TierKind) -> (porter::sim::Machine, Option<String>) {
     use porter::mem::migrate::MigrationEngine;
     use porter::sim::Machine;
-    let mut cfg = load_config(args);
-    let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
-    let tier = match args.opt_or("tier", "dram") {
-        "dram" => TierKind::Dram,
-        "cxl" => TierKind::Cxl,
-        other => {
-            eprintln!("unknown tier {other:?} (dram|cxl)");
-            return 2;
-        }
-    };
-    if let Some(policy) = args.opt("policy") {
-        cfg.migration.policy = policy.to_string();
-        cfg.migration.enabled = policy != "none";
-        if let Err(e) = cfg.validate() {
-            eprintln!("config error: {e}");
-            return 2;
-        }
-    }
-    // the epoch engine only matters when it is enabled: pages start in
-    // `tier` and migrate as heatmap samples accumulate. Legacy [porter]
-    // knobs bridge in exactly as on the serving path, so `run` numbers
-    // stay comparable to `serve`/`cluster` for the same config file.
     let mut machine = Machine::all_in(&cfg.machine, tier);
     let mig_cfg = cfg.migration.with_porter_fallbacks(&cfg.porter);
     let engine = MigrationEngine::from_config(&mig_cfg);
@@ -132,12 +121,64 @@ fn cmd_run(args: &Args) -> i32 {
         machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
         machine.set_migrator(Box::new(engine));
     }
-    let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
-    let checksum = w.run(&mut env);
-    // the object log is only needed for the --keep-warm sandbox capture
-    let objects: Vec<porter::shim::MemoryObject> =
-        if args.flag("keep-warm") { env.objects().to_vec() } else { Vec::new() };
-    drop(env);
+    (machine, policy_name)
+}
+
+fn tier_arg(args: &Args) -> Option<TierKind> {
+    match args.opt_or("tier", "dram") {
+        "dram" => Some(TierKind::Dram),
+        "cxl" => Some(TierKind::Cxl),
+        other => {
+            eprintln!("unknown tier {other:?} (dram|cxl)");
+            None
+        }
+    }
+}
+
+fn apply_policy_arg(cfg: &mut Config, args: &Args) -> Result<(), String> {
+    if let Some(policy) = args.opt("policy") {
+        cfg.migration.policy = policy.to_string();
+        cfg.migration.enabled = policy != "none";
+        cfg.validate()?;
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let mut cfg = load_config(args);
+    let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
+    let Some(tier) = tier_arg(args) else { return 2 };
+    if let Err(e) = apply_policy_arg(&mut cfg, args) {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+    // the epoch engine only matters when it is enabled: pages start in
+    // `tier` and migrate as heatmap samples accumulate. Legacy [porter]
+    // knobs bridge in exactly as on the serving path, so `run` numbers
+    // stay comparable to `serve`/`cluster` for the same config file.
+    let (mut machine, policy_name) = build_run_machine(&cfg, tier);
+    // with the Trace-IR on (the default), the measured run records the
+    // canonical stream; a verification replay below proves replay
+    // identity on this exact invocation
+    let trace_on = cfg.trace.enabled && !cfg.trace.live_execution;
+    let (checksum, objects, trace) = if trace_on {
+        let mut env = porter::shim::Env::new_recording(cfg.machine.page_bytes, &mut machine);
+        let checksum = w.run(&mut env);
+        let objects: Vec<porter::shim::MemoryObject> =
+            if args.flag("keep-warm") { env.objects().to_vec() } else { Vec::new() };
+        let mut t = env.finish_recording().expect("recording env");
+        t.workload = w.name().to_string();
+        t.checksum = checksum;
+        (checksum, objects, Some(t))
+    } else {
+        let mut env = porter::shim::Env::new(cfg.machine.page_bytes, &mut machine);
+        let checksum = w.run(&mut env);
+        // the object log is only needed for the --keep-warm capture
+        let objects: Vec<porter::shim::MemoryObject> =
+            if args.flag("keep-warm") { env.objects().to_vec() } else { Vec::new() };
+        drop(env);
+        (checksum, objects, None)
+    };
     let report = machine.report();
     let td = TopDown::from_report(&report);
     let mut t = Table::new(&["metric", "value"]).left_first();
@@ -173,6 +214,26 @@ fn cmd_run(args: &Args) -> i32 {
         report.ping_pongs,
         report.migration_bytes
     );
+    // replay verification: drive an identically configured machine from
+    // the recording and require a field-for-field identical report —
+    // the replay-identity invariant, checked on every `run` (CI greps
+    // the TRACE counter line so a silently-dead replay path fails)
+    if let Some(trace) = &trace {
+        let (mut m2, _) = build_run_machine(&cfg, tier);
+        m2.replay(trace);
+        let replayed = m2.report();
+        let identical = replayed == report && trace.checksum == checksum;
+        println!(
+            "TRACE records=1 replays=1 bytes={} events={} replay_identical={}",
+            trace.encoded_bytes(),
+            trace.len(),
+            identical
+        );
+        if !identical {
+            eprintln!("error: replayed run diverged from the live run (replay-identity broken)");
+            return 1;
+        }
+    }
     if args.flag("keep-warm") {
         keep_warm_report(&cfg, w.name(), &objects, &report);
     }
@@ -223,6 +284,144 @@ fn keep_warm_report(
         pool.budget_bytes(),
         pool.policy_name()
     );
+}
+
+/// Load a trace from `--in FILE` (the serialized IR) or record one from
+/// the named registry workload.
+fn trace_source(args: &Args, cfg: &Config) -> Result<porter::trace::AccessTrace, String> {
+    use porter::trace::AccessTrace;
+    if let Some(path) = args.opt("in") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let j = porter::util::json::Json::parse(&text).map_err(|e| e.to_string())?;
+        return AccessTrace::from_json(&j);
+    }
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| "expected a workload name or --in FILE".to_string())?;
+    let w = build(name, scale_of(args))
+        .ok_or_else(|| format!("unknown workload {name:?}; see `porter-cli list`"))?;
+    Ok(porter::trace::record_workload(w.as_ref(), cfg.machine.page_bytes))
+}
+
+fn print_trace_info(trace: &porter::trace::AccessTrace) {
+    let mut t = Table::new(&["trace", "value"]).left_first();
+    t.row(vec!["ir version".into(), trace.version.to_string()]);
+    t.row(vec![
+        "workload".into(),
+        if trace.workload.is_empty() { "(anonymous)".into() } else { trace.workload.clone() },
+    ]);
+    t.row(vec!["events".into(), trace.len().to_string()]);
+    t.row(vec!["accesses".into(), trace.n_accesses().to_string()]);
+    t.row(vec![
+        "bytes accessed".into(),
+        porter::util::bytes::fmt_bytes(trace.bytes_accessed()),
+    ]);
+    t.row(vec!["compute cycles".into(), trace.compute_cycles().to_string()]);
+    t.row(vec!["objects (interned)".into(), trace.objects.len().to_string()]);
+    t.row(vec!["phases (interned)".into(), trace.phases.len().to_string()]);
+    t.row(vec!["page size".into(), porter::util::bytes::fmt_bytes(trace.page_bytes)]);
+    t.row(vec![
+        "encoded size".into(),
+        porter::util::bytes::fmt_bytes(trace.encoded_bytes()),
+    ]);
+    t.row(vec!["checksum".into(), format!("{:#018x}", trace.checksum)]);
+    println!("{}", t.render());
+    let summaries = trace.phase_summaries();
+    if !summaries.is_empty() {
+        let headers = ["phase", "accesses", "bytes", "compute cycles", "allocs", "frees"];
+        let mut pt = Table::new(&headers).left_first();
+        for s in &summaries {
+            pt.row(vec![
+                s.name.clone(),
+                s.accesses.to_string(),
+                porter::util::bytes::fmt_bytes(s.bytes),
+                s.compute_cycles.to_string(),
+                s.allocs.to_string(),
+                s.frees.to_string(),
+            ]);
+        }
+        println!("{}", pt.render());
+    }
+}
+
+/// `porter-cli trace record|replay|info` — expose the Trace-IR for
+/// inspection and cross-run reuse.
+fn cmd_trace(args: &Args) -> i32 {
+    let mut cfg = load_config(args);
+    let action = args.positional.first().map(String::as_str);
+    let trace = match action {
+        Some("record" | "replay" | "info") => match trace_source(args, &cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        _ => {
+            eprintln!(
+                "usage: porter-cli trace record <workload> [--full] [--out FILE]\n\
+                 \x20      porter-cli trace replay [<workload>] [--in FILE] [--tier dram|cxl] \
+                 [--policy P]\n\
+                 \x20      porter-cli trace info [<workload>] [--in FILE]"
+            );
+            return 2;
+        }
+    };
+    match action {
+        Some("record") => {
+            print_trace_info(&trace);
+            if let Some(path) = args.opt("out") {
+                match std::fs::write(path, trace.to_json().to_string_pretty()) {
+                    Ok(()) => println!("wrote {path}"),
+                    Err(e) => {
+                        eprintln!("error: write {path}: {e}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+        Some("replay") => {
+            let Some(tier) = tier_arg(args) else { return 2 };
+            if let Err(e) = apply_policy_arg(&mut cfg, args) {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+            let (mut machine, policy_name) = build_run_machine(&cfg, tier);
+            let t0 = std::time::Instant::now();
+            machine.replay(&trace);
+            let report = machine.report();
+            let workload_label = if trace.workload.is_empty() {
+                "(anonymous)".to_string()
+            } else {
+                trace.workload.clone()
+            };
+            let mut t = Table::new(&["metric", "value"]).left_first();
+            t.row(vec!["workload".into(), workload_label]);
+            t.row(vec!["tier".into(), tier.name().into()]);
+            t.row(vec![
+                "migration policy".into(),
+                policy_name.unwrap_or_else(|| "off".to_string()),
+            ]);
+            t.row(vec!["virtual time".into(), porter::bench::fmt_ns(report.wall_ns)]);
+            t.row(vec!["accesses".into(), report.accesses.to_string()]);
+            t.row(vec!["host replay time".into(), format!("{:?}", t0.elapsed())]);
+            t.row(vec!["checksum (recorded)".into(), format!("{:#018x}", trace.checksum)]);
+            println!("{}", t.render());
+            println!(
+                "TRACE records={} replays=1 bytes={} events={}",
+                if args.opt("in").is_some() { 0 } else { 1 },
+                trace.encoded_bytes(),
+                trace.len()
+            );
+            0
+        }
+        _ => {
+            print_trace_info(&trace);
+            0
+        }
+    }
 }
 
 fn cmd_profile(args: &Args) -> i32 {

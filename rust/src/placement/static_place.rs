@@ -8,6 +8,7 @@ use crate::monitor::damon::Damon;
 use crate::placement::hints::PlacementHint;
 use crate::placement::policies::HintedPlacer;
 use crate::sim::machine::{Machine, RunReport};
+use crate::trace::{record_workload, AccessTrace};
 use crate::workloads::Workload;
 
 /// Results of the profile→place experiment for one workload.
@@ -39,26 +40,34 @@ impl StaticPlacementResult {
     }
 }
 
-/// Run the full §3 experiment for one workload.
-///
-/// Pass 1 (record): run on the pure-CXL machine with DAMON attached —
-/// the paper's record phase also executes in the emulated-CXL testbed.
-/// Pass 2 (replay): regenerate hints from DAMON + the shim log, then run
-/// again with hot objects statically pinned to DRAM. Endpoints run
-/// without monitoring. The workload's own determinism (fixed seeds,
-/// ASLR-off address layout) makes the two passes see identical objects.
+/// Run the full §3 experiment for one workload: record its canonical
+/// trace once, then [`profile_and_place_trace`] replays it for every
+/// pass — the workload algorithm executes exactly once.
 pub fn profile_and_place(cfg: &Config, workload: &dyn Workload) -> StaticPlacementResult {
+    let trace = record_workload(workload, cfg.machine.page_bytes);
+    profile_and_place_trace(cfg, &trace)
+}
+
+/// The §3 pipeline over a pre-recorded trace — what the ablation and
+/// figure benches call per sweep cell so the workload is executed once
+/// per *workload*, not once per cell.
+///
+/// Pass 1 (record): replay on the pure-CXL machine with DAMON attached
+/// — the paper's record phase also executes in the emulated-CXL
+/// testbed. Pass 2 (replay): regenerate hints from DAMON + the trace's
+/// interned object table, then replay again with hot objects statically
+/// pinned to DRAM. Endpoints replay without monitoring. The IR stream
+/// is identical across passes by construction — the property the
+/// paper gets from ASLR-off determinism, here structural.
+pub fn profile_and_place_trace(cfg: &Config, trace: &AccessTrace) -> StaticPlacementResult {
     // --- endpoints ---
-    let (all_dram, sum_dram) = run_plain(cfg, workload, TierKind::Dram);
+    let all_dram = replay_plain(cfg, trace, TierKind::Dram);
 
     // --- record phase (pure CXL + DAMON) ---
     let mut machine = Machine::all_in(&cfg.machine, TierKind::Cxl);
     machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
     machine.attach_observer(Box::new(Damon::new(&cfg.monitor, cfg.machine.page_bytes, 0xDA11)));
-    let mut env = crate::shim::env::Env::new(cfg.machine.page_bytes, &mut machine);
-    let sum_cxl = workload.run(&mut env);
-    let objects: Vec<_> = env.objects().to_vec();
-    drop(env);
+    machine.replay(trace);
     let all_cxl = machine.report();
     let damon = machine
         .take_observers()
@@ -70,27 +79,25 @@ pub fn profile_and_place(cfg: &Config, workload: &dyn Workload) -> StaticPlaceme
 
     // --- hint generation (offline tuner step) ---
     let hint = PlacementHint::generate(
-        workload.name(),
+        &trace.workload,
         &damon,
-        &objects,
+        &trace.objects,
         cfg.porter.dram_budget_frac,
         cfg.porter.hot_threshold,
     );
 
     // --- replay phase (static placement by hint) ---
     let mut machine = Machine::new(&cfg.machine, Box::new(HintedPlacer::new(hint.clone())));
-    let mut env = crate::shim::env::Env::new(cfg.machine.page_bytes, &mut machine);
-    let sum_hint = workload.run(&mut env);
-    drop(env);
+    machine.replay(trace);
     let hinted = machine.report();
 
     StaticPlacementResult {
-        workload: workload.name().to_string(),
+        workload: trace.workload.clone(),
         all_dram,
         all_cxl,
         hinted,
         hint,
-        checksums: [sum_dram, sum_cxl, sum_hint],
+        checksums: [trace.checksum; 3],
     }
 }
 
@@ -103,11 +110,32 @@ pub fn run_plain(cfg: &Config, workload: &dyn Workload, tier: TierKind) -> (RunR
     (machine.report(), sum)
 }
 
+/// One unmonitored *replay* with everything in a single tier — the
+/// record-once/replay-many counterpart of [`run_plain`].
+pub fn replay_plain(cfg: &Config, trace: &AccessTrace, tier: TierKind) -> RunReport {
+    let mut machine = Machine::all_in(&cfg.machine, tier);
+    machine.replay(trace);
+    machine.report()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::workloads::graph::rmat;
     use crate::workloads::pagerank::PageRank;
+
+    #[test]
+    fn replayed_endpoints_match_live_runs() {
+        let cfg = Config::default();
+        let g = rmat(12, 6, crate::workloads::registry::GRAPH_SEED);
+        let w = PageRank::new(g, 1);
+        let trace = record_workload(&w, cfg.machine.page_bytes);
+        for tier in [TierKind::Dram, TierKind::Cxl] {
+            let (live, sum) = run_plain(&cfg, &w, tier);
+            assert_eq!(trace.checksum, sum, "recorded checksum matches the live run");
+            assert_eq!(replay_plain(&cfg, &trace, tier), live, "{tier:?}: replay-identity");
+        }
+    }
 
     #[test]
     fn static_placement_recovers_most_of_cxl_penalty() {

@@ -11,7 +11,9 @@
 
 use std::time::Instant;
 
-use crate::config::{Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig};
+use crate::config::{
+    Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig, TraceConfig,
+};
 use crate::mem::migrate::MigrationEngine;
 use crate::mem::tier::TierKind;
 use crate::monitor::damon::Damon;
@@ -20,6 +22,7 @@ use crate::porter::gateway::FunctionSpec;
 use crate::porter::sysload::SystemLoad;
 use crate::porter::tuner::{OfflineTuner, ProfileData};
 use crate::sim::machine::{Machine, RunReport};
+use crate::trace::{TraceKey, TraceStore};
 
 /// Engine-side slice of the config (cloneable into worker threads).
 #[derive(Debug, Clone)]
@@ -28,6 +31,7 @@ pub struct EngineConfig {
     pub monitor: MonitorConfig,
     pub porter: PorterConfig,
     pub migration: MigrationConfig,
+    pub trace: TraceConfig,
 }
 
 impl From<&Config> for EngineConfig {
@@ -37,6 +41,7 @@ impl From<&Config> for EngineConfig {
             monitor: cfg.monitor.clone(),
             porter: cfg.porter.clone(),
             migration: cfg.migration.clone(),
+            trace: cfg.trace.clone(),
         }
     }
 }
@@ -57,6 +62,12 @@ pub struct InvocationOutcome {
     /// Shim-captured sandbox state (object list + per-tier residency)
     /// — what a warm pool keeps alive and a snapshot persists.
     pub sandbox: crate::shim::SandboxImage,
+    /// This invocation replayed a stored Trace-IR stream instead of
+    /// executing the function body.
+    pub trace_replayed: bool,
+    /// Size of the canonical trace this run recorded into the
+    /// `TraceStore` (0 when it replayed or ran live-only).
+    pub trace_recorded_bytes: u64,
     /// Host-side execution time of the simulation (engine overhead
     /// accounting, not part of the simulated metric).
     pub host_micros: u64,
@@ -138,11 +149,44 @@ pub fn run_invocation(
         }
     }
 
-    // run the function
-    let mut env = crate::shim::env::Env::new(cfg.machine.page_bytes, &mut machine);
-    let checksum = spec.body.run(&mut env);
-    let objects: Vec<_> = env.objects().to_vec();
-    drop(env);
+    // run the function: replay the canonical Trace-IR stream when one
+    // exists (record-once/replay-many), else execute live — in
+    // recording mode, so this run's stream becomes the canonical trace
+    // for every later invocation of the same (workload, size) pair.
+    // `[trace] live_execution = true` restores unconditional
+    // re-execution.
+    let use_replay = cfg.trace.enabled && !cfg.trace.live_execution;
+    let mut trace_replayed = false;
+    let mut trace_recorded_bytes = 0u64;
+    let (checksum, objects) = if use_replay {
+        let store = TraceStore::global();
+        let key = TraceKey::of(spec.body.as_ref(), cfg.machine.page_bytes);
+        match store.get(&key) {
+            Some(trace) => {
+                machine.replay(&trace);
+                trace_replayed = true;
+                (trace.checksum, trace.objects.clone())
+            }
+            None => {
+                let mut env =
+                    crate::shim::env::Env::new_recording(cfg.machine.page_bytes, &mut machine);
+                let checksum = spec.body.run(&mut env);
+                let objects: Vec<_> = env.objects().to_vec();
+                let mut trace = env.finish_recording().expect("recording env");
+                trace.workload = spec.body.name().to_string();
+                trace.checksum = checksum;
+                trace_recorded_bytes = trace.encoded_bytes();
+                store.insert(key, trace, cfg.trace.max_cached);
+                (checksum, objects)
+            }
+        }
+    } else {
+        let mut env = crate::shim::env::Env::new(cfg.machine.page_bytes, &mut machine);
+        let checksum = spec.body.run(&mut env);
+        let objects: Vec<_> = env.objects().to_vec();
+        drop(env);
+        (checksum, objects)
+    };
     let report = machine.report();
     // sandbox state capture: the object list plus where the run's
     // working set peaked — the lifecycle layer keeps/snapshots this.
@@ -185,6 +229,8 @@ pub fn run_invocation(
         profiled,
         slo_target_ns,
         sandbox,
+        trace_replayed,
+        trace_recorded_bytes,
         host_micros: started.elapsed().as_micros() as u64,
     }
 }
@@ -280,6 +326,26 @@ mod tests {
             run_invocation(1, &spec, &ecfg, &sysload, &tuner)
         };
         assert_eq!(off.report.promotions, 0);
+    }
+
+    #[test]
+    fn trace_store_replays_repeat_invocations() {
+        let (ecfg, sysload, tuner) = setup();
+        // params unique to this test so the first run is a recording
+        // regardless of test interleaving in the shared process store
+        let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(30_000, 60_000)));
+        let first = run_invocation(1, &spec, &ecfg, &sysload, &tuner);
+        let second = run_invocation(2, &spec, &ecfg, &sysload, &tuner);
+        assert!(second.trace_replayed, "second invocation must replay the stored trace");
+        assert_eq!(second.trace_recorded_bytes, 0);
+        assert_eq!(first.checksum, second.checksum);
+        // escape hatch: live execution bypasses the store both ways
+        let mut live_cfg = ecfg.clone();
+        live_cfg.trace.live_execution = true;
+        let third = run_invocation(3, &spec, &live_cfg, &sysload, &tuner);
+        assert!(!third.trace_replayed);
+        assert_eq!(third.trace_recorded_bytes, 0);
+        assert_eq!(third.checksum, first.checksum, "live and replayed runs agree");
     }
 
     #[test]

@@ -64,6 +64,14 @@ impl Server {
                                 metrics.counter("migration.demotions").add(r.demotions);
                                 metrics.counter("migration.ping_pongs").add(r.ping_pongs);
                                 metrics.counter("migration.bytes").add(r.migration_bytes);
+                                if outcome.trace_replayed {
+                                    metrics.counter("trace.replays").inc();
+                                } else if outcome.trace_recorded_bytes > 0 {
+                                    metrics.counter("trace.records").inc();
+                                    metrics
+                                        .counter("trace.bytes")
+                                        .add(outcome.trace_recorded_bytes);
+                                }
                                 metrics.histogram("invocation.wall_ns").record(r.wall_ns as u64);
                                 outstanding.fetch_sub(1, Ordering::Relaxed);
                                 let _ = done.send(outcome);
@@ -121,6 +129,13 @@ mod tests {
         assert_eq!(server.load(), 0);
         assert_eq!(server.metrics.counter("invocations").get(), 8);
         assert_eq!(server.metrics.histogram("invocation.wall_ns").count(), 8);
+        // record-once/replay-many: every job either recorded the
+        // canonical trace or replayed it (racing workers may record
+        // more than once; repeats must replay)
+        let records = server.metrics.counter("trace.records").get();
+        let replays = server.metrics.counter("trace.replays").get();
+        assert_eq!(records + replays, 8);
+        assert!(replays > 0, "repeat invocations must replay the stored trace");
         server.shutdown();
     }
 

@@ -109,6 +109,8 @@ mod tests {
             profiled: false,
             slo_target_ns: target,
             sandbox: crate::shim::SandboxImage::default(),
+            trace_replayed: false,
+            trace_recorded_bytes: 0,
             host_micros: 0,
         }
     }

@@ -9,18 +9,49 @@
 
 use crate::shim::intercept::InterceptingAllocator;
 use crate::shim::object::{MemoryObject, ObjectId};
-use crate::trace::Sink;
+use crate::trace::{AccessTrace, Sink, TraceRecorder};
 
 /// Instrumented process: allocator + sink + counters.
+///
+/// In *recording mode* ([`Env::new_recording`]) every event additionally
+/// streams into an exact [`TraceRecorder`], so the live run doubles as
+/// the canonical Trace-IR capture — record once, replay everywhere —
+/// at the cost of one buffered copy of the event stream.
 pub struct Env<'s> {
     alloc: InterceptingAllocator,
     sink: &'s mut dyn Sink,
+    recorder: Option<TraceRecorder>,
     accesses: u64,
 }
 
 impl<'s> Env<'s> {
     pub fn new(page_bytes: u64, sink: &'s mut dyn Sink) -> Env<'s> {
-        Env { alloc: InterceptingAllocator::new(page_bytes), sink, accesses: 0 }
+        Env { alloc: InterceptingAllocator::new(page_bytes), sink, recorder: None, accesses: 0 }
+    }
+
+    /// Recording mode: tee every event into an exact recorder alongside
+    /// the sink. Exact (unmerged) recording is what makes the
+    /// replay-identity invariant hold bit-for-bit — the replayed sink
+    /// sees the same call sequence the live sink saw.
+    pub fn new_recording(page_bytes: u64, sink: &'s mut dyn Sink) -> Env<'s> {
+        Env {
+            alloc: InterceptingAllocator::new(page_bytes),
+            sink,
+            recorder: Some(TraceRecorder::exact()),
+            accesses: 0,
+        }
+    }
+
+    /// Finish a recording-mode run and take the captured trace
+    /// (`None` when the env was built with [`Env::new`]). The caller
+    /// stamps `workload`/`checksum` before storing it.
+    pub fn finish_recording(self) -> Option<AccessTrace> {
+        let page_bytes = self.alloc.page_size();
+        self.recorder.map(|r| {
+            let mut t = r.finish();
+            t.page_bytes = page_bytes;
+            t
+        })
     }
 
     /// Allocate a traced vector of `n` copies of `init`.
@@ -28,6 +59,9 @@ impl<'s> Env<'s> {
         let bytes = (n * std::mem::size_of::<T>()).max(1) as u64;
         let obj = self.alloc.malloc(bytes, site);
         self.sink.alloc(&obj);
+        if let Some(r) = &mut self.recorder {
+            r.alloc(&obj);
+        }
         TVec { data: vec![init; n], base: obj.start, id: obj.id }
     }
 
@@ -36,6 +70,9 @@ impl<'s> Env<'s> {
         let bytes = (data.len() * std::mem::size_of::<T>()).max(1) as u64;
         let obj = self.alloc.malloc(bytes, site);
         self.sink.alloc(&obj);
+        if let Some(r) = &mut self.recorder {
+            r.alloc(&obj);
+        }
         TVec { data, base: obj.start, id: obj.id }
     }
 
@@ -43,6 +80,9 @@ impl<'s> Env<'s> {
     pub fn free<T>(&mut self, v: TVec<T>) {
         if let Some(obj) = self.alloc.free(v.id) {
             self.sink.free(&obj);
+            if let Some(r) = &mut self.recorder {
+                r.free(&obj);
+            }
         }
     }
 
@@ -50,17 +90,26 @@ impl<'s> Env<'s> {
     #[inline]
     pub fn compute(&mut self, cycles: u64) {
         self.sink.compute(cycles);
+        if let Some(r) = &mut self.recorder {
+            r.compute(cycles);
+        }
     }
 
     /// Mark a named execution phase.
     pub fn phase(&mut self, name: &str) {
         self.sink.phase(name);
+        if let Some(r) = &mut self.recorder {
+            r.phase(name);
+        }
     }
 
     #[inline]
     pub(crate) fn emit(&mut self, addr: u64, bytes: u32, write: bool) {
         self.accesses += 1;
         self.sink.access(addr, bytes, write);
+        if let Some(r) = &mut self.recorder {
+            r.access(addr, bytes, write);
+        }
     }
 
     /// Total traced accesses so far.
@@ -249,6 +298,43 @@ mod tests {
         v.scan(10, 20, &mut env, |_, x| sum += x);
         assert_eq!(sum, (10..20).sum::<u64>());
         assert_eq!(sink.accesses, 10);
+    }
+
+    #[test]
+    fn recording_env_tees_the_stream() {
+        let mut sink = NullSink::default();
+        let mut env = Env::new_recording(4096, &mut sink);
+        let mut v = env.tvec::<u64>(64, 0, "v");
+        v.set(1, 7, &mut env);
+        env.compute(5);
+        env.phase("p");
+        let x = v.get(1, &mut env);
+        env.free(v);
+        let trace = env.finish_recording().expect("recording mode");
+        assert_eq!(x, 7);
+        // the sink saw the live stream…
+        assert_eq!(sink.accesses, 2);
+        assert_eq!(sink.compute_cycles, 5);
+        // …and the recorder captured the identical stream
+        assert_eq!(trace.n_accesses(), 2);
+        assert_eq!(trace.compute_cycles(), 5);
+        assert_eq!(trace.objects.len(), 1);
+        assert_eq!(trace.phases, vec!["p".to_string()]);
+        assert_eq!(trace.page_bytes, 4096);
+        // replaying the trace reproduces the sink's view exactly
+        let mut sink2 = NullSink::default();
+        trace.replay(&mut sink2);
+        assert_eq!(sink2.accesses, sink.accesses);
+        assert_eq!(sink2.bytes, sink.bytes);
+        assert_eq!(sink2.compute_cycles, sink.compute_cycles);
+        assert_eq!(sink2.allocs, sink.allocs);
+    }
+
+    #[test]
+    fn plain_env_records_nothing() {
+        let mut sink = NullSink::default();
+        let env = Env::new(4096, &mut sink);
+        assert!(env.finish_recording().is_none());
     }
 
     #[test]

@@ -56,14 +56,11 @@ pub fn colocate(
     let mut machine = Machine::all_in(cfg, tier);
     let n = traces.len();
     // Tenants are separate processes: relocate each one past the largest
-    // footprint so their pages are physically distinct on the machine.
-    let stride = traces
-        .iter()
-        .map(|t| t.footprint_extent())
-        .max()
-        .unwrap_or(0)
-        .next_multiple_of(cfg.page_bytes)
-        + cfg.page_bytes;
+    // footprint so their pages are physically distinct on the machine
+    // (same stride rule as the IR-level `trace::ir::interleave`
+    // transform; this interleaver additionally keeps per-tenant clocks
+    // so standalone-vs-colocated slowdown is measurable).
+    let stride = crate::trace::ir::relocation_stride(traces, cfg.page_bytes);
     let mut cursors = vec![0usize; n];
     let mut clocks = vec![0.0f64; n];
     let mut done = 0usize;

@@ -1,0 +1,790 @@
+//! The Trace-IR: a compact, versioned representation of one workload's
+//! access stream — record the stream once, simulate it everywhere.
+//!
+//! [`AccessTrace`] holds an interned event stream (alloc / free / access
+//! / compute / phase / tick): READ/WRITE events carry absolute addresses
+//! in memory and *delta-encoded* addresses in the JSON serialization;
+//! ALLOC/FREE/PHASE events index side tables so objects and phase names
+//! are stored once. A trace replays into any [`Sink`] — a `NullSink`, a
+//! full [`crate::sim::Machine`], a colocation interleaver — and the
+//! replay-identity invariant says: *a replayed run produces the exact
+//! same `RunReport` and checksum as the live run that recorded it*
+//! (property-tested across the workload registry).
+//!
+//! [`TraceRecorder`] is the recording sink. Its default mode merges
+//! consecutive compute events to keep ad-hoc recordings small; the
+//! *exact* mode ([`TraceRecorder::exact`]) preserves the live call
+//! sequence bit-for-bit, which is what the canonical record-once
+//! recordings use so replays accumulate floating-point time in the same
+//! order as the live run.
+//!
+//! Transforms derive new traces without re-executing the workload:
+//! [`AccessTrace::truncated`] (quick-mode prefixes),
+//! [`AccessTrace::scaled`] (N back-to-back invocations of a warm
+//! working set), and [`interleave`] (relocated round-robin merge of
+//! colocated tenants).
+
+use crate::shim::object::{MemoryObject, ObjectId};
+use crate::trace::Sink;
+use crate::util::json::Json;
+
+/// Serialization-format version; [`AccessTrace::from_json`] rejects
+/// anything else.
+pub const TRACE_IR_VERSION: u64 = 1;
+
+pub(crate) const KIND_READ: u8 = 0;
+pub(crate) const KIND_WRITE: u8 = 1;
+pub(crate) const KIND_COMPUTE: u8 = 2;
+pub(crate) const KIND_ALLOC: u8 = 3;
+pub(crate) const KIND_FREE: u8 = 4;
+pub(crate) const KIND_PHASE: u8 = 5;
+pub(crate) const KIND_TICK: u8 = 6;
+
+/// One packed event, 16 bytes. For READ/WRITE `a` is the address and
+/// `b` the byte count; for COMPUTE `a` is the cycle count; for
+/// ALLOC/FREE/PHASE `a` indexes the side tables; TICK carries nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedEvent {
+    pub(crate) a: u64,
+    pub(crate) b: u32,
+    pub(crate) kind: u8,
+}
+
+/// Per-phase rollup (merged by phase name, first-appearance order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseSummary {
+    pub name: String,
+    pub accesses: u64,
+    pub bytes: u64,
+    pub compute_cycles: u64,
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+/// A recorded access stream: versioned, interned, replayable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccessTrace {
+    /// Format version ([`TRACE_IR_VERSION`]).
+    pub version: u64,
+    /// Registry name of the workload that produced the stream (empty
+    /// for ad-hoc recordings).
+    pub workload: String,
+    /// Page size of the recording environment — replays against a
+    /// machine with a different page size would see different mmap
+    /// alignment, so the [`crate::trace::TraceStore`] keys on this.
+    pub page_bytes: u64,
+    /// The workload's result checksum, stored alongside the stream so
+    /// replay fidelity stays verifiable without re-executing.
+    pub checksum: u64,
+    pub events: Vec<PackedEvent>,
+    /// Interned object side table, in allocation order (= the shim's
+    /// allocation log).
+    pub objects: Vec<MemoryObject>,
+    /// Interned phase-name side table.
+    pub phases: Vec<String>,
+}
+
+impl Default for AccessTrace {
+    fn default() -> Self {
+        AccessTrace {
+            version: TRACE_IR_VERSION,
+            workload: String::new(),
+            page_bytes: 0,
+            checksum: 0,
+            events: Vec::new(),
+            objects: Vec::new(),
+            phases: Vec::new(),
+        }
+    }
+}
+
+impl AccessTrace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    // ---- builder API (what the recorder and the transforms use; also
+    // ---- public so property tests can generate arbitrary streams) ----
+
+    pub fn push_access(&mut self, addr: u64, bytes: u32, write: bool) {
+        let kind = if write { KIND_WRITE } else { KIND_READ };
+        self.events.push(PackedEvent { a: addr, b: bytes, kind });
+    }
+
+    pub fn push_compute(&mut self, cycles: u64) {
+        self.events.push(PackedEvent { a: cycles, b: 0, kind: KIND_COMPUTE });
+    }
+
+    /// Intern `obj` into the side table and push its ALLOC event.
+    pub fn push_alloc(&mut self, obj: &MemoryObject) {
+        let idx = self.objects.len() as u64;
+        self.objects.push(obj.clone());
+        self.events.push(PackedEvent { a: idx, b: 0, kind: KIND_ALLOC });
+    }
+
+    /// Push a FREE for an object previously interned by [`push_alloc`];
+    /// unknown objects are ignored (frees of untracked state).
+    ///
+    /// [`push_alloc`]: AccessTrace::push_alloc
+    pub fn push_free(&mut self, obj: &MemoryObject) {
+        if let Some(idx) = self.objects.iter().position(|o| o.id == obj.id) {
+            self.push_free_idx(idx as u64);
+        }
+    }
+
+    pub(crate) fn push_free_idx(&mut self, idx: u64) {
+        self.events.push(PackedEvent { a: idx, b: 0, kind: KIND_FREE });
+    }
+
+    /// Intern the phase name (deduplicated) and push a PHASE marker.
+    pub fn push_phase(&mut self, name: &str) {
+        let idx = match self.phases.iter().position(|p| p == name) {
+            Some(i) => i as u64,
+            None => {
+                self.phases.push(name.to_string());
+                (self.phases.len() - 1) as u64
+            }
+        };
+        self.events.push(PackedEvent { a: idx, b: 0, kind: KIND_PHASE });
+    }
+
+    /// Aggregation-tick marker. Plain sinks ignore it on replay (the
+    /// machine ticks itself off its virtual clock); it exists so
+    /// observer-driven replays and future consumers can carry the
+    /// recording cadence through the serialization round-trip.
+    pub fn push_tick(&mut self) {
+        self.events.push(PackedEvent { a: 0, b: 0, kind: KIND_TICK });
+    }
+
+    // ---- replay ----
+
+    /// Replay the whole recording into a sink.
+    pub fn replay(&self, sink: &mut dyn Sink) {
+        self.replay_range(sink, 0, self.events.len());
+    }
+
+    /// Replay a half-open event range — the colocation interleaver uses
+    /// this to alternate chunks from multiple recordings.
+    pub fn replay_range(&self, sink: &mut dyn Sink, start: usize, end: usize) {
+        self.replay_range_relocated(sink, start, end, 0);
+    }
+
+    /// Replay with all addresses shifted by `offset` bytes. Colocated
+    /// tenants are separate processes whose identical virtual layouts
+    /// map to distinct physical pages; relocation reproduces that
+    /// distinction on the shared machine. `offset` must be
+    /// page-aligned.
+    pub fn replay_range_relocated(
+        &self,
+        sink: &mut dyn Sink,
+        start: usize,
+        end: usize,
+        offset: u64,
+    ) {
+        for e in &self.events[start..end.min(self.events.len())] {
+            match e.kind {
+                KIND_READ => sink.access(e.a + offset, e.b, false),
+                KIND_WRITE => sink.access(e.a + offset, e.b, true),
+                KIND_COMPUTE => sink.compute(e.a),
+                KIND_ALLOC | KIND_FREE => {
+                    let mut obj = self.objects[e.a as usize].clone();
+                    obj.start += offset;
+                    if e.kind == KIND_ALLOC {
+                        sink.alloc(&obj);
+                    } else {
+                        sink.free(&obj);
+                    }
+                }
+                KIND_PHASE => sink.phase(&self.phases[e.a as usize]),
+                KIND_TICK => {}
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    // ---- stream statistics ----
+
+    pub fn n_accesses(&self) -> u64 {
+        self.events.iter().filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE).count() as u64
+    }
+
+    /// Total bytes touched by accesses.
+    pub fn bytes_accessed(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE)
+            .map(|e| e.b as u64)
+            .sum()
+    }
+
+    /// Total compute cycles.
+    pub fn compute_cycles(&self) -> u64 {
+        self.events.iter().filter(|e| e.kind == KIND_COMPUTE).map(|e| e.a).sum()
+    }
+
+    /// Largest within-segment extent (bytes above the heap or mmap base)
+    /// touched by any access or object. A relocation offset larger than
+    /// this cannot collide with another tenant's pages, while keeping
+    /// both segments' page tables compact.
+    pub fn footprint_extent(&self) -> u64 {
+        use crate::shim::intercept::{HEAP_BASE, MMAP_BASE};
+        let seg_extent = |addr: u64| {
+            if addr >= MMAP_BASE {
+                addr - MMAP_BASE
+            } else {
+                addr.saturating_sub(HEAP_BASE)
+            }
+        };
+        let a = self
+            .events
+            .iter()
+            .filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE)
+            .map(|e| seg_extent(e.a + e.b as u64))
+            .max()
+            .unwrap_or(0);
+        let o = self.objects.iter().map(|o| seg_extent(o.end())).max().unwrap_or(0);
+        a.max(o)
+    }
+
+    /// In-memory size estimate: what the `trace.bytes` metric reports.
+    pub fn encoded_bytes(&self) -> u64 {
+        let events = self.events.len() as u64 * std::mem::size_of::<PackedEvent>() as u64;
+        let objects: u64 = self.objects.iter().map(|o| 40 + o.site.len() as u64).sum();
+        let phases: u64 = self.phases.iter().map(|p| p.len() as u64).sum();
+        events + objects + phases
+    }
+
+    /// Per-phase rollups, merged by name in first-appearance order.
+    /// Events before the first PHASE marker aggregate under `"(pre)"`.
+    /// Phase names are interned, so buckets index the phase table
+    /// directly — no per-event allocation on multi-million-event
+    /// traces.
+    pub fn phase_summaries(&self) -> Vec<PhaseSummary> {
+        // slot 0 = "(pre)"; slot i+1 = self.phases[i]
+        let mut sums: Vec<Option<PhaseSummary>> = vec![None; self.phases.len() + 1];
+        let mut order: Vec<usize> = Vec::new();
+        let mut cur = 0usize;
+        for e in &self.events {
+            if e.kind == KIND_PHASE {
+                cur = e.a as usize + 1;
+            }
+            let slot = &mut sums[cur];
+            if slot.is_none() {
+                order.push(cur);
+                let name =
+                    if cur == 0 { "(pre)".to_string() } else { self.phases[cur - 1].clone() };
+                *slot = Some(PhaseSummary {
+                    name,
+                    accesses: 0,
+                    bytes: 0,
+                    compute_cycles: 0,
+                    allocs: 0,
+                    frees: 0,
+                });
+            }
+            let s = slot.as_mut().expect("initialized above");
+            match e.kind {
+                KIND_READ | KIND_WRITE => {
+                    s.accesses += 1;
+                    s.bytes += e.b as u64;
+                }
+                KIND_COMPUTE => s.compute_cycles += e.a,
+                KIND_ALLOC => s.allocs += 1,
+                KIND_FREE => s.frees += 1,
+                _ => {}
+            }
+        }
+        order.into_iter().map(|i| sums[i].take().expect("aggregated")).collect()
+    }
+
+    // ---- transforms ----
+
+    /// Prefix of the stream: the quick-mode transform. The object and
+    /// phase tables are carried whole, so later FREE/PHASE indices stay
+    /// valid; accesses whose ALLOC got cut replay as untracked
+    /// first-touch addresses, exactly like live workload bookkeeping
+    /// outside the shim.
+    pub fn truncated(&self, max_events: usize) -> AccessTrace {
+        let mut out = self.clone();
+        out.events.truncate(max_events);
+        out
+    }
+
+    /// The stream repeated `rounds` times back-to-back: one cold round
+    /// followed by warm rounds that skip ALLOC/FREE (the working set is
+    /// already mapped — re-mapping would double-count tier residency).
+    /// Models N invocations replaying against a kept sandbox.
+    pub fn scaled(&self, rounds: u32) -> AccessTrace {
+        let mut out = self.clone();
+        for _ in 1..rounds {
+            for e in &self.events {
+                if e.kind != KIND_ALLOC && e.kind != KIND_FREE {
+                    out.events.push(*e);
+                }
+            }
+        }
+        out
+    }
+
+    // ---- serialization ----
+
+    /// Serialize to the versioned JSON form. READ/WRITE addresses are
+    /// delta-encoded against the previous access (signed, zigzag-free —
+    /// JSON numbers carry the sign); all magnitudes stay under 2^53 so
+    /// the f64-backed codec is exact.
+    pub fn to_json(&self) -> Json {
+        let mut events = Vec::with_capacity(self.events.len());
+        let mut prev: i64 = 0;
+        for e in &self.events {
+            let ev = match e.kind {
+                KIND_READ | KIND_WRITE => {
+                    let addr = e.a as i64;
+                    let delta = addr - prev;
+                    prev = addr;
+                    Json::arr([
+                        Json::num(e.kind as f64),
+                        Json::num(delta as f64),
+                        Json::num(e.b as f64),
+                    ])
+                }
+                KIND_TICK => Json::arr([Json::num(e.kind as f64)]),
+                _ => Json::arr([Json::num(e.kind as f64), Json::num(e.a as f64)]),
+            };
+            events.push(ev);
+        }
+        let objects = self.objects.iter().map(|o| {
+            Json::obj(vec![
+                ("id", Json::num(o.id.0 as f64)),
+                ("start", Json::num(o.start as f64)),
+                ("bytes", Json::num(o.bytes as f64)),
+                ("site", Json::str(o.site.clone())),
+                ("seq", Json::num(o.seq as f64)),
+                ("via_mmap", Json::Bool(o.via_mmap)),
+            ])
+        });
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("workload", Json::str(self.workload.clone())),
+            ("page_bytes", Json::num(self.page_bytes as f64)),
+            ("checksum", Json::str(format!("{:#018x}", self.checksum))),
+            ("objects", Json::arr(objects)),
+            ("phases", Json::arr(self.phases.iter().map(|p| Json::str(p.clone())))),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// Parse the JSON form back; rejects unknown versions and malformed
+    /// streams.
+    pub fn from_json(j: &Json) -> Result<AccessTrace, String> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "trace: missing version".to_string())?;
+        if version != TRACE_IR_VERSION {
+            return Err(format!(
+                "trace: unsupported IR version {version} (this build reads {TRACE_IR_VERSION})"
+            ));
+        }
+        let workload =
+            j.get("workload").and_then(Json::as_str).unwrap_or_default().to_string();
+        let page_bytes = j.get("page_bytes").and_then(Json::as_u64).unwrap_or(0);
+        let checksum_text = j
+            .get("checksum")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "trace: missing checksum".to_string())?;
+        let checksum = u64::from_str_radix(
+            checksum_text.strip_prefix("0x").unwrap_or(checksum_text),
+            16,
+        )
+        .map_err(|_| format!("trace: bad checksum {checksum_text:?}"))?;
+        let mut objects = Vec::new();
+        for (i, o) in j
+            .get("objects")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "trace: missing objects".to_string())?
+            .iter()
+            .enumerate()
+        {
+            let field_u64 = |k: &str| {
+                o.get(k).and_then(Json::as_u64).ok_or_else(|| format!("trace: objects[{i}].{k}"))
+            };
+            objects.push(MemoryObject {
+                id: ObjectId(field_u64("id")? as u32),
+                start: field_u64("start")?,
+                bytes: field_u64("bytes")?,
+                site: o
+                    .get("site")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("trace: objects[{i}].site"))?
+                    .to_string(),
+                seq: field_u64("seq")?,
+                via_mmap: o
+                    .get("via_mmap")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| format!("trace: objects[{i}].via_mmap"))?,
+            });
+        }
+        let phases: Vec<String> = j
+            .get("phases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "trace: missing phases".to_string())?
+            .iter()
+            .filter_map(|p| p.as_str().map(str::to_string))
+            .collect();
+        let raw_events = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "trace: missing events".to_string())?;
+        let mut events = Vec::with_capacity(raw_events.len());
+        let mut prev: i64 = 0;
+        for (i, ev) in raw_events.iter().enumerate() {
+            let parts =
+                ev.as_arr().ok_or_else(|| format!("trace: events[{i}] is not an array"))?;
+            let kind = parts
+                .first()
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("trace: events[{i}] missing kind"))? as u8;
+            let num_at = |k: usize| {
+                parts
+                    .get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("trace: events[{i}] missing field {k}"))
+            };
+            let e = match kind {
+                KIND_READ | KIND_WRITE => {
+                    let addr = prev + num_at(1)? as i64;
+                    if addr < 0 {
+                        return Err(format!("trace: events[{i}] delta underflows"));
+                    }
+                    prev = addr;
+                    PackedEvent { a: addr as u64, b: num_at(2)? as u32, kind }
+                }
+                KIND_COMPUTE => PackedEvent { a: num_at(1)? as u64, b: 0, kind },
+                KIND_ALLOC | KIND_FREE => {
+                    let idx = num_at(1)? as u64;
+                    if idx as usize >= objects.len() {
+                        return Err(format!("trace: events[{i}] object index out of range"));
+                    }
+                    PackedEvent { a: idx, b: 0, kind }
+                }
+                KIND_PHASE => {
+                    let idx = num_at(1)? as u64;
+                    if idx as usize >= phases.len() {
+                        return Err(format!("trace: events[{i}] phase index out of range"));
+                    }
+                    PackedEvent { a: idx, b: 0, kind }
+                }
+                KIND_TICK => PackedEvent { a: 0, b: 0, kind },
+                other => return Err(format!("trace: events[{i}] unknown kind {other}")),
+            };
+            events.push(e);
+        }
+        Ok(AccessTrace { version, workload, page_bytes, checksum, events, objects, phases })
+    }
+}
+
+/// Relocation stride for running `traces` as separate tenants on one
+/// machine: past the largest footprint, page-aligned, plus one guard
+/// page.
+pub fn relocation_stride(traces: &[&AccessTrace], page_bytes: u64) -> u64 {
+    traces
+        .iter()
+        .map(|t| t.footprint_extent())
+        .max()
+        .unwrap_or(0)
+        .next_multiple_of(page_bytes.max(1))
+        + page_bytes
+}
+
+/// Merge colocated tenants into one relocated round-robin stream of
+/// `chunk` events per turn: tenant `i`'s addresses shift by
+/// `i × stride`, its objects are re-interned under fresh ids, and its
+/// phase markers gain a `t{i}/` prefix. The merged trace replays
+/// through a single machine, reproducing shared-LLC and shared-tier
+/// contention without per-tenant clock bookkeeping (use
+/// [`crate::sim::colocate`] when per-tenant slowdowns are the metric).
+pub fn interleave(traces: &[&AccessTrace], chunk: usize, page_bytes: u64) -> AccessTrace {
+    assert!(!traces.is_empty(), "interleave of zero traces");
+    assert!(chunk > 0, "interleave chunk must be >= 1");
+    let stride = relocation_stride(traces, page_bytes);
+    let mut out = AccessTrace {
+        workload: traces
+            .iter()
+            .map(|t| if t.workload.is_empty() { "?" } else { t.workload.as_str() })
+            .collect::<Vec<_>>()
+            .join("+"),
+        page_bytes,
+        ..AccessTrace::default()
+    };
+    // per-tenant map: original object index → merged object index
+    let mut obj_map: Vec<std::collections::HashMap<u64, u64>> =
+        vec![std::collections::HashMap::new(); traces.len()];
+    let mut cursors = vec![0usize; traces.len()];
+    // only tenants with events count toward completion — an empty
+    // trace is already done (it would otherwise never decrement)
+    let mut remaining = traces.iter().filter(|t| !t.events.is_empty()).count();
+    while remaining > 0 {
+        for (i, t) in traces.iter().enumerate() {
+            if cursors[i] >= t.events.len() {
+                continue;
+            }
+            let offset = i as u64 * stride;
+            let end = (cursors[i] + chunk).min(t.events.len());
+            for e in &t.events[cursors[i]..end] {
+                match e.kind {
+                    KIND_READ | KIND_WRITE => {
+                        out.push_access(e.a + offset, e.b, e.kind == KIND_WRITE);
+                    }
+                    KIND_COMPUTE => out.push_compute(e.a),
+                    KIND_ALLOC => {
+                        let mut obj = t.objects[e.a as usize].clone();
+                        obj.start += offset;
+                        obj.id = ObjectId(out.objects.len() as u32);
+                        obj_map[i].insert(e.a, out.objects.len() as u64);
+                        out.push_alloc(&obj);
+                    }
+                    KIND_FREE => {
+                        if let Some(&idx) = obj_map[i].get(&e.a) {
+                            out.push_free_idx(idx);
+                        }
+                    }
+                    KIND_PHASE => {
+                        out.push_phase(&format!("t{i}/{}", t.phases[e.a as usize]));
+                    }
+                    KIND_TICK => out.push_tick(),
+                    _ => unreachable!(),
+                }
+            }
+            cursors[i] = end;
+            if cursors[i] >= t.events.len() {
+                remaining -= 1;
+            }
+        }
+    }
+    out
+}
+
+/// Sink that records the stream into an [`AccessTrace`].
+#[derive(Debug)]
+pub struct TraceRecorder {
+    trace: AccessTrace,
+    /// Merge consecutive compute events to keep recordings small.
+    pending_compute: u64,
+    merge_compute: bool,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    /// Compact recorder: consecutive compute events merge.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder { trace: AccessTrace::default(), pending_compute: 0, merge_compute: true }
+    }
+
+    /// Exact recorder: the event stream mirrors the live Sink call
+    /// sequence one-for-one, so a replay performs the identical f64
+    /// clock arithmetic — required for the replay-identity invariant.
+    pub fn exact() -> TraceRecorder {
+        TraceRecorder { trace: AccessTrace::default(), pending_compute: 0, merge_compute: false }
+    }
+
+    fn flush_compute(&mut self) {
+        if self.pending_compute > 0 {
+            self.trace.push_compute(self.pending_compute);
+            self.pending_compute = 0;
+        }
+    }
+
+    pub fn finish(mut self) -> AccessTrace {
+        self.flush_compute();
+        self.trace
+    }
+}
+
+impl Sink for TraceRecorder {
+    fn alloc(&mut self, obj: &MemoryObject) {
+        self.flush_compute();
+        self.trace.push_alloc(obj);
+    }
+
+    fn free(&mut self, obj: &MemoryObject) {
+        self.flush_compute();
+        // frees are rare relative to accesses; the id lookup is linear
+        self.trace.push_free(obj);
+    }
+
+    fn access(&mut self, addr: u64, bytes: u32, write: bool) {
+        self.flush_compute();
+        self.trace.push_access(addr, bytes, write);
+    }
+
+    fn compute(&mut self, cycles: u64) {
+        if self.merge_compute {
+            self.pending_compute += cycles;
+        } else {
+            self.trace.push_compute(cycles);
+        }
+    }
+
+    fn phase(&mut self, name: &str) {
+        self.flush_compute();
+        self.trace.push_phase(name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    fn obj(id: u32) -> MemoryObject {
+        MemoryObject {
+            id: ObjectId(id),
+            start: 0x7f00_0000_0000 + 0x1000 * id as u64,
+            bytes: 4096,
+            site: format!("site{id}"),
+            seq: id as u64,
+            via_mmap: true,
+        }
+    }
+
+    fn sample() -> AccessTrace {
+        let mut t =
+            AccessTrace { workload: "sample".into(), page_bytes: 4096, ..Default::default() };
+        t.push_alloc(&obj(0));
+        t.push_phase("build");
+        t.push_access(0x7f00_0000_0000, 8, false);
+        t.push_compute(40);
+        t.push_access(0x7f00_0000_0010, 8, true);
+        t.push_tick();
+        t.push_phase("iterate");
+        t.push_access(0x7f00_0000_0008, 16, false);
+        t.push_free(&obj(0));
+        t.checksum = 0xDEAD_BEEF_F00D_CAFE;
+        t
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let t = sample();
+        let back = AccessTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        // pretty form parses identically too
+        let pretty = Json::parse(&t.to_json().to_string_pretty()).unwrap();
+        assert_eq!(AccessTrace::from_json(&pretty).unwrap(), t);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num(99.0));
+        }
+        let err = AccessTrace::from_json(&j).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn phase_summaries_merge_by_name() {
+        let mut t = AccessTrace::default();
+        t.push_access(0x10, 4, false); // (pre)
+        t.push_phase("a");
+        t.push_access(0x20, 8, false);
+        t.push_compute(5);
+        t.push_phase("b");
+        t.push_compute(7);
+        t.push_phase("a"); // re-entered: merges with the first "a"
+        t.push_access(0x30, 2, true);
+        let s = t.phase_summaries();
+        assert_eq!(
+            s.iter().map(|p| p.name.as_str()).collect::<Vec<_>>(),
+            vec!["(pre)", "a", "b"]
+        );
+        assert_eq!(s[1].accesses, 2);
+        assert_eq!(s[1].bytes, 10);
+        assert_eq!(s[1].compute_cycles, 5);
+        assert_eq!(s[2].compute_cycles, 7);
+    }
+
+    #[test]
+    fn truncate_and_scale() {
+        let t = sample();
+        let cut = t.truncated(3);
+        assert_eq!(cut.events.len(), 3);
+        assert_eq!(cut.objects.len(), t.objects.len(), "side tables carried whole");
+        let tripled = t.scaled(3);
+        // warm rounds drop the 1 alloc + 1 free
+        assert_eq!(tripled.events.len(), t.events.len() * 3 - 2 * 2);
+        assert_eq!(tripled.n_accesses(), t.n_accesses() * 3);
+        assert_eq!(tripled.compute_cycles(), t.compute_cycles() * 3);
+        // scaling by 1 is the identity
+        assert_eq!(t.scaled(1), t);
+    }
+
+    #[test]
+    fn interleave_relocates_and_remaps() {
+        let mut a = AccessTrace { workload: "a".into(), ..Default::default() };
+        a.push_alloc(&obj(0));
+        a.push_access(0x7f00_0000_0000, 8, false);
+        a.push_phase("p");
+        a.push_free(&obj(0));
+        let mut b = AccessTrace { workload: "b".into(), ..Default::default() };
+        b.push_alloc(&obj(0));
+        b.push_access(0x7f00_0000_0040, 8, true);
+        let merged = interleave(&[&a, &b], 2, 4096);
+        assert_eq!(merged.workload, "a+b");
+        assert_eq!(merged.objects.len(), 2);
+        assert_ne!(merged.objects[0].id, merged.objects[1].id, "ids re-interned");
+        assert_ne!(
+            merged.objects[0].start, merged.objects[1].start,
+            "tenants relocated apart"
+        );
+        assert_eq!(merged.n_accesses(), 2);
+        assert_eq!(merged.phases, vec!["t0/p".to_string()]);
+        let mut sink = NullSink::default();
+        merged.replay(&mut sink);
+        assert_eq!(sink.accesses, 2);
+        assert_eq!(sink.allocs, 2);
+    }
+
+    #[test]
+    fn interleave_tolerates_empty_tenants() {
+        let mut a = AccessTrace::default();
+        a.push_access(0x10, 4, false);
+        let empty = AccessTrace::default();
+        // an event-less tenant must not hang the round-robin
+        let merged = interleave(&[&a, &empty], 4, 4096);
+        assert_eq!(merged.n_accesses(), 1);
+    }
+
+    #[test]
+    fn exact_recorder_preserves_compute_sequence() {
+        let mut rec = TraceRecorder::exact();
+        rec.compute(10);
+        rec.compute(20);
+        rec.access(0x10, 4, false);
+        let t = rec.finish();
+        assert_eq!(t.events.len(), 3, "exact mode must not merge computes");
+        assert_eq!(t.compute_cycles(), 30);
+    }
+
+    #[test]
+    fn tick_survives_roundtrip_and_replays_as_noop() {
+        let mut t = AccessTrace::default();
+        t.push_tick();
+        t.push_access(0x10, 4, false);
+        let back = AccessTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        let mut sink = NullSink::default();
+        back.replay(&mut sink);
+        assert_eq!(sink.accesses, 1);
+    }
+}

@@ -4,12 +4,24 @@
 //!
 //! Workloads *stream* events — they are real algorithms whose data
 //! structures are instrumented (`shim::env`), so traces never need to be
-//! materialized for single-tenant runs. For colocation and offline
-//! heatmap processing a compact [`TraceRecorder`] buffers the stream.
+//! materialized for single-tenant runs. The [`ir`] module defines the
+//! Trace-IR ([`AccessTrace`]): a compact, versioned, JSON-serializable
+//! recording of one stream, replayable into any sink with the
+//! replay-identity guarantee (replayed runs reproduce live `RunReport`s
+//! and checksums exactly). The [`store`] module keys canonical
+//! recordings process-wide so every layer records once and replays
+//! many.
 
+pub mod ir;
 pub mod recorder;
+pub mod store;
 
-pub use recorder::{RecordedTrace, TraceRecorder};
+pub use ir::{
+    interleave, relocation_stride, AccessTrace, PackedEvent, PhaseSummary, TraceRecorder,
+    TRACE_IR_VERSION,
+};
+pub use recorder::RecordedTrace;
+pub use store::{record_workload, TraceKey, TraceStore};
 
 use crate::shim::object::MemoryObject;
 

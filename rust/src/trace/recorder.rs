@@ -1,200 +1,23 @@
-//! Compact trace recording and replay.
+//! Compatibility surface for the pre-IR trace API.
 //!
-//! Events are packed 16 bytes each; a few-million-event workload instance
-//! records in tens of MB, which is what the colocation experiments and
-//! offline heatmap processing use.
+//! The recorder and its packed-event storage were folded into
+//! [`crate::trace::ir`] when the Trace-IR landed: there is exactly one
+//! trace representation in the tree, [`AccessTrace`], and
+//! [`TraceRecorder`] is the Sink that builds it. `RecordedTrace` is the
+//! old name, kept as an alias so existing call sites (colocation,
+//! benches, property tests) read unchanged. The replay-fidelity tests
+//! below predate the IR and pin its behaviour.
 
-use crate::shim::object::MemoryObject;
-use crate::trace::Sink;
+pub use crate::trace::ir::{AccessTrace, TraceRecorder};
 
-const KIND_READ: u8 = 0;
-const KIND_WRITE: u8 = 1;
-const KIND_COMPUTE: u8 = 2;
-const KIND_ALLOC: u8 = 3;
-const KIND_FREE: u8 = 4;
-const KIND_PHASE: u8 = 5;
-
-/// One packed event. For READ/WRITE `a` is the address and `b` the byte
-/// count; for COMPUTE `a` is the cycle count; for ALLOC/FREE/PHASE `a`
-/// indexes the side tables.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PackedEvent {
-    a: u64,
-    b: u32,
-    kind: u8,
-}
-
-/// A finished recording: events plus object/phase side tables.
-#[derive(Debug, Clone, Default)]
-pub struct RecordedTrace {
-    pub events: Vec<PackedEvent>,
-    pub objects: Vec<MemoryObject>,
-    pub phases: Vec<String>,
-}
-
-impl RecordedTrace {
-    pub fn len(&self) -> usize {
-        self.events.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
-    }
-
-    pub fn n_accesses(&self) -> u64 {
-        self.events.iter().filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE).count() as u64
-    }
-
-    /// Replay the recording into another sink.
-    pub fn replay(&self, sink: &mut dyn Sink) {
-        self.replay_range(sink, 0, self.events.len());
-    }
-
-    /// Replay a half-open event range — the colocation interleaver uses
-    /// this to alternate chunks from multiple recordings.
-    pub fn replay_range(&self, sink: &mut dyn Sink, start: usize, end: usize) {
-        self.replay_range_relocated(sink, start, end, 0);
-    }
-
-    /// Replay with all addresses shifted by `offset` bytes. Colocated
-    /// tenants are separate processes whose identical virtual layouts map
-    /// to distinct physical pages; relocation reproduces that distinction
-    /// on the shared machine. `offset` must be page-aligned.
-    pub fn replay_range_relocated(
-        &self,
-        sink: &mut dyn Sink,
-        start: usize,
-        end: usize,
-        offset: u64,
-    ) {
-        for e in &self.events[start..end.min(self.events.len())] {
-            match e.kind {
-                KIND_READ => sink.access(e.a + offset, e.b, false),
-                KIND_WRITE => sink.access(e.a + offset, e.b, true),
-                KIND_COMPUTE => sink.compute(e.a),
-                KIND_ALLOC | KIND_FREE => {
-                    let mut obj = self.objects[e.a as usize].clone();
-                    obj.start += offset;
-                    if e.kind == KIND_ALLOC {
-                        sink.alloc(&obj);
-                    } else {
-                        sink.free(&obj);
-                    }
-                }
-                KIND_PHASE => sink.phase(&self.phases[e.a as usize]),
-                _ => unreachable!(),
-            }
-        }
-    }
-
-    /// Largest within-segment extent (bytes above the heap or mmap base)
-    /// touched by any access or object. A relocation offset larger than
-    /// this cannot collide with another tenant's pages, while keeping
-    /// both segments' page tables compact.
-    pub fn footprint_extent(&self) -> u64 {
-        use crate::shim::intercept::{HEAP_BASE, MMAP_BASE};
-        let seg_extent = |addr: u64| {
-            if addr >= MMAP_BASE {
-                addr - MMAP_BASE
-            } else {
-                addr.saturating_sub(HEAP_BASE)
-            }
-        };
-        let a = self
-            .events
-            .iter()
-            .filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE)
-            .map(|e| seg_extent(e.a + e.b as u64))
-            .max()
-            .unwrap_or(0);
-        let o = self.objects.iter().map(|o| seg_extent(o.end())).max().unwrap_or(0);
-        a.max(o)
-    }
-
-    /// Total bytes touched by accesses.
-    pub fn bytes_accessed(&self) -> u64 {
-        self.events
-            .iter()
-            .filter(|e| e.kind == KIND_READ || e.kind == KIND_WRITE)
-            .map(|e| e.b as u64)
-            .sum()
-    }
-
-    /// Total compute cycles.
-    pub fn compute_cycles(&self) -> u64 {
-        self.events.iter().filter(|e| e.kind == KIND_COMPUTE).map(|e| e.a).sum()
-    }
-}
-
-/// Sink that records the stream.
-#[derive(Debug, Default)]
-pub struct TraceRecorder {
-    trace: RecordedTrace,
-    /// Merge consecutive compute events to keep recordings small.
-    pending_compute: u64,
-}
-
-impl TraceRecorder {
-    pub fn new() -> TraceRecorder {
-        TraceRecorder::default()
-    }
-
-    fn flush_compute(&mut self) {
-        if self.pending_compute > 0 {
-            let ev = PackedEvent { a: self.pending_compute, b: 0, kind: KIND_COMPUTE };
-            self.trace.events.push(ev);
-            self.pending_compute = 0;
-        }
-    }
-
-    pub fn finish(mut self) -> RecordedTrace {
-        self.flush_compute();
-        self.trace
-    }
-}
-
-impl Sink for TraceRecorder {
-    fn alloc(&mut self, obj: &MemoryObject) {
-        self.flush_compute();
-        let idx = self.trace.objects.len() as u64;
-        self.trace.objects.push(obj.clone());
-        self.trace.events.push(PackedEvent { a: idx, b: 0, kind: KIND_ALLOC });
-    }
-
-    fn free(&mut self, obj: &MemoryObject) {
-        self.flush_compute();
-        // find by id in the side table (frees are rare relative to accesses)
-        if let Some(idx) = self.trace.objects.iter().position(|o| o.id == obj.id) {
-            self.trace.events.push(PackedEvent { a: idx as u64, b: 0, kind: KIND_FREE });
-        }
-    }
-
-    fn access(&mut self, addr: u64, bytes: u32, write: bool) {
-        self.flush_compute();
-        self.trace.events.push(PackedEvent {
-            a: addr,
-            b: bytes,
-            kind: if write { KIND_WRITE } else { KIND_READ },
-        });
-    }
-
-    fn compute(&mut self, cycles: u64) {
-        self.pending_compute += cycles;
-    }
-
-    fn phase(&mut self, name: &str) {
-        self.flush_compute();
-        let idx = self.trace.phases.len() as u64;
-        self.trace.phases.push(name.to_string());
-        self.trace.events.push(PackedEvent { a: idx, b: 0, kind: KIND_PHASE });
-    }
-}
+/// The pre-IR name for a finished recording.
+pub type RecordedTrace = AccessTrace;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::shim::object::{MemoryObject, ObjectId};
-    use crate::trace::NullSink;
+    use crate::trace::{NullSink, Sink};
 
     fn obj(id: u32) -> MemoryObject {
         MemoryObject {

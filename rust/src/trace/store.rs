@@ -1,0 +1,242 @@
+//! Process-wide record-once/replay-many registry of canonical traces.
+//!
+//! The paper's methodology is *observe the access pattern once, then
+//! re-evaluate placements against it*. The [`TraceStore`] is that shape
+//! as infrastructure: the first execution of a `(workload, size)` pair
+//! records its [`AccessTrace`] (usually for free, teed off the live run
+//! by [`crate::shim::Env`]'s recording mode); every later invocation —
+//! repeat servings, other nodes' profile runs, bench sweep cells —
+//! replays the stored stream instead of re-executing the algorithm.
+//!
+//! Keys are `(workload name, trace fingerprint, page size)`:
+//! [`crate::workloads::Workload::trace_fingerprint`] folds every
+//! stream-shaping parameter of the instance, so two instances share a
+//! trace only when their access streams are provably identical; the
+//! page size is included because mmap alignment (and therefore
+//! addresses) depends on it.
+//!
+//! The store is process-global ([`TraceStore::global`]) — in the fleet
+//! simulation that is exactly the win: node B's profile run of a
+//! function node A already measured replays A's trace. The
+//! `[trace] live_execution = true` config escape hatch bypasses the
+//! store entirely and restores legacy re-execution.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::trace::ir::AccessTrace;
+use crate::trace::NullSink;
+use crate::workloads::Workload;
+
+/// Identity of a canonical recording.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TraceKey {
+    pub workload: String,
+    pub fingerprint: u64,
+    pub page_bytes: u64,
+}
+
+impl TraceKey {
+    pub fn of(body: &dyn Workload, page_bytes: u64) -> TraceKey {
+        TraceKey {
+            workload: body.name().to_string(),
+            fingerprint: body.trace_fingerprint(),
+            page_bytes,
+        }
+    }
+}
+
+/// Store-level counters (also mirrored into the per-server metrics
+/// `Registry` by the serving path).
+#[derive(Debug, Default)]
+pub struct TraceStoreMetrics {
+    /// Recording runs performed (cumulative work — racing workers that
+    /// both record the same key each count one).
+    pub records: AtomicU64,
+    /// Replays served from the store.
+    pub replays: AtomicU64,
+    /// In-memory bytes of the recordings currently retained (only
+    /// traces the store actually kept count here; bounded-out and
+    /// duplicate recordings do not).
+    pub bytes: AtomicU64,
+}
+
+/// The registry. Cheap to query (one mutex around a hash map; traces
+/// are `Arc`-shared out so replays never hold the lock).
+#[derive(Debug, Default)]
+pub struct TraceStore {
+    traces: Mutex<HashMap<TraceKey, Arc<AccessTrace>>>,
+    pub metrics: TraceStoreMetrics,
+}
+
+static GLOBAL: OnceLock<TraceStore> = OnceLock::new();
+
+impl TraceStore {
+    pub fn new() -> TraceStore {
+        TraceStore::default()
+    }
+
+    /// The process-wide store.
+    pub fn global() -> &'static TraceStore {
+        GLOBAL.get_or_init(TraceStore::new)
+    }
+
+    /// Look up a trace for replay; counts a replay on hit.
+    pub fn get(&self, key: &TraceKey) -> Option<Arc<AccessTrace>> {
+        let hit = self.traces.lock().unwrap().get(key).cloned();
+        if hit.is_some() {
+            self.metrics.replays.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Number of cached traces.
+    pub fn len(&self) -> usize {
+        self.traces.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(records, replays, bytes)` counter snapshot.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.metrics.records.load(Ordering::Relaxed),
+            self.metrics.replays.load(Ordering::Relaxed),
+            self.metrics.bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Register a fresh recording. The first insert under a key wins
+    /// (recordings are deterministic, so concurrent racers produce the
+    /// same trace); at `max_cached` entries new keys record but are not
+    /// retained, bounding memory on unbounded sweep populations. The
+    /// `bytes` counter tracks retained recordings only, so it reflects
+    /// actual store residency.
+    pub fn insert(&self, key: TraceKey, trace: AccessTrace, max_cached: usize) -> Arc<AccessTrace> {
+        self.metrics.records.fetch_add(1, Ordering::Relaxed);
+        let encoded = trace.encoded_bytes();
+        let trace = Arc::new(trace);
+        let mut map = self.traces.lock().unwrap();
+        if let Some(existing) = map.get(&key) {
+            return existing.clone();
+        }
+        if map.len() >= max_cached {
+            return trace; // caller keeps its copy; nothing evicted
+        }
+        map.insert(key, trace.clone());
+        self.metrics.bytes.fetch_add(encoded, Ordering::Relaxed);
+        trace
+    }
+
+    /// Get-or-record: replay hit when cached, otherwise execute the
+    /// workload once against a recording environment (no machine — the
+    /// stream a workload emits is sink-independent) and cache it.
+    /// Returns `(trace, recorded_now)`.
+    pub fn obtain(
+        &self,
+        w: &dyn Workload,
+        page_bytes: u64,
+        max_cached: usize,
+    ) -> (Arc<AccessTrace>, bool) {
+        let key = TraceKey::of(w, page_bytes);
+        if let Some(t) = self.get(&key) {
+            return (t, false);
+        }
+        let trace = record_workload(w, page_bytes);
+        (self.insert(key, trace, max_cached), true)
+    }
+
+    /// Drop all cached traces (tests). Resets the residency counter;
+    /// the cumulative records/replays counters are left alone.
+    pub fn clear(&self) {
+        self.traces.lock().unwrap().clear();
+        self.metrics.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Record one workload's canonical trace by executing it against a
+/// recording environment over a null sink — the cheapest possible live
+/// run. The stream a workload emits depends only on the workload (the
+/// shim's addresses are deterministic), so a machine-teed recording and
+/// this one are byte-identical.
+pub fn record_workload(w: &dyn Workload, page_bytes: u64) -> AccessTrace {
+    let mut sink = NullSink::default();
+    let mut env = crate::shim::env::Env::new_recording(page_bytes, &mut sink);
+    let checksum = w.run(&mut env);
+    let mut trace = env.finish_recording().expect("recording env always yields a trace");
+    trace.workload = w.name().to_string();
+    trace.page_bytes = page_bytes;
+    trace.checksum = checksum;
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::json_ser::JsonSer;
+
+    #[test]
+    fn obtain_records_once_then_replays() {
+        let store = TraceStore::new();
+        let w = JsonSer::new(20);
+        let (a, recorded) = store.obtain(&w, 4096, 16);
+        assert!(recorded);
+        assert!(a.n_accesses() > 0);
+        assert_eq!(a.workload, "json");
+        let (b, recorded) = store.obtain(&w, 4096, 16);
+        assert!(!recorded, "second obtain must replay");
+        assert!(Arc::ptr_eq(&a, &b));
+        let (records, replays, bytes) = store.counts();
+        assert_eq!((records, replays), (1, 1));
+        assert_eq!(bytes, a.encoded_bytes());
+    }
+
+    #[test]
+    fn distinct_sizes_get_distinct_traces() {
+        let store = TraceStore::new();
+        let (a, _) = store.obtain(&JsonSer::new(20), 4096, 16);
+        let (b, _) = store.obtain(&JsonSer::new(40), 4096, 16);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(b.n_accesses() > a.n_accesses());
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn page_size_is_part_of_the_key() {
+        let store = TraceStore::new();
+        let w = JsonSer::new(20);
+        store.obtain(&w, 4096, 16);
+        let (_, recorded) = store.obtain(&w, 8192, 16);
+        assert!(recorded, "different page size must not share a trace");
+    }
+
+    #[test]
+    fn max_cached_bounds_retention() {
+        let store = TraceStore::new();
+        let (retained, _) = store.obtain(&JsonSer::new(10), 4096, 1);
+        let bytes_after_first = store.counts().2;
+        assert_eq!(bytes_after_first, retained.encoded_bytes());
+        let (_, recorded) = store.obtain(&JsonSer::new(11), 4096, 1);
+        assert!(recorded);
+        assert_eq!(store.len(), 1, "store stays at its bound");
+        // bounded-out recordings count as records but not residency
+        assert_eq!(store.counts().2, bytes_after_first, "bytes tracks retained traces only");
+        // the bounded-out key records again on the next request
+        let (_, recorded) = store.obtain(&JsonSer::new(11), 4096, 1);
+        assert!(recorded);
+        assert_eq!(store.counts().0, 3, "every recording run counts");
+    }
+
+    #[test]
+    fn recorded_checksum_matches_live_run() {
+        let w = JsonSer::new(15);
+        let trace = record_workload(&w, 4096);
+        let mut sink = crate::trace::NullSink::default();
+        let mut env = crate::shim::env::Env::new(4096, &mut sink);
+        let live = w.run(&mut env);
+        assert_eq!(trace.checksum, live);
+    }
+}

@@ -56,6 +56,11 @@ impl Workload for Bfs {
         (self.graph.n() * 8 + self.graph.m() * 4) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(0xBF5, self.graph.fingerprint());
+        mix(mix(h, self.source as u64), self.cycles_per_edge)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         env.phase("load");
         let g = self.graph.into_env(env, "bfs");

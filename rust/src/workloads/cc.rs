@@ -54,6 +54,10 @@ impl Workload for ConnectedComponents {
         (self.graph.n() * 8 + self.graph.m() * 4) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix(0xCC, self.graph.fingerprint()), self.cycles_per_edge)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         env.phase("load");
         let g = self.graph.into_env(env, "cc");

@@ -32,6 +32,10 @@ impl Workload for Chameleon {
         (self.rows * self.cols * 12) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix(mix(0xCA, self.rows as u64), self.cols as u64), self.seed)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         env.phase("render");
         // output buffer grows like a rope; model as chunked appends

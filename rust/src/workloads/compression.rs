@@ -94,6 +94,11 @@ impl Workload for Compression {
         (self.input_bytes + self.table_size * 8) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(mix(0xC0, self.input_bytes as u64), self.table_size as u64);
+        mix(h, self.seed)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         let input_v = self.gen_input();
         env.phase("load");

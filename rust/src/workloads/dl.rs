@@ -53,6 +53,11 @@ impl Workload for DlTrain {
         (self.param_count() * 12 + self.batch * self.layers.iter().sum::<usize>() * 4) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        let h = self.layers.iter().fold(0xD17, |h, &l| mix(h, l as u64));
+        mix(mix(mix(h, self.batch as u64), self.steps as u64), self.flops_per_cycle)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         let p = self.param_count();
         let act_elems: usize = self.batch * self.layers.iter().sum::<usize>();
@@ -135,6 +140,11 @@ impl Workload for DlServe {
 
     fn footprint_hint(&self) -> u64 {
         (self.param_count() * 4 + self.batch * self.layers.iter().sum::<usize>() * 4) as u64
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = self.layers.iter().fold(0xD15E, |h, &l| mix(h, l as u64));
+        mix(mix(mix(h, self.batch as u64), self.requests as u64), self.flops_per_cycle)
     }
 
     fn run(&self, env: &mut Env) -> u64 {

@@ -38,6 +38,22 @@ impl CsrGraph {
         &self.targets[self.offsets[v] as usize..self.offsets[v + 1] as usize]
     }
 
+    /// Structural fingerprint for Trace-IR keying: vertex/edge counts
+    /// plus a strided adjacency sample, so generators with different
+    /// scale, degree, or seed produce distinct fingerprints while the
+    /// cost stays O(64) regardless of graph size.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::workloads::mix;
+        let mut h = mix(mix(0x6EA9, self.n() as u64), self.m() as u64);
+        let step = (self.targets.len() / 64).max(1);
+        let mut i = 0;
+        while i < self.targets.len() {
+            h = mix(h, self.targets[i] as u64);
+            i += step;
+        }
+        h
+    }
+
     /// Build a CSR from an edge list.
     pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> CsrGraph {
         let mut deg = vec![0u32; n];

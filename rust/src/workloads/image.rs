@@ -99,6 +99,10 @@ impl Workload for ImageProc {
         (self.width * self.height * 4 * 2) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix(mix(0x16, self.width as u64), self.height as u64), self.seed)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         let (w, h) = (self.width, self.height);
         env.phase("load");

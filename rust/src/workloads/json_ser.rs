@@ -67,6 +67,10 @@ impl Workload for JsonSer {
         (self.records * 128) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix(0x15, self.records as u64), self.seed)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         env.phase("build");
         let doc = self.build();

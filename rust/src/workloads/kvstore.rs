@@ -4,7 +4,7 @@
 //! winner from hot-page DRAM placement.
 
 use crate::shim::env::Env;
-use crate::workloads::{mix, Workload};
+use crate::workloads::{mix, mix_bits, Workload};
 
 pub struct KvStore {
     /// Number of resident keys.
@@ -43,6 +43,12 @@ impl Workload for KvStore {
 
     fn footprint_hint(&self) -> u64 {
         (self.capacity() * (8 + self.value_words * 8)) as u64
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(mix(0x52, self.keys as u64), self.ops as u64);
+        let h = mix_bits(mix_bits(h, self.theta), self.write_frac);
+        mix(mix(h, self.value_words as u64), self.seed)
     }
 
     fn run(&self, env: &mut Env) -> u64 {

@@ -8,7 +8,7 @@
 //! O(n³/b) line traffic over an O(n²) footprint larger than the LLC.
 
 use crate::shim::env::Env;
-use crate::workloads::{mix_f64, Workload};
+use crate::workloads::{mix, mix_f64, Workload};
 
 pub struct Linpack {
     pub n: usize,
@@ -120,6 +120,11 @@ impl Workload for Linpack {
 
     fn footprint_hint(&self) -> u64 {
         (self.n * self.n * 8) as u64
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(mix(0x11A9AC, self.n as u64), self.block as u64);
+        mix(mix(h, self.simd_flops_per_cycle), self.seed)
     }
 
     fn run(&self, env: &mut Env) -> u64 {

@@ -7,7 +7,7 @@
 //! inside a block-GEMM are bulk compute (SIMD width folded in).
 
 use crate::shim::env::Env;
-use crate::workloads::{mix_f64, Workload};
+use crate::workloads::{mix, mix_f64, Workload};
 
 pub struct MatMul {
     /// Square matrix dimension.
@@ -62,6 +62,11 @@ impl Workload for MatMul {
 
     fn footprint_hint(&self) -> u64 {
         (3 * self.n * self.n * 4) as u64
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(mix(0xA7, self.n as u64), self.block as u64);
+        mix(mix(h, self.simd_flops_per_cycle), self.seed)
     }
 
     fn run(&self, env: &mut Env) -> u64 {

@@ -42,6 +42,31 @@ pub trait Workload {
     fn footprint_hint(&self) -> u64 {
         0
     }
+
+    /// Stable identity of this instance's *access stream*, the
+    /// size-bucket half of the [`crate::trace::TraceStore`] key: two
+    /// instances with equal `(name, trace_fingerprint)` must emit
+    /// byte-identical event streams, so a stored trace can stand in for
+    /// re-execution. Every registry workload overrides this to fold in
+    /// all stream-shaping parameters (sizes, iteration counts, seeds);
+    /// the default covers workloads fully determined by their
+    /// footprint.
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix_str(0xF1D0, self.name()), self.footprint_hint())
+    }
+}
+
+/// Mix a string into a running checksum byte-by-byte (fingerprints).
+#[inline]
+pub fn mix_str(h: u64, s: &str) -> u64 {
+    s.bytes().fold(mix(h, s.len() as u64), |h, b| mix(h, b as u64))
+}
+
+/// Mix an f64 parameter into a fingerprint by bit pattern (exact —
+/// unlike [`mix_f64`], which quantizes for checksum tolerance).
+#[inline]
+pub fn mix_bits(h: u64, v: f64) -> u64 {
+    mix(h, v.to_bits())
 }
 
 /// Mix a u64 into a running checksum (order-sensitive).

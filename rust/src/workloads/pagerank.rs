@@ -9,7 +9,7 @@
 
 use crate::shim::env::Env;
 use crate::workloads::graph::CsrGraph;
-use crate::workloads::{mix_f64, Workload};
+use crate::workloads::{mix, mix_bits, mix_f64, Workload};
 
 pub struct PageRank {
     pub graph: CsrGraph,
@@ -51,6 +51,12 @@ impl Workload for PageRank {
 
     fn footprint_hint(&self) -> u64 {
         (self.graph.n() * (8 + 8 + 4 + 4) + self.graph.m() * 4) as u64
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(0x9A6E, self.graph.fingerprint());
+        let h = mix(h, self.iterations as u64);
+        mix(mix_bits(h, self.damping), self.cycles_per_edge)
     }
 
     fn run(&self, env: &mut Env) -> u64 {

@@ -148,6 +148,25 @@ mod tests {
     }
 
     #[test]
+    fn trace_fingerprints_fold_stream_parameters() {
+        use crate::workloads::kvstore::KvStore;
+        // same footprint, different op count → different streams, so the
+        // TraceStore must key them apart
+        let a = KvStore::new(50_000, 50_000);
+        let b = KvStore::new(50_000, 100_000);
+        assert_eq!(a.footprint_hint(), b.footprint_hint());
+        assert_ne!(a.trace_fingerprint(), b.trace_fingerprint());
+        // stable across instances with identical parameters
+        assert_eq!(a.trace_fingerprint(), KvStore::new(50_000, 50_000).trace_fingerprint());
+        // and distinct across the registry population
+        let mut seen = std::collections::HashSet::new();
+        for name in NAMES {
+            let w = build(name, Scale::Small).unwrap();
+            assert!(seen.insert(w.trace_fingerprint()), "{name}: fingerprint collision");
+        }
+    }
+
+    #[test]
     fn names_unique() {
         let mut v = NAMES.to_vec();
         v.sort();

@@ -47,6 +47,10 @@ impl Workload for Sort {
         (self.n * 16) as u64
     }
 
+    fn trace_fingerprint(&self) -> u64 {
+        mix(mix(0x50, self.n as u64), self.seed)
+    }
+
     fn run(&self, env: &mut Env) -> u64 {
         env.phase("load");
         let mut a = env.tvec_from(self.gen(), "sort/a");

@@ -90,6 +90,12 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
     lk = key.lower()
     if any(tag in lk for tag in ("slowdown", "delta", "pct")):
         return  # legitimately signed metrics: finiteness is enough
+    if "speedup" in lk:
+        # a ratio of two positive host times: zero or negative means a
+        # dead timer, not a slow run
+        if float(value) <= 0.0:
+            fail(f"{path}: {row_id}.{key} = {value} is not a positive ratio")
+        return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
