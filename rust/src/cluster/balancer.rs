@@ -76,7 +76,11 @@ impl ClusterBalancer {
             }
         }
         if let Some((i, _)) = best {
-            self.rr.store(i + 1, Ordering::Relaxed);
+            // wrap at store time: a raw `i + 1` is harmless while the
+            // fleet size is stable (loads take `% n`), but if the fleet
+            // shrinks between picks a stale out-of-range cursor lands on
+            // an arbitrary start node and silently skews tie rotation
+            self.rr.store((i + 1) % n, Ordering::Relaxed);
         }
         best.map(|(i, _)| i)
     }
@@ -115,6 +119,23 @@ mod tests {
             counts[b.pick(&views, 500, 0).unwrap()] += 1;
         }
         assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn ties_keep_rotating_after_fleet_shrinks() {
+        let b = ClusterBalancer::default();
+        // 3-node fleet: picking the last node must store a wrapped
+        // cursor (0), not the raw 3
+        let views3 = [view(0, true), view(0, true), view(0, true)];
+        assert_eq!(b.pick(&views3, 0, 0), Some(0));
+        assert_eq!(b.pick(&views3, 0, 0), Some(1));
+        assert_eq!(b.pick(&views3, 0, 0), Some(2));
+        // fleet shrinks to 2: rotation resumes from the wrapped cursor
+        // (node 0 — just past the last pick), not from the stale raw
+        // index (3 % 2 = 1), and stays a fair alternation
+        let views2 = [view(0, true), view(0, true)];
+        let picks: Vec<usize> = (0..4).map(|_| b.pick(&views2, 0, 0).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
     }
 
     #[test]

@@ -160,6 +160,16 @@ pub struct ClusterReport {
     pub trace_records: u64,
     pub trace_replays: u64,
     pub trace_bytes: u64,
+    /// Per-function DRAM provisioning rollup (`[provision]` enabled):
+    /// demand curves held across the node tuners, allocator runs, and
+    /// the latest DRAM-saved-vs-uniform snapshots summed over nodes.
+    /// The SLO-violation delta against a uniform run comes from
+    /// comparing two reports' `violation_rate` (see
+    /// `benches/e2e_provision.rs`) — a single run has no counterfactual.
+    pub provision_enabled: bool,
+    pub provision_curves: u64,
+    pub provision_reallocs: u64,
+    pub provision_dram_saved_bytes: u64,
     /// Sandbox-lifecycle rollup. With the lifecycle layer disabled the
     /// start counters fall back to the legacy hint-based cold/warm
     /// split and the snapshot fields stay zero.
@@ -290,6 +300,17 @@ impl ClusterReport {
                 self.trace_replays
             ),
         ]);
+        if self.provision_enabled {
+            t.row(vec![
+                "provisioning".into(),
+                format!(
+                    "{} curves, {} reallocs, {} saved vs uniform",
+                    self.provision_curves,
+                    self.provision_reallocs,
+                    fmt_bytes(self.provision_dram_saved_bytes)
+                ),
+            ]);
+        }
         t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
         t.row(vec!["cost proxy".into(), format!("{:.1} units", self.cost_units)]);
         t.row(vec![
@@ -764,6 +785,10 @@ impl Cluster {
             trace_records: self.nodes.iter().map(|n| n.trace_records).sum(),
             trace_replays: self.nodes.iter().map(|n| n.trace_replays).sum(),
             trace_bytes: self.nodes.iter().map(|n| n.trace_bytes).sum(),
+            provision_enabled: self.cfg.provision.enabled,
+            provision_curves: self.nodes.iter().map(|n| n.provision_counts().0).sum(),
+            provision_reallocs: self.nodes.iter().map(|n| n.provision_counts().1).sum(),
+            provision_dram_saved_bytes: self.nodes.iter().map(|n| n.provision_counts().2).sum(),
             lifecycle_enabled: self.cfg.lifecycle.enabled,
             cold_starts: self.nodes.iter().map(|n| n.cold_starts).sum(),
             warm_starts: self.nodes.iter().map(|n| n.warm_starts).sum(),
@@ -942,6 +967,38 @@ mod tests {
         for n in &r.nodes {
             assert!(n.cold_runs <= 2);
         }
+    }
+
+    #[test]
+    fn provisioning_rollup_and_determinism() {
+        let mut cfg = small_cfg();
+        cfg.provision.enabled = true;
+        let a = simulate(&cfg).unwrap();
+        assert!(a.provision_enabled);
+        assert!(a.provision_curves > 0, "tuners must build demand curves");
+        assert!(a.provision_reallocs > 0, "allocator must run on the epoch cadence");
+        assert!(a.render().contains("provisioning"));
+        // provisioning decisions are part of the deterministic replay
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.determinism_token, b.determinism_token);
+        assert_eq!(a.provision_reallocs, b.provision_reallocs);
+        assert_eq!(a.provision_dram_saved_bytes, b.provision_dram_saved_bytes);
+    }
+
+    #[test]
+    fn provisioning_disabled_stays_bit_identical() {
+        // the [provision] section is default-off; flipping unrelated
+        // knobs in it must not change a run at all
+        let base = simulate(&small_cfg()).unwrap();
+        let mut cfg = small_cfg();
+        cfg.provision.epoch_profiles = 1;
+        cfg.provision.min_gain_frac = 0.5;
+        let tweaked = simulate(&cfg).unwrap();
+        assert_eq!(base.determinism_token, tweaked.determinism_token);
+        assert_eq!(base.fleet_p50_ns, tweaked.fleet_p50_ns);
+        assert_eq!(base.provision_curves, 0);
+        assert_eq!(base.provision_reallocs, 0);
+        assert!(!base.render().contains("provisioning"));
     }
 
     #[test]

@@ -266,7 +266,10 @@ impl Node {
 
     /// Run one invocation for real on a node server (sequentially — the
     /// fleet stays deterministic), draining the tuner after a profiled
-    /// run so the hint is visible to the next arrival.
+    /// run so the hint is visible to the next arrival. With
+    /// `[provision]` enabled that drain also covers the demand-curve
+    /// ladder replays for a fleet-wide-first function — a one-off
+    /// host-time cost; later nodes hit the process-wide curve memo.
     fn measure(&mut self, spec: &FunctionSpec) -> InvocationOutcome {
         let id = ((self.id as u64) << 32) | self.next_exec_id;
         self.next_exec_id += 1;
@@ -438,6 +441,13 @@ impl Node {
             .and_then(|p| p.sandboxes().iter().find(|s| s.function == function))
             .map(|s| s.uses)
             .unwrap_or(1)
+    }
+
+    /// Provisioning-loop rollup from the node's tuner:
+    /// `(curves, reallocs, dram_saved_bytes)` — all zero when the
+    /// `[provision]` section is off.
+    pub fn provision_counts(&self) -> (u64, u64, u64) {
+        self.tuner.provision_metrics().counts()
     }
 
     pub fn warm_pool_metrics(&self) -> Option<WarmPoolMetrics> {

@@ -304,6 +304,61 @@ impl Default for TraceConfig {
     }
 }
 
+/// Per-function DRAM-provisioning knobs (`placement::provision` — the
+/// what-if optimizer that replaces the global `porter.dram_budget_frac`
+/// with per-function budgets).
+///
+/// Default-off: with `enabled = false` the tuner keeps handing every
+/// function the same global budget fraction and legacy runs stay
+/// bit-identical. When enabled, the offline tuner builds a per-function
+/// latency-vs-DRAM [`crate::placement::provision::DemandCurve`] by
+/// replaying the function's stored Trace-IR at every `ladder` ratio
+/// (memoized in the [`crate::trace::TraceStore`]), and a knapsack-style
+/// [`crate::placement::provision::BudgetAllocator`] partitions the
+/// server's DRAM across its resident functions by greedy
+/// marginal-utility descent on an epoch cadence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProvisionConfig {
+    /// Master switch for per-function DRAM provisioning.
+    pub enabled: bool,
+    /// DRAM ratios (fractions of each function's footprint) the what-if
+    /// replays sample. Must start at 0, end at 1, strictly increase.
+    pub ladder: Vec<f64>,
+    /// Re-allocation cadence: the tuner re-runs the allocator every
+    /// this many submitted profiles (new functions always trigger one).
+    pub epoch_profiles: u64,
+    /// A ladder upgrade must cut the function's wall time by at least
+    /// this fraction of its zero-DRAM wall to be worth DRAM — the knob
+    /// that lets flat curve tails return capacity instead of hoarding.
+    pub min_gain_frac: f64,
+    /// Derive per-function DRAM floors from SLO targets (best observed
+    /// wall × `porter.slo_factor`) before the greedy descent.
+    pub slo_floors: bool,
+}
+
+impl Default for ProvisionConfig {
+    fn default() -> Self {
+        ProvisionConfig {
+            enabled: false,
+            ladder: vec![0.0, 0.125, 0.25, 0.5, 0.75, 1.0],
+            epoch_profiles: 4,
+            min_gain_frac: 0.01,
+            slo_floors: true,
+        }
+    }
+}
+
+/// Parse a provisioning ladder from its comma-separated TOML form
+/// (`ladder = "0,0.125,0.25,0.5,1"` — the TOML subset has no arrays).
+pub fn parse_ladder(text: &str) -> Result<Vec<f64>, String> {
+    text.split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<f64>().map_err(|_| format!("provision.ladder: bad ratio {s:?}"))
+        })
+        .collect()
+}
+
 /// Function-lifecycle knobs (`lifecycle::` — warm pools, keep-alive
 /// policies, and CXL-resident snapshots).
 ///
@@ -455,6 +510,7 @@ pub struct Config {
     pub porter: PorterConfig,
     pub migration: MigrationConfig,
     pub trace: TraceConfig,
+    pub provision: ProvisionConfig,
     pub lifecycle: LifecycleConfig,
     pub cluster: ClusterConfig,
 }
@@ -528,6 +584,11 @@ impl Config {
                 "trace.enabled" => cfg.trace.enabled = value.as_bool()?,
                 "trace.live_execution" => cfg.trace.live_execution = value.as_bool()?,
                 "trace.max_cached" => cfg.trace.max_cached = value.as_u64()? as usize,
+                "provision.enabled" => cfg.provision.enabled = value.as_bool()?,
+                "provision.ladder" => cfg.provision.ladder = parse_ladder(value.as_str()?)?,
+                "provision.epoch_profiles" => cfg.provision.epoch_profiles = value.as_u64()?,
+                "provision.min_gain_frac" => cfg.provision.min_gain_frac = value.as_f64()?,
+                "provision.slo_floors" => cfg.provision.slo_floors = value.as_bool()?,
                 "lifecycle.enabled" => cfg.lifecycle.enabled = value.as_bool()?,
                 "lifecycle.warm_pool" => {
                     cfg.lifecycle.warm_pool_bytes = parse_bytes(value.as_str()?)?
@@ -666,6 +727,40 @@ impl Config {
         }
         if self.trace.max_cached == 0 {
             return Err("trace.max_cached must be >= 1".into());
+        }
+        let pv = &self.provision;
+        if pv.enabled && (!self.trace.enabled || self.trace.live_execution) {
+            // the optimizer's demand curves are built from stored
+            // Trace-IR recordings; without the replay path it would
+            // silently no-op with every metric at zero
+            return Err(
+                "provision.enabled requires the Trace-IR replay path \
+                 (trace.enabled = true, trace.live_execution = false)"
+                    .into(),
+            );
+        }
+        if pv.ladder.len() < 2 {
+            return Err("provision.ladder needs at least two ratios".into());
+        }
+        if pv.ladder[0] != 0.0 {
+            return Err("provision.ladder must start at 0 (the zero-DRAM endpoint)".into());
+        }
+        if *pv.ladder.last().expect("len checked") != 1.0 {
+            return Err("provision.ladder must end at 1 (the full-footprint endpoint)".into());
+        }
+        if pv.ladder.iter().any(|r| !r.is_finite() || !(0.0..=1.0).contains(r)) {
+            return Err("provision.ladder ratios must be finite and in [0,1]".into());
+        }
+        for w in pv.ladder.windows(2) {
+            if w[1] <= w[0] {
+                return Err("provision.ladder must be strictly increasing".into());
+            }
+        }
+        if pv.epoch_profiles == 0 {
+            return Err("provision.epoch_profiles must be >= 1".into());
+        }
+        if !(0.0..1.0).contains(&pv.min_gain_frac) {
+            return Err("provision.min_gain_frac must be in [0,1)".into());
         }
         let lc = &self.lifecycle;
         if !matches!(lc.policy.as_str(), "ttl" | "lru" | "histogram") {
@@ -865,6 +960,50 @@ target_occupancy = 0.8
     fn rejects_invalid_trace_values() {
         assert!(Config::from_toml_str("[trace]\nmax_cached = 0\n").is_err());
         assert!(Config::from_toml_str("[trace]\nnonsense = 1\n").is_err());
+    }
+
+    #[test]
+    fn parses_provision_section() {
+        let text = r#"
+[provision]
+enabled = true
+ladder = "0, 0.25, 0.5, 1"
+epoch_profiles = 2
+min_gain_frac = 0.05
+slo_floors = false
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.provision.enabled);
+        assert_eq!(c.provision.ladder, vec![0.0, 0.25, 0.5, 1.0]);
+        assert_eq!(c.provision.epoch_profiles, 2);
+        assert_eq!(c.provision.min_gain_frac, 0.05);
+        assert!(!c.provision.slo_floors);
+    }
+
+    #[test]
+    fn provision_disabled_by_default() {
+        let c = Config::default();
+        assert!(!c.provision.enabled, "global-budget behaviour must stay the default");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_provision_values() {
+        assert!(Config::from_toml_str("[provision]\nladder = \"0\"\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nladder = \"0.1,0.5,1\"\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nladder = \"0,0.5,0.9\"\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nladder = \"0,0.5,0.5,1\"\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nladder = \"0,zap,1\"\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nepoch_profiles = 0\n").is_err());
+        assert!(Config::from_toml_str("[provision]\nmin_gain_frac = 1.0\n").is_err());
+        // the optimizer needs the Trace-IR replay path to build curves
+        assert!(Config::from_toml_str(
+            "[provision]\nenabled = true\n\n[trace]\nlive_execution = true\n"
+        )
+        .is_err());
+        assert!(Config::from_toml_str("[provision]\nenabled = true\n\n[trace]\nenabled = false\n")
+            .is_err());
+        assert!(Config::from_toml_str("[provision]\nenabled = true\n").is_ok());
     }
 
     #[test]

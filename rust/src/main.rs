@@ -15,6 +15,12 @@
 //!           info   [<w>|--in F]           IR stats + per-phase summary
 //!   profile <workload>                   DAMON heatmap + boundness
 //!   place   <workload>                   §3 profile → static placement
+//!   provision [--functions N] [--dram-mb M]  per-function DRAM
+//!           provisioning what-if: build latency-vs-DRAM demand curves
+//!           from Trace-IR replays, then partition a node's DRAM across
+//!           the functions by greedy marginal-utility descent and
+//!           compare against uniform provisioning at equal DRAM
+//!           (greppable PROVISION counter line)
 //!   serve   [--requests N]               Porter serving demo (DL path)
 //!   cluster [--nodes N] [--arrivals S]   fleet simulation (open-loop)
 //!           [--warm-pool-mb N] [--snapshot] [--keepalive ttl|lru|histogram]
@@ -47,11 +53,13 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("profile") => cmd_profile(&args),
         Some("place") => cmd_place(&args),
+        Some("provision") => cmd_provision(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         _ => {
             eprintln!(
-                "usage: porter-cli <config|list|run|trace|profile|place|serve|cluster> [options]\n\
+                "usage: porter-cli \
+                 <config|list|run|trace|profile|place|provision|serve|cluster> [options]\n\
                  see `cargo bench` for the paper-figure harnesses"
             );
             2
@@ -489,6 +497,127 @@ fn cmd_place(args: &Args) -> i32 {
     for o in &r.hint.objects {
         println!("  [{}] {} ({})", o.class.name(), o.site, porter::util::bytes::fmt_bytes(o.bytes));
     }
+    0
+}
+
+/// Per-function DRAM provisioning what-if: demand curves from Trace-IR
+/// ladder replays, greedy marginal-utility budgets vs uniform
+/// provisioning at equal DRAM (see `placement::provision`).
+fn cmd_provision(args: &Args) -> i32 {
+    use porter::cluster::default_population;
+    use porter::placement::provision::{obtain_curve, BudgetAllocator, FunctionDemand};
+    use porter::porter::slo::SloTracker;
+    use porter::trace::TraceStore;
+    use porter::util::bytes::{fmt_bytes, MIB};
+
+    let cfg = load_config(args);
+    let parsed = (|| -> Result<(usize, Option<u64>), String> {
+        let functions = args.opt_usize("functions", 6)?;
+        let dram_mb = match args.opt("dram-mb") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<u64>()
+                    .map_err(|_| format!("--dram-mb expects an integer, got {v:?}"))?,
+            ),
+        };
+        Ok((functions, dram_mb))
+    })();
+    let (functions, dram_mb) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let scale = scale_of(args);
+    let store = TraceStore::global();
+    let ladder = &cfg.provision.ladder;
+
+    // 1. demand curves (record each trace once, replay it per rung)
+    let mut demands = Vec::new();
+    let mut slo = SloTracker::default();
+    for name in default_population(functions) {
+        let Some(w) = build(&name, scale) else {
+            eprintln!("unknown workload {name:?}");
+            return 2;
+        };
+        let (curve, built) =
+            obtain_curve(store, w.as_ref(), &cfg.machine, ladder, cfg.trace.max_cached);
+        eprintln!(
+            "  curve {name}: footprint {} across {} rungs{}",
+            fmt_bytes(curve.footprint),
+            curve.points.len(),
+            if built { "" } else { " (memoized)" }
+        );
+        // seed the SLO reference the serving path would learn online:
+        // the ladder-top wall is the function's best observed latency
+        slo.record_latency(&name, curve.best_wall_ns(), None);
+        demands.push(FunctionDemand::new(curve));
+    }
+    if cfg.provision.slo_floors {
+        for d in &mut demands {
+            let target = slo
+                .get(&d.curve.function)
+                .map(|f| f.mean_wall_ns() * cfg.porter.slo_factor);
+            d.floor_bytes = target.and_then(|t| d.curve.bytes_for_target(t));
+        }
+    }
+
+    // 2. allocate at each what-if capacity
+    let total: u64 = demands.iter().map(|d| d.curve.footprint).sum();
+    let capacities: Vec<u64> = match dram_mb {
+        Some(mb) => vec![mb * MIB],
+        None => [0.25, 0.5, 0.75].iter().map(|f| (total as f64 * f) as u64).collect(),
+    };
+    let allocator = BudgetAllocator::from_config(&cfg.provision);
+    let mut reallocs = 0u64;
+    let mut best_saved = 0u64;
+    for &capacity in &capacities {
+        let alloc = allocator.allocate(capacity, &demands);
+        reallocs += 1;
+        best_saved = best_saved.max(alloc.dram_saved_bytes());
+        println!(
+            "capacity {} (uniform ladder ratio {:.3}{}):",
+            fmt_bytes(capacity),
+            alloc.uniform_ratio,
+            if alloc.fell_back_to_uniform { ", fell back to uniform" } else { "" }
+        );
+        let headers =
+            ["function", "footprint", "uniform", "optimized", "frac", "wall uni", "wall opt"];
+        let mut t = Table::new(&headers).left_first();
+        for (d, b) in demands.iter().zip(&alloc.budgets) {
+            let uni_bytes = (d.curve.footprint as f64 * alloc.uniform_ratio) as u64;
+            t.row(vec![
+                format!("{}{}", b.function, if b.floor_met { " (slo floor)" } else { "" }),
+                fmt_bytes(d.curve.footprint),
+                fmt_bytes(uni_bytes),
+                fmt_bytes(b.dram_bytes),
+                format!("{:.3}", b.frac),
+                porter::bench::fmt_ns(d.curve.wall_at(uni_bytes)),
+                porter::bench::fmt_ns(b.predicted_wall_ns),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "  totals: optimized {} / {} used, predicted wall {} vs uniform {} (saved {})",
+            fmt_bytes(alloc.used_bytes),
+            fmt_bytes(capacity),
+            porter::bench::fmt_ns(alloc.predicted_wall_ns),
+            porter::bench::fmt_ns(alloc.uniform_wall_ns),
+            fmt_bytes(alloc.dram_saved_bytes())
+        );
+    }
+
+    // stable machine-readable counter line (CI smoke greps this)
+    let (curve_builds, curve_hits) = store.curve_counts();
+    println!(
+        "PROVISION curves={} reallocs={} dram_saved_mb={} curve_builds={} curve_hits={}",
+        demands.len(),
+        reallocs,
+        best_saved / MIB,
+        curve_builds,
+        curve_hits
+    );
     0
 }
 

@@ -7,11 +7,18 @@
 //!   AllCxl, FirstTouchDram, hint-driven static placement, and a
 //!   TPP-like promotion/demotion migrator as the kernel-baseline.
 //! * [`static_place`] — the §3 profile→place pipeline in one call.
+//! * [`provision`] — per-function DRAM provisioning: what-if trace
+//!   replays build latency-vs-DRAM [`provision::DemandCurve`]s, and a
+//!   [`provision::BudgetAllocator`] partitions a node's DRAM across its
+//!   resident functions by greedy marginal-utility descent, replacing
+//!   the global `dram_budget_frac` with per-function budgets.
 
 pub mod hints;
 pub mod policies;
+pub mod provision;
 pub mod static_place;
 
 pub use hints::{HeatClass, ObjectHeat, PlacementHint};
 pub use policies::{FirstTouchDram, HintedPlacer, TppMigrator};
+pub use provision::{Allocation, BudgetAllocator, DemandCurve, FunctionDemand};
 pub use static_place::{profile_and_place, StaticPlacementResult};

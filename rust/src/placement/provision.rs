@@ -1,0 +1,659 @@
+//! Per-function DRAM provisioning: what-if trace replays → latency
+//! curves → fleet-wide budget allocation.
+//!
+//! The paper's core argument is that DRAM/CXL should be provisioned "in
+//! a fine-grained, application-specific manner"; a global
+//! `dram_budget_frac` is exactly the naive provisioning it critiques.
+//! This module turns the Trace-IR store into that fine-grained
+//! optimizer:
+//!
+//! * [`DemandCurve`] — one function's latency-vs-DRAM curve, built by
+//!   replaying its stored [`AccessTrace`] through [`sim::Machine`] at a
+//!   ladder of DRAM ratios (what-if runs are nearly free once the trace
+//!   exists). Curves interpolate between ladder points, are monotone
+//!   non-increasing in latency by construction, and expose a
+//!   marginal-utility view (Δlatency per ΔMiB).
+//! * [`BudgetAllocator`] — partitions a node's DRAM across its resident
+//!   functions by greedy marginal-utility descent (knapsack-style),
+//!   honoring optional per-function SLO floors, and compares itself
+//!   against uniform provisioning (every function at the same ladder
+//!   ratio — the global-`dram_budget_frac` analog) at equal DRAM.
+//! * Curve memoization lives in the process-wide
+//!   [`TraceStore`], keyed by the trace key plus a
+//!   machine/ladder fingerprint, so node B's tuner reuses node A's
+//!   what-if replays exactly like it reuses recordings.
+//!
+//! [`sim::Machine`]: crate::sim::Machine
+
+use std::sync::Arc;
+
+use crate::config::{MachineConfig, ProvisionConfig};
+use crate::placement::policies::FirstTouchDram;
+use crate::sim::Machine;
+use crate::trace::{AccessTrace, TraceKey, TraceStore};
+use crate::util::bytes::MIB;
+use crate::workloads::{mix, mix_bits, Workload};
+
+/// One measured ladder point of a [`DemandCurve`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    /// Ladder ratio (fraction of the function's footprint).
+    pub ratio: f64,
+    /// Granted DRAM in bytes (0 at ratio 0: no reserved DRAM; the
+    /// measuring machine still holds the one-page floor every grant
+    /// has, so the 0-point wall is the all-CXL-but-one-page endpoint).
+    pub dram_bytes: u64,
+    /// Replayed wall time at this grant.
+    pub wall_ns: f64,
+}
+
+/// A function's latency-vs-DRAM demand curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DemandCurve {
+    /// Workload/function name the curve belongs to.
+    pub function: String,
+    /// Footprint the ladder ratios scale against (bytes).
+    pub footprint: u64,
+    /// Page size of the measuring machine (floor alignment).
+    pub page_bytes: u64,
+    /// Ladder points, ascending in `dram_bytes`, `wall_ns` monotone
+    /// non-increasing (enforced at construction).
+    pub points: Vec<CurvePoint>,
+}
+
+impl DemandCurve {
+    /// Build from raw measured points: sorts by grant size, clamps wall
+    /// times monotone non-increasing (a bigger grant can never be
+    /// *worse* — measurement noise from placement artifacts must not
+    /// produce negative marginal utility), and equalizes duplicate-grant
+    /// runs so interpolation never divides by a zero-width segment.
+    pub fn new(
+        function: &str,
+        footprint: u64,
+        page_bytes: u64,
+        mut points: Vec<CurvePoint>,
+    ) -> DemandCurve {
+        assert!(!points.is_empty(), "demand curve needs at least one point");
+        assert!(footprint > 0, "demand curve needs a nonzero footprint");
+        points.sort_by(|a, b| {
+            (a.dram_bytes, a.ratio).partial_cmp(&(b.dram_bytes, b.ratio)).expect("finite ratios")
+        });
+        for i in 1..points.len() {
+            points[i].wall_ns = points[i].wall_ns.min(points[i - 1].wall_ns);
+        }
+        // duplicate-grant runs (tiny footprints quantize ladder ratios
+        // onto the same page count): every point of the run takes the
+        // run's minimum, which after the clamp is the last one's wall
+        let mut i = 0;
+        while i < points.len() {
+            let mut j = i;
+            while j + 1 < points.len() && points[j + 1].dram_bytes == points[i].dram_bytes {
+                j += 1;
+            }
+            let min_wall = points[j].wall_ns;
+            for p in &mut points[i..=j] {
+                p.wall_ns = min_wall;
+            }
+            i = j + 1;
+        }
+        DemandCurve { function: function.to_string(), footprint, page_bytes, points }
+    }
+
+    /// Interpolated wall time at an arbitrary DRAM grant: clamped to
+    /// the endpoints outside the ladder, piecewise-linear between
+    /// points. Monotone non-increasing in `dram_bytes` because the
+    /// points are.
+    pub fn wall_at(&self, dram_bytes: u64) -> f64 {
+        let pts = &self.points;
+        if dram_bytes <= pts[0].dram_bytes {
+            return pts[0].wall_ns;
+        }
+        for w in pts.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if dram_bytes <= b.dram_bytes {
+                if b.dram_bytes == a.dram_bytes {
+                    return b.wall_ns;
+                }
+                let t = (dram_bytes - a.dram_bytes) as f64 / (b.dram_bytes - a.dram_bytes) as f64;
+                return a.wall_ns + (b.wall_ns - a.wall_ns) * t;
+            }
+        }
+        pts[pts.len() - 1].wall_ns
+    }
+
+    /// Marginal utility of the upgrade out of point `idx`: wall time
+    /// saved per MiB of extra DRAM moving to point `idx + 1` (0 at the
+    /// ladder top or across a zero-width segment).
+    pub fn marginal_utility_per_mib(&self, idx: usize) -> f64 {
+        match (self.points.get(idx), self.points.get(idx + 1)) {
+            (Some(a), Some(b)) if b.dram_bytes > a.dram_bytes => {
+                (a.wall_ns - b.wall_ns) / ((b.dram_bytes - a.dram_bytes) as f64 / MIB as f64)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Smallest DRAM grant whose interpolated wall time meets
+    /// `target_ns` (page-aligned up, capped at the ladder top), or
+    /// `None` when even the full-footprint grant misses the target —
+    /// the SLO-floor primitive the allocator honors.
+    pub fn bytes_for_target(&self, target_ns: f64) -> Option<u64> {
+        let pts = &self.points;
+        if pts[0].wall_ns <= target_ns {
+            return Some(pts[0].dram_bytes);
+        }
+        for w in pts.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if b.wall_ns <= target_ns {
+                // a.wall > target >= b.wall, so the segment has width
+                let t = (a.wall_ns - target_ns) / (a.wall_ns - b.wall_ns);
+                let raw = a.dram_bytes as f64 + (b.dram_bytes - a.dram_bytes) as f64 * t;
+                let aligned =
+                    (raw.ceil() as u64).next_multiple_of(self.page_bytes.max(1));
+                return Some(aligned.min(b.dram_bytes));
+            }
+        }
+        None
+    }
+
+    /// The ladder-top wall time (the best this curve can do).
+    pub fn best_wall_ns(&self) -> f64 {
+        self.points[self.points.len() - 1].wall_ns
+    }
+}
+
+/// Replay one trace on a machine whose DRAM is capped at `dram_bytes`
+/// (one-page floor — a grant of 0 still leaves the kernel a page), with
+/// first-touch placement and no migrator: the static what-if both the
+/// curve builder and the provisioning benches measure with.
+pub fn measure_wall(trace: &AccessTrace, machine: &MachineConfig, dram_bytes: u64) -> f64 {
+    let mut mcfg = machine.clone();
+    mcfg.dram_bytes = dram_bytes.max(mcfg.page_bytes);
+    let mut m = Machine::new(&mcfg, Box::new(FirstTouchDram::default()));
+    m.replay(trace);
+    m.report().wall_ns
+}
+
+/// Footprint a trace's ladder scales against: the interned objects'
+/// total bytes (the shim's view of the working set), floored at the
+/// untracked-access extent and one page.
+pub fn trace_footprint(trace: &AccessTrace, page_bytes: u64) -> u64 {
+    let objects: u64 = trace.objects.iter().map(|o| o.bytes).sum();
+    objects.max(trace.footprint_extent()).max(page_bytes.max(1))
+}
+
+/// Build a function's demand curve by replaying `trace` at every ladder
+/// ratio. Deterministic: same trace + machine + ladder → bit-identical
+/// curve.
+pub fn build_curve(
+    function: &str,
+    trace: &AccessTrace,
+    machine: &MachineConfig,
+    ladder: &[f64],
+) -> DemandCurve {
+    let page = machine.page_bytes.max(1);
+    let footprint = trace_footprint(trace, page);
+    let points = ladder
+        .iter()
+        .map(|&ratio| {
+            let dram_bytes = if ratio <= 0.0 {
+                0
+            } else {
+                ((footprint as f64 * ratio).ceil() as u64).next_multiple_of(page).min(
+                    footprint.next_multiple_of(page),
+                )
+            };
+            CurvePoint { ratio, dram_bytes, wall_ns: measure_wall(trace, machine, dram_bytes) }
+        })
+        .collect();
+    DemandCurve::new(function, footprint, page, points)
+}
+
+/// Fingerprint of everything besides the trace that shapes a curve:
+/// the machine's latency/bandwidth/cache parameters and the ladder.
+/// Part of the memoization key so a config change can never serve a
+/// stale curve.
+pub fn curve_fingerprint(machine: &MachineConfig, ladder: &[f64]) -> u64 {
+    let mut h = mix(0xC057_0D1A, machine.page_bytes);
+    for v in [
+        machine.dram_latency_ns,
+        machine.dram_bw_gbps,
+        machine.cxl_latency_ns,
+        machine.cxl_bw_gbps,
+        machine.freq_ghz,
+        machine.mlp,
+        machine.l3_hit_ns,
+        machine.l3_bytes as f64,
+    ] {
+        h = mix_bits(h, v);
+    }
+    h = mix(h, machine.cache_line);
+    h = mix(h, machine.l3_ways as u64);
+    // CXL capacity shapes low-DRAM rungs (the spill tier can fill);
+    // DRAM capacity is deliberately excluded — measure_wall overrides
+    // it per rung, so curves are shareable across node DRAM sizes
+    h = mix(h, machine.cxl_bytes);
+    h = mix(h, ladder.len() as u64);
+    for &r in ladder {
+        h = mix_bits(h, r);
+    }
+    h
+}
+
+/// Memoized curve for a trace already in the store (the tuner path:
+/// the engine recorded the canonical trace before shipping the
+/// profile). `None` when the store no longer holds the trace (bounded
+/// out) — the caller simply skips provisioning for that function.
+pub fn curve_for_key(
+    store: &TraceStore,
+    key: &TraceKey,
+    machine: &MachineConfig,
+    ladder: &[f64],
+) -> Option<Arc<DemandCurve>> {
+    let fp = curve_fingerprint(machine, ladder);
+    if let Some(c) = store.curve(key, fp) {
+        return Some(c);
+    }
+    let trace = store.peek(key)?;
+    let curve = build_curve(&key.workload, &trace, machine, ladder);
+    Some(store.insert_curve(key.clone(), fp, curve))
+}
+
+/// Memoized curve for a workload, recording its trace first if needed
+/// (the CLI/bench path). Returns `(curve, built_now)`.
+pub fn obtain_curve(
+    store: &TraceStore,
+    w: &dyn Workload,
+    machine: &MachineConfig,
+    ladder: &[f64],
+    max_cached: usize,
+) -> (Arc<DemandCurve>, bool) {
+    let key = TraceKey::of(w, machine.page_bytes);
+    let fp = curve_fingerprint(machine, ladder);
+    if let Some(c) = store.curve(&key, fp) {
+        return (c, false);
+    }
+    let (trace, _) = store.obtain(w, machine.page_bytes, max_cached);
+    let curve = build_curve(&key.workload, &trace, machine, ladder);
+    (store.insert_curve(key, fp, curve), true)
+}
+
+/// One function's claim on a node's DRAM.
+#[derive(Debug, Clone)]
+pub struct FunctionDemand {
+    pub curve: Arc<DemandCurve>,
+    /// Minimum grant required to meet the function's SLO target
+    /// (from [`DemandCurve::bytes_for_target`]); honored before the
+    /// greedy descent, capacity permitting.
+    pub floor_bytes: Option<u64>,
+    /// Relative invocation weight (scales marginal utility and the
+    /// predicted-total accounting; 1.0 = equal traffic).
+    pub weight: f64,
+}
+
+impl FunctionDemand {
+    pub fn new(curve: Arc<DemandCurve>) -> FunctionDemand {
+        FunctionDemand { curve, floor_bytes: None, weight: 1.0 }
+    }
+}
+
+/// One function's allocated budget.
+#[derive(Debug, Clone)]
+pub struct FunctionBudget {
+    pub function: String,
+    pub dram_bytes: u64,
+    /// `dram_bytes / footprint` — what replaces the global
+    /// `dram_budget_frac` in `PlacementHint::generate`.
+    pub frac: f64,
+    pub predicted_wall_ns: f64,
+    /// This function's floor was honored (an SLO floor was requested
+    /// and the grant covers it).
+    pub floor_met: bool,
+}
+
+/// The allocator's full answer, including the uniform baseline it beat
+/// (or fell back to).
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Per-function budgets, in the demands' input order.
+    pub budgets: Vec<FunctionBudget>,
+    /// DRAM the optimized allocation actually consumes (≤ capacity).
+    pub used_bytes: u64,
+    /// Weighted total predicted wall time of the optimized allocation.
+    pub predicted_wall_ns: f64,
+    /// Uniform-on-ladder baseline at the same capacity: every function
+    /// at the largest common ladder ratio that fits — the
+    /// global-`dram_budget_frac` analog, quantized to the ladder.
+    pub uniform_ratio: f64,
+    pub uniform_used_bytes: u64,
+    pub uniform_wall_ns: f64,
+    /// The greedy descent predicted worse than uniform (non-concave
+    /// curves can defeat single-step greedy), so the uniform allocation
+    /// was returned instead. `predicted_wall_ns ≤ uniform_wall_ns`
+    /// holds whenever no SLO floor blocks the switch: a fallback is
+    /// refused if uniform would un-honor a floor greedy satisfied —
+    /// floor satisfaction outranks raw latency.
+    pub fell_back_to_uniform: bool,
+}
+
+impl Allocation {
+    /// DRAM returned to the pool relative to uniform provisioning at
+    /// the same capacity (0 when the optimizer spent as much or fell
+    /// back). Non-negative by construction.
+    pub fn dram_saved_bytes(&self) -> u64 {
+        self.uniform_used_bytes.saturating_sub(self.used_bytes)
+    }
+}
+
+/// Greedy marginal-utility budget allocator.
+#[derive(Debug, Clone)]
+pub struct BudgetAllocator {
+    /// See [`crate::config::ProvisionConfig::min_gain_frac`].
+    pub min_gain_frac: f64,
+    /// Compare against (and fall back to) the uniform-on-ladder
+    /// allocation. On by default; property tests disable it to check
+    /// the greedy arm's per-function monotonicity in isolation.
+    pub uniform_fallback: bool,
+}
+
+impl Default for BudgetAllocator {
+    fn default() -> Self {
+        BudgetAllocator { min_gain_frac: 0.01, uniform_fallback: true }
+    }
+}
+
+impl BudgetAllocator {
+    pub fn from_config(cfg: &ProvisionConfig) -> BudgetAllocator {
+        BudgetAllocator { min_gain_frac: cfg.min_gain_frac, uniform_fallback: true }
+    }
+
+    /// Partition `capacity_bytes` of DRAM across `demands`.
+    ///
+    /// Invariants (property-tested):
+    /// * never over-commits: `used_bytes ≤ capacity_bytes` (given every
+    ///   curve's first point is the 0-byte grant, as built curves are);
+    /// * the greedy arm is monotone in capacity — more DRAM never
+    ///   shrinks any function's budget (upgrades are a fixed,
+    ///   capacity-independent sequence; capacity only decides the
+    ///   prefix length, because the descent *stops* at the first
+    ///   non-fitting upgrade instead of skipping it);
+    /// * `predicted_wall_ns ≤ uniform_wall_ns` when the fallback is on
+    ///   and no SLO floor blocks it (uniform is never allowed to
+    ///   un-honor a floor the greedy arm satisfied).
+    pub fn allocate(&self, capacity_bytes: u64, demands: &[FunctionDemand]) -> Allocation {
+        assert!(!demands.is_empty(), "allocate over an empty fleet");
+        let n = demands.len();
+        let bytes_at = |d: &FunctionDemand, level: usize| d.curve.points[level].dram_bytes;
+        let wall_at_level = |d: &FunctionDemand, level: usize| d.curve.points[level].wall_ns;
+
+        // start every function at its ladder floor (the 0-byte grant)
+        let mut levels = vec![0usize; n];
+        let mut used: u64 = demands.iter().map(|d| bytes_at(d, 0)).sum();
+
+        // SLO floors first, in input order, capacity permitting: raise
+        // to the smallest ladder point covering the floor
+        for (i, d) in demands.iter().enumerate() {
+            let Some(floor) = d.floor_bytes else { continue };
+            while levels[i] + 1 < d.curve.points.len() && bytes_at(d, levels[i]) < floor {
+                let delta = bytes_at(d, levels[i] + 1) - bytes_at(d, levels[i]);
+                if used + delta > capacity_bytes {
+                    break;
+                }
+                used += delta;
+                levels[i] += 1;
+            }
+        }
+
+        // greedy marginal-utility descent over single ladder steps
+        loop {
+            let mut best: Option<(f64, usize)> = None;
+            for (i, d) in demands.iter().enumerate() {
+                let l = levels[i];
+                if l + 1 >= d.curve.points.len() {
+                    continue;
+                }
+                let gain = wall_at_level(d, l) - wall_at_level(d, l + 1);
+                // an upgrade must be worth its DRAM: at least
+                // min_gain_frac of the function's zero-DRAM wall
+                if gain < self.min_gain_frac * wall_at_level(d, 0) || gain <= 0.0 {
+                    continue;
+                }
+                let delta = (bytes_at(d, l + 1) - bytes_at(d, l)).max(1);
+                let utility = gain * d.weight / delta as f64;
+                // strict > keeps ties on the earliest (input-order)
+                // function: deterministic and capacity-independent
+                if best.is_none_or(|(u, _)| utility > u) {
+                    best = Some((utility, i));
+                }
+            }
+            let Some((_, i)) = best else { break };
+            let delta = bytes_at(&demands[i], levels[i] + 1) - bytes_at(&demands[i], levels[i]);
+            if used + delta > capacity_bytes {
+                // stop (don't skip): keeps the upgrade sequence a
+                // capacity-independent prefix → monotone budgets
+                break;
+            }
+            used += delta;
+            levels[i] += 1;
+        }
+
+        let total_wall = |lv: &[usize]| -> f64 {
+            demands.iter().zip(lv).map(|(d, &l)| d.weight * wall_at_level(d, l)).sum()
+        };
+        let mut predicted = total_wall(&levels);
+
+        // uniform-on-ladder baseline at the same capacity (only
+        // meaningful when every curve shares the ladder shape)
+        let aligned = demands.iter().all(|d| d.curve.points.len() == demands[0].curve.points.len());
+        let uniform_level = if aligned {
+            (0..demands[0].curve.points.len())
+                .rev()
+                .find(|&k| demands.iter().map(|d| bytes_at(d, k)).sum::<u64>() <= capacity_bytes)
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        let uniform_levels = vec![uniform_level; n];
+        let (uniform_used, uniform_wall, uniform_ratio) = if aligned {
+            (
+                demands.iter().map(|d| bytes_at(d, uniform_level)).sum::<u64>(),
+                total_wall(&uniform_levels),
+                demands[0].curve.points[uniform_level].ratio,
+            )
+        } else {
+            (used, predicted, 0.0)
+        };
+
+        // the fallback may not silently un-honor an SLO floor the
+        // greedy arm satisfied: uniform must meet every floor greedy met
+        let uniform_meets_floors = demands.iter().enumerate().all(|(i, d)| match d.floor_bytes {
+            Some(f) => bytes_at(d, uniform_level) >= f || bytes_at(d, levels[i]) < f,
+            None => true,
+        });
+        let mut fell_back = false;
+        if self.uniform_fallback
+            && aligned
+            && uniform_used <= capacity_bytes
+            && uniform_meets_floors
+            && uniform_wall < predicted
+        {
+            levels = uniform_levels;
+            used = uniform_used;
+            predicted = uniform_wall;
+            fell_back = true;
+        }
+
+        let budgets = demands
+            .iter()
+            .zip(&levels)
+            .map(|(d, &l)| {
+                let dram_bytes = bytes_at(d, l);
+                FunctionBudget {
+                    function: d.curve.function.clone(),
+                    dram_bytes,
+                    frac: (dram_bytes as f64 / d.curve.footprint as f64).clamp(0.0, 1.0),
+                    predicted_wall_ns: wall_at_level(d, l),
+                    floor_met: d.floor_bytes.is_some_and(|f| dram_bytes >= f),
+                }
+            })
+            .collect();
+        Allocation {
+            budgets,
+            used_bytes: used,
+            predicted_wall_ns: predicted,
+            uniform_ratio,
+            uniform_used_bytes: uniform_used,
+            uniform_wall_ns: uniform_wall,
+            fell_back_to_uniform: fell_back,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::workloads::kvstore::KvStore;
+
+    /// Synthetic curve over the default 6-rung ladder.
+    fn curve(name: &str, footprint: u64, walls: [f64; 6]) -> Arc<DemandCurve> {
+        let ladder = Config::default().provision.ladder;
+        let points = ladder
+            .iter()
+            .zip(walls)
+            .map(|(&ratio, wall_ns)| CurvePoint {
+                ratio,
+                dram_bytes: if ratio <= 0.0 { 0 } else { (footprint as f64 * ratio) as u64 },
+                wall_ns,
+            })
+            .collect();
+        Arc::new(DemandCurve::new(name, footprint, 4096, points))
+    }
+
+    #[test]
+    fn curve_clamps_monotone_and_interpolates() {
+        // a noisy bump at 0.25 must be clamped down
+        let c = curve("f", 1 << 20, [100.0, 80.0, 85.0, 60.0, 50.0, 50.0]);
+        let walls: Vec<f64> = c.points.iter().map(|p| p.wall_ns).collect();
+        assert!(walls.windows(2).all(|w| w[1] <= w[0]), "{walls:?}");
+        assert_eq!(c.wall_at(0), 100.0);
+        assert_eq!(c.wall_at(u64::MAX), 50.0);
+        // halfway between ratio 0 (100) and 0.125 (80): 90
+        let mid = c.wall_at((1 << 20) / 16);
+        assert!((mid - 90.0).abs() < 1e-9, "{mid}");
+        // interpolation stays monotone over arbitrary queries
+        let mut prev = f64::INFINITY;
+        for b in (0..=(1 << 20)).step_by(4096) {
+            let w = c.wall_at(b);
+            assert!(w <= prev + 1e-12);
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn bytes_for_target_finds_smallest_grant() {
+        let fp = 1u64 << 20;
+        let c = curve("f", fp, [100.0, 80.0, 70.0, 60.0, 50.0, 40.0]);
+        assert_eq!(c.bytes_for_target(200.0), Some(0));
+        assert!(c.bytes_for_target(30.0).is_none(), "unreachable target");
+        let need = c.bytes_for_target(65.0).unwrap();
+        assert!(c.wall_at(need) <= 65.0);
+        assert_eq!(need % 4096, 0, "page aligned");
+        // one page less must miss the target (minimality up to a page)
+        assert!(c.wall_at(need.saturating_sub(4096)) > 65.0);
+    }
+
+    #[test]
+    fn marginal_utility_reflects_segment_slope() {
+        let fp = 8 * MIB;
+        let c = curve("f", fp, [100.0, 80.0, 70.0, 60.0, 50.0, 50.0]);
+        // 0 → 0.125·8MiB = 1MiB for 20ns: 20 ns/MiB
+        assert!((c.marginal_utility_per_mib(0) - 20.0).abs() < 1e-9);
+        // flat tail: zero utility
+        assert_eq!(c.marginal_utility_per_mib(4), 0.0);
+        assert_eq!(c.marginal_utility_per_mib(5), 0.0);
+    }
+
+    #[test]
+    fn allocator_prefers_the_steep_curve_and_respects_capacity() {
+        let fp = 8 * MIB;
+        // hot-skewed: most of the win in the first rungs, flat tail
+        let hot = FunctionDemand::new(curve("hot", fp, [200.0, 120.0, 90.0, 80.0, 79.0, 79.0]));
+        // streaming: latency barely moves with DRAM
+        let stream =
+            FunctionDemand::new(curve("stream", fp, [210.0, 208.0, 206.0, 204.0, 202.0, 200.0]));
+        let alloc = BudgetAllocator::default().allocate(4 * MIB, &[hot, stream]);
+        assert!(alloc.used_bytes <= 4 * MIB);
+        assert!(
+            alloc.budgets[0].dram_bytes > alloc.budgets[1].dram_bytes,
+            "hot-skewed must out-budget streaming: {:?}",
+            alloc.budgets
+        );
+        assert!(alloc.predicted_wall_ns <= alloc.uniform_wall_ns);
+    }
+
+    #[test]
+    fn flat_tails_return_capacity_as_savings() {
+        let fp = 8 * MIB;
+        let hot = FunctionDemand::new(curve("hot", fp, [200.0, 120.0, 90.0, 88.0, 88.0, 88.0]));
+        let warm = FunctionDemand::new(curve("warm", fp, [150.0, 100.0, 80.0, 78.0, 78.0, 78.0]));
+        // plenty of capacity: uniform maxes the ladder, the optimizer
+        // stops where marginal gains die → nonzero savings
+        let alloc = BudgetAllocator::default().allocate(16 * MIB, &[hot, warm]);
+        assert!(alloc.dram_saved_bytes() > 0, "{alloc:?}");
+        assert!(alloc.predicted_wall_ns <= alloc.uniform_wall_ns);
+        assert!(!alloc.fell_back_to_uniform);
+    }
+
+    #[test]
+    fn floors_are_honored_before_greedy() {
+        let fp = 8 * MIB;
+        let a = FunctionDemand {
+            floor_bytes: Some(4 * MIB), // needs ratio 0.5
+            ..FunctionDemand::new(curve("slo", fp, [100.0, 99.0, 98.0, 97.0, 96.0, 95.0]))
+        };
+        let b = FunctionDemand::new(curve("fast", fp, [500.0, 100.0, 50.0, 40.0, 39.0, 39.0]));
+        let alloc = BudgetAllocator { min_gain_frac: 0.0, uniform_fallback: false }
+            .allocate(6 * MIB, &[a, b]);
+        assert!(alloc.budgets[0].floor_met, "{:?}", alloc.budgets);
+        assert!(alloc.budgets[0].dram_bytes >= 4 * MIB);
+        assert!(alloc.used_bytes <= 6 * MIB);
+    }
+
+    #[test]
+    fn built_curve_is_deterministic_and_monotone() {
+        let cfg = Config::default();
+        let w = KvStore::new(20_000, 40_000);
+        let trace = crate::trace::record_workload(&w, cfg.machine.page_bytes);
+        let ladder = &cfg.provision.ladder;
+        let a = build_curve("kv", &trace, &cfg.machine, ladder);
+        let b = build_curve("kv", &trace, &cfg.machine, ladder);
+        assert_eq!(a, b, "what-if replays are deterministic");
+        assert_eq!(a.points.len(), ladder.len());
+        assert_eq!(a.points[0].dram_bytes, 0);
+        assert!(a.points.windows(2).all(|w| w[1].wall_ns <= w[0].wall_ns));
+        assert!(
+            a.points[0].wall_ns > a.best_wall_ns(),
+            "kvstore must be DRAM-sensitive: {:?}",
+            a.points
+        );
+    }
+
+    #[test]
+    fn curve_memoization_hits_on_second_obtain() {
+        let store = TraceStore::new();
+        let cfg = Config::default();
+        let w = KvStore::new(21_000, 42_000);
+        let (a, built) = obtain_curve(&store, &w, &cfg.machine, &cfg.provision.ladder, 16);
+        assert!(built);
+        let (b, built) = obtain_curve(&store, &w, &cfg.machine, &cfg.provision.ladder, 16);
+        assert!(!built, "second obtain must hit the memo");
+        assert!(Arc::ptr_eq(&a, &b));
+        let (builds, hits) = store.curve_counts();
+        assert_eq!((builds, hits), (1, 1));
+        // a different ladder is a different curve
+        let (_, built) =
+            obtain_curve(&store, &w, &cfg.machine, &[0.0, 0.5, 1.0], 16);
+        assert!(built, "ladder is part of the memo key");
+    }
+}

@@ -156,11 +156,19 @@ pub fn run_invocation(
     // `[trace] live_execution = true` restores unconditional
     // re-execution.
     let use_replay = cfg.trace.enabled && !cfg.trace.live_execution;
+    // the canonical stream's store key doubles as the provisioning
+    // loop's what-if handle: it rides along on the profile shipped to
+    // the tuner so demand curves can replay the same recording
+    let trace_key = if use_replay {
+        Some(TraceKey::of(spec.body.as_ref(), cfg.machine.page_bytes))
+    } else {
+        None
+    };
     let mut trace_replayed = false;
     let mut trace_recorded_bytes = 0u64;
     let (checksum, objects) = if use_replay {
         let store = TraceStore::global();
-        let key = TraceKey::of(spec.body.as_ref(), cfg.machine.page_bytes);
+        let key = trace_key.clone().expect("use_replay implies a key");
         match store.get(&key) {
             Some(trace) => {
                 machine.replay(&trace);
@@ -188,6 +196,11 @@ pub fn run_invocation(
         (checksum, objects)
     };
     let report = machine.report();
+    // record the wall time BEFORE shipping the profile: the tuner's
+    // provisioning loop reads best_wall for SLO floors, and ordering it
+    // after submit would race the worker thread (nondeterministic
+    // floors; the fleet-simulation determinism token would flake)
+    tuner.hints().record_wall(&spec.name, report.wall_ns);
     // sandbox state capture: the object list plus where the run's
     // working set peaked — the lifecycle layer keeps/snapshots this.
     // ④ the profiled path also ships the objects to the offline tuner,
@@ -206,6 +219,7 @@ pub fn run_invocation(
                     damon,
                     objects,
                     report: report.clone(),
+                    trace_key,
                 });
             }
         }
@@ -217,7 +231,6 @@ pub fn run_invocation(
             report.peak_cxl_bytes,
         )
     };
-    tuner.hints().record_wall(&spec.name, report.wall_ns);
     drop(reservation);
 
     InvocationOutcome {
@@ -237,8 +250,9 @@ pub fn run_invocation(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use std::sync::Arc;
+
+    use super::*;
     use crate::workloads::kvstore::KvStore;
 
     fn setup() -> (EngineConfig, Arc<SystemLoad>, OfflineTuner) {

@@ -5,18 +5,34 @@
 //! path — the paper's "all metrics are sent to an offline tuner". The
 //! hint cache is the "placement hint consists only of metadata that can
 //! be cached on each server".
+//!
+//! With `[provision] enabled = true` the tuner additionally owns the
+//! per-function DRAM provisioning loop (`placement::provision`): for
+//! every profiled function it builds (or fetches from the process-wide
+//! [`TraceStore`] memo) a latency-vs-DRAM demand curve by replaying the
+//! function's canonical Trace-IR at the configured ladder, and on an
+//! epoch cadence re-runs the [`BudgetAllocator`] across every resident
+//! function — the per-function budgets replace the global
+//! `porter.dram_budget_frac` in `PlacementHint::generate`. All of it
+//! happens on the tuner thread, off the serving request path; callers
+//! that deliberately `drain()` after a profiled run (the fleet
+//! simulation's `Node::measure`, tests) do wait for the ladder replays
+//! of a *first-seen* function, a one-off host-time cost per
+//! `(workload, fingerprint)` amortized fleet-wide by the curve memo.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
-use crate::config::Config;
+use crate::config::{Config, MachineConfig, PorterConfig, ProvisionConfig};
 use crate::monitor::damon::Damon;
 use crate::placement::hints::PlacementHint;
+use crate::placement::provision::{self, BudgetAllocator, DemandCurve, FunctionDemand};
 use crate::shim::object::MemoryObject;
 use crate::sim::machine::RunReport;
+use crate::trace::{TraceKey, TraceStore};
 
 /// Shared hint cache (per-deployment; the paper caches per server, but
 /// hints are tiny metadata — one map serves the simulation).
@@ -69,6 +85,9 @@ pub struct ProfileData {
     pub damon: Box<Damon>,
     pub objects: Vec<MemoryObject>,
     pub report: RunReport,
+    /// Trace-store key of the run's canonical stream (the provisioning
+    /// loop's what-if source); `None` when the trace path is off.
+    pub trace_key: Option<TraceKey>,
 }
 
 enum Msg {
@@ -76,40 +95,228 @@ enum Msg {
     Stop,
 }
 
+/// Counter of in-flight profiles plus the condvar `drain` blocks on —
+/// replaces the old `AtomicUsize` + `yield_now` busy-wait, which
+/// livelocked forever if the worker thread had exited or a `submit`
+/// incremented the counter and then failed to enqueue.
+#[derive(Default)]
+struct PendingGate {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl PendingGate {
+    fn inc(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn dec(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c = c.saturating_sub(1);
+        if *c == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c > 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+    }
+}
+
+/// Provisioning-loop counters the fleet report rolls up.
+#[derive(Debug, Default)]
+pub struct ProvisionMetrics {
+    /// Functions with a demand curve (latest snapshot).
+    pub curves: AtomicU64,
+    /// Allocator runs performed.
+    pub reallocs: AtomicU64,
+    /// Latest allocation's DRAM saved vs uniform provisioning (bytes).
+    pub dram_saved_bytes: AtomicU64,
+    /// SLO floors active in the latest allocation.
+    pub floors: AtomicU64,
+}
+
+impl ProvisionMetrics {
+    /// `(curves, reallocs, dram_saved_bytes)` snapshot.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.curves.load(Ordering::Relaxed),
+            self.reallocs.load(Ordering::Relaxed),
+            self.dram_saved_bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// The tuner thread + its cache.
 pub struct OfflineTuner {
     tx: Mutex<Sender<Msg>>,
     worker: Mutex<Option<JoinHandle<()>>>,
     hints: Arc<HintCache>,
-    pending: Arc<AtomicUsize>,
+    pending: Arc<PendingGate>,
     pub processed: Arc<AtomicUsize>,
+    provision: Arc<ProvisionMetrics>,
+}
+
+/// Worker-side state of the provisioning loop: the latest profile per
+/// function (so hints can be regenerated when budgets move), the
+/// per-function curves, and the budget fractions currently in force.
+#[derive(Default)]
+struct ProvisionState {
+    profiles: HashMap<String, (Box<Damon>, Vec<MemoryObject>)>,
+    curves: HashMap<String, Arc<DemandCurve>>,
+    fracs: HashMap<String, f64>,
+    since_realloc: u64,
+}
+
+impl ProvisionState {
+    /// Re-run the allocator across every function with a curve; returns
+    /// the functions (≠ `incoming`) whose budget fraction changed and
+    /// therefore need their hint regenerated.
+    fn reallocate(
+        &mut self,
+        incoming: &str,
+        hints: &HintCache,
+        machine: &MachineConfig,
+        porter: &PorterConfig,
+        cfg: &ProvisionConfig,
+        metrics: &ProvisionMetrics,
+    ) -> Vec<String> {
+        self.since_realloc = 0;
+        let mut names: Vec<String> = self.curves.keys().cloned().collect();
+        names.sort();
+        let demands: Vec<FunctionDemand> = names
+            .iter()
+            .map(|n| {
+                let curve = self.curves[n].clone();
+                let floor_bytes = if cfg.slo_floors {
+                    hints
+                        .best_wall(n)
+                        .and_then(|best| curve.bytes_for_target(best * porter.slo_factor))
+                } else {
+                    None
+                };
+                FunctionDemand { curve, floor_bytes, weight: 1.0 }
+            })
+            .collect();
+        let alloc = BudgetAllocator::from_config(cfg).allocate(machine.dram_bytes, &demands);
+        metrics.reallocs.fetch_add(1, Ordering::Relaxed);
+        metrics.curves.store(self.curves.len() as u64, Ordering::Relaxed);
+        metrics.dram_saved_bytes.store(alloc.dram_saved_bytes(), Ordering::Relaxed);
+        metrics.floors.store(
+            demands.iter().filter(|d| d.floor_bytes.is_some()).count() as u64,
+            Ordering::Relaxed,
+        );
+        let mut changed = Vec::new();
+        // budgets come back in the demands' input order; key them by
+        // the tuner's function names (a curve carries the *workload*
+        // name, which needn't match the deployed function name)
+        for (name, b) in names.iter().zip(&alloc.budgets) {
+            let prev = self.fracs.insert(name.clone(), b.frac);
+            let moved = prev.is_none_or(|p| (p - b.frac).abs() > 1e-9);
+            if moved && name != incoming {
+                changed.push(name.clone());
+            }
+        }
+        changed
+    }
 }
 
 impl OfflineTuner {
     pub fn new(cfg: &Config) -> OfflineTuner {
         let (tx, rx) = channel::<Msg>();
         let hints = Arc::new(HintCache::default());
-        let pending = Arc::new(AtomicUsize::new(0));
+        let pending = Arc::new(PendingGate::default());
         let processed = Arc::new(AtomicUsize::new(0));
+        let provision_metrics = Arc::new(ProvisionMetrics::default());
         let worker = {
             let hints = Arc::clone(&hints);
             let pending = Arc::clone(&pending);
             let processed = Arc::clone(&processed);
-            let budget = cfg.porter.dram_budget_frac;
-            let threshold = cfg.porter.hot_threshold;
+            let metrics = Arc::clone(&provision_metrics);
+            let machine = cfg.machine.clone();
+            let porter = cfg.porter.clone();
+            let prov_cfg = cfg.provision.clone();
             std::thread::Builder::new()
                 .name("porter-tuner".into())
                 .spawn(move || {
+                    let mut state = ProvisionState::default();
                     while let Ok(Msg::Profile(p)) = rx.recv() {
+                        let function = p.function.clone();
+                        if !prov_cfg.enabled {
+                            // legacy path: one hint from the global
+                            // budget fraction, profile dropped after —
+                            // nothing is retained per function
+                            hints.put(PlacementHint::generate(
+                                &function,
+                                &p.damon,
+                                &p.objects,
+                                porter.dram_budget_frac,
+                                porter.hot_threshold,
+                            ));
+                            pending.dec();
+                            processed.fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        }
+                        let mut new_curve = false;
+                        if let Some(key) = &p.trace_key {
+                            if !state.curves.contains_key(&function) {
+                                if let Some(c) = provision::curve_for_key(
+                                    TraceStore::global(),
+                                    key,
+                                    &machine,
+                                    &prov_cfg.ladder,
+                                ) {
+                                    state.curves.insert(function.clone(), c);
+                                    new_curve = true;
+                                }
+                            }
+                        }
+                        // the latest profile is retained so hints can be
+                        // regenerated whenever a realloc moves budgets
+                        state.profiles.insert(function.clone(), (p.damon, p.objects));
+                        state.since_realloc += 1;
+                        if !state.curves.is_empty()
+                            && (new_curve || state.since_realloc >= prov_cfg.epoch_profiles)
+                        {
+                            let changed = state.reallocate(
+                                &function, &hints, &machine, &porter, &prov_cfg, &metrics,
+                            );
+                            // budgets moved: refresh the other
+                            // functions' hints from their stored
+                            // profiles (the incoming one regenerates
+                            // below either way)
+                            for name in changed {
+                                if let Some((damon, objects)) = state.profiles.get(&name) {
+                                    let frac = state.fracs[&name];
+                                    hints.put(PlacementHint::generate(
+                                        &name,
+                                        damon,
+                                        objects,
+                                        frac,
+                                        porter.hot_threshold,
+                                    ));
+                                }
+                            }
+                        }
+                        let frac = state
+                            .fracs
+                            .get(&function)
+                            .copied()
+                            .unwrap_or(porter.dram_budget_frac);
+                        let (damon, objects) =
+                            state.profiles.get(&function).expect("profile just stored");
                         let hint = PlacementHint::generate(
-                            &p.function,
-                            &p.damon,
-                            &p.objects,
-                            budget,
-                            threshold,
+                            &function,
+                            damon,
+                            objects,
+                            frac,
+                            porter.hot_threshold,
                         );
                         hints.put(hint);
-                        pending.fetch_sub(1, Ordering::SeqCst);
+                        pending.dec();
                         processed.fetch_add(1, Ordering::SeqCst);
                     }
                 })
@@ -121,6 +328,7 @@ impl OfflineTuner {
             hints,
             pending,
             processed,
+            provision: provision_metrics,
         }
     }
 
@@ -128,26 +336,51 @@ impl OfflineTuner {
         &self.hints
     }
 
+    /// Provisioning-loop counters (all zero when `[provision]` is off).
+    pub fn provision_metrics(&self) -> &ProvisionMetrics {
+        &self.provision
+    }
+
     /// Ship a profile for asynchronous hint generation (Fig. 6 ④).
+    /// If the worker has already exited, the profile is dropped and the
+    /// pending counter rolled back so a later [`drain`] cannot hang on
+    /// work nobody will ever do.
+    ///
+    /// [`drain`]: OfflineTuner::drain
     pub fn submit(&self, data: ProfileData) {
-        self.pending.fetch_add(1, Ordering::SeqCst);
-        let _ = self.tx.lock().unwrap().send(Msg::Profile(data));
+        self.pending.inc();
+        if self.tx.lock().unwrap().send(Msg::Profile(data)).is_err() {
+            self.pending.dec();
+        }
     }
 
     /// Wait until all submitted profiles are processed (tests/benches).
+    /// Blocks on a condvar rather than spinning; returns immediately
+    /// when nothing is pending.
     pub fn drain(&self) {
-        while self.pending.load(Ordering::SeqCst) > 0 {
-            std::thread::yield_now();
+        self.pending.wait_zero();
+    }
+
+    /// Stop the worker thread (idempotent; also runs on drop).
+    /// In-flight profiles are processed first — the stop message queues
+    /// behind them. The sender lock is held across the stop *and* the
+    /// join: a concurrently racing `submit` would otherwise slip its
+    /// profile behind the stop message, where the exiting worker drops
+    /// it without decrementing `pending` and a later `drain` hangs —
+    /// holding the lock makes such a submit wait, then fail its send
+    /// against the dropped receiver and roll `pending` back.
+    pub fn shutdown(&self) {
+        let tx = self.tx.lock().unwrap();
+        let _ = tx.send(Msg::Stop);
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
         }
     }
 }
 
 impl Drop for OfflineTuner {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(Msg::Stop);
-        if let Some(w) = self.worker.lock().unwrap().take() {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -156,28 +389,8 @@ mod tests {
     use super::*;
     use crate::sim::machine::AccessObserver;
 
-    #[test]
-    fn tuner_generates_hint_async() {
-        let cfg = Config::default();
-        let tuner = OfflineTuner::new(&cfg);
-        // synthetic profile: one hot object
-        let base = crate::shim::intercept::MMAP_BASE;
-        let obj = MemoryObject {
-            id: crate::shim::object::ObjectId(0),
-            start: base,
-            bytes: 1 << 20,
-            site: "f/x".into(),
-            seq: 0,
-            via_mmap: true,
-        };
-        let mut damon = Damon::new(&cfg.monitor, 4096, 1);
-        damon.on_alloc(0.0, &obj);
-        let mut t = 0.0;
-        for i in 0..200_000u64 {
-            t += 40.0;
-            damon.on_access(t, base + (i * 64) % (1 << 20), 8, false);
-        }
-        let report = RunReport {
+    fn test_report() -> RunReport {
+        RunReport {
             policy: "all-cxl".into(),
             wall_ns: 1e6,
             compute_ns: 4e5,
@@ -195,17 +408,73 @@ mod tests {
             migration_bytes: 0,
             peak_dram_bytes: 0,
             peak_cxl_bytes: 0,
+        }
+    }
+
+    /// Synthetic profile: one hot object under a sampled DAMON.
+    fn test_profile(function: &str) -> ProfileData {
+        let cfg = Config::default();
+        let base = crate::shim::intercept::MMAP_BASE;
+        let obj = MemoryObject {
+            id: crate::shim::object::ObjectId(0),
+            start: base,
+            bytes: 1 << 20,
+            site: format!("{function}/x"),
+            seq: 0,
+            via_mmap: true,
         };
-        tuner.submit(ProfileData {
-            function: "f".into(),
+        let mut damon = Damon::new(&cfg.monitor, 4096, 1);
+        damon.on_alloc(0.0, &obj);
+        let mut t = 0.0;
+        for i in 0..200_000u64 {
+            t += 40.0;
+            damon.on_access(t, base + (i * 64) % (1 << 20), 8, false);
+        }
+        ProfileData {
+            function: function.into(),
             damon: Box::new(damon),
             objects: vec![obj],
-            report,
-        });
+            report: test_report(),
+            trace_key: None,
+        }
+    }
+
+    #[test]
+    fn tuner_generates_hint_async() {
+        let cfg = Config::default();
+        let tuner = OfflineTuner::new(&cfg);
+        tuner.submit(test_profile("f"));
         tuner.drain();
         let hint = tuner.hints().get("f").expect("hint generated");
         assert_eq!(hint.objects.len(), 1);
         assert!(tuner.hints().get("g").is_none());
+        // provisioning off: the loop never ran
+        assert_eq!(tuner.provision_metrics().counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn drain_returns_after_worker_exit() {
+        // regression: `drain` used to busy-wait on `pending`, which a
+        // failed `submit` (worker gone, channel closed) left incremented
+        // forever — a livelock. Now the failed send rolls `pending`
+        // back and drain returns immediately.
+        let tuner = OfflineTuner::new(&Config::default());
+        tuner.shutdown();
+        tuner.submit(test_profile("f"));
+        tuner.drain(); // must not hang
+        assert!(tuner.hints().get("f").is_none(), "dropped profile generates no hint");
+        assert_eq!(tuner.processed.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn shutdown_processes_queued_profiles_first() {
+        let tuner = OfflineTuner::new(&Config::default());
+        tuner.submit(test_profile("f"));
+        // the stop message queues behind the profile
+        tuner.shutdown();
+        assert!(tuner.hints().get("f").is_some());
+        tuner.drain();
+        assert_eq!(tuner.processed.load(Ordering::SeqCst), 1);
     }
 
     #[test]

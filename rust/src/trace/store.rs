@@ -25,6 +25,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::placement::provision::DemandCurve;
 use crate::trace::ir::AccessTrace;
 use crate::trace::NullSink;
 use crate::workloads::Workload;
@@ -60,6 +61,10 @@ pub struct TraceStoreMetrics {
     /// traces the store actually kept count here; bounded-out and
     /// duplicate recordings do not).
     pub bytes: AtomicU64,
+    /// Demand curves built from what-if ladder replays
+    /// (`placement::provision`) and memo hits served without replaying.
+    pub curve_builds: AtomicU64,
+    pub curve_hits: AtomicU64,
 }
 
 /// The registry. Cheap to query (one mutex around a hash map; traces
@@ -67,6 +72,11 @@ pub struct TraceStoreMetrics {
 #[derive(Debug, Default)]
 pub struct TraceStore {
     traces: Mutex<HashMap<TraceKey, Arc<AccessTrace>>>,
+    /// Memoized latency-vs-DRAM curves, keyed by the trace key plus the
+    /// machine/ladder fingerprint
+    /// ([`crate::placement::provision::curve_fingerprint`]) so a config
+    /// change can never serve a stale curve.
+    curves: Mutex<HashMap<(TraceKey, u64), Arc<DemandCurve>>>,
     pub metrics: TraceStoreMetrics,
 }
 
@@ -84,11 +94,52 @@ impl TraceStore {
 
     /// Look up a trace for replay; counts a replay on hit.
     pub fn get(&self, key: &TraceKey) -> Option<Arc<AccessTrace>> {
-        let hit = self.traces.lock().unwrap().get(key).cloned();
+        let hit = self.peek(key);
         if hit.is_some() {
             self.metrics.replays.fetch_add(1, Ordering::Relaxed);
         }
         hit
+    }
+
+    /// Look up a trace without counting a replay (curve construction
+    /// reads the stream for what-if analysis, not to serve a request).
+    pub fn peek(&self, key: &TraceKey) -> Option<Arc<AccessTrace>> {
+        self.traces.lock().unwrap().get(key).cloned()
+    }
+
+    /// Memoized demand curve for `(key, config_fp)`; counts a hit.
+    pub fn curve(&self, key: &TraceKey, config_fp: u64) -> Option<Arc<DemandCurve>> {
+        let hit = self.curves.lock().unwrap().get(&(key.clone(), config_fp)).cloned();
+        if hit.is_some() {
+            self.metrics.curve_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Register a freshly built demand curve (first insert wins —
+    /// curves are deterministic, so concurrent builders agree).
+    pub fn insert_curve(
+        &self,
+        key: TraceKey,
+        config_fp: u64,
+        curve: DemandCurve,
+    ) -> Arc<DemandCurve> {
+        self.metrics.curve_builds.fetch_add(1, Ordering::Relaxed);
+        let curve = Arc::new(curve);
+        let mut map = self.curves.lock().unwrap();
+        if let Some(existing) = map.get(&(key.clone(), config_fp)) {
+            return existing.clone();
+        }
+        map.insert((key, config_fp), curve.clone());
+        curve
+    }
+
+    /// `(curve_builds, curve_hits)` counter snapshot.
+    pub fn curve_counts(&self) -> (u64, u64) {
+        (
+            self.metrics.curve_builds.load(Ordering::Relaxed),
+            self.metrics.curve_hits.load(Ordering::Relaxed),
+        )
     }
 
     /// Number of cached traces.
@@ -149,10 +200,11 @@ impl TraceStore {
         (self.insert(key, trace, max_cached), true)
     }
 
-    /// Drop all cached traces (tests). Resets the residency counter;
-    /// the cumulative records/replays counters are left alone.
+    /// Drop all cached traces and curves (tests). Resets the residency
+    /// counter; the cumulative records/replays counters are left alone.
     pub fn clear(&self) {
         self.traces.lock().unwrap().clear();
+        self.curves.lock().unwrap().clear();
         self.metrics.bytes.store(0, Ordering::Relaxed);
     }
 }

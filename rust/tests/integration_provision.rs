@@ -1,0 +1,112 @@
+//! Integration tests for the per-function DRAM provisioning optimizer
+//! (`placement::provision` + the `OfflineTuner` loop that applies it).
+
+use std::sync::Arc;
+
+use porter::config::Config;
+use porter::placement::provision::{obtain_curve, BudgetAllocator, FunctionDemand};
+use porter::porter::engine::{run_invocation, EngineConfig};
+use porter::porter::gateway::FunctionSpec;
+use porter::porter::sysload::SystemLoad;
+use porter::porter::tuner::OfflineTuner;
+use porter::trace::TraceStore;
+use porter::workloads::compression::Compression;
+use porter::workloads::kvstore::KvStore;
+use porter::workloads::Workload;
+
+/// The acceptance scenario: two co-resident functions — one with a
+/// strong zipf hot set (kvstore), one streaming its whole input once
+/// (compression) — must end up with visibly different DRAM budget
+/// fractions under a shared capacity that cannot satisfy both.
+#[test]
+fn hot_skewed_and_streaming_get_different_budgets() {
+    let cfg = Config::default();
+    let store = TraceStore::new();
+    let kv = KvStore::new(50_000, 200_000);
+    let stream = Compression::new(4 << 20);
+    let (kv_curve, _) =
+        obtain_curve(&store, &kv, &cfg.machine, &cfg.provision.ladder, 16);
+    let (st_curve, _) =
+        obtain_curve(&store, &stream, &cfg.machine, &cfg.provision.ladder, 16);
+    let total = kv_curve.footprint + st_curve.footprint;
+    let demands =
+        vec![FunctionDemand::new(kv_curve.clone()), FunctionDemand::new(st_curve.clone())];
+    let alloc = BudgetAllocator::from_config(&cfg.provision).allocate(total * 3 / 8, &demands);
+    let (kv_b, st_b) = (&alloc.budgets[0], &alloc.budgets[1]);
+    assert!(alloc.used_bytes <= total * 3 / 8);
+    assert!(
+        (kv_b.frac - st_b.frac).abs() > 0.1,
+        "co-resident hot-skewed vs streaming functions must be provisioned \
+         differently: kv frac {:.3} vs stream frac {:.3} (curves: kv {:?} / stream {:?})",
+        kv_b.frac,
+        st_b.frac,
+        kv_curve.points,
+        st_curve.points
+    );
+    // application-specific provisioning never predicts worse than the
+    // uniform baseline at equal DRAM
+    assert!(alloc.predicted_wall_ns <= alloc.uniform_wall_ns * (1.0 + 1e-9));
+}
+
+/// End-to-end through the serving path: with `[provision]` enabled the
+/// tuner builds curves from the engine's recorded traces, runs the
+/// allocator on the epoch cadence, and keeps producing hints; with it
+/// disabled the provisioning counters stay zero.
+#[test]
+fn tuner_runs_the_provisioning_loop() {
+    let mut cfg = Config::default();
+    cfg.provision.enabled = true;
+    cfg.provision.epoch_profiles = 1;
+    // a server small enough that the allocator's choices bind
+    cfg.machine.dram_bytes = 4 << 20;
+    let sysload = Arc::new(SystemLoad::new(&cfg.machine));
+    let tuner = OfflineTuner::new(&cfg);
+    let ecfg = EngineConfig::from(&cfg);
+
+    // unique sizes so this test records its own traces in the global
+    // store regardless of interleaving
+    let kv = FunctionSpec::new("kv-prov", Arc::new(KvStore::new(41_000, 82_000)));
+    let st = FunctionSpec::new("stream-prov", Arc::new(Compression::new(3 << 20)));
+    let first = run_invocation(1, &kv, &ecfg, &sysload, &tuner);
+    assert!(first.profiled);
+    tuner.drain();
+    let second = run_invocation(2, &st, &ecfg, &sysload, &tuner);
+    assert!(second.profiled);
+    tuner.drain();
+
+    let (curves, reallocs, _saved) = tuner.provision_metrics().counts();
+    assert_eq!(curves, 2, "one demand curve per profiled function");
+    assert!(reallocs >= 2, "epoch_profiles = 1 must re-allocate per profile");
+    assert!(tuner.hints().get("kv-prov").is_some());
+    assert!(tuner.hints().get("stream-prov").is_some());
+
+    // repeat invocations replay under the (possibly re-budgeted) hint
+    // and still compute the same result
+    let again = run_invocation(3, &kv, &ecfg, &sysload, &tuner);
+    assert!(again.used_hint);
+    assert_eq!(again.checksum, first.checksum);
+
+    // control: a disabled tuner never touches the provisioning loop
+    let off = OfflineTuner::new(&Config::default());
+    let _ = run_invocation(4, &kv, &EngineConfig::from(&Config::default()), &sysload, &off);
+    off.drain();
+    assert_eq!(off.provision_metrics().counts(), (0, 0, 0));
+}
+
+/// Real curves from real traces satisfy the curve invariants the
+/// property suite checks on synthetic ones.
+#[test]
+fn real_curves_are_monotone_and_memoized() {
+    let cfg = Config::default();
+    let store = TraceStore::new();
+    let kv = KvStore::new(52_000, 104_000);
+    let (curve, built) = obtain_curve(&store, &kv, &cfg.machine, &cfg.provision.ladder, 16);
+    assert!(built);
+    assert_eq!(curve.points.len(), cfg.provision.ladder.len());
+    assert!(curve.points.windows(2).all(|w| w[1].wall_ns <= w[0].wall_ns));
+    assert!(curve.points.windows(2).all(|w| w[1].dram_bytes >= w[0].dram_bytes));
+    assert!(curve.footprint >= kv.footprint_hint() / 2, "footprint tracks the working set");
+    let (curve2, built) = obtain_curve(&store, &kv, &cfg.machine, &cfg.provision.ladder, 16);
+    assert!(!built, "second obtain must hit the memo");
+    assert!(Arc::ptr_eq(&curve, &curve2));
+}

@@ -599,3 +599,151 @@ fn prop_snapshot_roundtrip_and_no_leaked_leases() {
         );
     });
 }
+
+/// Synthetic demand curve over the default ladder: random footprint,
+/// random raw walls (the constructor clamps them monotone).
+fn gen_curve(g: &mut Gen, name: &str) -> std::sync::Arc<porter::placement::DemandCurve> {
+    use porter::placement::provision::CurvePoint;
+    let page = 4096u64;
+    let footprint = g.u64_in(1, 4096) * page;
+    let ladder = Config::default().provision.ladder;
+    let base_wall = g.f64_in(1e4, 1e7);
+    let points = ladder
+        .iter()
+        .map(|&ratio| CurvePoint {
+            ratio,
+            dram_bytes: if ratio <= 0.0 {
+                0
+            } else {
+                ((footprint as f64 * ratio).ceil() as u64).next_multiple_of(page)
+            },
+            // raw walls wander freely; DemandCurve::new enforces the
+            // monotone non-increasing invariant
+            wall_ns: base_wall * g.f64_in(0.1, 1.0),
+        })
+        .collect();
+    std::sync::Arc::new(porter::placement::DemandCurve::new(name, footprint, page, points))
+}
+
+/// Demand-curve interpolation is monotone non-increasing in DRAM, stays
+/// inside the endpoint walls, and `bytes_for_target` inverts it.
+#[test]
+fn prop_demand_curve_interpolation_monotone() {
+    forall("provision-curve-monotone", 80, |g: &mut Gen| {
+        let c = gen_curve(g, "f");
+        let top = c.points.last().unwrap().dram_bytes;
+        let mut prev_wall = f64::INFINITY;
+        let mut queries: Vec<u64> = (0..32).map(|_| g.u64_in(0, top + 2 * 4096)).collect();
+        queries.sort_unstable();
+        for q in queries {
+            let w = c.wall_at(q);
+            assert!(w <= prev_wall + 1e-9, "wall_at must be non-increasing");
+            assert!(w >= c.points.last().unwrap().wall_ns - 1e-9);
+            assert!(w <= c.points[0].wall_ns + 1e-9);
+            prev_wall = w;
+        }
+        // bytes_for_target inverts interpolation (up to page rounding)
+        let target = g.f64_in(c.points.last().unwrap().wall_ns, c.points[0].wall_ns + 1.0);
+        if let Some(need) = c.bytes_for_target(target) {
+            assert!(c.wall_at(need) <= target + 1e-9);
+        } else {
+            assert!(c.points.last().unwrap().wall_ns > target);
+        }
+    });
+}
+
+/// The budget allocator never over-commits the node's DRAM, with or
+/// without floors and the uniform fallback.
+#[test]
+fn prop_provision_allocator_never_overcommits() {
+    use porter::placement::provision::{BudgetAllocator, FunctionDemand};
+    forall("provision-no-overcommit", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let demands: Vec<FunctionDemand> = (0..n)
+            .map(|i| {
+                let mut d = FunctionDemand::new(gen_curve(g, &format!("f{i}")));
+                if g.bool() {
+                    d.floor_bytes = Some(g.u64_in(0, d.curve.footprint + 4096));
+                }
+                if g.bool() {
+                    d.weight = g.f64_in(0.1, 8.0);
+                }
+                d
+            })
+            .collect();
+        let capacity = g.u64_in(0, demands.iter().map(|d| d.curve.footprint).sum::<u64>() + 1);
+        let alloc = BudgetAllocator {
+            min_gain_frac: g.f64_in(0.0, 0.2),
+            uniform_fallback: g.bool(),
+        }
+        .allocate(capacity, &demands);
+        assert!(
+            alloc.used_bytes <= capacity,
+            "over-committed: used {} of {capacity}",
+            alloc.used_bytes
+        );
+        let sum: u64 = alloc.budgets.iter().map(|b| b.dram_bytes).sum();
+        assert_eq!(sum, alloc.used_bytes, "used_bytes must equal the budget sum");
+        for b in &alloc.budgets {
+            assert!(b.frac <= 1.0 + 1e-9);
+        }
+    });
+}
+
+/// More DRAM never shrinks any function's budget (the greedy descent is
+/// a capacity-independent upgrade sequence; capacity only sets the
+/// prefix length). Tested floor-free and fallback-free: SLO floors
+/// deliberately trade monotonicity for floor satisfaction, and the
+/// uniform fallback switches arms.
+#[test]
+fn prop_provision_allocator_monotone_in_capacity() {
+    use porter::placement::provision::{BudgetAllocator, FunctionDemand};
+    forall("provision-monotone-capacity", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 5);
+        let demands: Vec<FunctionDemand> =
+            (0..n).map(|i| FunctionDemand::new(gen_curve(g, &format!("f{i}")))).collect();
+        let total: u64 = demands.iter().map(|d| d.curve.footprint).sum();
+        let c1 = g.u64_in(0, total + 1);
+        let c2 = c1 + g.u64_in(0, total + 1);
+        let alloc = BudgetAllocator { min_gain_frac: g.f64_in(0.0, 0.2), uniform_fallback: false };
+        let a = alloc.allocate(c1, &demands);
+        let b = alloc.allocate(c2, &demands);
+        for (x, y) in a.budgets.iter().zip(&b.budgets) {
+            assert!(
+                y.dram_bytes >= x.dram_bytes,
+                "capacity {c1}->{c2} shrank {} from {} to {}",
+                x.function,
+                x.dram_bytes,
+                y.dram_bytes
+            );
+        }
+        assert!(b.predicted_wall_ns <= a.predicted_wall_ns + 1e-6);
+    });
+}
+
+/// With the uniform fallback on (the production configuration), the
+/// allocation never predicts worse than uniform provisioning at equal
+/// DRAM, and the total predicted wall is monotone in capacity.
+#[test]
+fn prop_provision_beats_or_matches_uniform() {
+    use porter::placement::provision::{BudgetAllocator, FunctionDemand};
+    forall("provision-vs-uniform", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 5);
+        let demands: Vec<FunctionDemand> =
+            (0..n).map(|i| FunctionDemand::new(gen_curve(g, &format!("f{i}")))).collect();
+        let total: u64 = demands.iter().map(|d| d.curve.footprint).sum();
+        let alloc = BudgetAllocator { min_gain_frac: g.f64_in(0.0, 0.2), uniform_fallback: true };
+        let c1 = g.u64_in(0, total + 1);
+        let a = alloc.allocate(c1, &demands);
+        assert!(
+            a.predicted_wall_ns <= a.uniform_wall_ns * (1.0 + 1e-12),
+            "optimized {} must not lose to uniform {}",
+            a.predicted_wall_ns,
+            a.uniform_wall_ns
+        );
+        let b = alloc.allocate(c1 + g.u64_in(0, total + 1), &demands);
+        assert!(b.predicted_wall_ns <= a.predicted_wall_ns + 1e-6);
+        // savings are the uniform arm's spend minus ours, never negative
+        assert!(a.dram_saved_bytes() <= a.uniform_used_bytes);
+    });
+}

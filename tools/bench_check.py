@@ -96,6 +96,15 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
         if float(value) <= 0.0:
             fail(f"{path}: {row_id}.{key} = {value} is not a positive ratio")
         return
+    if "saved" in lk:
+        # provisioning savings (e.g. dram_saved_mb) must be finite and
+        # non-negative: the allocator only reports capacity returned at
+        # equal-or-better latency, so a negative value means it spent
+        # more than uniform while claiming a win (finiteness is already
+        # guaranteed by the isfinite check above)
+        if float(value) < 0.0:
+            fail(f"{path}: {row_id}.{key} = {value} negative saving")
+        return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
