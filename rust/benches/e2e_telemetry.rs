@@ -1,0 +1,121 @@
+//! End-to-end telemetry overhead bench: the same quick fleet
+//! configuration with `[telemetry]` off and on, host-timed.
+//!
+//! Telemetry's contract is "free when off, cheap when on": the off arm
+//! must be bit-identical to a main-branch run (checked via the
+//! determinism token against the on arm, which must match too), and
+//! the on arm's host-time overhead must stay under 10% on the quick
+//! configuration. Writes `BENCH_telemetry.json` at the repo root so
+//! future PRs can track the overhead trajectory.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_telemetry
+
+use std::time::Instant;
+
+use porter::cluster::simulate_full;
+use porter::config::Config;
+use porter::util::json::Json;
+
+fn cfg(telemetry: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.functions = 4;
+    cfg.cluster.rate_per_s = 400.0;
+    cfg.cluster.duration_s = 0.25;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.seed = 0x7E1E;
+    cfg.lifecycle.enabled = true;
+    cfg.lifecycle.warm_pool_bytes = 256 * 1024 * 1024;
+    cfg.lifecycle.snapshot = true;
+    cfg.telemetry.enabled = telemetry;
+    cfg.telemetry.epoch_ns = 10_000_000;
+    cfg
+}
+
+fn main() {
+    let quick = porter::bench::quick_mode();
+    let iters = if quick { 3 } else { 5 };
+
+    // warmup both arms once — this also populates the process-wide
+    // Trace-IR memo, so the timed runs below replay identical work
+    let (base, off_tele) = simulate_full(&cfg(false)).expect("off-arm run");
+    let (inst, tele) = simulate_full(&cfg(true)).expect("on-arm run");
+    assert!(!off_tele.is_enabled() && off_tele.sink.total_events() == 0);
+    assert_eq!(
+        base.determinism_token, inst.determinism_token,
+        "telemetry must not perturb the simulation"
+    );
+    assert_eq!(base.fleet_p99_ns, inst.fleet_p99_ns);
+    let kinds = tele.sink.kind_counts();
+    assert!(kinds.len() >= 4, "expected >= 4 event kinds, got {kinds:?}");
+    assert!(tele.series.len() >= 5, "expected >= 5 series, got {}", tele.series.len());
+    let doc = tele.to_chrome_json(vec![]);
+    let parsed = Json::parse(&doc.to_string_compact()).expect("chrome JSON parses back");
+    assert!(!parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    eprintln!(
+        "collected {} events ({} dropped), {} series — {:?}",
+        tele.sink.total_events(),
+        tele.sink.dropped_events(),
+        tele.series.len(),
+        kinds
+    );
+
+    // min-of-N host timing per arm: robust against scheduler noise
+    let time_arm = |telemetry: bool| -> f64 {
+        let c = cfg(telemetry);
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let (r, t) = simulate_full(&c).expect("timed run");
+            assert_eq!(r.determinism_token, base.determinism_token);
+            std::hint::black_box(t);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let off_s = time_arm(false);
+    let on_s = time_arm(true);
+    let overhead_frac = (on_s - off_s) / off_s;
+    assert!(overhead_frac.is_finite(), "overhead must be measurable");
+    assert!(
+        overhead_frac < 0.10,
+        "telemetry overhead {:.2}% exceeds the 10% budget (off {:.1}ms on {:.1}ms)",
+        overhead_frac * 100.0,
+        off_s * 1e3,
+        on_s * 1e3
+    );
+    println!(
+        "telemetry overhead: off {:.2}ms / on {:.2}ms → {:+.2}% (budget 10%)",
+        off_s * 1e3,
+        on_s * 1e3,
+        overhead_frac * 100.0
+    );
+
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_telemetry")),
+        ("quick", Json::Bool(quick)),
+        (
+            "series",
+            Json::Arr(vec![Json::obj(vec![
+                ("config", Json::str("cluster-quick-2n")),
+                ("off_host_ms", Json::num(off_s * 1e3)),
+                ("on_host_ms", Json::num(on_s * 1e3)),
+                ("overhead_frac", Json::num(overhead_frac)),
+                ("events", Json::num(tele.sink.total_events() as f64)),
+                ("dropped_events", Json::num(tele.sink.dropped_events() as f64)),
+                ("series_count", Json::num(tele.series.len() as f64)),
+                (
+                    "determinism_token",
+                    Json::str(format!("{:#018x}", inst.determinism_token)),
+                ),
+            ])]),
+        ),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_telemetry.json").into()
+    });
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -45,6 +45,9 @@ use crate::lifecycle::{AdmitOutcome, Sandbox, SnapshotStore, StartKind};
 use crate::metrics::Histogram;
 use crate::porter::gateway::FunctionSpec;
 use crate::porter::slo::SloTracker;
+use crate::telemetry::{
+    EventKind, FleetSample, FleetSampler, TelemetryEvent, TelemetryReport, TelemetrySink,
+};
 use crate::util::bytes::{fmt_bytes, GIB};
 use crate::workloads::mix;
 use crate::workloads::registry::{build, Scale};
@@ -389,6 +392,15 @@ pub struct Cluster {
     end_ns: u64,
     token: u64,
     next_node_id: usize,
+    /// Event sink + per-epoch fleet sampler (`[telemetry]` section;
+    /// disabled, each hook is one branch). Telemetry only *reads*
+    /// already-computed values after the determinism token was mixed,
+    /// so enabling it never changes a report.
+    telemetry: TelemetrySink,
+    sampler: FleetSampler,
+    /// Fleet-wide provision realloc count at the last telemetry check
+    /// (delta detection for `Provision` events).
+    last_reallocs: u64,
 }
 
 impl Cluster {
@@ -420,7 +432,19 @@ impl Cluster {
         } else {
             None
         };
+        let tl = &cfg.telemetry;
         Ok(Cluster {
+            telemetry: if tl.enabled {
+                TelemetrySink::new(tl.buffer_bytes)
+            } else {
+                TelemetrySink::disabled()
+            },
+            sampler: if tl.enabled {
+                FleetSampler::new(tl.epoch_ns)
+            } else {
+                FleetSampler::disabled()
+            },
+            last_reallocs: 0,
             cfg: cfg.clone(),
             specs,
             next_node_id: nodes.len(),
@@ -465,10 +489,20 @@ impl Cluster {
     /// Offer evicted sandboxes to the snapshot store (lease pool
     /// capacity, debit the write over the evicting node's link).
     fn demote(&mut self, ni: usize, evicted: Vec<Sandbox>, t_ns: u64) {
+        let node_id = self.nodes[ni].id;
+        if self.telemetry.is_enabled() {
+            for sb in &evicted {
+                let ev = TelemetryEvent::new(EventKind::WarmEvict, t_ns)
+                    .on_node(node_id as u64)
+                    .func(&sb.function)
+                    .arg("bytes", sb.bytes())
+                    .arg("uses", sb.uses);
+                self.telemetry.push(ev);
+            }
+        }
         if self.snapshots.is_none() {
             return;
         }
-        let node_id = self.nodes[ni].id;
         for sb in evicted {
             if self.snapshot_skip.contains(&sb.function) {
                 continue;
@@ -478,6 +512,7 @@ impl Cluster {
             let st = self.snapshots.as_mut().expect("checked above");
             match st.admit(&sb, t_ns, node_id, &mut self.pool) {
                 AdmitOutcome::Admitted => {
+                    self.note_snapshot_write(node_id, &sb.function, sb.bytes(), t_ns);
                     self.snapshot_shapes.entry(sb.function.clone()).or_insert(shape);
                 }
                 AdmitOutcome::TooBig => {
@@ -485,6 +520,16 @@ impl Cluster {
                 }
                 _ => {}
             }
+        }
+    }
+
+    fn note_snapshot_write(&mut self, node_id: usize, function: &str, bytes: u64, t_ns: u64) {
+        if self.telemetry.is_enabled() {
+            let ev = TelemetryEvent::new(EventKind::SnapshotWrite, t_ns)
+                .on_node(node_id as u64)
+                .func(function)
+                .arg("bytes", bytes);
+            self.telemetry.push(ev);
         }
     }
 
@@ -514,7 +559,7 @@ impl Cluster {
             .is_some_and(|st| st.has(function) && self.snapshot_shapes.contains_key(function));
         if restorable {
             let st = self.snapshots.as_mut().expect("checked above");
-            if let Some((latency_ns, _bytes)) = st.restore(
+            if let Some((latency_ns, bytes)) = st.restore(
                 function,
                 t_ns,
                 node_id,
@@ -524,6 +569,14 @@ impl Cluster {
             ) {
                 let shape = self.snapshot_shapes.get(function).expect("checked above").clone();
                 self.nodes[ni].seed_shape(function, &shape);
+                if self.telemetry.is_enabled() {
+                    let ev = TelemetryEvent::new(EventKind::SnapshotRestore, t_ns)
+                        .on_node(node_id as u64)
+                        .func(function)
+                        .arg("latency_ns", latency_ns)
+                        .arg("bytes", bytes);
+                    self.telemetry.push(ev);
+                }
                 return (StartKind::Restored, latency_ns);
             }
         }
@@ -611,6 +664,74 @@ impl Cluster {
         self.token = mix(self.token, d.start_ns);
         self.token = mix(self.token, d.finish_ns);
 
+        // telemetry reads only the values computed above — after the
+        // token was mixed — so recording cannot perturb the run
+        if self.telemetry.is_enabled() {
+            let nid = node_id as u64;
+            self.telemetry.push(
+                TelemetryEvent::new(EventKind::Queued, t)
+                    .on_node(nid)
+                    .func(&spec.name)
+                    .arg("wait_ns", d.wait_ns),
+            );
+            if self.cfg.telemetry.spans {
+                self.telemetry.push(
+                    TelemetryEvent::new(EventKind::Invocation, t)
+                        .span(e2e_ns)
+                        .on_node(nid)
+                        .func(&spec.name)
+                        .tag(kind.name())
+                        .arg("wait_ns", d.wait_ns)
+                        .arg("service_ns", d.service_ns)
+                        .arg("startup_ns", d.startup_ns)
+                        .arg("cxl_bytes", d.cxl_bytes)
+                        .arg("migration_bytes", d.migration_bytes),
+                );
+            }
+            if d.startup_ns > 0 {
+                self.telemetry.push(
+                    TelemetryEvent::new(EventKind::Startup, d.start_ns)
+                        .on_node(nid)
+                        .func(&spec.name)
+                        .tag(kind.name())
+                        .arg("startup_ns", d.startup_ns),
+                );
+            }
+            if d.promotions + d.demotions > 0 {
+                let ev = TelemetryEvent::new(EventKind::Migration, d.start_ns)
+                    .on_node(nid)
+                    .func(&spec.name)
+                    .tag(&self.cfg.migration.policy)
+                    .arg("promotions", d.promotions)
+                    .arg("demotions", d.demotions)
+                    .arg("ping_pongs", d.ping_pongs)
+                    .arg("bytes", d.migration_bytes);
+                self.telemetry.push(ev);
+            }
+            if grant_ns > t || granted < spill {
+                self.telemetry.push(
+                    TelemetryEvent::new(EventKind::PoolContention, t)
+                        .on_node(nid)
+                        .func(&spec.name)
+                        .arg("wait_ns", grant_ns - t)
+                        .arg("short_bytes", spill.saturating_sub(granted)),
+                );
+            }
+            let reallocs: u64 = self.nodes.iter().map(|n| n.provision_counts().1).sum();
+            if reallocs > self.last_reallocs {
+                let saved: u64 = self.nodes.iter().map(|n| n.provision_counts().2).sum();
+                self.telemetry.push(
+                    TelemetryEvent::new(EventKind::Provision, d.finish_ns)
+                        .arg("reallocs", reallocs - self.last_reallocs)
+                        .arg("dram_saved_bytes", saved),
+                );
+                self.last_reallocs = reallocs;
+            }
+            self.sampler.record_latency(&spec.name, e2e_ns);
+            let s = self.fleet_sample(t);
+            self.sampler.observe(t, &s);
+        }
+
         if lifecycle {
             match kind {
                 StartKind::Warm => self.nodes[ni].lifecycle_touch(&spec.name, d.finish_ns),
@@ -634,6 +755,7 @@ impl Cluster {
                     let st = self.snapshots.as_mut().expect("checked above");
                     match st.admit(&sb, d.finish_ns, node_id, &mut self.pool) {
                         AdmitOutcome::Admitted => {
+                            self.note_snapshot_write(node_id, &spec.name, sb.bytes(), d.finish_ns);
                             self.snapshot_shapes.entry(spec.name.clone()).or_insert(shape);
                         }
                         AdmitOutcome::TooBig => {
@@ -690,8 +812,54 @@ impl Cluster {
                     sig.active_nodes - 1
                 }
             };
+            if self.telemetry.is_enabled() {
+                let ev = TelemetryEvent::new(EventKind::Autoscale, t)
+                    .tag(direction.name())
+                    .arg("nodes_after", nodes_after as u64);
+                self.telemetry.push(ev);
+            }
             self.events.push(ScaleEvent { t_ns: t, direction, nodes_after, reason });
         }
+    }
+
+    /// Snapshot of fleet-wide state for the per-epoch sampler. Pure
+    /// read: sums node counters and pool gauges at virtual time `t_ns`.
+    fn fleet_sample(&self, t_ns: u64) -> FleetSample {
+        let mut worst = 1.0f64;
+        for n in &self.nodes {
+            worst = worst.max(self.pool.factor(n.id));
+        }
+        FleetSample {
+            dram_used_bytes: self.nodes.iter().map(|n| n.peak_dram_bytes).sum(),
+            dram_capacity_bytes: self.nodes.iter().map(|n| n.dram_bytes_total()).sum(),
+            pool_occupancy: self.pool.occupancy(),
+            // M/M/1 inflation factor f ≥ 1 mapped to utilization 1 − 1/f
+            link_utilization: 1.0 - 1.0 / worst,
+            queue_depth_ns: self
+                .nodes
+                .iter()
+                .filter(|n| !n.retired())
+                .map(|n| n.backlog_ns(t_ns))
+                .sum(),
+            warm_pool_bytes: self.nodes.iter().map(|n| n.warm_pool_used_bytes()).sum(),
+            active_nodes: self.nodes.iter().filter(|n| !n.draining && !n.retired()).count()
+                as u64,
+            completed: self.completed,
+            promotions: self.promotions,
+            demotions: self.demotions,
+            ping_pongs: self.ping_pongs,
+            migration_bytes: self.migration_bytes,
+            cold_starts: self.nodes.iter().map(|n| n.cold_starts).sum(),
+            restores: self.nodes.iter().map(|n| n.restores).sum(),
+        }
+    }
+
+    /// Hand the collected telemetry out (sink + series), leaving the
+    /// cluster with disabled no-op instances.
+    pub fn take_telemetry(&mut self) -> TelemetryReport {
+        let sink = std::mem::replace(&mut self.telemetry, TelemetrySink::disabled());
+        let sampler = std::mem::replace(&mut self.sampler, FleetSampler::disabled());
+        TelemetryReport { sink, series: sampler.into_series() }
     }
 
     /// Run the whole schedule and produce the fleet report.
@@ -717,6 +885,12 @@ impl Cluster {
 
     fn finish(&mut self) -> ClusterReport {
         let end = self.end_ns.max(1);
+        // final forced sample before the nodes retire, so short runs
+        // still get at least one point per series
+        if self.sampler.is_enabled() {
+            let s = self.fleet_sample(end);
+            self.sampler.flush(end, &s);
+        }
         for n in &mut self.nodes {
             n.retire(end);
         }
@@ -818,9 +992,17 @@ impl Cluster {
 
 /// Convenience entry point: schedule from the config, then simulate.
 pub fn simulate(cfg: &Config) -> Result<ClusterReport, String> {
+    simulate_full(cfg).map(|(report, _)| report)
+}
+
+/// Like [`simulate`], but also hands back the run's telemetry (an
+/// empty/disabled report unless `[telemetry] enabled = true`).
+pub fn simulate_full(cfg: &Config) -> Result<(ClusterReport, TelemetryReport), String> {
     let spec = arrivals_from_config(cfg)?;
     let mut cluster = Cluster::new(cfg, &spec.names)?;
-    Ok(cluster.run(&spec))
+    let report = cluster.run(&spec);
+    let telemetry = cluster.take_telemetry();
+    Ok((report, telemetry))
 }
 
 #[cfg(test)]
@@ -999,6 +1181,67 @@ mod tests {
         assert_eq!(base.provision_curves, 0);
         assert_eq!(base.provision_reallocs, 0);
         assert!(!base.render().contains("provisioning"));
+    }
+
+    #[test]
+    fn telemetry_disabled_stays_bit_identical() {
+        // the [telemetry] section is default-off; flipping unrelated
+        // knobs in it must not change a run at all
+        let base = simulate(&small_cfg()).unwrap();
+        let mut cfg = small_cfg();
+        cfg.telemetry.buffer_bytes = 1 << 20;
+        cfg.telemetry.epoch_ns = 1_000_000;
+        cfg.telemetry.spans = false;
+        let tweaked = simulate(&cfg).unwrap();
+        assert_eq!(base.determinism_token, tweaked.determinism_token);
+        assert_eq!(base.fleet_p50_ns, tweaked.fleet_p50_ns);
+        assert_eq!(base.fleet_p99_ns, tweaked.fleet_p99_ns);
+        assert_eq!(base.completed, tweaked.completed);
+        // ...and *enabling* it must not change the run either: events
+        // are recorded from already-computed values only
+        let mut on = small_cfg();
+        on.telemetry.enabled = true;
+        let (instrumented, tele) = simulate_full(&on).unwrap();
+        assert_eq!(base.determinism_token, instrumented.determinism_token);
+        assert_eq!(base.fleet_p50_ns, instrumented.fleet_p50_ns);
+        assert!(base.fleet_mean_ns == instrumented.fleet_mean_ns);
+        assert_eq!(base.cold_starts, instrumented.cold_starts);
+        assert!(tele.is_enabled());
+        assert!(tele.sink.total_events() > 0);
+        // the disabled run collected nothing
+        let (_, off) = simulate_full(&small_cfg()).unwrap();
+        assert!(!off.is_enabled());
+        assert_eq!(off.sink.total_events(), 0);
+        assert!(off.series.is_empty());
+    }
+
+    #[test]
+    fn telemetry_collects_events_and_series() {
+        let mut cfg = lifecycle_cfg(512 * 1024 * 1024, true);
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.epoch_ns = 5_000_000;
+        let (report, tele) = simulate_full(&cfg).unwrap();
+        assert!(report.completed > 0);
+        let kinds = tele.sink.kind_counts();
+        assert!(kinds.len() >= 4, "expected >= 4 event kinds, got {kinds:?}");
+        assert!(kinds.contains_key("queued"));
+        assert!(kinds.contains_key("invocation"));
+        assert!(kinds.contains_key("startup"));
+        assert!(kinds.contains_key("snapshot_write"));
+        assert!(tele.series.len() >= 5, "expected >= 5 series, got {}", tele.series.len());
+        for name in ["pool_occupancy", "queue_depth_ns", "completions_per_epoch"] {
+            let s = tele.series.get(name).unwrap_or_else(|| panic!("missing series {name}"));
+            assert!(!s.t_ns.is_empty());
+        }
+        // completions-per-epoch deltas sum back to the cumulative total
+        let comp = tele.series.get("completions_per_epoch").unwrap();
+        let total: f64 = comp.values.iter().sum();
+        assert_eq!(total as u64, report.completed);
+        assert!(tele.counter_line().starts_with("TELEMETRY events="));
+        // the combined export round-trips through the JSON parser
+        let doc = tele.to_chrome_json(vec![]);
+        let parsed = crate::util::json::Json::parse(&doc.to_string_compact()).unwrap();
+        assert!(!parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

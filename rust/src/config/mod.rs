@@ -502,6 +502,44 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Virtual-time telemetry knobs (`telemetry::` — the observability
+/// subsystem: event sink, fleet sampler, exporters).
+///
+/// Default-off: with `enabled = false` every telemetry hook is a single
+/// branch and runs are bit-identical to a build without the subsystem.
+/// Events carry virtual timestamps only (no wall clock), so even an
+/// enabled run preserves the determinism token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch for event/series collection.
+    pub enabled: bool,
+    /// Event-sink byte budget: the ring buffer retains at most this many
+    /// bytes of events, dropping oldest (counted) beyond it.
+    pub buffer_bytes: u64,
+    /// Fleet-sampler epoch in virtual nanoseconds (one point per series
+    /// per epoch).
+    pub epoch_ns: u64,
+    /// Record per-invocation span events (the byte-heavy part; series
+    /// sampling continues regardless).
+    pub spans: bool,
+    /// Default export path for the Chrome-trace document; empty defers
+    /// to `--telemetry-out`.
+    pub out: String,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            buffer_bytes: 8 * MIB,
+            // 10 virtual ms: ~100 points over the default 1 s horizon.
+            epoch_ns: 10_000_000,
+            spans: true,
+            out: String::new(),
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -513,6 +551,7 @@ pub struct Config {
     pub provision: ProvisionConfig,
     pub lifecycle: LifecycleConfig,
     pub cluster: ClusterConfig,
+    pub telemetry: TelemetryConfig,
 }
 
 impl Config {
@@ -645,6 +684,11 @@ impl Config {
                     cfg.cluster.autoscale_interval_ns = value.as_u64()?
                 }
                 "cluster.cooldown_ns" => cfg.cluster.cooldown_ns = value.as_u64()?,
+                "telemetry.enabled" => cfg.telemetry.enabled = value.as_bool()?,
+                "telemetry.buffer" => cfg.telemetry.buffer_bytes = parse_bytes(value.as_str()?)?,
+                "telemetry.epoch_ns" => cfg.telemetry.epoch_ns = value.as_u64()?,
+                "telemetry.spans" => cfg.telemetry.spans = value.as_bool()?,
+                "telemetry.out" => cfg.telemetry.out = value.as_str()?.to_string(),
                 _ => return Err(format!("unknown config key: {path}")),
             }
         }
@@ -821,6 +865,13 @@ impl Config {
         }
         if c.autoscale_interval_ns == 0 {
             return Err("cluster.autoscale_interval_ns must be > 0".into());
+        }
+        let t = &self.telemetry;
+        if t.enabled && t.buffer_bytes < KIB {
+            return Err("telemetry.buffer must be at least 1KB".into());
+        }
+        if t.epoch_ns == 0 {
+            return Err("telemetry.epoch_ns must be > 0".into());
         }
         Ok(())
     }
@@ -1047,6 +1098,42 @@ restore_overhead_ns = 10000
             "[lifecycle]\nhistogram_min_ns = 10\nhistogram_max_ns = 5\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_section() {
+        let text = r#"
+[telemetry]
+enabled = true
+buffer = "2MB"
+epoch_ns = 5000000
+spans = false
+out = "trace.json"
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.buffer_bytes, 2 * MIB);
+        assert_eq!(c.telemetry.epoch_ns, 5_000_000);
+        assert!(!c.telemetry.spans);
+        assert_eq!(c.telemetry.out, "trace.json");
+    }
+
+    #[test]
+    fn telemetry_disabled_by_default() {
+        let c = Config::default();
+        assert!(!c.telemetry.enabled, "observability must be opt-in");
+        assert!(c.telemetry.spans);
+        assert!(c.telemetry.out.is_empty());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_telemetry_values() {
+        assert!(Config::from_toml_str("[telemetry]\nenabled = true\nbuffer = \"100\"\n").is_err());
+        assert!(Config::from_toml_str("[telemetry]\nepoch_ns = 0\n").is_err());
+        assert!(Config::from_toml_str("[telemetry]\nnonsense = 1\n").is_err());
+        // a small buffer is fine while disabled (validated only when on)
+        assert!(Config::from_toml_str("[telemetry]\nbuffer = \"100\"\n").is_ok());
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod porter;
 pub mod runtime;
 pub mod shim;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod trace;
 pub mod util;

@@ -9,7 +9,8 @@
 //!           --keep-warm the shim's sandbox capture + warm-pool replay
 //!           report what keep-alive amortizes; with the Trace-IR on
 //!           (default) the run records its stream and verifies replay
-//!           identity (TRACE counter line)
+//!           identity (TRACE counter line); [--telemetry-out F.json]
+//!           exports machine-level phase/epoch events as a Chrome trace
 //!   trace   record <workload> [--out F]  capture the canonical Trace-IR
 //!           replay [<w>|--in F] [--tier]  drive a machine from the IR
 //!           info   [<w>|--in F]           IR stats + per-phase summary
@@ -25,7 +26,11 @@
 //!   cluster [--nodes N] [--arrivals S]   fleet simulation (open-loop)
 //!           [--warm-pool-mb N] [--snapshot] [--keepalive ttl|lru|histogram]
 //!           enable the lifecycle layer: per-node warm pools and
-//!           CXL-resident snapshots in the shared pool
+//!           CXL-resident snapshots in the shared pool;
+//!           [--telemetry-out F.json] export a Chrome-trace/Perfetto
+//!           event file (+ sibling F.csv time series)
+//!   telemetry summarize <trace.json>     roll up an exported trace:
+//!           per-kind event counts/durations, series stats
 //!   list                                 workload registry
 //!
 //! The figure benches live under `cargo bench` (see rust/benches/).
@@ -56,10 +61,12 @@ fn main() {
         Some("provision") => cmd_provision(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("telemetry") => cmd_telemetry(&args),
         _ => {
             eprintln!(
                 "usage: porter-cli \
-                 <config|list|run|trace|profile|place|provision|serve|cluster> [options]\n\
+                 <config|list|run|trace|profile|place|provision|serve|cluster|telemetry> \
+                 [options]\n\
                  see `cargo bench` for the paper-figure harnesses"
             );
             2
@@ -84,6 +91,33 @@ fn scale_of(args: &Args) -> Scale {
     } else {
         Scale::Small
     }
+}
+
+/// Resolve the telemetry output path: the `--telemetry-out` flag wins,
+/// else a `[telemetry]` section with `out` set.
+fn telemetry_out(args: &Args, cfg: &Config) -> Option<String> {
+    if let Some(path) = args.opt("telemetry-out") {
+        return Some(path.to_string());
+    }
+    if cfg.telemetry.enabled && !cfg.telemetry.out.is_empty() {
+        return Some(cfg.telemetry.out.clone());
+    }
+    None
+}
+
+/// Write the combined Chrome-trace JSON plus the sibling `.csv` of the
+/// time series next to it.
+fn write_telemetry(
+    tele: &porter::telemetry::TelemetryReport,
+    path: &str,
+    summary: Vec<(&str, porter::util::json::Json)>,
+) -> Result<(), String> {
+    let doc = tele.to_chrome_json(summary);
+    std::fs::write(path, doc.to_string_compact()).map_err(|e| format!("write {path}: {e}"))?;
+    let csv_path = format!("{}.csv", path.trim_end_matches(".json"));
+    std::fs::write(&csv_path, tele.to_csv()).map_err(|e| format!("write {csv_path}: {e}"))?;
+    println!("wrote {path} and {csv_path}");
+    Ok(())
 }
 
 fn cmd_config(args: &Args) -> i32 {
@@ -165,6 +199,11 @@ fn cmd_run(args: &Args) -> i32 {
     // knobs bridge in exactly as on the serving path, so `run` numbers
     // stay comparable to `serve`/`cluster` for the same config file.
     let (mut machine, policy_name) = build_run_machine(&cfg, tier);
+    let tele_out = telemetry_out(args, &cfg);
+    if tele_out.is_some() || cfg.telemetry.enabled {
+        machine
+            .set_telemetry(porter::telemetry::TelemetrySink::new(cfg.telemetry.buffer_bytes));
+    }
     // with the Trace-IR on (the default), the measured run records the
     // canonical stream; a verification replay below proves replay
     // identity on this exact invocation
@@ -244,6 +283,20 @@ fn cmd_run(args: &Args) -> i32 {
     }
     if args.flag("keep-warm") {
         keep_warm_report(&cfg, w.name(), &objects, &report);
+    }
+    if let Some(sink) = machine.take_telemetry() {
+        let tele = porter::telemetry::TelemetryReport { sink, series: Default::default() };
+        println!("{}", tele.counter_line());
+        if let Some(path) = &tele_out {
+            let summary = vec![
+                ("workload", porter::util::json::Json::str(w.name())),
+                ("tier", porter::util::json::Json::str(tier.name())),
+            ];
+            if let Err(e) = write_telemetry(&tele, path, summary) {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
     }
     0
 }
@@ -659,6 +712,10 @@ fn cmd_cluster(args: &Args) -> i32 {
             lc.policy = p.to_string();
             lc.enabled = true;
         }
+        if let Some(path) = args.opt("telemetry-out") {
+            cfg.telemetry.enabled = true;
+            cfg.telemetry.out = path.to_string();
+        }
         Ok(())
     })();
     if let Err(e) = parse_result {
@@ -683,8 +740,8 @@ fn cmd_cluster(args: &Args) -> i32 {
             if cfg.lifecycle.snapshot { "on (shared CXL pool)" } else { "off" }
         );
     }
-    match porter::cluster::simulate(&cfg) {
-        Ok(report) => {
+    match porter::cluster::simulate_full(&cfg) {
+        Ok((report, tele)) => {
             println!("{}", report.render());
             // stable machine-readable counter line (CI smoke greps this)
             println!(
@@ -699,11 +756,67 @@ fn cmd_cluster(args: &Args) -> i32 {
                 report.snapshot_leased_bytes,
                 report.fleet_p50_ns
             );
+            if tele.is_enabled() {
+                println!("{}", tele.counter_line());
+                if !cfg.telemetry.out.is_empty() {
+                    use porter::util::json::Json;
+                    let summary = vec![
+                        ("completed", Json::num(report.completed as f64)),
+                        ("virtual_duration_s", Json::num(report.virtual_duration_s)),
+                        (
+                            "determinism_token",
+                            Json::str(format!("{:#018x}", report.determinism_token)),
+                        ),
+                    ];
+                    if let Err(e) = write_telemetry(&tele, &cfg.telemetry.out, summary) {
+                        eprintln!("error: {e}");
+                        return 1;
+                    }
+                }
+            }
             0
         }
         Err(e) => {
             eprintln!("cluster error: {e}");
             2
+        }
+    }
+}
+
+/// `porter-cli telemetry summarize <trace.json>` — read an exported
+/// Chrome-trace file back and print the per-kind/series rollup.
+fn cmd_telemetry(args: &Args) -> i32 {
+    let usage = "usage: porter-cli telemetry summarize <trace.json>";
+    if args.positional.first().map(String::as_str) != Some("summarize") {
+        eprintln!("{usage}");
+        return 2;
+    }
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: read {path}: {e}");
+            return 1;
+        }
+    };
+    let doc = match porter::util::json::Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: parse {path}: {e}");
+            return 1;
+        }
+    };
+    match porter::telemetry::export::summarize(&doc) {
+        Ok(s) => {
+            println!("{s}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
         }
     }
 }

@@ -64,10 +64,21 @@ impl Default for Histogram {
     }
 }
 
+/// Bucket index for a value: bucket `i` holds values in
+/// `(2^(i-1), 2^i]`, so the reported upper bound `2^i` is *exact* at
+/// power-of-two boundaries (recording 256 reports p100 ≤ 256, not 512).
+#[inline]
+fn bucket_of(value_ns: u64) -> usize {
+    if value_ns <= 1 {
+        0
+    } else {
+        (64 - (value_ns - 1).leading_zeros() as usize).min(63)
+    }
+}
+
 impl Histogram {
     pub fn record(&self, value_ns: u64) {
-        let b = 64 - value_ns.max(1).leading_zeros() as usize - 1;
-        self.buckets[b.min(63)].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_of(value_ns)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(value_ns, Ordering::Relaxed);
         self.max.fetch_max(value_ns, Ordering::Relaxed);
@@ -103,19 +114,82 @@ impl Histogram {
 
     /// Upper bound of the bucket containing the p-th percentile.
     pub fn percentile(&self, p: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
+        self.snapshot().percentile(p)
+    }
+
+    /// Non-destructive point-in-time copy (cumulative view).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot-and-reset: everything recorded since the previous
+    /// `interval()` call, zeroing the live histogram — the telemetry
+    /// sampler's per-epoch (not cumulative) percentile view. Fields are
+    /// swapped individually, so concurrent recorders may straddle the
+    /// boundary by one event; exact in the single-threaded DES.
+    pub fn interval(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.swap(0, Ordering::Relaxed)).collect(),
+            count: self.count.swap(0, Ordering::Relaxed),
+            sum: self.sum.swap(0, Ordering::Relaxed),
+            max: self.max.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain (non-atomic) histogram state handed out by
+/// [`Histogram::snapshot`]/[`Histogram::interval`], with the same
+/// percentile/mean math as the live histogram.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the p-th percentile: bucket
+    /// `i` covers `(2^(i-1), 2^i]`, so the bound is exact at powers of
+    /// two and within 2× otherwise.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+            seen += b;
             if seen >= target {
-                return 1u64 << (i + 1);
+                return 1u64 << i;
             }
         }
-        self.max()
+        self.max
     }
 }
 
@@ -138,6 +212,21 @@ impl Registry {
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
         self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// All counters by name (sorted) — exporter iteration surface.
+    pub fn counter_values(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, c)| (k.clone(), c.get())).collect()
+    }
+
+    /// All gauges by name (sorted).
+    pub fn gauge_values(&self) -> Vec<(String, f64)> {
+        self.gauges.lock().unwrap().iter().map(|(k, g)| (k.clone(), g.get())).collect()
+    }
+
+    /// Non-destructive snapshots of all histograms by name (sorted).
+    pub fn histogram_values(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms.lock().unwrap().iter().map(|(k, h)| (k.clone(), h.snapshot())).collect()
     }
 
     /// Render all metrics as a report block.
@@ -187,6 +276,60 @@ mod tests {
         assert!(h.percentile(100.0) >= 100_000);
         assert_eq!(h.max(), 100_000);
         assert!((h.mean() - 20300.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_exact_at_power_of_two_boundaries() {
+        // bucket i covers (2^(i-1), 2^i]: a power-of-two value reports
+        // its own value as the bound, not the next bucket up
+        for v in [1u64, 2, 4, 256, 1 << 20] {
+            let h = Histogram::default();
+            h.record(v);
+            assert_eq!(h.percentile(100.0), v, "p100 of a single record of {v}");
+        }
+        let h = Histogram::default();
+        h.record(3);
+        assert_eq!(h.percentile(100.0), 4, "3 lands in the (2,4] bucket");
+        h.record(257);
+        assert_eq!(h.percentile(100.0), 512, "257 lands in the (256,512] bucket");
+    }
+
+    #[test]
+    fn histogram_interval_resets_cumulative_snapshot_does_not() {
+        let h = Histogram::default();
+        h.record(100);
+        h.record(200);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(h.count(), 2, "snapshot() is non-destructive");
+
+        let iv = h.interval();
+        assert_eq!(iv.count(), 2);
+        assert_eq!(iv.max(), 200);
+        assert!((iv.mean() - 150.0).abs() < 1e-9);
+        assert_eq!(iv.percentile(50.0), 128);
+        // live histogram is drained; the next interval sees only new data
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        h.record(4000);
+        let iv2 = h.interval();
+        assert_eq!(iv2.count(), 1);
+        assert_eq!(iv2.percentile(100.0), 4096);
+        assert_eq!(h.interval().count(), 0);
+    }
+
+    #[test]
+    fn registry_exposes_values_for_exporters() {
+        let r = Registry::default();
+        r.counter("requests").add(3);
+        r.gauge("occupancy").set(0.5);
+        r.histogram("lat").record(100);
+        assert_eq!(r.counter_values(), vec![("requests".to_string(), 3)]);
+        assert_eq!(r.gauge_values(), vec![("occupancy".to_string(), 0.5)]);
+        let hists = r.histogram_values();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "lat");
+        assert_eq!(hists[0].1.count(), 1);
     }
 
     #[test]

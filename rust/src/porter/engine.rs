@@ -12,7 +12,8 @@
 use std::time::Instant;
 
 use crate::config::{
-    Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig, TraceConfig,
+    Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig, TelemetryConfig,
+    TraceConfig,
 };
 use crate::mem::migrate::MigrationEngine;
 use crate::mem::tier::TierKind;
@@ -32,6 +33,7 @@ pub struct EngineConfig {
     pub porter: PorterConfig,
     pub migration: MigrationConfig,
     pub trace: TraceConfig,
+    pub telemetry: TelemetryConfig,
 }
 
 impl From<&Config> for EngineConfig {
@@ -42,6 +44,7 @@ impl From<&Config> for EngineConfig {
             porter: cfg.porter.clone(),
             migration: cfg.migration.clone(),
             trace: cfg.trace.clone(),
+            telemetry: cfg.telemetry.clone(),
         }
     }
 }
@@ -71,6 +74,9 @@ pub struct InvocationOutcome {
     /// Host-side execution time of the simulation (engine overhead
     /// accounting, not part of the simulated metric).
     pub host_micros: u64,
+    /// Machine-level telemetry collected during the run (migration
+    /// epochs, phase markers); `None` unless `[telemetry]` is enabled.
+    pub telemetry: Option<crate::telemetry::TelemetrySink>,
 }
 
 impl InvocationOutcome {
@@ -147,6 +153,9 @@ pub fn run_invocation(
         if let Some(engine) = MigrationEngine::from_config(&mig_cfg) {
             machine.set_migrator(Box::new(engine));
         }
+    }
+    if cfg.telemetry.enabled {
+        machine.set_telemetry(crate::telemetry::TelemetrySink::new(cfg.telemetry.buffer_bytes));
     }
 
     // run the function: replay the canonical Trace-IR stream when one
@@ -245,6 +254,7 @@ pub fn run_invocation(
         trace_replayed,
         trace_recorded_bytes,
         host_micros: started.elapsed().as_micros() as u64,
+        telemetry: machine.take_telemetry(),
     }
 }
 
@@ -360,6 +370,24 @@ mod tests {
         assert!(!third.trace_replayed);
         assert_eq!(third.trace_recorded_bytes, 0);
         assert_eq!(third.checksum, first.checksum, "live and replayed runs agree");
+    }
+
+    #[test]
+    fn telemetry_collects_machine_events_without_perturbing_the_report() {
+        let (mut ecfg, _, tuner) = setup();
+        // tiny DRAM grant + 1-tick epochs: the migration engine must act
+        ecfg.machine.dram_bytes = 128 * ecfg.machine.page_bytes;
+        ecfg.migration.epoch_ticks = 1;
+        let sysload = Arc::new(SystemLoad::new(&ecfg.machine));
+        let spec = FunctionSpec::new("kv", Arc::new(KvStore::new(40_000, 80_000)));
+        let base = run_invocation(1, &spec, &ecfg, &sysload, &tuner);
+        assert!(base.telemetry.is_none(), "default-off: no sink attached");
+        ecfg.telemetry.enabled = true;
+        let out = run_invocation(2, &spec, &ecfg, &sysload, &tuner);
+        assert_eq!(out.report, base.report, "instrumented replay must match exactly");
+        let sink = out.telemetry.expect("enabled run hands its sink back");
+        assert!(sink.total_events() > 0);
+        assert!(sink.kind_counts().contains_key("machine_epoch"));
     }
 
     #[test]

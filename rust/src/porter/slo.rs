@@ -112,6 +112,7 @@ mod tests {
             trace_replayed: false,
             trace_recorded_bytes: 0,
             host_micros: 0,
+            telemetry: None,
         }
     }
 

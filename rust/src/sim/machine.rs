@@ -106,6 +106,11 @@ pub struct Machine {
     placer: Box<dyn PagePlacer>,
     migrator: Option<Box<dyn Migrator>>,
     observers: Vec<Box<dyn AccessObserver>>,
+    /// Optional telemetry sink: migration epochs and phase markers,
+    /// stamped with the virtual clock. Recording never advances the
+    /// clock, so an instrumented run's `RunReport` is bit-identical to
+    /// an uninstrumented one (replay-identity preserved).
+    telemetry: Option<crate::telemetry::TelemetrySink>,
     clock_ns: f64,
     compute_ns: f64,
     stall_ns: f64,
@@ -143,6 +148,7 @@ impl Machine {
             placer,
             migrator: None,
             observers: Vec::new(),
+            telemetry: None,
             clock_ns: 0.0,
             compute_ns: 0.0,
             stall_ns: 0.0,
@@ -186,6 +192,17 @@ impl Machine {
         self.migrator = Some(m);
     }
 
+    /// Attach a telemetry sink (machine-level migration-epoch and phase
+    /// events).
+    pub fn set_telemetry(&mut self, sink: crate::telemetry::TelemetrySink) {
+        self.telemetry = Some(sink);
+    }
+
+    /// Take the sink back off the machine to export what it collected.
+    pub fn take_telemetry(&mut self) -> Option<crate::telemetry::TelemetrySink> {
+        self.telemetry.take()
+    }
+
     pub fn set_tick_interval_ns(&mut self, ns: f64) {
         assert!(ns > 0.0);
         self.tick_interval_ns = ns;
@@ -222,6 +239,23 @@ impl Machine {
                     }
                 }
                 mig.note_applied(&applied);
+                if !applied.is_empty() {
+                    if let Some(sink) = &mut self.telemetry {
+                        let promoted =
+                            applied.iter().filter(|m| m.to == TierKind::Dram).count() as u64;
+                        let demoted = applied.len() as u64 - promoted;
+                        sink.push(
+                            crate::telemetry::TelemetryEvent::new(
+                                crate::telemetry::EventKind::MachineEpoch,
+                                self.clock_ns as u64,
+                            )
+                            .tag(mig.name())
+                            .arg("promoted", promoted)
+                            .arg("demoted", demoted)
+                            .arg("bytes", applied.len() as u64 * self.mem.page_bytes()),
+                        );
+                    }
+                }
                 let moved = applied.len() as u64;
                 if moved > 0 {
                     // copy cost: page transfer at the slower tier's
@@ -392,6 +426,15 @@ impl Sink for Machine {
         for obs in &mut self.observers {
             obs.on_phase(t, name);
         }
+        if let Some(sink) = &mut self.telemetry {
+            sink.push(
+                crate::telemetry::TelemetryEvent::new(
+                    crate::telemetry::EventKind::Phase,
+                    t as u64,
+                )
+                .tag(name),
+            );
+        }
     }
 }
 
@@ -520,6 +563,37 @@ mod tests {
         let mut again = Machine::all_in(&cfg(), TierKind::Cxl);
         again.replay(&trace);
         assert_eq!(again.report(), live_report);
+    }
+
+    #[test]
+    fn telemetry_sink_does_not_perturb_the_run() {
+        let run = |with_sink: bool| {
+            let mut m = Machine::all_in(&cfg(), TierKind::Cxl);
+            m.set_tick_interval_ns(10_000.0);
+            m.set_migrator(Box::new(PromoteAll));
+            if with_sink {
+                m.set_telemetry(crate::telemetry::TelemetrySink::new(1 << 20));
+            }
+            let mut env = Env::new(4096, &mut m);
+            env.phase("chase");
+            let v = env.tvec::<u64>(512, 0, "hot");
+            for i in 0..20_000 {
+                let _ = v.get(i % 512, &mut env);
+                env.compute(10);
+            }
+            let sink = m.take_telemetry();
+            (m.report(), sink)
+        };
+        let (plain, none) = run(false);
+        let (instrumented, sink) = run(true);
+        assert!(none.is_none());
+        // exact equality, f64 bits included: recording is pure observation
+        assert_eq!(instrumented, plain, "telemetry must not perturb RunReport");
+        let sink = sink.unwrap();
+        assert!(sink.total_events() > 0);
+        let kinds = sink.kind_counts();
+        assert!(kinds.contains_key("machine_epoch"), "migration epochs recorded: {kinds:?}");
+        assert!(kinds.contains_key("phase"), "phase markers recorded: {kinds:?}");
     }
 
     #[test]

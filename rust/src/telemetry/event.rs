@@ -1,0 +1,162 @@
+//! Event taxonomy: everything the simulator can say about a moment in
+//! virtual time.
+//!
+//! Every event carries the DES virtual clock (`t_ns`), the originating
+//! node ([`FLEET`] for fleet-scoped events), and optionally a function
+//! name, a free-form label, and a small numeric payload. A nonzero
+//! `dur_ns` makes it a span (Chrome-trace `"X"`), zero an instant.
+
+/// Node id sentinel for fleet-scoped events (autoscaler, CXL pool).
+pub const FLEET: u64 = u64::MAX;
+
+/// What happened. The stable string names key the Chrome-trace `cat`
+/// field, the `telemetry summarize` rollup, and CI greps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// An invocation arrived at the gateway (instant, stamped with its
+    /// eventual queue wait).
+    Queued,
+    /// Full invocation lifetime: arrival → finish (span; the label is
+    /// the start classification: cold/warm/restored).
+    Invocation,
+    /// Sandbox startup paid before execution — cold init or snapshot
+    /// restore (instant carrying `startup_ns`).
+    Startup,
+    /// A promote/demote batch applied for one invocation's replay,
+    /// labeled with the migration policy.
+    Migration,
+    /// Warm-pool eviction (expiry or pressure) dropped a sandbox.
+    WarmEvict,
+    /// A sandbox image was admitted to the CXL snapshot store.
+    SnapshotWrite,
+    /// A snapshot restore seeded a sandbox (restore latency rides on
+    /// the matching Startup event).
+    SnapshotRestore,
+    /// Per-function DRAM provisioning changed budget shares.
+    Provision,
+    /// The autoscaler added or retired nodes (label: up/down).
+    Autoscale,
+    /// CXL pool lease granted late (capacity wait) and/or short
+    /// (shortage).
+    PoolContention,
+    /// Workload phase marker from the shim (machine-level runs).
+    Phase,
+    /// Machine-level aggregation tick that applied migrations, labeled
+    /// with the migrator name.
+    MachineEpoch,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Invocation => "invocation",
+            EventKind::Startup => "startup",
+            EventKind::Migration => "migration",
+            EventKind::WarmEvict => "warm_evict",
+            EventKind::SnapshotWrite => "snapshot_write",
+            EventKind::SnapshotRestore => "snapshot_restore",
+            EventKind::Provision => "provision",
+            EventKind::Autoscale => "autoscale",
+            EventKind::PoolContention => "pool_contention",
+            EventKind::Phase => "phase",
+            EventKind::MachineEpoch => "machine_epoch",
+        }
+    }
+}
+
+/// One telemetry record. Virtual timestamps only — no wall clock — so
+/// recording is deterministic and replays export identical traces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryEvent {
+    pub kind: EventKind,
+    pub t_ns: u64,
+    /// 0 = instant event, nonzero = span duration.
+    pub dur_ns: u64,
+    /// Originating node id, or [`FLEET`].
+    pub node: u64,
+    /// Function name; empty for node/fleet-scoped events.
+    pub function: String,
+    /// Free-form tag: start kind, policy name, scale direction, phase.
+    pub label: String,
+    /// Small numeric payload, rendered into Chrome-trace `args`.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl TelemetryEvent {
+    pub fn new(kind: EventKind, t_ns: u64) -> TelemetryEvent {
+        TelemetryEvent {
+            kind,
+            t_ns,
+            dur_ns: 0,
+            node: FLEET,
+            function: String::new(),
+            label: String::new(),
+            args: Vec::new(),
+        }
+    }
+
+    pub fn span(mut self, dur_ns: u64) -> TelemetryEvent {
+        self.dur_ns = dur_ns;
+        self
+    }
+
+    pub fn on_node(mut self, node: u64) -> TelemetryEvent {
+        self.node = node;
+        self
+    }
+
+    pub fn func(mut self, name: &str) -> TelemetryEvent {
+        self.function = name.to_string();
+        self
+    }
+
+    pub fn tag(mut self, label: &str) -> TelemetryEvent {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn arg(mut self, key: &'static str, v: u64) -> TelemetryEvent {
+        self.args.push((key, v));
+        self
+    }
+
+    /// Approximate retained heap+inline size — the unit of the sink's
+    /// byte budget.
+    pub fn cost_bytes(&self) -> u64 {
+        (std::mem::size_of::<TelemetryEvent>()
+            + self.function.len()
+            + self.label.len()
+            + self.args.capacity() * std::mem::size_of::<(&'static str, u64)>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_fills_fields() {
+        let ev = TelemetryEvent::new(EventKind::Invocation, 500)
+            .span(1_000)
+            .on_node(3)
+            .func("kv")
+            .tag("warm")
+            .arg("wait_ns", 42);
+        assert_eq!(ev.kind.name(), "invocation");
+        assert_eq!((ev.t_ns, ev.dur_ns, ev.node), (500, 1_000, 3));
+        assert_eq!(ev.function, "kv");
+        assert_eq!(ev.label, "warm");
+        assert_eq!(ev.args, vec![("wait_ns", 42)]);
+    }
+
+    #[test]
+    fn cost_scales_with_payload() {
+        let small = TelemetryEvent::new(EventKind::Queued, 0);
+        let big = TelemetryEvent::new(EventKind::Queued, 0)
+            .func("a-much-longer-function-name")
+            .arg("k", 1);
+        assert!(big.cost_bytes() > small.cost_bytes());
+        assert!(small.cost_bytes() >= std::mem::size_of::<TelemetryEvent>() as u64);
+    }
+}

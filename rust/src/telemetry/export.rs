@@ -1,0 +1,356 @@
+//! Exporters: Chrome trace-event JSON (Perfetto-compatible), CSV/JSON
+//! time series, and a Prometheus-style text exposition of a
+//! [`crate::metrics::Registry`].
+//!
+//! The Chrome artifact uses the *object* trace format —
+//! `{"traceEvents": [...]}` — which explicitly allows extra top-level
+//! keys, so one file both renders in Perfetto/`chrome://tracing` and
+//! carries the columnar `series` plus a run `summary`. Timestamps are
+//! virtual nanoseconds converted to the format's microsecond unit.
+
+use std::collections::BTreeSet;
+
+use crate::metrics::Registry;
+use crate::util::json::Json;
+
+use super::event::{EventKind, TelemetryEvent, FLEET};
+use super::series::SeriesSet;
+use super::sink::TelemetrySink;
+
+/// Perfetto track (thread) lane per event family, so related events
+/// stack on one timeline row per node.
+fn lane(kind: EventKind) -> u64 {
+    match kind {
+        EventKind::Queued | EventKind::Invocation | EventKind::Startup => 1,
+        EventKind::Migration | EventKind::MachineEpoch => 2,
+        EventKind::WarmEvict | EventKind::SnapshotWrite | EventKind::SnapshotRestore => 3,
+        EventKind::Provision | EventKind::Autoscale | EventKind::PoolContention => 4,
+        EventKind::Phase => 5,
+    }
+}
+
+fn lane_name(tid: u64) -> &'static str {
+    match tid {
+        1 => "invocations",
+        2 => "migration",
+        3 => "lifecycle",
+        4 => "placement",
+        _ => "phases",
+    }
+}
+
+/// Fleet-scoped events render as pid 0; node `n` as pid `n + 1`.
+fn pid_of(node: u64) -> u64 {
+    if node == FLEET {
+        0
+    } else {
+        node + 1
+    }
+}
+
+fn trace_event(ev: &TelemetryEvent) -> Json {
+    let mut args: Vec<(&str, Json)> = Vec::with_capacity(ev.args.len() + 1);
+    if !ev.label.is_empty() {
+        args.push(("label", Json::str(ev.label.as_str())));
+    }
+    for (k, v) in &ev.args {
+        args.push((k, Json::num(*v as f64)));
+    }
+    let name = if !ev.function.is_empty() {
+        ev.function.as_str()
+    } else if !ev.label.is_empty() {
+        ev.label.as_str()
+    } else {
+        ev.kind.name()
+    };
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(ev.kind.name())),
+        ("ts", Json::num(ev.t_ns as f64 / 1_000.0)),
+        ("pid", Json::num(pid_of(ev.node) as f64)),
+        ("tid", Json::num(lane(ev.kind) as f64)),
+        ("args", Json::obj(args)),
+    ];
+    if ev.dur_ns > 0 {
+        fields.push(("ph", Json::str("X")));
+        fields.push(("dur", Json::num(ev.dur_ns as f64 / 1_000.0)));
+    } else {
+        fields.push(("ph", Json::str("i")));
+        fields.push(("s", Json::str("t")));
+    }
+    Json::obj(fields)
+}
+
+/// Build the combined Chrome trace-event document: spans/instants (one
+/// process track per node), named tracks via metadata records, plus the
+/// time series and summary as extra top-level keys.
+pub fn chrome_trace(sink: &TelemetrySink, series: &SeriesSet, summary: Vec<(&str, Json)>) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(sink.len() + 8);
+    let mut tracks: BTreeSet<(u64, u64)> = BTreeSet::new();
+    for ev in sink.events() {
+        tracks.insert((pid_of(ev.node), lane(ev.kind)));
+        events.push(trace_event(ev));
+    }
+    for &(pid, tid) in &tracks {
+        let pname = if pid == 0 { "fleet".to_string() } else { format!("node-{}", pid - 1) };
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(pname))])),
+        ]));
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(lane_name(tid)))])),
+        ]));
+    }
+    let mut top = vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("series", series_json(series)),
+    ];
+    let mut sum = summary;
+    sum.push(("events_total", Json::num(sink.total_events() as f64)));
+    sum.push(("events_dropped", Json::num(sink.dropped_events() as f64)));
+    sum.push(("series_count", Json::num(series.len() as f64)));
+    top.push(("summary", Json::obj(sum)));
+    Json::obj(top)
+}
+
+/// Series as JSON: `{name: {"t_ns": [...], "values": [...]}}`.
+pub fn series_json(series: &SeriesSet) -> Json {
+    Json::Obj(
+        series
+            .series
+            .iter()
+            .map(|(name, s)| {
+                let j = Json::obj(vec![
+                    ("t_ns", Json::arr(s.t_ns.iter().map(|&t| Json::num(t as f64)))),
+                    ("values", Json::arr(s.values.iter().map(|&v| Json::num(v)))),
+                ]);
+                (name.clone(), j)
+            })
+            .collect(),
+    )
+}
+
+/// Series as long-form CSV — `series,t_ns,value` — robust to series of
+/// unequal length and pivot-friendly for plotting.
+pub fn series_csv(series: &SeriesSet) -> String {
+    let mut out = String::from("series,t_ns,value\n");
+    for (name, s) in &series.series {
+        for (t, v) in s.t_ns.iter().zip(&s.values) {
+            if v.fract() == 0.0 && v.abs() < 9e15 {
+                out.push_str(&format!("{name},{t},{}\n", *v as i64));
+            } else {
+                out.push_str(&format!("{name},{t},{v}\n"));
+            }
+        }
+    }
+    out
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if matches!(s.chars().next(), None | Some('0'..='9')) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+fn prom_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Prometheus-style text exposition of a metrics registry: counters,
+/// gauges, and histograms as summaries with p50/p99 quantiles.
+pub fn prometheus_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in registry.counter_values() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (name, v) in registry.gauge_values() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prom_f64(v)));
+    }
+    for (name, h) in registry.histogram_values() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        out.push_str(&format!("{n}{{quantile=\"0.5\"}} {}\n", h.percentile(50.0)));
+        out.push_str(&format!("{n}{{quantile=\"0.99\"}} {}\n", h.percentile(99.0)));
+        out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum(), h.count()));
+    }
+    out
+}
+
+/// Human summary of an exported trace document (the `porter-cli
+/// telemetry summarize` renderer). Accepts any Chrome trace-event
+/// object-format file; the `series`/`summary` keys are optional.
+pub fn summarize(doc: &Json) -> Result<String, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| "not a Chrome trace-event document (no traceEvents array)".to_string())?;
+    let mut by_cat: std::collections::BTreeMap<String, (u64, f64)> = Default::default();
+    let (mut t_min, mut t_max) = (f64::MAX, 0.0f64);
+    let mut total = 0u64;
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) == Some("M") {
+            continue;
+        }
+        total += 1;
+        let cat = ev.get("cat").and_then(|c| c.as_str()).unwrap_or("?").to_string();
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+        let e = by_cat.entry(cat).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dur;
+        t_min = t_min.min(ts);
+        t_max = t_max.max(ts + dur);
+    }
+    let mut out = String::new();
+    if total > 0 {
+        out.push_str(&format!(
+            "events: {total} spanning {:.3} ms of virtual time\n",
+            (t_max - t_min.min(t_max)) / 1_000.0
+        ));
+        out.push_str(&format!("{:<18} {:>8} {:>14}\n", "kind", "count", "total dur"));
+        for (cat, (n, dur_us)) in &by_cat {
+            out.push_str(&format!(
+                "{cat:<18} {n:>8} {:>14}\n",
+                crate::bench::fmt_ns(dur_us * 1_000.0)
+            ));
+        }
+    } else {
+        out.push_str("events: 0\n");
+    }
+    if let Some(Json::Obj(series)) = doc.get("series") {
+        out.push_str(&format!("series: {}\n", series.len()));
+        for (name, s) in series {
+            let vals: Vec<f64> = s
+                .get("values")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default();
+            let n = vals.len();
+            let (mut lo, mut hi, mut sum) = (f64::MAX, f64::MIN, 0.0);
+            for &v in &vals {
+                lo = lo.min(v);
+                hi = hi.max(v);
+                sum += v;
+            }
+            if n > 0 {
+                out.push_str(&format!(
+                    "  {name}: n={n} min={} mean={} max={}\n",
+                    prom_f64(lo),
+                    prom_f64(sum / n as f64),
+                    prom_f64(hi)
+                ));
+            }
+        }
+    }
+    if let Some(summary) = doc.get("summary") {
+        if let Some(d) = summary.get("events_dropped").and_then(|v| v.as_u64()) {
+            out.push_str(&format!("dropped: {d}\n"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::TelemetryEvent;
+    use super::*;
+
+    fn sample_sink() -> TelemetrySink {
+        let mut sink = TelemetrySink::new(1 << 20);
+        sink.push(
+            TelemetryEvent::new(EventKind::Invocation, 1_000)
+                .span(5_000)
+                .on_node(0)
+                .func("kv")
+                .tag("cold")
+                .arg("wait_ns", 250),
+        );
+        sink.push(TelemetryEvent::new(EventKind::Autoscale, 2_000).tag("up").arg("nodes", 3));
+        sink
+    }
+
+    fn sample_series() -> SeriesSet {
+        let mut set = SeriesSet::new();
+        set.point("pool_occupancy", 1_000, 0.5);
+        set.point("pool_occupancy", 2_000, 0.75);
+        set.point("queue_depth_ns", 1_000, 12_345.0);
+        set
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_carries_series() {
+        let doc = chrome_trace(&sample_sink(), &sample_series(), vec![("run", Json::str("test"))]);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 events + 2 tracks × (process_name + thread_name)
+        assert_eq!(events.len(), 2 + 4);
+        let span = &events[0];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("name").unwrap().as_str(), Some("kv"));
+        assert_eq!(span.get("cat").unwrap().as_str(), Some("invocation"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(1.0)); // µs
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(5.0));
+        assert_eq!(span.get("pid").unwrap().as_u64(), Some(1)); // node 0
+        assert_eq!(span.get("args").unwrap().get("wait_ns").unwrap().as_u64(), Some(250));
+        let instant = &events[1];
+        assert_eq!(instant.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(instant.get("pid").unwrap().as_u64(), Some(0)); // fleet
+        let series = parsed.get("series").unwrap();
+        let occ = series.get("pool_occupancy").unwrap();
+        assert_eq!(occ.get("values").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.get("summary").unwrap().get("events_total").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn csv_is_long_form() {
+        let csv = series_csv(&sample_series());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "series,t_ns,value");
+        assert_eq!(lines.len(), 1 + 3);
+        assert!(lines.contains(&"pool_occupancy,1000,0.5"));
+        assert!(lines.contains(&"queue_depth_ns,1000,12345"));
+    }
+
+    #[test]
+    fn prometheus_text_exposes_registry() {
+        let r = Registry::default();
+        r.counter("gateway.enqueued").add(7);
+        r.gauge("pool.occupancy").set(0.5);
+        r.histogram("e2e.latency").record(300);
+        let text = prometheus_text(&r);
+        assert!(text.contains("# TYPE gateway_enqueued counter\ngateway_enqueued 7\n"));
+        assert!(text.contains("pool_occupancy 0.5\n"));
+        assert!(text.contains("e2e_latency{quantile=\"0.5\"} 512\n"));
+        assert!(text.contains("e2e_latency_count 1\n"));
+    }
+
+    #[test]
+    fn summarize_renders_counts() {
+        let doc = chrome_trace(&sample_sink(), &sample_series(), vec![]);
+        let text = summarize(&doc).unwrap();
+        assert!(text.contains("events: 2"), "{text}");
+        assert!(text.contains("invocation"));
+        assert!(text.contains("autoscale"));
+        assert!(text.contains("series: 2"));
+        assert!(summarize(&Json::str("nope")).is_err());
+    }
+}

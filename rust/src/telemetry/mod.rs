@@ -1,0 +1,91 @@
+//! Virtual-time telemetry: structured events/spans, per-epoch time
+//! series, and exporters (Chrome trace-event JSON, CSV, Prometheus
+//! text).
+//!
+//! Design contract:
+//! * **Deterministic.** Events are stamped with the DES virtual clock
+//!   only — never a wall clock — so an identical run exports an
+//!   identical trace, and recording never perturbs simulation state:
+//!   the determinism token and every report field are bit-identical
+//!   with telemetry on, off, or absent.
+//! * **Bounded.** The [`TelemetrySink`] ring buffer enforces a byte
+//!   budget with drop-oldest semantics and a dropped-events counter;
+//!   `used_bytes() <= budget_bytes()` is a hard invariant
+//!   (property-tested).
+//! * **Default-off.** The `[telemetry]` config section gates every hook;
+//!   disabled, each hook is a single branch.
+//!
+//! Layout: [`event`] (taxonomy), [`sink`] (ring buffer), [`series`]
+//! (fleet sampler + columnar series), [`export`] (writers).
+
+pub mod event;
+pub mod export;
+pub mod series;
+pub mod sink;
+
+pub use event::{EventKind, TelemetryEvent, FLEET};
+pub use series::{FleetSample, FleetSampler, SeriesSet, TimeSeries};
+pub use sink::TelemetrySink;
+
+use crate::util::json::Json;
+
+/// Everything a run collected: the event sink plus the sampled series.
+/// Handed out by `cluster::simulate_full` / taken off a `Machine`.
+#[derive(Debug)]
+pub struct TelemetryReport {
+    pub sink: TelemetrySink,
+    pub series: SeriesSet,
+}
+
+impl TelemetryReport {
+    pub fn empty() -> TelemetryReport {
+        TelemetryReport { sink: TelemetrySink::disabled(), series: SeriesSet::new() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_enabled()
+    }
+
+    /// The machine-readable counter line CI greps:
+    /// `TELEMETRY events=N dropped=M series=K`.
+    pub fn counter_line(&self) -> String {
+        format!(
+            "TELEMETRY events={} dropped={} series={}",
+            self.sink.total_events(),
+            self.sink.dropped_events(),
+            self.series.len()
+        )
+    }
+
+    /// Combined Chrome trace-event document (see [`export::chrome_trace`]).
+    pub fn to_chrome_json(&self, summary: Vec<(&str, Json)>) -> Json {
+        export::chrome_trace(&self.sink, &self.series, summary)
+    }
+
+    /// Long-form CSV of the time series.
+    pub fn to_csv(&self) -> String {
+        export::series_csv(&self.series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_line_matches_ci_grep() {
+        let mut report = TelemetryReport::empty();
+        assert_eq!(report.counter_line(), "TELEMETRY events=0 dropped=0 series=0");
+        report.sink = TelemetrySink::new(1 << 20);
+        report.sink.push(TelemetryEvent::new(EventKind::Queued, 1));
+        report.series.point("pool_occupancy", 1, 0.5);
+        assert_eq!(report.counter_line(), "TELEMETRY events=1 dropped=0 series=1");
+    }
+
+    #[test]
+    fn empty_report_exports_valid_chrome_json() {
+        let doc = TelemetryReport::empty().to_chrome_json(vec![]);
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        assert!(parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,243 @@
+//! Per-epoch time series: a columnar store plus the fleet sampler that
+//! fills it on a virtual-time cadence.
+//!
+//! The sampler is driven from the cluster's event loop: `observe()` is
+//! called with the current virtual time and a [`FleetSample`] value bag;
+//! whenever one or more epoch boundaries have been crossed it emits one
+//! point per series, stamped at the most recent boundary (even spacing,
+//! no wall clock anywhere). Cumulative counters in the sample are turned
+//! into per-epoch deltas, and per-function latency percentiles come from
+//! [`crate::metrics::Histogram::interval`] — per-epoch, not cumulative.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Histogram;
+
+/// One named series: parallel timestamp/value columns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeSeries {
+    pub t_ns: Vec<u64>,
+    pub values: Vec<f64>,
+}
+
+/// A set of named series, sorted by name for deterministic export.
+#[derive(Debug, Clone, Default)]
+pub struct SeriesSet {
+    pub series: BTreeMap<String, TimeSeries>,
+}
+
+impl SeriesSet {
+    pub fn new() -> SeriesSet {
+        SeriesSet::default()
+    }
+
+    pub fn point(&mut self, name: &str, t_ns: u64, v: f64) {
+        let s = self.series.entry(name.to_string()).or_default();
+        s.t_ns.push(t_ns);
+        s.values.push(v);
+    }
+
+    /// Number of distinct series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Total number of points across all series.
+    pub fn points(&self) -> u64 {
+        self.series.values().map(|s| s.t_ns.len() as u64).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.get(name)
+    }
+}
+
+/// Fleet state at one instant, gathered by the cluster from its nodes
+/// and the CXL pool. Counter fields are cumulative since run start; the
+/// sampler differences them into per-epoch rates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetSample {
+    /// Peak DRAM mapped across nodes (best available residency proxy).
+    pub dram_used_bytes: u64,
+    pub dram_capacity_bytes: u64,
+    /// CXL pool leased fraction, 0..1.
+    pub pool_occupancy: f64,
+    /// Worst per-node CXL link contention mapped to 0..1 utilization.
+    pub link_utilization: f64,
+    /// Summed queue backlog across nodes, in virtual ns of work.
+    pub queue_depth_ns: u64,
+    pub warm_pool_bytes: u64,
+    pub active_nodes: u64,
+    // cumulative counters
+    pub completed: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub ping_pongs: u64,
+    pub migration_bytes: u64,
+    pub cold_starts: u64,
+    pub restores: u64,
+}
+
+fn frac(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Epoch-driven sampler turning [`FleetSample`] snapshots into series.
+#[derive(Debug)]
+pub struct FleetSampler {
+    on: bool,
+    epoch_ns: u64,
+    next_ns: u64,
+    set: SeriesSet,
+    last: FleetSample,
+    lat: BTreeMap<String, Histogram>,
+}
+
+impl FleetSampler {
+    pub fn disabled() -> FleetSampler {
+        FleetSampler {
+            on: false,
+            epoch_ns: 1,
+            next_ns: u64::MAX,
+            set: SeriesSet::new(),
+            last: FleetSample::default(),
+            lat: BTreeMap::new(),
+        }
+    }
+
+    pub fn new(epoch_ns: u64) -> FleetSampler {
+        let epoch_ns = epoch_ns.max(1);
+        FleetSampler { on: true, epoch_ns, next_ns: epoch_ns, ..FleetSampler::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Feed one end-to-end latency into the per-function interval
+    /// histogram (drained into p50/p99 points at each epoch).
+    pub fn record_latency(&mut self, function: &str, e2e_ns: u64) {
+        if self.on {
+            self.lat.entry(function.to_string()).or_default().record(e2e_ns);
+        }
+    }
+
+    /// Called with the current virtual time; emits one point per series
+    /// when at least one epoch boundary has been crossed.
+    pub fn observe(&mut self, t_ns: u64, s: &FleetSample) {
+        if !self.on || t_ns < self.next_ns {
+            return;
+        }
+        let mut at = self.next_ns;
+        while self.next_ns <= t_ns {
+            at = self.next_ns;
+            self.next_ns += self.epoch_ns;
+        }
+        self.emit(at, s);
+    }
+
+    /// Force a final sample at end-of-run so short runs still produce
+    /// at least one point per series.
+    pub fn flush(&mut self, t_ns: u64, s: &FleetSample) {
+        if self.on {
+            self.emit(t_ns.max(1), s);
+        }
+    }
+
+    fn emit(&mut self, at: u64, s: &FleetSample) {
+        let set = &mut self.set;
+        set.point("dram_occupancy", at, frac(s.dram_used_bytes, s.dram_capacity_bytes));
+        set.point("pool_occupancy", at, s.pool_occupancy);
+        set.point("cxl_link_utilization", at, s.link_utilization);
+        set.point("queue_depth_ns", at, s.queue_depth_ns as f64);
+        set.point("warm_pool_bytes", at, s.warm_pool_bytes as f64);
+        set.point("active_nodes", at, s.active_nodes as f64);
+        let d = |cur: u64, prev: u64| cur.saturating_sub(prev) as f64;
+        set.point("completions_per_epoch", at, d(s.completed, self.last.completed));
+        set.point("promotions_per_epoch", at, d(s.promotions, self.last.promotions));
+        set.point("demotions_per_epoch", at, d(s.demotions, self.last.demotions));
+        set.point("ping_pongs_per_epoch", at, d(s.ping_pongs, self.last.ping_pongs));
+        set.point("migration_bytes_per_epoch", at, d(s.migration_bytes, self.last.migration_bytes));
+        set.point("cold_starts_per_epoch", at, d(s.cold_starts, self.last.cold_starts));
+        set.point("restores_per_epoch", at, d(s.restores, self.last.restores));
+        for (name, h) in &self.lat {
+            let iv = h.interval();
+            if iv.count() > 0 {
+                set.point(&format!("p50_ns:{name}"), at, iv.percentile(50.0) as f64);
+                set.point(&format!("p99_ns:{name}"), at, iv.percentile(99.0) as f64);
+            }
+        }
+        self.last = *s;
+    }
+
+    pub fn series(&self) -> &SeriesSet {
+        &self.set
+    }
+
+    pub fn into_series(self) -> SeriesSet {
+        self.set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sampler_emits_nothing() {
+        let mut sm = FleetSampler::disabled();
+        sm.record_latency("kv", 100);
+        sm.observe(1 << 40, &FleetSample::default());
+        sm.flush(1 << 40, &FleetSample::default());
+        assert!(sm.series().is_empty());
+    }
+
+    #[test]
+    fn samples_land_on_epoch_boundaries_with_deltas() {
+        let mut sm = FleetSampler::new(1_000);
+        let mut s = FleetSample { completed: 5, pool_occupancy: 0.25, ..Default::default() };
+        sm.observe(500, &s); // before the first boundary: nothing
+        assert!(sm.series().is_empty());
+        sm.observe(1_200, &s); // crossed t=1000
+        s.completed = 9;
+        sm.observe(3_700, &s); // crossed t=2000 and t=3000: one point at 3000
+        let comp = sm.series().get("completions_per_epoch").unwrap();
+        assert_eq!(comp.t_ns, vec![1_000, 3_000]);
+        assert_eq!(comp.values, vec![5.0, 4.0]);
+        let occ = sm.series().get("pool_occupancy").unwrap();
+        assert_eq!(occ.values, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn per_function_percentiles_are_per_epoch() {
+        let mut sm = FleetSampler::new(1_000);
+        sm.record_latency("kv", 100);
+        sm.record_latency("kv", 200);
+        sm.observe(1_000, &FleetSample::default());
+        // next epoch records nothing for kv: no p50 point is added
+        sm.observe(2_000, &FleetSample::default());
+        sm.record_latency("kv", 4_000);
+        sm.observe(3_000, &FleetSample::default());
+        let p50 = sm.series().get("p50_ns:kv").unwrap();
+        assert_eq!(p50.t_ns, vec![1_000, 3_000]);
+        assert_eq!(p50.values, vec![128.0, 4_096.0]);
+        assert!(sm.series().get("p99_ns:kv").is_some());
+    }
+
+    #[test]
+    fn flush_guarantees_points_on_short_runs() {
+        let mut sm = FleetSampler::new(1 << 40);
+        let s = FleetSample { active_nodes: 2, ..Default::default() };
+        sm.flush(77, &s);
+        assert!(sm.series().len() >= 5, "flush emits the full series set");
+        assert_eq!(sm.series().get("active_nodes").unwrap().values, vec![2.0]);
+    }
+}

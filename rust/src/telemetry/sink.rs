@@ -1,0 +1,163 @@
+//! Bounded event sink: a byte-budgeted ring buffer with drop-oldest
+//! semantics and a dropped-events counter.
+//!
+//! "Lock-cheap" by construction: the DES owns the sink through `&mut`
+//! (single-threaded event loop), so recording is a branch, a `VecDeque`
+//! push, and two integer adds — no atomics, no locks. A disabled sink
+//! reduces every call to one branch, which is what lets default-off
+//! configs stay bit-identical (and measurably free) versus a build
+//! without the subsystem.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use super::event::TelemetryEvent;
+
+#[derive(Debug)]
+pub struct TelemetrySink {
+    on: bool,
+    budget_bytes: u64,
+    used_bytes: u64,
+    events: VecDeque<TelemetryEvent>,
+    total: u64,
+    dropped: u64,
+}
+
+impl TelemetrySink {
+    /// A sink that records nothing and costs one branch per call.
+    pub fn disabled() -> TelemetrySink {
+        TelemetrySink {
+            on: false,
+            budget_bytes: 0,
+            used_bytes: 0,
+            events: VecDeque::new(),
+            total: 0,
+            dropped: 0,
+        }
+    }
+
+    /// An enabled sink retaining at most `budget_bytes` of events.
+    pub fn new(budget_bytes: u64) -> TelemetrySink {
+        TelemetrySink { on: true, budget_bytes, ..TelemetrySink::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Record an event. Oldest events are evicted (and counted as
+    /// dropped) until the retained set fits the byte budget; an event
+    /// larger than the whole budget is dropped outright.
+    pub fn push(&mut self, ev: TelemetryEvent) {
+        if !self.on {
+            return;
+        }
+        self.total += 1;
+        let cost = ev.cost_bytes();
+        if cost > self.budget_bytes {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push_back(ev);
+        self.used_bytes += cost;
+        while self.used_bytes > self.budget_bytes {
+            let old = self.events.pop_front().expect("over budget implies non-empty");
+            self.used_bytes -= old.cost_bytes();
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently retained (oldest first).
+    pub fn events(&self) -> impl Iterator<Item = &TelemetryEvent> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Every event ever pushed while enabled (retained + dropped).
+    pub fn total_events(&self) -> u64 {
+        self.total
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained event counts per kind name (sorted by name).
+    pub fn kind_counts(&self) -> BTreeMap<&'static str, u64> {
+        let mut m = BTreeMap::new();
+        for ev in &self.events {
+            *m.entry(ev.kind.name()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::EventKind;
+    use super::*;
+
+    fn ev(t: u64) -> TelemetryEvent {
+        TelemetryEvent::new(EventKind::Queued, t)
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut s = TelemetrySink::disabled();
+        s.push(ev(1));
+        assert_eq!((s.len(), s.total_events(), s.dropped_events()), (0, 0, 0));
+        assert!(!s.is_enabled());
+    }
+
+    #[test]
+    fn budget_drops_oldest_first() {
+        let unit = ev(0).cost_bytes();
+        let mut s = TelemetrySink::new(3 * unit);
+        for t in 0..10 {
+            s.push(ev(t));
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.total_events(), 10);
+        assert_eq!(s.dropped_events(), 7);
+        assert!(s.used_bytes() <= s.budget_bytes());
+        // the three newest survive, oldest first
+        let kept: Vec<u64> = s.events().map(|e| e.t_ns).collect();
+        assert_eq!(kept, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn oversized_event_is_dropped_not_stored() {
+        let mut s = TelemetrySink::new(8);
+        s.push(ev(1).func("way-too-big-for-an-8-byte-budget"));
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.total_events(), 1);
+        assert_eq!(s.dropped_events(), 1);
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn kind_counts_roll_up() {
+        let mut s = TelemetrySink::new(1 << 20);
+        s.push(ev(1));
+        s.push(ev(2));
+        s.push(TelemetryEvent::new(EventKind::Migration, 3));
+        let counts = s.kind_counts();
+        assert_eq!(counts.get("queued"), Some(&2));
+        assert_eq!(counts.get("migration"), Some(&1));
+    }
+}

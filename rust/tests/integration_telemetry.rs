@@ -1,0 +1,72 @@
+//! Integration: virtual-time telemetry end-to-end — a fixed cluster
+//! run exports a Chrome-trace JSON (+ CSV time series) that parses
+//! back, and enabling telemetry never changes the simulation itself.
+
+use porter::cluster::{simulate, simulate_full};
+use porter::config::Config;
+use porter::telemetry::export;
+use porter::util::json::Json;
+
+fn cfg(telemetry: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.functions = 3;
+    cfg.cluster.rate_per_s = 400.0;
+    cfg.cluster.duration_s = 0.05;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.seed = 0x7E1E;
+    cfg.lifecycle.enabled = true;
+    cfg.lifecycle.warm_pool_bytes = 256 * 1024 * 1024;
+    cfg.lifecycle.snapshot = true;
+    cfg.telemetry.enabled = telemetry;
+    cfg.telemetry.epoch_ns = 5_000_000;
+    cfg
+}
+
+#[test]
+fn chrome_trace_roundtrip_on_fixed_cluster_run() {
+    let (report, tele) = simulate_full(&cfg(true)).unwrap();
+    assert!(report.completed > 0);
+    let kinds = tele.sink.kind_counts();
+    assert!(kinds.len() >= 4, "expected >= 4 event kinds, got {kinds:?}");
+    assert!(tele.series.len() >= 5, "expected >= 5 series, got {}", tele.series.len());
+
+    let doc = tele.to_chrome_json(vec![("note", Json::str("fixture"))]);
+    let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // every row carries the Chrome trace-event required fields
+    for ev in events {
+        for key in ["ph", "pid", "tid", "ts", "name"] {
+            assert!(ev.get(key).is_some(), "missing {key} in {ev:?}");
+        }
+    }
+    // invocation spans export as complete events with durations
+    assert!(events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")));
+    // the summarize rollup reads the exported document back
+    let summary = export::summarize(&parsed).unwrap();
+    assert!(summary.contains("invocation"), "rollup missing invocation rows:\n{summary}");
+
+    // CSV: long form, one line per point plus the header
+    let csv = tele.to_csv();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines[0], "series,t_ns,value");
+    assert_eq!(lines.len() as u64, 1 + tele.series.points());
+}
+
+#[test]
+fn telemetry_enabled_run_matches_disabled_run() {
+    let base = simulate(&cfg(false)).unwrap();
+    let (instrumented, tele) = simulate_full(&cfg(true)).unwrap();
+    assert!(tele.sink.total_events() > 0);
+    assert_eq!(base.determinism_token, instrumented.determinism_token);
+    assert_eq!(base.completed, instrumented.completed);
+    assert_eq!(base.fleet_p50_ns, instrumented.fleet_p50_ns);
+    assert_eq!(base.fleet_p99_ns, instrumented.fleet_p99_ns);
+    assert_eq!(base.cold_starts, instrumented.cold_starts);
+    assert_eq!(base.warm_starts, instrumented.warm_starts);
+    assert_eq!(base.restores, instrumented.restores);
+    assert_eq!(base.snapshot_bytes, instrumented.snapshot_bytes);
+    assert!(base.fleet_mean_ns == instrumented.fleet_mean_ns);
+    assert!(base.violation_rate == instrumented.violation_rate);
+}

@@ -747,3 +747,42 @@ fn prop_provision_beats_or_matches_uniform() {
         assert!(a.dram_saved_bytes() <= a.uniform_used_bytes);
     });
 }
+
+/// Telemetry sink: the byte budget is a hard cap, `total == kept +
+/// dropped` at every step, and eviction is strictly drop-oldest — the
+/// kept events are always the most recent suffix of the push sequence.
+#[test]
+fn prop_telemetry_sink_budget_holds() {
+    use porter::telemetry::{EventKind, TelemetryEvent, TelemetrySink};
+    forall("telemetry-sink-budget", 60, |g: &mut Gen| {
+        // floor of 256 bytes: every generated event fits on its own, so
+        // the suffix property is exact (no outright-oversized drops)
+        let budget = g.u64_in(256, 4096);
+        let mut sink = TelemetrySink::new(budget);
+        assert!(sink.is_enabled());
+        let n = g.usize_in(1, 120);
+        for i in 0..n {
+            let mut ev = TelemetryEvent::new(EventKind::Queued, i as u64);
+            if g.bool() {
+                ev = ev.func(&"f".repeat(g.usize_in(1, 64)));
+            }
+            if g.bool() {
+                ev = ev.arg("k", i as u64);
+            }
+            sink.push(ev);
+            assert!(
+                sink.used_bytes() <= sink.budget_bytes(),
+                "budget exceeded: {} > {}",
+                sink.used_bytes(),
+                sink.budget_bytes()
+            );
+            assert_eq!(sink.total_events(), sink.len() as u64 + sink.dropped_events());
+        }
+        let kept: Vec<u64> = sink.events().map(|e| e.t_ns).collect();
+        assert!(!kept.is_empty(), "budget fits at least one event");
+        let first = n as u64 - kept.len() as u64;
+        for (j, t) in kept.iter().enumerate() {
+            assert_eq!(*t, first + j as u64, "eviction must be drop-oldest in push order");
+        }
+    });
+}

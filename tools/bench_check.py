@@ -105,6 +105,14 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
         if float(value) < 0.0:
             fail(f"{path}: {row_id}.{key} = {value} negative saving")
         return
+    if "overhead" in lk:
+        # telemetry overhead_frac is (on - off) / off of two host
+        # timings: slightly negative under scheduler noise is fine, but
+        # it must stay bounded — checked BEFORE the generic "frac" rule,
+        # whose [0,1] bounds would misfire on a signed ratio
+        if not -1.0 <= float(value) <= 1.0:
+            fail(f"{path}: {row_id}.{key} = {value} outside [-1,1]")
+        return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
