@@ -101,6 +101,7 @@ fn main() {
                 ("pool_peak_occupancy", Json::num(r.pool_peak_occupancy)),
                 ("node_seconds", Json::num(r.node_seconds)),
                 ("cost_units", Json::num(r.cost_units)),
+                ("events_per_sec", Json::num(r.shards.events_per_sec)),
                 ("determinism_token", Json::str(format!("{:#018x}", r.determinism_token))),
             ]));
             eprintln!(
@@ -127,6 +128,21 @@ fn main() {
     suite.section(format!(
         "determinism: token {:#018x} reproduced across two runs",
         a.determinism_token
+    ));
+    // sharded execution must reproduce the single-thread run bit for
+    // bit — and its host-side event rate is the simulator-speed number
+    // the SHARDS counter line tracks
+    let mut sharded = check.clone();
+    sharded.sim.shards = 4;
+    let s = simulate(&sharded).expect("sharded determinism run");
+    assert_eq!(
+        a.determinism_token, s.determinism_token,
+        "--shards 4 must reproduce the single-thread determinism token"
+    );
+    assert_eq!(a, s, "--shards 4 must reproduce the whole report");
+    suite.section(format!(
+        "sharding: 4-shard run matches 1-shard ({:.0} vs {:.0} events/s host-side)",
+        s.shards.events_per_sec, a.shards.events_per_sec
     ));
     let mean_wait = |nodes: usize| -> f64 {
         let mut cfg = base_cfg();

@@ -132,5 +132,30 @@ fn main() {
         porter::trace::AccessTrace::from_json(&parsed).unwrap().len()
     });
 
+    // 8. the fleet DES itself — the epoch-batched sharded loop. The
+    //    events/sec trajectory here is what the tentpole refactor
+    //    optimizes; the 1-vs-4-shard pair exposes the threading win
+    //    (identical simulation by construction, so the delta is pure
+    //    host speed). Profile runs amortize through the process-wide
+    //    trace store, so steady-state iterations measure the DES.
+    let mut fleet = Config::default();
+    fleet.cluster.nodes = 4;
+    fleet.cluster.functions = 3;
+    fleet.cluster.rate_per_s = 2000.0;
+    fleet.cluster.duration_s = if porter::bench::quick_mode() { 0.05 } else { 0.2 };
+    fleet.cluster.autoscale = false;
+    fleet.cluster.seed = 11;
+    let n_events = porter::cluster::simulate(&fleet).unwrap().completed;
+    for shards in [1usize, 4] {
+        let mut cfg = fleet.clone();
+        cfg.sim.shards = shards;
+        bench.bench_with_throughput(
+            &format!("cluster_des_shards_{shards}"),
+            n_events as f64,
+            "event",
+            move || porter::cluster::simulate(&cfg).unwrap().completed,
+        );
+    }
+
     bench.run();
 }

@@ -25,7 +25,7 @@ impl ScaleDirection {
 }
 
 /// One applied scaling decision (for the report/event log).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScaleEvent {
     pub t_ns: u64,
     pub direction: ScaleDirection,

@@ -55,7 +55,7 @@ use crate::workloads::registry::{build, Scale};
 use arrivals::{ArrivalSpec, AzureTrace, Shape};
 use autoscaler::{Autoscaler, FleetSignal, ScaleDirection, ScaleEvent};
 use balancer::{ClusterBalancer, NodeView};
-use node::{Node, ServiceShape};
+use node::{Dispatch, Node, PreparedShape, ServiceShape};
 use pool::CxlPool;
 
 /// Cost proxy, in relative $/GiB-second: local DRAM versus pooled CXL
@@ -117,8 +117,36 @@ pub fn arrivals_from_config(cfg: &Config) -> Result<ArrivalSpec, String> {
     ))
 }
 
+/// Host-side execution counters for the sharded event loop: how the
+/// simulator *ran*, not what it simulated.
+///
+/// Excluded from report equality on purpose — worker count and
+/// wall-clock event rate describe the host machine and legitimately
+/// vary across `--shards` settings, while every simulated field must
+/// stay bit-identical. The hand-written [`PartialEq`] below is what
+/// lets `ClusterReport: PartialEq` mean "same simulation".
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Peak worker threads used by any epoch's dispatch phase.
+    pub workers: usize,
+    /// Epoch barriers crossed (one deterministic merge each).
+    pub merges: u64,
+    /// Arrival events processed through the batched loop.
+    pub events: u64,
+    /// Events per wall-clock second over the whole run — the
+    /// simulator-speed trajectory the hotpath bench tracks.
+    pub events_per_sec: f64,
+}
+
+impl PartialEq for ShardStats {
+    /// Always equal: host-time throughput is not simulation state.
+    fn eq(&self, _: &ShardStats) -> bool {
+        true
+    }
+}
+
 /// Per-node slice of the final report.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeSummary {
     pub id: usize,
     pub invocations: u64,
@@ -134,7 +162,11 @@ pub struct NodeSummary {
 }
 
 /// Fleet-level results of one simulation run.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every simulated field; the acceptance bar for
+/// the sharded loop is field-for-field equality across shard counts
+/// (host-side [`ShardStats`] compare equal by construction).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterReport {
     pub completed: u64,
     pub virtual_duration_s: f64,
@@ -203,6 +235,9 @@ pub struct ClusterReport {
     pub cost_units: f64,
     pub nodes: Vec<NodeSummary>,
     pub events: Vec<ScaleEvent>,
+    /// How the sharded loop executed (host-side; never part of
+    /// equality).
+    pub shards: ShardStats,
     /// Order-sensitive hash over every routing decision and virtual
     /// timeline — two runs of the same config+seed must match exactly.
     pub determinism_token: u64,
@@ -401,6 +436,83 @@ pub struct Cluster {
     /// Fleet-wide provision realloc count at the last telemetry check
     /// (delta detection for `Provision` events).
     last_reallocs: u64,
+    /// Host-side counters for [`ShardStats`].
+    merges: u64,
+    sim_events: u64,
+    shard_workers: usize,
+}
+
+/// One arrival after phase A (admission): routed, classified, pool
+/// lease acquired, service shape prepared — everything the node-local
+/// dispatch (phase B) needs without touching shared state.
+struct PreparedArrival {
+    t_ns: u64,
+    /// Index into the population (`Cluster::specs`); mixed into the
+    /// determinism token exactly as the per-event loop did.
+    function: usize,
+    spec: FunctionSpec,
+    /// Index into `Cluster::nodes` (phase-B routing target).
+    ni: usize,
+    node_id: usize,
+    kind: StartKind,
+    startup_ns: u64,
+    spill: u64,
+    grant_ns: u64,
+    granted: u64,
+    factor: f64,
+    prep: PreparedShape,
+}
+
+/// The telemetry a shard worker emits for one dispatch. Workers buffer
+/// these per node and the barrier splices the buffers in node-index
+/// order, so the sink's event order is a pure function of the virtual
+/// timeline — never of thread scheduling or shard count.
+struct WorkerTelemetry {
+    enabled: bool,
+    spans: bool,
+    policy: String,
+}
+
+impl WorkerTelemetry {
+    fn record(&self, buf: &mut Vec<TelemetryEvent>, p: &PreparedArrival, d: &Dispatch) {
+        let nid = p.node_id as u64;
+        let e2e_ns = d.finish_ns - p.t_ns;
+        if self.spans {
+            buf.push(
+                TelemetryEvent::new(EventKind::Invocation, p.t_ns)
+                    .span(e2e_ns)
+                    .on_node(nid)
+                    .func(&p.spec.name)
+                    .tag(p.kind.name())
+                    .arg("wait_ns", d.wait_ns)
+                    .arg("service_ns", d.service_ns)
+                    .arg("startup_ns", d.startup_ns)
+                    .arg("cxl_bytes", d.cxl_bytes)
+                    .arg("migration_bytes", d.migration_bytes),
+            );
+        }
+        if d.startup_ns > 0 {
+            buf.push(
+                TelemetryEvent::new(EventKind::Startup, d.start_ns)
+                    .on_node(nid)
+                    .func(&p.spec.name)
+                    .tag(p.kind.name())
+                    .arg("startup_ns", d.startup_ns),
+            );
+        }
+        if d.promotions + d.demotions > 0 {
+            buf.push(
+                TelemetryEvent::new(EventKind::Migration, d.start_ns)
+                    .on_node(nid)
+                    .func(&p.spec.name)
+                    .tag(&self.policy)
+                    .arg("promotions", d.promotions)
+                    .arg("demotions", d.demotions)
+                    .arg("ping_pongs", d.ping_pongs)
+                    .arg("bytes", d.migration_bytes),
+            );
+        }
+    }
 }
 
 impl Cluster {
@@ -473,6 +585,9 @@ impl Cluster {
             migration_bytes: 0,
             end_ns: 0,
             token: 0x0C1A57E5,
+            merges: 0,
+            sim_events: 0,
+            shard_workers: 0,
         })
     }
 
@@ -583,8 +698,12 @@ impl Cluster {
         (StartKind::Cold, self.cfg.cluster.cold_start_ns)
     }
 
-    /// Route and dispatch one arrival.
-    fn step(&mut self, a: arrivals::Arrival) {
+    /// Phase A — admit one arrival: route it, classify its sandbox
+    /// outcome, lease pool capacity, and prepare its service shape (the
+    /// only dispatch step that may run a real engine measurement, so it
+    /// stays on this sequential path). Returns `None` only when no live
+    /// node exists.
+    fn admit(&mut self, a: arrivals::Arrival) -> Option<PreparedArrival> {
         let t = a.t_ns;
         let spec = self.specs[a.function].clone();
         self.pool.advance(t);
@@ -619,18 +738,132 @@ impl Cluster {
             Some(i) => i,
             // defensive: everything draining (should not happen — the
             // autoscaler keeps min_nodes active); use any live node
-            None => match self.nodes.iter().position(|n| !n.retired()) {
-                Some(i) => i,
-                None => return,
-            },
+            None => self.nodes.iter().position(|n| !n.retired())?,
         };
         let node_id = self.nodes[ni].id;
         let (kind, startup_ns) = self.classify(ni, &spec.name, t);
         let spill = self.nodes[ni].spill_estimate(&spec);
         let (grant_ns, granted) = self.pool.acquire(t, spill);
         let factor = self.pool.factor(node_id);
-        let d = self.nodes[ni].dispatch(t, grant_ns.max(t), &spec, factor, startup_ns, kind);
-        self.pool.release_at(d.finish_ns, granted);
+        let prep = self.nodes[ni].prepare(&spec);
+        Some(PreparedArrival {
+            t_ns: t,
+            function: a.function,
+            spec,
+            ni,
+            node_id,
+            kind,
+            startup_ns,
+            spill,
+            grant_ns,
+            granted,
+            factor,
+            prep,
+        })
+    }
+
+    /// Phase B — dispatch every prepared arrival on its node, the nodes
+    /// sharded across up to `[sim] shards` worker threads in contiguous
+    /// index chunks. `Node::dispatch_prepared` touches only node-local
+    /// state and each node's arrivals run in batch order on exactly one
+    /// worker, so the result is independent of the shard count; worker
+    /// telemetry is buffered per node and spliced in node order at the
+    /// barrier. Returns dispatches aligned with `batch` order.
+    fn dispatch_batch(&mut self, batch: &[PreparedArrival]) -> Vec<Dispatch> {
+        let n = self.nodes.len();
+        let workers = self.cfg.sim.shards.max(1).min(n.max(1));
+        self.shard_workers = self.shard_workers.max(workers);
+        let tele = WorkerTelemetry {
+            enabled: self.telemetry.is_enabled(),
+            spans: self.cfg.telemetry.spans,
+            policy: self.cfg.migration.policy.clone(),
+        };
+        // contiguous node chunks: chunk w covers [starts[w], starts[w+1])
+        let mut starts = Vec::with_capacity(workers + 1);
+        starts.push(0usize);
+        for w in 0..workers {
+            starts.push(starts[w] + n / workers + usize::from(w < n % workers));
+        }
+        let mut owner = vec![0usize; n];
+        for w in 0..workers {
+            for o in &mut owner[starts[w]..starts[w + 1]] {
+                *o = w;
+            }
+        }
+        // per-worker item lists, preserving batch order within a worker
+        let mut items: Vec<Vec<usize>> = vec![Vec::new(); workers];
+        for (bi, p) in batch.iter().enumerate() {
+            items[owner[p.ni]].push(bi);
+        }
+        // a worker dispatches its items in batch order against its node
+        // chunk (`lo` = first node index in the chunk)
+        let worker = |nodes: &mut [Node], lo: usize, idxs: &[usize]| {
+            let mut out = Vec::with_capacity(idxs.len());
+            let mut bufs: Vec<Vec<TelemetryEvent>> = vec![Vec::new(); nodes.len()];
+            for &bi in idxs {
+                let p = &batch[bi];
+                let d = nodes[p.ni - lo].dispatch_prepared(
+                    p.t_ns,
+                    p.grant_ns.max(p.t_ns),
+                    &p.prep,
+                    p.factor,
+                    p.startup_ns,
+                    p.kind,
+                );
+                if tele.enabled {
+                    tele.record(&mut bufs[p.ni - lo], p, &d);
+                }
+                out.push((bi, d));
+            }
+            (out, bufs)
+        };
+        let mut results = Vec::with_capacity(workers);
+        if workers <= 1 {
+            // single shard: same closure, run in-line — K = 1 is the
+            // identical code path, not a special case
+            results.push(worker(&mut self.nodes, 0, &items[0]));
+        } else {
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(workers);
+                let mut rest: &mut [Node] = &mut self.nodes;
+                let (worker, items) = (&worker, &items);
+                for w in 0..workers {
+                    let (chunk, tail) = rest.split_at_mut(starts[w + 1] - starts[w]);
+                    rest = tail;
+                    let lo = starts[w];
+                    handles.push(s.spawn(move || worker(chunk, lo, &items[w])));
+                }
+                for h in handles {
+                    results.push(h.join().expect("shard worker panicked"));
+                }
+            });
+        }
+        // barrier merge: dispatches back into batch order; telemetry
+        // buffers spliced in node-index order (workers hold contiguous
+        // ascending chunks, so worker order × chunk order = node order)
+        let mut out: Vec<Option<Dispatch>> = Vec::new();
+        out.resize_with(batch.len(), || None);
+        for (dispatches, bufs) in results {
+            for (bi, d) in dispatches {
+                out[bi] = Some(d);
+            }
+            for buf in bufs {
+                self.telemetry.append(buf);
+            }
+        }
+        out.into_iter().map(|d| d.expect("every prepared arrival dispatches")).collect()
+    }
+
+    /// Phase C — merge one dispatched arrival back into shared state, in
+    /// batch order: pool releases and link traffic, fleet counters and
+    /// histograms, the determinism token, cluster-side telemetry, and
+    /// the lifecycle keep/demote tail.
+    fn settle(&mut self, p: &PreparedArrival, d: &Dispatch) {
+        let t = p.t_ns;
+        let spec = &p.spec;
+        let (ni, node_id, kind) = (p.ni, p.node_id, p.kind);
+        let lifecycle = self.cfg.lifecycle.enabled;
+        self.pool.release_at(d.finish_ns, p.granted);
         // demand traffic AND migration copies share the node's CXL link:
         // an aggressive policy's page churn inflates neighbours' stalls
         // (snapshot/restore transfers were debited by the store already)
@@ -659,13 +892,16 @@ impl Cluster {
         self.service_sum_ns += d.service_ns as f64;
         self.completed += 1;
         self.end_ns = self.end_ns.max(d.finish_ns);
-        self.token = mix(self.token, a.function as u64);
+        self.token = mix(self.token, p.function as u64);
         self.token = mix(self.token, node_id as u64);
         self.token = mix(self.token, d.start_ns);
         self.token = mix(self.token, d.finish_ns);
 
         // telemetry reads only the values computed above — after the
-        // token was mixed — so recording cannot perturb the run
+        // token was mixed — so recording cannot perturb the run. The
+        // dispatch-side events (invocation span, startup, migration)
+        // were buffered by the phase-B worker and spliced at the epoch
+        // barrier; only the cluster-side events are recorded here.
         if self.telemetry.is_enabled() {
             let nid = node_id as u64;
             self.telemetry.push(
@@ -674,47 +910,13 @@ impl Cluster {
                     .func(&spec.name)
                     .arg("wait_ns", d.wait_ns),
             );
-            if self.cfg.telemetry.spans {
-                self.telemetry.push(
-                    TelemetryEvent::new(EventKind::Invocation, t)
-                        .span(e2e_ns)
-                        .on_node(nid)
-                        .func(&spec.name)
-                        .tag(kind.name())
-                        .arg("wait_ns", d.wait_ns)
-                        .arg("service_ns", d.service_ns)
-                        .arg("startup_ns", d.startup_ns)
-                        .arg("cxl_bytes", d.cxl_bytes)
-                        .arg("migration_bytes", d.migration_bytes),
-                );
-            }
-            if d.startup_ns > 0 {
-                self.telemetry.push(
-                    TelemetryEvent::new(EventKind::Startup, d.start_ns)
-                        .on_node(nid)
-                        .func(&spec.name)
-                        .tag(kind.name())
-                        .arg("startup_ns", d.startup_ns),
-                );
-            }
-            if d.promotions + d.demotions > 0 {
-                let ev = TelemetryEvent::new(EventKind::Migration, d.start_ns)
-                    .on_node(nid)
-                    .func(&spec.name)
-                    .tag(&self.cfg.migration.policy)
-                    .arg("promotions", d.promotions)
-                    .arg("demotions", d.demotions)
-                    .arg("ping_pongs", d.ping_pongs)
-                    .arg("bytes", d.migration_bytes);
-                self.telemetry.push(ev);
-            }
-            if grant_ns > t || granted < spill {
+            if p.grant_ns > t || p.granted < p.spill {
                 self.telemetry.push(
                     TelemetryEvent::new(EventKind::PoolContention, t)
                         .on_node(nid)
                         .func(&spec.name)
-                        .arg("wait_ns", grant_ns - t)
-                        .arg("short_bytes", spill.saturating_sub(granted)),
+                        .arg("wait_ns", p.grant_ns - t)
+                        .arg("short_bytes", p.spill.saturating_sub(p.granted)),
                 );
             }
             let reallocs: u64 = self.nodes.iter().map(|n| n.provision_counts().1).sum();
@@ -863,27 +1065,62 @@ impl Cluster {
     }
 
     /// Run the whole schedule and produce the fleet report.
+    ///
+    /// The loop is epoch-batched: arrivals are grouped into windows of
+    /// `[sim] batch_ns` virtual time (the schedule is time-sorted, and
+    /// index order is the stable tiebreak within a window), admitted
+    /// sequentially (phase A, with the autoscaler interleave intact),
+    /// dispatched node-locally by up to `[sim] shards` workers (phase
+    /// B), and merged back in arrival order (phase C). Every cross-node
+    /// effect lives in a sequential phase that is identical for every
+    /// shard count, so any `--shards K` produces a bit-identical report
+    /// and determinism token (see `sharded_runs_are_bit_identical`).
     pub fn run(&mut self, spec: &ArrivalSpec) -> ClusterReport {
+        let started = std::time::Instant::now();
         let interval = self.cfg.cluster.autoscale_interval_ns;
+        let batch_ns = self.cfg.sim.batch_ns.max(1);
         let mut next_check = interval;
-        for a in &spec.arrivals {
-            if self.autoscaler.is_some() {
-                while next_check <= a.t_ns {
-                    self.autoscale_tick(next_check);
-                    next_check += interval;
+        let arrivals = &spec.arrivals;
+        let mut batch: Vec<PreparedArrival> = Vec::new();
+        let mut i = 0;
+        while i < arrivals.len() {
+            let epoch = arrivals[i].t_ns / batch_ns;
+            let mut end = i + 1;
+            while end < arrivals.len() && arrivals[end].t_ns / batch_ns == epoch {
+                end += 1;
+            }
+            // phase A — sequential admission
+            batch.clear();
+            for a in &arrivals[i..end] {
+                if self.autoscaler.is_some() {
+                    while next_check <= a.t_ns {
+                        self.autoscale_tick(next_check);
+                        next_check += interval;
+                    }
+                }
+                assert!(
+                    a.function < self.specs.len(),
+                    "arrival references function {} outside the population",
+                    a.function
+                );
+                if let Some(p) = self.admit(*a) {
+                    batch.push(p);
                 }
             }
-            assert!(
-                a.function < self.specs.len(),
-                "arrival references function {} outside the population",
-                a.function
-            );
-            self.step(*a);
+            // phase B — sharded node-local dispatch
+            let dispatched = self.dispatch_batch(&batch);
+            // phase C — deterministic merge in arrival order
+            for (p, d) in batch.iter().zip(&dispatched) {
+                self.settle(p, d);
+            }
+            self.merges += 1;
+            self.sim_events += batch.len() as u64;
+            i = end;
         }
-        self.finish()
+        self.finish(started.elapsed().as_secs_f64())
     }
 
-    fn finish(&mut self) -> ClusterReport {
+    fn finish(&mut self, elapsed_s: f64) -> ClusterReport {
         let end = self.end_ns.max(1);
         // final forced sample before the nodes retire, so short runs
         // still get at least one point per series
@@ -985,6 +1222,16 @@ impl Cluster {
             cost_units,
             nodes,
             events: std::mem::take(&mut self.events),
+            shards: ShardStats {
+                workers: self.shard_workers.max(1),
+                merges: self.merges,
+                events: self.sim_events,
+                events_per_sec: if elapsed_s > 0.0 {
+                    self.sim_events as f64 / elapsed_s
+                } else {
+                    0.0
+                },
+            },
             determinism_token: self.token,
         }
     }
@@ -1253,5 +1500,80 @@ mod tests {
         assert_eq!(a.cold_starts, b.cold_starts);
         assert_eq!(a.restores, b.restores);
         assert_eq!(a.snapshot_bytes, b.snapshot_bytes);
+    }
+
+    #[test]
+    fn sharded_runs_are_bit_identical() {
+        // the tentpole invariant: any --shards K produces the same
+        // report, field for field, and the same determinism token
+        let base = simulate(&small_cfg()).unwrap();
+        for k in [2, 3, 7] {
+            let mut cfg = small_cfg();
+            cfg.sim.shards = k;
+            let r = simulate(&cfg).unwrap();
+            assert_eq!(r.determinism_token, base.determinism_token, "shards={k} token");
+            assert_eq!(r, base, "shards={k} report diverged");
+        }
+        // ... with the lifecycle + snapshot machinery on as well
+        let lc_base = simulate(&lifecycle_cfg(64 * 1024 * 1024, true)).unwrap();
+        for k in [2, 3, 7] {
+            let mut cfg = lifecycle_cfg(64 * 1024 * 1024, true);
+            cfg.sim.shards = k;
+            let r = simulate(&cfg).unwrap();
+            assert_eq!(r, lc_base, "lifecycle shards={k} report diverged");
+        }
+    }
+
+    #[test]
+    fn wide_batches_stay_shard_invariant() {
+        // one epoch spanning the whole schedule is the worst case for
+        // the phase split (maximum deferred merging) — reports must
+        // still agree across shard counts and complete every arrival
+        let spec = arrivals_from_config(&small_cfg()).unwrap();
+        let mut one = small_cfg();
+        one.sim.batch_ns = 1_000_000_000;
+        let a = simulate(&one).unwrap();
+        assert_eq!(a.completed, spec.arrivals.len() as u64);
+        let mut five = one.clone();
+        five.sim.shards = 5;
+        let b = simulate(&five).unwrap();
+        assert_eq!(a, b, "wide-batch run diverged across shard counts");
+    }
+
+    #[test]
+    fn shard_stats_count_the_run_but_never_compare() {
+        let r = simulate(&small_cfg()).unwrap();
+        assert_eq!(r.shards.events, r.completed);
+        assert!(r.shards.merges > 0);
+        assert!(r.shards.merges <= r.shards.events);
+        assert_eq!(r.shards.workers, 1, "default config runs in-line");
+        // host-side stats are excluded from report equality on purpose
+        let mut tweaked = r.clone();
+        tweaked.shards.workers = 99;
+        tweaked.shards.events_per_sec = -1.0;
+        assert_eq!(r, tweaked);
+    }
+
+    #[test]
+    fn telemetry_event_order_is_shard_invariant() {
+        // per-node worker buffers spliced at the epoch barrier: the
+        // sink's event order (and thus the Chrome-trace export) must be
+        // a pure function of the run, not of the shard count
+        let mut cfg = lifecycle_cfg(512 * 1024 * 1024, true);
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.epoch_ns = 5_000_000;
+        let (r1, t1) = simulate_full(&cfg).unwrap();
+        let mut sharded = cfg.clone();
+        sharded.sim.shards = 4;
+        let (r4, t4) = simulate_full(&sharded).unwrap();
+        assert_eq!(r1, r4);
+        let order1: Vec<(u64, &str)> = t1.sink.events().map(|e| (e.t_ns, e.kind.name())).collect();
+        let order4: Vec<(u64, &str)> = t4.sink.events().map(|e| (e.t_ns, e.kind.name())).collect();
+        assert_eq!(order1, order4, "event order depends on shard count");
+        assert_eq!(
+            t1.to_chrome_json(vec![]).to_string_compact(),
+            t4.to_chrome_json(vec![]).to_string_compact(),
+            "Chrome-trace export depends on shard count"
+        );
     }
 }

@@ -108,6 +108,17 @@ impl Loaded for VServer {
     }
 }
 
+/// Output of [`Node::prepare`]: the shared-state-dependent inputs of a
+/// dispatch (replay shape, hint warmth, SLO target), resolved
+/// sequentially so [`Node::dispatch_prepared`] is safe to run from a
+/// shard worker thread.
+#[derive(Debug, Clone)]
+pub struct PreparedShape {
+    shape: ServiceShape,
+    warm: bool,
+    slo_target_ns: Option<f64>,
+}
+
 /// The result of routing one arrival to this node.
 #[derive(Debug, Clone)]
 pub struct Dispatch {
@@ -302,28 +313,41 @@ impl Node {
         shape
     }
 
-    /// Dispatch one arrival: pick a server (least-loaded, round-robin
-    /// ties), queue it on that server's earliest-free engine worker, and
-    /// return the virtual timeline. `earliest_ns` ≥ the arrival time —
-    /// it carries any pool-capacity delay. `startup_ns` is the sandbox
-    /// startup the cluster's lifecycle classification charges (0 for a
-    /// warm hit, the restore latency, or the full cold start), `kind`
-    /// the matching outcome for the per-kind counters.
-    pub fn dispatch(
+    /// The sequential half of a dispatch: resolve the SLO target from
+    /// the tuner's hints and the replay shape from the caches — which may
+    /// run the function live (profile run through the process-wide
+    /// TraceStore / tuner). This must happen in arrival order on the
+    /// coordinator thread; the returned [`PreparedShape`] is pure data a
+    /// shard worker can consume without shared state.
+    pub fn prepare(&mut self, spec: &FunctionSpec) -> PreparedShape {
+        let slo_target_ns =
+            self.tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
+        let warm = self.warm_for(&spec.name);
+        let shape = self.shape_for(spec, warm);
+        PreparedShape { shape, warm, slo_target_ns }
+    }
+
+    /// The node-local half of a dispatch: pick a server (least-loaded,
+    /// round-robin ties), queue it on that server's earliest-free engine
+    /// worker, and return the virtual timeline. Touches nothing outside
+    /// this node, so shard workers run it in parallel. `earliest_ns` ≥
+    /// the arrival time — it carries any pool-capacity delay.
+    /// `startup_ns` is the sandbox startup the cluster's lifecycle
+    /// classification charges (0 for a warm hit, the restore latency, or
+    /// the full cold start), `kind` the matching outcome for the
+    /// per-kind counters.
+    pub fn dispatch_prepared(
         &mut self,
         arrival_ns: u64,
         earliest_ns: u64,
-        spec: &FunctionSpec,
+        prep: &PreparedShape,
         pool_factor: f64,
         startup_ns: u64,
         kind: StartKind,
     ) -> Dispatch {
         debug_assert!(earliest_ns >= arrival_ns);
         debug_assert!(!self.retired(), "dispatch to retired node {}", self.id);
-        let slo_target_ns =
-            self.tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
-        let warm = self.warm_for(&spec.name);
-        let shape = self.shape_for(spec, warm);
+        let shape = &prep.shape;
         let service = shape.wall_ns
             + shape.cxl_stall_ns * (pool_factor - 1.0).max(0.0)
             + startup_ns as f64;
@@ -354,11 +378,11 @@ impl Node {
             finish_ns,
             wait_ns: start_ns - arrival_ns,
             service_ns,
-            cold: !warm,
+            cold: !prep.warm,
             kind,
             startup_ns,
             server: s,
-            slo_target_ns,
+            slo_target_ns: prep.slo_target_ns,
             cxl_bytes: shape.cxl_bytes,
             migration_bytes: shape.migration_bytes,
             promotions: shape.promotions,
@@ -366,6 +390,21 @@ impl Node {
             ping_pongs: shape.ping_pongs,
             checksum: shape.checksum,
         }
+    }
+
+    /// Dispatch one arrival end to end (prepare + node-local timeline) —
+    /// the single-threaded entry point tests and simple callers use.
+    pub fn dispatch(
+        &mut self,
+        arrival_ns: u64,
+        earliest_ns: u64,
+        spec: &FunctionSpec,
+        pool_factor: f64,
+        startup_ns: u64,
+        kind: StartKind,
+    ) -> Dispatch {
+        let prep = self.prepare(spec);
+        self.dispatch_prepared(arrival_ns, earliest_ns, &prep, pool_factor, startup_ns, kind)
     }
 
     // ---- lifecycle layer ------------------------------------------------

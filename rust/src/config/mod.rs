@@ -540,6 +540,35 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Simulator execution knobs (`[sim]` — host-side only).
+///
+/// These control how fast the discrete-event loop *runs*, never what
+/// it computes: any shard count or batch width must reproduce the
+/// 1-shard report and determinism token bit for bit (the cluster
+/// layer's epoch-barrier design enforces this; `batch_ns` changes the
+/// admission horizon and so may legitimately alter a schedule's exact
+/// timeline, but never varies with `shards`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// Worker threads the fleet's nodes are sharded across during the
+    /// dispatch phase (1 = run in-line on the calling thread).
+    pub shards: usize,
+    /// Virtual-time width of one event batch — the epoch-barrier
+    /// cadence of the sharded loop.
+    pub batch_ns: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            shards: 1,
+            // 1 virtual ms: singleton batches at interactive arrival
+            // rates, real amortization at fleet-scale rates
+            batch_ns: 1_000_000,
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -552,6 +581,7 @@ pub struct Config {
     pub lifecycle: LifecycleConfig,
     pub cluster: ClusterConfig,
     pub telemetry: TelemetryConfig,
+    pub sim: SimConfig,
 }
 
 impl Config {
@@ -689,6 +719,8 @@ impl Config {
                 "telemetry.epoch_ns" => cfg.telemetry.epoch_ns = value.as_u64()?,
                 "telemetry.spans" => cfg.telemetry.spans = value.as_bool()?,
                 "telemetry.out" => cfg.telemetry.out = value.as_str()?.to_string(),
+                "sim.shards" => cfg.sim.shards = value.as_u64()? as usize,
+                "sim.batch_ns" => cfg.sim.batch_ns = value.as_u64()?,
                 _ => return Err(format!("unknown config key: {path}")),
             }
         }
@@ -872,6 +904,16 @@ impl Config {
         }
         if t.epoch_ns == 0 {
             return Err("telemetry.epoch_ns must be > 0".into());
+        }
+        let s = &self.sim;
+        if s.shards == 0 {
+            return Err("sim.shards must be >= 1".into());
+        }
+        if s.shards > 64 {
+            return Err("sim.shards must be <= 64 (thread-per-shard)".into());
+        }
+        if s.batch_ns == 0 {
+            return Err("sim.batch_ns must be > 0".into());
         }
         Ok(())
     }
@@ -1134,6 +1176,26 @@ out = "trace.json"
         assert!(Config::from_toml_str("[telemetry]\nnonsense = 1\n").is_err());
         // a small buffer is fine while disabled (validated only when on)
         assert!(Config::from_toml_str("[telemetry]\nbuffer = \"100\"\n").is_ok());
+    }
+
+    #[test]
+    fn parses_sim_section() {
+        let text = "[sim]\nshards = 4\nbatch_ns = 250000\n";
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.sim.shards, 4);
+        assert_eq!(c.sim.batch_ns, 250_000);
+        // host-side defaults: in-line execution, 1 ms batches
+        let d = Config::default();
+        assert_eq!(d.sim.shards, 1);
+        assert_eq!(d.sim.batch_ns, 1_000_000);
+    }
+
+    #[test]
+    fn rejects_invalid_sim_values() {
+        assert!(Config::from_toml_str("[sim]\nshards = 0\n").is_err());
+        assert!(Config::from_toml_str("[sim]\nshards = 65\n").is_err());
+        assert!(Config::from_toml_str("[sim]\nbatch_ns = 0\n").is_err());
+        assert!(Config::from_toml_str("[sim]\nnonsense = 1\n").is_err());
     }
 
     #[test]

@@ -28,7 +28,10 @@
 //!           enable the lifecycle layer: per-node warm pools and
 //!           CXL-resident snapshots in the shared pool;
 //!           [--telemetry-out F.json] export a Chrome-trace/Perfetto
-//!           event file (+ sibling F.csv time series)
+//!           event file (+ sibling F.csv time series);
+//!           [--shards K] shard the nodes across K worker threads —
+//!           bit-identical report/token for any K (greppable SHARDS
+//!           counter line)
 //!   telemetry summarize <trace.json>     roll up an exported trace:
 //!           per-kind event counts/durations, series stats
 //!   list                                 workload registry
@@ -694,6 +697,7 @@ fn cmd_cluster(args: &Args) -> i32 {
         if args.flag("no-autoscale") {
             c.autoscale = false;
         }
+        cfg.sim.shards = args.opt_usize("shards", cfg.sim.shards)?;
         // lifecycle layer: any of these flags turns explicit sandbox
         // lifetime modeling on
         let lc = &mut cfg.lifecycle;
@@ -755,6 +759,13 @@ fn cmd_cluster(args: &Args) -> i32 {
                 report.restore_bytes,
                 report.snapshot_leased_bytes,
                 report.fleet_p50_ns
+            );
+            println!(
+                "SHARDS workers={} merges={} events_per_sec={:.0} token={:#018x}",
+                report.shards.workers,
+                report.shards.merges,
+                report.shards.events_per_sec,
+                report.determinism_token
             );
             if tele.is_enabled() {
                 println!("{}", tele.counter_line());

@@ -26,10 +26,9 @@ pub mod hybrid;
 pub mod naive;
 pub mod tpp;
 
-use std::collections::HashMap;
-
 use crate::config::MigrationConfig;
 use crate::mem::page::PageNo;
+use crate::mem::soa::PageCol;
 use crate::mem::tier::TierKind;
 use crate::mem::tiered::{Migration, TieredMemory};
 use crate::monitor::heatmap::PageHeat;
@@ -65,6 +64,10 @@ pub trait MigrationPolicy {
 
     /// Plan this epoch's migrations, most-valuable first.
     fn plan(&mut self, view: &EpochView) -> Vec<Migration>;
+
+    /// Invocation boundary: drop any cross-epoch state (active lists,
+    /// bucket history). Policies without state keep the default no-op.
+    fn reset(&mut self) {}
 }
 
 /// Lifetime counters of one engine (one invocation). Apart from
@@ -96,8 +99,9 @@ pub struct MigrationEngine {
     ticks_into_epoch: u32,
     budget_bytes: u64,
     ping_pong_epochs: u64,
-    /// page → epoch of its most recent applied move.
-    last_move: HashMap<PageNo, u64>,
+    /// Epoch of each page's most recent applied move (dense column;
+    /// `u64::MAX` = never moved).
+    last_move: PageCol<u64>,
     metrics: MigrationMetrics,
     /// Epoch/page size of the most recent plan, for `note_applied`.
     last_plan_epoch: u64,
@@ -114,7 +118,7 @@ impl MigrationEngine {
             ticks_into_epoch: 0,
             budget_bytes,
             ping_pong_epochs: 2,
-            last_move: HashMap::new(),
+            last_move: PageCol::new(u64::MAX),
             metrics: MigrationMetrics::default(),
             last_plan_epoch: 0,
             last_page_bytes: 0,
@@ -147,6 +151,7 @@ impl MigrationEngine {
     pub fn reset(&mut self) {
         self.heat.reset();
         self.last_move.clear();
+        self.policy.reset();
         self.ticks_into_epoch = 0;
         self.metrics = MigrationMetrics::default();
         self.last_plan_epoch = 0;
@@ -192,7 +197,7 @@ impl Migrator for MigrationEngine {
         plan.retain(|m| {
             let valid = m.from != m.to
                 && seen.insert(m.page)
-                && mem.pages.get(m.page).tier() == Some(m.from)
+                && mem.pages.tier_of(m.page) == Some(m.from)
                 && free[m.to.index()] >= page_bytes;
             if valid {
                 free[m.to.index()] -= page_bytes;
@@ -217,12 +222,11 @@ impl Migrator for MigrationEngine {
                 (TierKind::Dram, TierKind::Cxl) => self.metrics.demotions += 1,
                 _ => {}
             }
-            if let Some(&prev) = self.last_move.get(&m.page) {
-                if epoch.saturating_sub(prev) <= self.ping_pong_epochs {
-                    self.metrics.ping_pongs += 1;
-                }
+            let prev = self.last_move.get(m.page);
+            if prev != u64::MAX && epoch.saturating_sub(prev) <= self.ping_pong_epochs {
+                self.metrics.ping_pongs += 1;
             }
-            self.last_move.insert(m.page, epoch);
+            self.last_move.set(m.page, epoch);
             self.metrics.migrated_bytes += self.last_page_bytes;
         }
     }
@@ -318,7 +322,7 @@ mod tests {
 
     fn touch(mem: &mut TieredMemory, page: PageNo, times: u32) {
         for _ in 0..times {
-            mem.pages.entry(page).touch();
+            mem.pages.touch(page);
         }
     }
 

@@ -13,13 +13,15 @@
 //!   `watermark_high` free is restored — TPP's kswapd-style watermark
 //!   reclaim, never touching the active list.
 
-use std::collections::HashMap;
-
 use crate::config::MigrationConfig;
 use crate::mem::migrate::{pages_to_free, promote_above_watermark, EpochView, MigrationPolicy};
 use crate::mem::page::PageNo;
+use crate::mem::soa::PageCol;
 use crate::mem::tier::TierKind;
 use crate::mem::tiered::Migration;
+
+/// Sentinel for "never sampled" in the dense active-list column.
+const NEVER: u64 = u64::MAX;
 
 pub struct TppLists {
     /// Samples within one epoch that qualify a CXL page for promotion.
@@ -28,9 +30,10 @@ pub struct TppLists {
     pub active_epochs: u64,
     pub watermark_low: f64,
     pub watermark_high: f64,
-    /// page → epoch of its last observed sample (the active list; pages
-    /// older than `active_epochs` are the inactive list).
-    last_active: HashMap<PageNo, u64>,
+    /// Epoch of each page's last observed sample (the active list; pages
+    /// older than `active_epochs` are the inactive list). Dense column,
+    /// [`NEVER`] = never sampled.
+    last_active: PageCol<u64>,
 }
 
 impl TppLists {
@@ -40,7 +43,7 @@ impl TppLists {
             active_epochs: active_epochs.max(1),
             watermark_low: low,
             watermark_high: high,
-            last_active: HashMap::new(),
+            last_active: PageCol::new(NEVER),
         }
     }
 
@@ -56,8 +59,8 @@ impl TppLists {
     /// Pages on the active list as of `epoch` (test/introspection hook).
     pub fn active_len(&self, epoch: u64) -> usize {
         self.last_active
-            .values()
-            .filter(|&&e| epoch.saturating_sub(e) < self.active_epochs)
+            .iter()
+            .filter(|&(_, e)| e != NEVER && epoch.saturating_sub(e) < self.active_epochs)
             .count()
     }
 }
@@ -72,13 +75,16 @@ impl MigrationPolicy for TppLists {
         // 1. refresh the active list from this epoch's samples
         for (p, m) in view.mem.pages.iter_mapped() {
             if m.is_mapped() && view.heat.epoch_samples(p) > 0 {
-                self.last_active.insert(p, epoch);
+                self.last_active.set(p, epoch);
             }
         }
-        // prune entries long past inactive (bounds the map to the
-        // recently-touched working set)
+        // expire entries long past inactive — one linear column sweep
         let horizon = self.active_epochs * 4 + 1;
-        self.last_active.retain(|_, &mut e| epoch.saturating_sub(e) < horizon);
+        for e in self.last_active.values_mut() {
+            if *e != NEVER && epoch.saturating_sub(*e) >= horizon {
+                *e = NEVER;
+            }
+        }
 
         // 2. promotion: CXL pages with >= promote_samples this epoch,
         // hottest first, respecting the low watermark
@@ -108,13 +114,16 @@ impl MigrationPolicy for TppLists {
                     m.tier() == Some(TierKind::Dram) && view.heat.epoch_samples(*p) == 0
                 })
                 .filter(|(p, _)| {
-                    let last = self.last_active.get(p).copied();
-                    match last {
-                        Some(e) => epoch.saturating_sub(e) >= self.active_epochs,
-                        None => true, // never sampled: inactive by definition
+                    match self.last_active.get(*p) {
+                        NEVER => true, // never sampled: inactive by definition
+                        e => epoch.saturating_sub(e) >= self.active_epochs,
                     }
                 })
-                .map(|(p, _)| (p, self.last_active.get(&p).copied().unwrap_or(0)))
+                .map(|(p, _)| {
+                    // never-sampled sorts oldest (same as epoch 0)
+                    let e = self.last_active.get(p);
+                    (p, if e == NEVER { 0 } else { e })
+                })
                 .collect();
             inactive.sort_by_key(|&(_, e)| e);
             for (page, _) in inactive.into_iter().take(need) {
@@ -122,6 +131,11 @@ impl MigrationPolicy for TppLists {
             }
         }
         moves
+    }
+
+    /// Drop the active list: a fresh invocation starts with no history.
+    fn reset(&mut self) {
+        self.last_active.clear();
     }
 }
 
@@ -223,5 +237,25 @@ mod tests {
         let plan = pol.plan(&view);
         assert!(!plan.is_empty(), "expired pages are demotable");
         assert!(plan.iter().all(|m| m.to == TierKind::Cxl));
+    }
+
+    #[test]
+    fn reset_clears_the_active_list() {
+        let (mem, _) = mem_with(4, 0, 4);
+        let first = mem.pages.page_of(crate::shim::intercept::MMAP_BASE + (1 << 24));
+        let mut pol = TppLists::new(2, 2, 0.3, 0.6);
+        let mut heat = PageHeat::new();
+        for i in 0..4u32 {
+            heat.record(PageNo { index: first.index + i, ..first }, 2);
+        }
+        let view = EpochView { epoch: 0, mem: &mem, heat: &heat, budget_pages: 64 };
+        pol.plan(&view);
+        assert_eq!(pol.active_len(0), 4);
+        pol.reset();
+        assert_eq!(pol.active_len(0), 0, "reset must drop all activity history");
+        // Without reset, entries recorded at a *later* epoch than the
+        // engine's restarted epoch counter would look permanently active
+        // (epoch.saturating_sub(e) == 0) — the latent bug the policy
+        // reset hook fixes.
     }
 }

@@ -10,11 +10,13 @@
 pub mod bwmodel;
 pub mod migrate;
 pub mod page;
+pub mod soa;
 pub mod tier;
 pub mod tiered;
 
 pub use bwmodel::BandwidthModel;
 pub use migrate::{MigrationEngine, MigrationMetrics, MigrationPolicy};
 pub use page::{PageMap, PageMeta};
+pub use soa::PageCol;
 pub use tier::{TierKind, TierParams};
 pub use tiered::{Migration, PagePlacer, TieredMemory};

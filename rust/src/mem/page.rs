@@ -1,14 +1,21 @@
 //! Page table over the simulated address space.
 //!
 //! The shim's address layout has exactly two linear segments (brk heap at
-//! `HEAP_BASE`, mmap segment at `MMAP_BASE`), so the page table is two
-//! flat arrays indexed by `(addr - base) >> page_shift` — O(1) lookup
-//! with no hashing on the access hot path.
+//! `HEAP_BASE`, mmap segment at `MMAP_BASE`), so the page table is flat
+//! arrays indexed by `(addr - base) >> page_shift` — O(1) lookup with no
+//! hashing on the access hot path.
+//!
+//! Page state is stored struct-of-arrays: one column per field (tier
+//! code, window accesses, idle ticks, lifetime total) per segment, so the
+//! per-window maintenance sweep (`end_window`) and the migration
+//! policies' epoch scans walk contiguous `u8`/`u16` arrays instead of
+//! pointer-chasing through per-page structs. `PageMeta` survives as the
+//! by-value view assembled from the columns on read.
 
 use crate::mem::tier::TierKind;
 use crate::shim::intercept::{HEAP_BASE, MMAP_BASE};
 
-/// Per-page state, packed to 8 bytes.
+/// By-value view of one page's state, assembled from the columns.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PageMeta {
     /// 0 = unmapped, 1 = DRAM, 2 = CXL.
@@ -26,18 +33,11 @@ pub const UNMAPPED: PageMeta =
 
 impl PageMeta {
     pub fn tier(&self) -> Option<TierKind> {
-        match self.tier {
-            1 => Some(TierKind::Dram),
-            2 => Some(TierKind::Cxl),
-            _ => None,
-        }
+        tier_from_code(self.tier)
     }
 
     pub fn set_tier(&mut self, t: TierKind) {
-        self.tier = match t {
-            TierKind::Dram => 1,
-            TierKind::Cxl => 2,
-        };
+        self.tier = tier_code(t);
     }
 
     pub fn unmap(&mut self) {
@@ -55,6 +55,23 @@ impl PageMeta {
     }
 }
 
+#[inline]
+fn tier_code(t: TierKind) -> u8 {
+    match t {
+        TierKind::Dram => 1,
+        TierKind::Cxl => 2,
+    }
+}
+
+#[inline]
+fn tier_from_code(c: u8) -> Option<TierKind> {
+    match c {
+        1 => Some(TierKind::Dram),
+        2 => Some(TierKind::Cxl),
+        _ => None,
+    }
+}
+
 /// Global page number — encodes which segment and the index within it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PageNo {
@@ -68,18 +85,69 @@ pub enum Segment {
     Mmap,
 }
 
-/// Two-segment flat page table.
+/// One segment's page-state columns (parallel, always equal length).
+#[derive(Debug, Default)]
+struct SegCols {
+    tier: Vec<u8>,
+    window: Vec<u16>,
+    idle: Vec<u8>,
+    total: Vec<u32>,
+}
+
+impl SegCols {
+    #[inline]
+    fn grow_to(&mut self, idx: usize) {
+        if idx >= self.tier.len() {
+            self.tier.resize(idx + 1, 0);
+            self.window.resize(idx + 1, 0);
+            self.idle.resize(idx + 1, 0);
+            self.total.resize(idx + 1, 0);
+        }
+    }
+
+    #[inline]
+    fn view(&self, idx: usize) -> PageMeta {
+        PageMeta {
+            tier: self.tier[idx],
+            window_accesses: self.window[idx],
+            idle_ticks: self.idle[idx],
+            total_accesses: self.total[idx],
+        }
+    }
+
+    #[inline]
+    fn touch(&mut self, idx: usize) {
+        self.window[idx] = self.window[idx].saturating_add(1);
+        self.total[idx] = self.total[idx].saturating_add(1);
+        self.idle[idx] = 0;
+    }
+
+    fn end_window(&mut self) {
+        for i in 0..self.tier.len() {
+            if self.tier[i] != 0 {
+                self.window[i] = 0;
+                self.idle[i] = self.idle[i].saturating_add(1);
+            }
+        }
+    }
+}
+
+/// Two-segment flat struct-of-arrays page table.
 #[derive(Debug)]
 pub struct PageMap {
     page_shift: u32,
-    heap: Vec<PageMeta>,
-    mmap: Vec<PageMeta>,
+    heap: SegCols,
+    mmap: SegCols,
 }
 
 impl PageMap {
     pub fn new(page_bytes: u64) -> PageMap {
         assert!(page_bytes.is_power_of_two());
-        PageMap { page_shift: page_bytes.trailing_zeros(), heap: Vec::new(), mmap: Vec::new() }
+        PageMap {
+            page_shift: page_bytes.trailing_zeros(),
+            heap: SegCols::default(),
+            mmap: SegCols::default(),
+        }
     }
 
     pub fn page_bytes(&self) -> u64 {
@@ -111,65 +179,107 @@ impl PageMap {
     }
 
     #[inline]
-    fn seg_mut(&mut self, segment: Segment) -> &mut Vec<PageMeta> {
+    fn seg(&self, segment: Segment) -> &SegCols {
+        match segment {
+            Segment::Heap => &self.heap,
+            Segment::Mmap => &self.mmap,
+        }
+    }
+
+    #[inline]
+    fn seg_mut(&mut self, segment: Segment) -> &mut SegCols {
         match segment {
             Segment::Heap => &mut self.heap,
             Segment::Mmap => &mut self.mmap,
         }
     }
 
-    /// Get page state, growing the table as needed.
-    #[inline]
-    pub fn entry(&mut self, p: PageNo) -> &mut PageMeta {
-        let seg = self.seg_mut(p.segment);
-        let idx = p.index as usize;
-        if idx >= seg.len() {
-            seg.resize(idx + 1, UNMAPPED);
-        }
-        &mut seg[idx]
-    }
-
     /// Read-only view (unmapped default for untouched pages).
     pub fn get(&self, p: PageNo) -> PageMeta {
-        let seg = match p.segment {
-            Segment::Heap => &self.heap,
-            Segment::Mmap => &self.mmap,
+        let seg = self.seg(p.segment);
+        let idx = p.index as usize;
+        if idx < seg.tier.len() {
+            seg.view(idx)
+        } else {
+            UNMAPPED
+        }
+    }
+
+    /// Read-only tier lookup; never grows the table.
+    #[inline]
+    pub fn tier_of(&self, p: PageNo) -> Option<TierKind> {
+        let seg = self.seg(p.segment);
+        seg.tier.get(p.index as usize).copied().and_then(tier_from_code)
+    }
+
+    /// Map (or re-tier) a page, growing the table as needed.
+    #[inline]
+    pub fn set_tier(&mut self, p: PageNo, t: TierKind) {
+        let idx = p.index as usize;
+        let seg = self.seg_mut(p.segment);
+        seg.grow_to(idx);
+        seg.tier[idx] = tier_code(t);
+    }
+
+    /// Record one access to a page, growing the table as needed.
+    #[inline]
+    pub fn touch(&mut self, p: PageNo) {
+        let idx = p.index as usize;
+        let seg = self.seg_mut(p.segment);
+        seg.grow_to(idx);
+        seg.touch(idx);
+    }
+
+    /// Hot-path combined op: map on first touch (kernel first-touch
+    /// default: DRAM) and record the access. Returns the page's tier and
+    /// whether this access mapped it (caller charges tier capacity).
+    #[inline]
+    pub fn touch_and_map(&mut self, p: PageNo) -> (TierKind, bool) {
+        let idx = p.index as usize;
+        let seg = self.seg_mut(p.segment);
+        seg.grow_to(idx);
+        let (kind, was_unmapped) = match tier_from_code(seg.tier[idx]) {
+            Some(k) => (k, false),
+            None => {
+                seg.tier[idx] = tier_code(TierKind::Dram);
+                (TierKind::Dram, true)
+            }
         };
-        seg.get(p.index as usize).copied().unwrap_or(UNMAPPED)
+        seg.touch(idx);
+        (kind, was_unmapped)
     }
 
-    /// Iterate over all mapped pages.
-    pub fn iter_mapped(&self) -> impl Iterator<Item = (PageNo, &PageMeta)> {
-        let heap = self
-            .heap
-            .iter()
-            .enumerate()
-            .map(|(i, m)| (PageNo { segment: Segment::Heap, index: i as u32 }, m));
-        let mmap = self
-            .mmap
-            .iter()
-            .enumerate()
-            .map(|(i, m)| (PageNo { segment: Segment::Mmap, index: i as u32 }, m));
-        heap.chain(mmap).filter(|(_, m)| m.is_mapped())
+    /// Unmap a page, resetting all its counters.
+    pub fn unmap(&mut self, p: PageNo) {
+        let seg = self.seg_mut(p.segment);
+        let idx = p.index as usize;
+        if idx < seg.tier.len() {
+            seg.tier[idx] = 0;
+            seg.window[idx] = 0;
+            seg.idle[idx] = 0;
+            seg.total[idx] = 0;
+        }
     }
 
-    /// Mutable iteration over mapped pages (migration tick).
-    pub fn iter_mapped_mut(&mut self) -> impl Iterator<Item = (PageNo, &mut PageMeta)> {
-        let heap = self
-            .heap
-            .iter_mut()
-            .enumerate()
-            .map(|(i, m)| (PageNo { segment: Segment::Heap, index: i as u32 }, m));
-        let mmap = self
-            .mmap
-            .iter_mut()
-            .enumerate()
-            .map(|(i, m)| (PageNo { segment: Segment::Mmap, index: i as u32 }, m));
+    /// Close an aggregation window: clear window counters and age idle
+    /// ticks for every mapped page — one linear sweep per segment.
+    pub fn end_window(&mut self) {
+        self.heap.end_window();
+        self.mmap.end_window();
+    }
+
+    /// Iterate over all mapped pages (by-value views, page order).
+    pub fn iter_mapped(&self) -> impl Iterator<Item = (PageNo, PageMeta)> + '_ {
+        let heap = (0..self.heap.tier.len())
+            .map(|i| (PageNo { segment: Segment::Heap, index: i as u32 }, self.heap.view(i)));
+        let mmap = (0..self.mmap.tier.len())
+            .map(|i| (PageNo { segment: Segment::Mmap, index: i as u32 }, self.mmap.view(i)));
         heap.chain(mmap).filter(|(_, m)| m.is_mapped())
     }
 
     pub fn mapped_count(&self) -> usize {
-        self.iter_mapped().count()
+        let count = |seg: &SegCols| seg.tier.iter().filter(|&&t| t != 0).count();
+        count(&self.heap) + count(&self.mmap)
     }
 }
 
@@ -197,17 +307,69 @@ mod tests {
     }
 
     #[test]
-    fn entry_grows_and_tracks() {
+    fn mutators_grow_and_track() {
         let mut pm = PageMap::new(4096);
         let p = pm.page_of(MMAP_BASE + 10 * 4096);
         assert!(!pm.get(p).is_mapped());
-        pm.entry(p).set_tier(TierKind::Cxl);
-        pm.entry(p).touch();
+        pm.set_tier(p, TierKind::Cxl);
+        pm.touch(p);
         let m = pm.get(p);
         assert_eq!(m.tier(), Some(TierKind::Cxl));
         assert_eq!(m.window_accesses, 1);
         assert_eq!(m.total_accesses, 1);
         assert_eq!(pm.mapped_count(), 1);
+    }
+
+    #[test]
+    fn touch_and_map_defaults_to_dram_once() {
+        let mut pm = PageMap::new(4096);
+        let p = pm.page_of(MMAP_BASE);
+        assert_eq!(pm.touch_and_map(p), (TierKind::Dram, true));
+        assert_eq!(pm.touch_and_map(p), (TierKind::Dram, false));
+        let m = pm.get(p);
+        assert_eq!(m.window_accesses, 2);
+        assert_eq!(m.total_accesses, 2);
+        // An already-mapped CXL page keeps its tier.
+        let q = pm.page_of(MMAP_BASE + 4096);
+        pm.set_tier(q, TierKind::Cxl);
+        assert_eq!(pm.touch_and_map(q), (TierKind::Cxl, false));
+    }
+
+    #[test]
+    fn reads_never_grow_the_table() {
+        let pm = PageMap::new(4096);
+        let far = PageNo { segment: Segment::Mmap, index: 1_000_000 };
+        assert_eq!(pm.tier_of(far), None);
+        assert!(!pm.get(far).is_mapped());
+        assert_eq!(pm.mapped_count(), 0);
+    }
+
+    #[test]
+    fn unmap_clears_columns() {
+        let mut pm = PageMap::new(4096);
+        let p = pm.page_of(HEAP_BASE);
+        pm.set_tier(p, TierKind::Dram);
+        pm.touch(p);
+        pm.unmap(p);
+        assert!(!pm.get(p).is_mapped());
+        assert_eq!(pm.get(p).total_accesses, 0);
+        assert_eq!(pm.mapped_count(), 0);
+    }
+
+    #[test]
+    fn end_window_sweeps_mapped_pages_only() {
+        let mut pm = PageMap::new(4096);
+        let p = pm.page_of(MMAP_BASE);
+        pm.set_tier(p, TierKind::Dram);
+        pm.touch(p);
+        // Grow past p with unmapped slots; they must stay untouched.
+        let far = pm.page_of(MMAP_BASE + 8 * 4096);
+        assert_eq!(pm.tier_of(far), None);
+        pm.end_window();
+        let m = pm.get(p);
+        assert_eq!(m.window_accesses, 0);
+        assert_eq!(m.idle_ticks, 1);
+        assert_eq!(m.total_accesses, 1);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Generic dense per-page side tables for the struct-of-arrays hot path.
+//!
+//! `PageCol<T>` replaces `HashMap<PageNo, T>` in the migration layer: two
+//! flat `Vec<T>` columns (one per address segment, mirroring `PageMap`'s
+//! layout) indexed by dense page id, with a default fill value standing in
+//! for "absent". Lookups are O(1) with no hashing, per-epoch maintenance
+//! becomes a linear sweep over contiguous memory, and iteration order is
+//! page order — deterministic by construction, which the sharded cluster
+//! merge depends on.
+
+use crate::mem::page::{PageNo, Segment};
+
+#[derive(Debug, Clone)]
+pub struct PageCol<T: Copy> {
+    default: T,
+    heap: Vec<T>,
+    mmap: Vec<T>,
+}
+
+impl<T: Copy> PageCol<T> {
+    pub fn new(default: T) -> PageCol<T> {
+        PageCol { default, heap: Vec::new(), mmap: Vec::new() }
+    }
+
+    #[inline]
+    fn seg(&self, s: Segment) -> &[T] {
+        match s {
+            Segment::Heap => &self.heap,
+            Segment::Mmap => &self.mmap,
+        }
+    }
+
+    #[inline]
+    fn seg_mut(&mut self, s: Segment) -> &mut Vec<T> {
+        match s {
+            Segment::Heap => &mut self.heap,
+            Segment::Mmap => &mut self.mmap,
+        }
+    }
+
+    /// Read a slot; unmaterialized slots read as the default.
+    #[inline]
+    pub fn get(&self, p: PageNo) -> T {
+        self.seg(p.segment).get(p.index as usize).copied().unwrap_or(self.default)
+    }
+
+    /// Write a slot, growing the column (default-filled) as needed.
+    #[inline]
+    pub fn set(&mut self, p: PageNo, v: T) {
+        let default = self.default;
+        let seg = self.seg_mut(p.segment);
+        let idx = p.index as usize;
+        if idx >= seg.len() {
+            seg.resize(idx + 1, default);
+        }
+        seg[idx] = v;
+    }
+
+    /// Drop all materialized slots (every page reads as default again).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.mmap.clear();
+    }
+
+    /// Linear pass over every materialized slot, page order (heap then
+    /// mmap, ascending index).
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.heap.iter_mut().chain(self.mmap.iter_mut())
+    }
+
+    /// Materialized slots with their page numbers, page order.
+    pub fn iter(&self) -> impl Iterator<Item = (PageNo, T)> + '_ {
+        let heap = self
+            .heap
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (PageNo { segment: Segment::Heap, index: i as u32 }, *v));
+        let mmap = self
+            .mmap
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (PageNo { segment: Segment::Mmap, index: i as u32 }, *v));
+        heap.chain(mmap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(i: u32) -> PageNo {
+        PageNo { segment: Segment::Mmap, index: i }
+    }
+
+    #[test]
+    fn absent_slots_read_default() {
+        let col: PageCol<u64> = PageCol::new(u64::MAX);
+        assert_eq!(col.get(page(0)), u64::MAX);
+        assert_eq!(col.get(page(1_000_000)), u64::MAX);
+    }
+
+    #[test]
+    fn set_grows_and_backfills_default() {
+        let mut col: PageCol<u64> = PageCol::new(u64::MAX);
+        col.set(page(4), 7);
+        assert_eq!(col.get(page(4)), 7);
+        // Slots materialized by the grow still read as default.
+        assert_eq!(col.get(page(2)), u64::MAX);
+        // Heap segment untouched by an mmap write.
+        assert_eq!(col.get(PageNo { segment: Segment::Heap, index: 4 }), u64::MAX);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut col: PageCol<u32> = PageCol::new(0);
+        col.set(page(3), 9);
+        col.clear();
+        assert_eq!(col.get(page(3)), 0);
+        assert_eq!(col.iter().count(), 0);
+    }
+
+    #[test]
+    fn iter_is_page_ordered() {
+        let mut col: PageCol<u32> = PageCol::new(0);
+        col.set(page(5), 50);
+        col.set(PageNo { segment: Segment::Heap, index: 2 }, 20);
+        let pages: Vec<PageNo> = col.iter().map(|(p, _)| p).collect();
+        let mut sorted = pages.clone();
+        sorted.sort();
+        assert_eq!(pages, sorted, "iteration must follow page order");
+    }
+}

@@ -104,9 +104,8 @@ impl TieredMemory {
     }
 
     fn map_page(&mut self, p: PageNo, kind: TierKind) {
-        let entry = self.pages.entry(p);
-        debug_assert!(!entry.is_mapped());
-        entry.set_tier(kind);
+        debug_assert!(self.pages.tier_of(p).is_none());
+        self.pages.set_tier(p, kind);
         self.tiers[kind.index()].used_bytes += self.page_bytes;
     }
 
@@ -120,9 +119,8 @@ impl TieredMemory {
             if page_is_shared(p) {
                 continue;
             }
-            let entry = self.pages.entry(p);
-            if let Some(kind) = entry.tier() {
-                entry.unmap();
+            if let Some(kind) = self.pages.tier_of(p) {
+                self.pages.unmap(p);
                 self.tiers[kind.index()].used_bytes -= self.page_bytes;
             }
         }
@@ -138,15 +136,15 @@ impl TieredMemory {
         if m.from == m.to {
             return false;
         }
-        // validate via the read-only view: a rejected migration must not
-        // even grow the page table
-        if self.pages.get(m.page).tier() != Some(m.from) {
+        // validate via the read-only lookup: a rejected migration must
+        // not even grow the page table
+        if self.pages.tier_of(m.page) != Some(m.from) {
             return false;
         }
         if self.tier(m.to).free_bytes() < self.page_bytes {
             return false;
         }
-        self.pages.entry(m.page).set_tier(m.to);
+        self.pages.set_tier(m.page, m.to);
         self.tiers[m.from.index()].used_bytes -= self.page_bytes;
         self.tiers[m.to.index()].used_bytes += self.page_bytes;
         match (m.from, m.to) {
@@ -163,11 +161,9 @@ impl TieredMemory {
     }
 
     /// Reset per-window page counters (called at aggregation ticks).
+    /// Delegates to the page table's linear column sweep.
     pub fn end_window(&mut self) {
-        for (_, m) in self.pages.iter_mapped_mut() {
-            m.window_accesses = 0;
-            m.idle_ticks = m.idle_ticks.saturating_add(1);
-        }
+        self.pages.end_window();
     }
 }
 
@@ -324,7 +320,7 @@ mod tests {
         let o = obj(1, crate::shim::intercept::MMAP_BASE, 4096);
         mem.map_object(&o, &mut FixedPlacer { kind: TierKind::Dram });
         let p = mem.pages.page_of(o.start);
-        mem.pages.entry(p).touch();
+        mem.pages.touch(p);
         assert_eq!(mem.pages.get(p).window_accesses, 1);
         mem.end_window();
         assert_eq!(mem.pages.get(p).window_accesses, 0);

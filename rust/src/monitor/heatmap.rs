@@ -11,9 +11,8 @@
 //!   with exponential decay at every rollover; this is the hotness
 //!   signal `mem::migrate`'s policies rank pages by.
 
-use std::collections::HashMap;
-
 use crate::mem::page::PageNo;
+use crate::mem::soa::PageCol;
 use crate::monitor::damon::RegionSnapshot;
 use crate::sim::machine::AccessObserver;
 
@@ -195,13 +194,8 @@ impl AccessObserver for ExactHeatmap {
     }
 }
 
-/// Per-page hotness entry: decayed cumulative heat + the samples seen in
-/// the current (not-yet-rolled) epoch.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-struct HeatEntry {
-    heat: f64,
-    epoch_samples: u32,
-}
+/// Slot sentinel: page has no tracked heat entry.
+const NO_SLOT: u32 = u32::MAX;
 
 /// Page-granular epoch hotness: per-page access samples accumulate into
 /// a decayed heat score. At every epoch rollover the score is multiplied
@@ -209,12 +203,28 @@ struct HeatEntry {
 /// falls below `min_heat` are dropped, so a page that stops being
 /// touched ages out in a handful of epochs.
 ///
+/// Storage is a struct-of-arrays slot slab: `slot_of` maps dense page id
+/// → slot, and the parallel `pages`/`heat`/`samples`/`live` columns hold
+/// the entries. Freed slots are recycled through a free list, and the
+/// epoch rollover is one linear sweep over contiguous arrays (no hashing,
+/// deterministic slot-order iteration).
+///
 /// One `PageHeat` tracks one invocation on one machine; [`PageHeat::reset`]
 /// clears everything (heat *and* the epoch counter) so no stale hotness
 /// leaks across invocations on the same server.
 #[derive(Debug, Clone)]
 pub struct PageHeat {
-    entries: HashMap<PageNo, HeatEntry>,
+    /// page → slot index ([`NO_SLOT`] = untracked); valid only for live
+    /// slots (cleared eagerly when a slot is freed).
+    slot_of: PageCol<u32>,
+    /// Parallel slot columns (equal length).
+    pages: Vec<PageNo>,
+    heat: Vec<f64>,
+    samples: Vec<u32>,
+    live: Vec<bool>,
+    /// Recycled slot indices.
+    free: Vec<u32>,
+    live_count: usize,
     epoch: u64,
     decay: f64,
     min_heat: f64,
@@ -235,7 +245,46 @@ impl PageHeat {
 
     pub fn with_decay(decay: f64) -> PageHeat {
         assert!((0.0..1.0).contains(&decay), "decay must be in [0,1)");
-        PageHeat { entries: HashMap::new(), epoch: 0, decay, min_heat: 0.5 }
+        PageHeat {
+            slot_of: PageCol::new(NO_SLOT),
+            pages: Vec::new(),
+            heat: Vec::new(),
+            samples: Vec::new(),
+            live: Vec::new(),
+            free: Vec::new(),
+            live_count: 0,
+            epoch: 0,
+            decay,
+            min_heat: 0.5,
+        }
+    }
+
+    /// Live slot for `page`, allocating (free list first) if untracked.
+    fn slot_mut(&mut self, page: PageNo) -> usize {
+        let s = self.slot_of.get(page);
+        if s != NO_SLOT {
+            return s as usize;
+        }
+        let s = match self.free.pop() {
+            Some(s) => {
+                let i = s as usize;
+                self.pages[i] = page;
+                self.heat[i] = 0.0;
+                self.samples[i] = 0;
+                self.live[i] = true;
+                s
+            }
+            None => {
+                self.pages.push(page);
+                self.heat.push(0.0);
+                self.samples.push(0);
+                self.live.push(true);
+                (self.pages.len() - 1) as u32
+            }
+        };
+        self.slot_of.set(page, s);
+        self.live_count += 1;
+        s as usize
     }
 
     /// Record `samples` accesses to `page` within the current epoch.
@@ -243,33 +292,46 @@ impl PageHeat {
         if samples == 0 {
             return;
         }
-        let e = self.entries.entry(page).or_default();
-        e.heat += samples as f64;
-        e.epoch_samples = e.epoch_samples.saturating_add(samples);
+        let s = self.slot_mut(page);
+        self.heat[s] += samples as f64;
+        self.samples[s] = self.samples[s].saturating_add(samples);
     }
 
     /// Decayed cumulative heat of a page (0.0 if never sampled).
     pub fn heat(&self, page: PageNo) -> f64 {
-        self.entries.get(&page).map(|e| e.heat).unwrap_or(0.0)
+        match self.slot_of.get(page) {
+            NO_SLOT => 0.0,
+            s => self.heat[s as usize],
+        }
     }
 
     /// Samples recorded for `page` in the current epoch only — the
     /// "accessed this epoch" signal TPP-style policies key off.
     pub fn epoch_samples(&self, page: PageNo) -> u32 {
-        self.entries.get(&page).map(|e| e.epoch_samples).unwrap_or(0)
+        match self.slot_of.get(page) {
+            NO_SLOT => 0,
+            s => self.samples[s as usize],
+        }
     }
 
     /// Close the current epoch: heat decays (halves by default), the
-    /// per-epoch sample counters reset, cold entries age out.
+    /// per-epoch sample counters reset, cold entries age out. One linear
+    /// sweep over the slot columns.
     pub fn roll_epoch(&mut self) {
         self.epoch += 1;
-        let min = self.min_heat;
-        let decay = self.decay;
-        self.entries.retain(|_, e| {
-            e.heat *= decay;
-            e.epoch_samples = 0;
-            e.heat >= min
-        });
+        for s in 0..self.live.len() {
+            if !self.live[s] {
+                continue;
+            }
+            self.heat[s] *= self.decay;
+            self.samples[s] = 0;
+            if self.heat[s] < self.min_heat {
+                self.live[s] = false;
+                self.slot_of.set(self.pages[s], NO_SLOT);
+                self.free.push(s as u32);
+                self.live_count -= 1;
+            }
+        }
     }
 
     /// Epochs completed so far.
@@ -279,22 +341,31 @@ impl PageHeat {
 
     /// Invocation boundary: drop all hotness and restart the epoch count.
     pub fn reset(&mut self) {
-        self.entries.clear();
+        self.slot_of.clear();
+        self.pages.clear();
+        self.heat.clear();
+        self.samples.clear();
+        self.live.clear();
+        self.free.clear();
+        self.live_count = 0;
         self.epoch = 0;
     }
 
     /// Number of pages currently tracked.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.live_count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.live_count == 0
     }
 
-    /// Iterate over (page, decayed heat).
+    /// Iterate over (page, decayed heat), slot order — deterministic,
+    /// but not page-sorted (slots recycle).
     pub fn iter(&self) -> impl Iterator<Item = (PageNo, f64)> + '_ {
-        self.entries.iter().map(|(p, e)| (*p, e.heat))
+        (0..self.live.len())
+            .filter(|&s| self.live[s])
+            .map(|s| (self.pages[s], self.heat[s]))
     }
 }
 
@@ -426,6 +497,20 @@ mod tests {
         assert_eq!(h.epoch(), 0);
         assert_eq!(h.heat(page(1)), 0.0);
         assert_eq!(h.epoch_samples(page(2)), 0);
+    }
+
+    #[test]
+    fn page_heat_recycles_freed_slots_without_aliasing() {
+        let mut h = PageHeat::new();
+        h.record(page(1), 1);
+        h.roll_epoch(); // 1.0 → 0.5: survives
+        h.roll_epoch(); // 0.5 → 0.25: aged out, slot freed
+        assert_eq!(h.len(), 0);
+        h.record(page(2), 4);
+        assert_eq!(h.len(), 1, "freed slot must be recycled");
+        assert_eq!(h.heat(page(2)), 4.0);
+        assert_eq!(h.heat(page(1)), 0.0, "old page must not alias the recycled slot");
+        assert_eq!(h.epoch_samples(page(1)), 0);
     }
 
     #[test]

@@ -198,7 +198,7 @@ mod tests {
         // heat up page 0
         let p0 = mem.pages.page_of(o.start);
         for _ in 0..10 {
-            mem.pages.entry(p0).touch();
+            mem.pages.touch(p0);
         }
         let mut tpp = TppMigrator::default();
         let plan = tpp.plan(&mem);
@@ -233,7 +233,7 @@ mod tests {
         for i in 0..2048u32 {
             let p = PageNo { index: first.index + i, ..first };
             for _ in 0..5 {
-                mem.pages.entry(p).touch();
+                mem.pages.touch(p);
             }
         }
         let mut tpp = TppMigrator { max_moves_per_tick: 64, ..Default::default() };

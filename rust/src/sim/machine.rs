@@ -359,17 +359,9 @@ impl Sink for Machine {
         let (hits, _misses) = self.cache.access(addr, bytes, |line_addr| {
             let p = mem.pages.page_of(line_addr);
             let page_bytes = mem.page_bytes();
-            let entry = mem.pages.entry(p);
-            let (kind, was_unmapped) = match entry.tier() {
-                Some(k) => (k, false),
-                None => {
-                    // untracked address (workload bookkeeping outside the
-                    // shim): kernel default — local DRAM first-touch
-                    entry.set_tier(TierKind::Dram);
-                    (TierKind::Dram, true)
-                }
-            };
-            entry.touch();
+            // untracked addresses (workload bookkeeping outside the shim)
+            // map on first touch to local DRAM — the kernel default
+            let (kind, was_unmapped) = mem.pages.touch_and_map(p);
             if was_unmapped {
                 mem.tier_mut(TierKind::Dram).used_bytes += page_bytes;
             }

@@ -67,6 +67,15 @@ impl TelemetrySink {
         }
     }
 
+    /// Splice a buffer of events recorded out-of-band — e.g. a shard
+    /// worker's per-node buffer at the cluster's epoch barrier — into
+    /// the sink in order, with the same budget accounting as `push`.
+    pub fn append(&mut self, events: Vec<TelemetryEvent>) {
+        for ev in events {
+            self.push(ev);
+        }
+    }
+
     /// Events currently retained (oldest first).
     pub fn events(&self) -> impl Iterator<Item = &TelemetryEvent> {
         self.events.iter()
@@ -148,6 +157,23 @@ mod tests {
         assert_eq!(s.total_events(), 1);
         assert_eq!(s.dropped_events(), 1);
         assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn append_splices_in_order_with_budget_accounting() {
+        let unit = ev(0).cost_bytes();
+        let mut s = TelemetrySink::new(3 * unit);
+        s.push(ev(1));
+        s.append(vec![ev(2), ev(3), ev(4)]);
+        // same drop-oldest semantics as push: 4 submitted, 3 retained
+        let kept: Vec<u64> = s.events().map(|e| e.t_ns).collect();
+        assert_eq!(kept, vec![2, 3, 4]);
+        assert_eq!(s.total_events(), 4);
+        assert_eq!(s.dropped_events(), 1);
+        // disabled sinks ignore spliced buffers too
+        let mut off = TelemetrySink::disabled();
+        off.append(vec![ev(9)]);
+        assert_eq!(off.total_events(), 0);
     }
 
     #[test]

@@ -25,6 +25,9 @@ fn fleet_run_is_deterministic() {
     let a = simulate(&cfg).unwrap();
     let b = simulate(&cfg).unwrap();
     assert_eq!(a.determinism_token, b.determinism_token);
+    // back-to-back runs agree on the whole report, field for field —
+    // the determinism-audit bar for the sharded epoch loop
+    assert_eq!(a, b);
     assert_eq!(a.completed, b.completed);
     assert_eq!(a.fleet_p99_ns, b.fleet_p99_ns);
     assert_eq!(a.cold_runs, b.cold_runs);
@@ -33,6 +36,38 @@ fn fleet_run_is_deterministic() {
     cfg2.cluster.seed = 0xBEEF;
     let c = simulate(&cfg2).unwrap();
     assert_ne!(a.determinism_token, c.determinism_token);
+}
+
+/// The tentpole acceptance property: random fleet sizes, arrival
+/// models, batch widths, and lifecycle toggles — `--shards K` must
+/// reproduce the single-thread run bit for bit (full `ClusterReport`
+/// equality and token equality) for K in {2, 3, 7}.
+#[test]
+fn prop_sharded_equals_single_thread() {
+    use porter::testing::{forall, Gen};
+    forall("sharded-equals-single-thread", 6, |g: &mut Gen| {
+        let mut cfg = small_cfg();
+        cfg.cluster.nodes = g.usize_in(1, 4);
+        cfg.cluster.max_nodes = cfg.cluster.nodes.max(4);
+        cfg.cluster.functions = g.usize_in(1, 3);
+        cfg.cluster.rate_per_s = g.f64_in(200.0, 800.0);
+        cfg.cluster.arrivals = g.pick(&["poisson", "bursty", "diurnal"]).to_string();
+        cfg.cluster.seed = g.u64_in(1, 1 << 20);
+        cfg.sim.batch_ns = g.u64_in(100_000, 5_000_000);
+        if g.bool() {
+            cfg.lifecycle.enabled = true;
+            cfg.lifecycle.warm_pool_bytes = 128 * 1024 * 1024;
+            cfg.lifecycle.snapshot = g.bool();
+        }
+        let base = simulate(&cfg).unwrap();
+        for k in [2, 3, 7] {
+            let mut sharded = cfg.clone();
+            sharded.sim.shards = k;
+            let r = simulate(&sharded).unwrap();
+            assert_eq!(r.determinism_token, base.determinism_token, "shards={k} token");
+            assert_eq!(r, base, "shards={k} report diverged from single-thread run");
+        }
+    });
 }
 
 #[test]

@@ -786,3 +786,77 @@ fn prop_telemetry_sink_budget_holds() {
         }
     });
 }
+
+/// SoA page table: any sequence of map/touch/migrate/unmap/window ops
+/// keeps the flat columns observationally identical to a naive
+/// struct-of-maps oracle (per-page views, tier lookups, mapped count,
+/// and the mapped-page iteration as a set).
+#[test]
+fn prop_soa_page_table_matches_map_oracle() {
+    use porter::mem::page::{PageMap, PageMeta, Segment, UNMAPPED};
+    use std::collections::BTreeMap;
+    forall("soa-page-oracle", 60, |g: &mut Gen| {
+        let mut pm = PageMap::new(4096);
+        let mut oracle: BTreeMap<PageNo, PageMeta> = BTreeMap::new();
+        let max_index = 24u32;
+        for _ in 0..g.usize_in(1, 120) {
+            let p = PageNo {
+                segment: if g.bool() { Segment::Heap } else { Segment::Mmap },
+                index: g.u64_in(0, max_index as u64) as u32,
+            };
+            match g.usize_in(0, 4) {
+                0 => {
+                    let t = if g.bool() { TierKind::Dram } else { TierKind::Cxl };
+                    pm.set_tier(p, t);
+                    oracle.entry(p).or_insert(UNMAPPED).set_tier(t);
+                }
+                1 => {
+                    pm.touch(p);
+                    oracle.entry(p).or_insert(UNMAPPED).touch();
+                }
+                2 => {
+                    let got = pm.touch_and_map(p);
+                    let e = oracle.entry(p).or_insert(UNMAPPED);
+                    let expected = match e.tier() {
+                        Some(k) => (k, false),
+                        None => {
+                            e.set_tier(TierKind::Dram);
+                            (TierKind::Dram, true)
+                        }
+                    };
+                    e.touch();
+                    assert_eq!(got, expected, "touch_and_map diverged on {p:?}");
+                }
+                3 => {
+                    pm.unmap(p);
+                    oracle.insert(p, UNMAPPED);
+                }
+                _ => {
+                    pm.end_window();
+                    for m in oracle.values_mut() {
+                        if m.is_mapped() {
+                            m.window_accesses = 0;
+                            m.idle_ticks = m.idle_ticks.saturating_add(1);
+                        }
+                    }
+                }
+            }
+        }
+        // full observational equality over the op universe (+ a margin
+        // of never-touched indices past it)
+        for segment in [Segment::Heap, Segment::Mmap] {
+            for index in 0..=max_index + 4 {
+                let p = PageNo { segment, index };
+                let want = oracle.get(&p).copied().unwrap_or(UNMAPPED);
+                assert_eq!(pm.get(p), want, "get({p:?}) diverged from the oracle");
+                assert_eq!(pm.tier_of(p), want.tier(), "tier_of({p:?}) diverged");
+            }
+        }
+        let want_mapped: Vec<(PageNo, PageMeta)> =
+            oracle.iter().filter(|(_, m)| m.is_mapped()).map(|(p, m)| (*p, *m)).collect();
+        let mut got_mapped: Vec<(PageNo, PageMeta)> = pm.iter_mapped().collect();
+        got_mapped.sort_by_key(|(p, _)| *p);
+        assert_eq!(got_mapped, want_mapped, "mapped-page iteration diverged");
+        assert_eq!(pm.mapped_count(), want_mapped.len());
+    });
+}

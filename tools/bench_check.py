@@ -113,6 +113,15 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
         if not -1.0 <= float(value) <= 1.0:
             fail(f"{path}: {row_id}.{key} = {value} outside [-1,1]")
         return
+    if "per_sec" in lk or "per_s" in lk:
+        # throughput-style metrics (events_per_sec, throughput_per_s):
+        # zero means the bench's timer or event counter is dead, so
+        # require strictly positive — checked BEFORE the "rate" rule so
+        # a key like offered_rate_per_s is judged as a rate-per-second,
+        # not squeezed into [0,1]
+        if float(value) <= 0.0:
+            fail(f"{path}: {row_id}.{key} = {value} is not a positive rate")
+        return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
@@ -203,12 +212,52 @@ def check_file(name: str, baseline_dir: str, fresh_dir: str) -> None:
     note(f"  {name}: {len(rows)} series rows checked")
 
 
+def self_test() -> int:
+    """Exercise check_value's rule table with known-good and known-bad
+    vectors; exits non-zero if any rule fires (or fails to fire) where
+    it shouldn't. Run by CI before the real gate so a broken rule fails
+    loudly instead of silently passing every bench."""
+    cases = [
+        # (key, value, should_fail)
+        ("events_per_sec", 1.5e6, False),
+        ("events_per_sec", 0.0, True),  # dead timer/counter
+        ("throughput_per_s", -3.0, True),
+        ("offered_rate_per_s", 4200.0, False),  # per_s wins over "rate"
+        ("violation_rate", 0.25, False),
+        ("violation_rate", 1.5, True),
+        ("pool_peak_occupancy", 0.0, False),  # occupancy may be zero
+        ("speedup", 0.0, True),
+        ("dram_saved_mb", -1.0, True),
+        ("overhead_frac", -0.05, False),
+        ("p99_ns", -1, True),
+        ("delta_pct", -40.0, False),
+        ("p50_ns", float("inf"), True),
+    ]
+    ok = True
+    for key, value, should_fail in cases:
+        before = len(FAILURES)
+        check_value("self-test", "row", key, value)
+        fired = len(FAILURES) > before
+        if fired != should_fail:
+            verb = "missed" if should_fail else "misfired on"
+            print(f"self-test: rule {verb} {key}={value}", file=sys.stderr)
+            ok = False
+    FAILURES.clear()
+    print(f"bench-gate self-test: {'OK' if ok else 'FAILED'} ({len(cases)} vectors)")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("files", nargs="+", help="BENCH_*.json file names to validate")
+    ap.add_argument("files", nargs="*", help="BENCH_*.json file names to validate")
     ap.add_argument("--baseline-dir", default="ci-baseline", help="committed copies")
     ap.add_argument("--fresh-dir", default=".", help="freshly produced copies")
+    ap.add_argument("--self-test", action="store_true", help="run rule-table self-test and exit")
     args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.files:
+        ap.error("no BENCH files given (or use --self-test)")
     for name in args.files:
         check_file(name, args.baseline_dir, args.fresh_dir)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
