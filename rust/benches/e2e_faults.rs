@@ -1,0 +1,142 @@
+//! End-to-end fault-injection bench: the same quick fleet configuration
+//! run fault-free, through a scripted node loss + rejoin, and through a
+//! scripted CXL-link degradation.
+//!
+//! The contract under test: a fault-free `[faults]`-enabled-off run is
+//! untouched (availability 1.0, zero counters), a node loss voids the
+//! victim's in-flight work and retries it on survivors (availability
+//! dips below 1.0 but the run completes), and a link derate degrades
+//! epochs without failing anything. Every faulted cell must be
+//! bit-identical across `--shards 1` and `--shards 4`. Writes
+//! `BENCH_faults.json` at the repo root.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_faults
+
+use std::time::Instant;
+
+use porter::cluster::{simulate, ClusterReport};
+use porter::config::Config;
+use porter::util::json::Json;
+
+/// Legacy-model base: the 100 ms cold start pins each node's first run
+/// of every function in flight long enough that the scripted outage at
+/// 100 ms is guaranteed to strand work on the victim.
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.functions = 2;
+    cfg.cluster.rate_per_s = 800.0;
+    cfg.cluster.duration_s = 0.25;
+    cfg.cluster.cold_start_ns = 100_000_000;
+    cfg.cluster.autoscale = false;
+    cfg.cluster.seed = 0xFA_17;
+    cfg
+}
+
+fn faulted_cfg(spec: &str) -> Config {
+    let mut cfg = base_cfg();
+    cfg.faults.enabled = true;
+    cfg.faults.spec = spec.to_string();
+    cfg
+}
+
+/// Run one cell, asserting shard invariance for faulted configs, and
+/// return the shards=1 report plus its host time.
+fn run_cell(label: &str, cfg: &Config) -> (ClusterReport, f64) {
+    let t0 = Instant::now();
+    let r1 = simulate(cfg).expect("cell run");
+    let host_s = t0.elapsed().as_secs_f64();
+    let mut sharded = cfg.clone();
+    sharded.sim.shards = 4;
+    let r4 = simulate(&sharded).expect("sharded cell run");
+    assert_eq!(
+        r1.determinism_token, r4.determinism_token,
+        "{label}: token diverged across shard counts"
+    );
+    assert_eq!(r1, r4, "{label}: report diverged across shard counts");
+    (r1, host_s)
+}
+
+fn row(label: &str, r: &ClusterReport, host_s: f64) -> Json {
+    Json::obj(vec![
+        ("config", Json::str(label)),
+        ("completed", Json::num(r.completed as f64)),
+        ("availability", Json::num(r.availability)),
+        ("fault_downs", Json::num(r.fault_downs as f64)),
+        ("fault_rejoins", Json::num(r.fault_rejoins as f64)),
+        ("fault_degrades", Json::num(r.fault_degrades as f64)),
+        ("fault_failed", Json::num(r.fault_failed as f64)),
+        ("fault_retried", Json::num(r.fault_retried as f64)),
+        ("degraded_epochs", Json::num(r.degraded_epochs as f64)),
+        ("degraded_p99_ns", Json::num(r.degraded_p99_ns as f64)),
+        ("fleet_p99_ns", Json::num(r.fleet_p99_ns as f64)),
+        ("host_ms", Json::num(host_s * 1e3)),
+        ("determinism_token", Json::str(format!("{:#018x}", r.determinism_token))),
+    ])
+}
+
+fn main() {
+    let quick = porter::bench::quick_mode();
+
+    // cell 1 — fault-free baseline: the [faults] section off entirely
+    let (clean, clean_s) = run_cell("fault-free", &base_cfg());
+    assert!(!clean.faults_enabled);
+    assert_eq!(clean.fault_downs + clean.fault_failed, 0);
+    assert!(clean.availability == 1.0, "fault-free availability must be 1.0");
+
+    // cell 2 — node loss at 100 ms, rejoin at 180 ms: in-flight cold
+    // starts on node 1 are voided and retried on node 0
+    let (loss, loss_s) = run_cell("node-loss", &faulted_cfg("down@0.1:1,up@0.18:1"));
+    assert_eq!(loss.fault_downs, 1);
+    assert_eq!(loss.fault_rejoins, 1);
+    assert!(loss.fault_failed >= 1, "the outage must strand in-flight work");
+    assert_eq!(loss.fault_retried, loss.fault_failed, "node 0 survives: all failures retry");
+    assert!(
+        loss.availability < 1.0 && loss.availability > 0.0,
+        "node loss must dent availability, got {}",
+        loss.availability
+    );
+    assert!(loss.degraded_epochs > 0);
+
+    // cell 3 — both CXL links derated to 25% from 50 ms to 200 ms:
+    // contention inflates but nothing fails
+    let spec = "degrade@0.05:0:0.25,degrade@0.05:1:0.25,restore@0.2:0,restore@0.2:1";
+    let (slow, slow_s) = run_cell("link-degrade", &faulted_cfg(spec));
+    assert_eq!(slow.fault_degrades, 2);
+    assert_eq!(slow.fault_failed, 0, "a slow link fails nothing");
+    assert!(slow.availability == 1.0);
+    assert!(slow.degraded_epochs > 0);
+    assert!(slow.degraded_p99_ns > 0, "completions during the derate feed the hist");
+
+    println!(
+        "faults: clean avail {:.4} ({:.1}ms) | node-loss avail {:.4}, {} failed/{} retried \
+         ({:.1}ms) | link-degrade {} degraded epochs ({:.1}ms)",
+        clean.availability,
+        clean_s * 1e3,
+        loss.availability,
+        loss.fault_failed,
+        loss.fault_retried,
+        loss_s * 1e3,
+        slow.degraded_epochs,
+        slow_s * 1e3
+    );
+
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_faults")),
+        ("quick", Json::Bool(quick)),
+        (
+            "series",
+            Json::Arr(vec![
+                row("fault-free", &clean, clean_s),
+                row("node-loss", &loss, loss_s),
+                row("link-degrade", &slow, slow_s),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_faults.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -48,6 +48,11 @@ pub struct FleetSignal {
     /// SLO outcomes since the previous evaluation.
     pub window_judged: u64,
     pub window_violations: u64,
+    /// Nodes currently failed by fault injection (not draining — they
+    /// are expected back). Scale-down is suppressed while nonzero: a
+    /// rejoin restores this capacity for free, so draining a healthy
+    /// node during an outage would double the loss.
+    pub down_nodes: usize,
 }
 
 impl FleetSignal {
@@ -116,6 +121,7 @@ impl Autoscaler {
             return Some((ScaleDirection::Up, reason));
         }
         if sig.active_nodes > self.min_nodes
+            && sig.down_nodes == 0
             && bpw < self.down_idle
             && vr <= self.up_violation / 2.0
         {
@@ -150,6 +156,7 @@ mod tests {
             interval_ns: 1000,
             window_judged: judged,
             window_violations: viol,
+            down_nodes: 0,
         }
     }
 
@@ -187,5 +194,20 @@ mod tests {
         let mut a = scaler();
         // modest backlog, no violations: between thresholds
         assert!(a.decide(&sig(0, 2, 4_000, 20, 1)).is_none());
+    }
+
+    #[test]
+    fn outage_suppresses_scale_down_but_not_scale_up() {
+        let mut a = scaler();
+        // idle fleet, but one node is down: keep the survivors
+        let mut s = sig(0, 3, 0, 10, 0);
+        s.down_nodes = 1;
+        assert!(a.decide(&s).is_none(), "must not drain during an outage");
+        // overload during the same outage still scales up
+        let mut hot = sig(200, 3, 480_000, 0, 0);
+        hot.down_nodes = 1;
+        assert_eq!(a.decide(&hot).unwrap().0, ScaleDirection::Up);
+        // rejoin: with down_nodes back to 0, idle drains again
+        assert_eq!(a.decide(&sig(400, 3, 0, 10, 0)).unwrap().0, ScaleDirection::Down);
     }
 }

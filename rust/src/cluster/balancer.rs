@@ -34,6 +34,9 @@ pub struct NodeView {
     pub sandbox_warm: bool,
     /// Draining or retired nodes receive no new work.
     pub draining: bool,
+    /// Fault injection: a down node receives no new work until its
+    /// `NodeUp` event rejoins it.
+    pub down: bool,
 }
 
 /// The node-level balancer.
@@ -47,7 +50,7 @@ impl ClusterBalancer {
     /// backlog charged to nodes without a warm hint; `startup_penalty_ns`
     /// the predicted sandbox startup (cold start, or restore when a
     /// snapshot exists) charged to nodes without a live sandbox.
-    /// `None` only when every node is draining.
+    /// `None` only when every node is draining or down.
     pub fn pick(
         &self,
         views: &[NodeView],
@@ -63,7 +66,7 @@ impl ClusterBalancer {
         for off in 0..n {
             let i = (start + off) % n;
             let v = &views[i];
-            if v.draining {
+            if v.draining || v.down {
                 continue;
             }
             let score = v
@@ -91,7 +94,7 @@ mod tests {
     use super::*;
 
     fn view(backlog_ns: u64, warm: bool) -> NodeView {
-        NodeView { backlog_ns, warm, sandbox_warm: warm, draining: false }
+        NodeView { backlog_ns, warm, sandbox_warm: warm, draining: false, down: false }
     }
 
     #[test]
@@ -159,5 +162,19 @@ mod tests {
         views[1].draining = true;
         assert_eq!(b.pick(&views, 0, 0), None);
         assert_eq!(b.pick(&[], 0, 0), None);
+    }
+
+    #[test]
+    fn down_nodes_skipped_like_draining_but_rejoin() {
+        let b = ClusterBalancer::default();
+        // node 0 is idle but down — the loaded healthy node wins
+        let mut views = [view(0, true), view(99_999, true)];
+        views[0].down = true;
+        assert_eq!(b.pick(&views, 0, 0), Some(1));
+        views[1].down = true;
+        assert_eq!(b.pick(&views, 0, 0), None, "all down routes nowhere");
+        // rejoin: clearing the flag makes the idle node attractive again
+        views[0].down = false;
+        assert_eq!(b.pick(&views, 0, 0), Some(0));
     }
 }

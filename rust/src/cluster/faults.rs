@@ -1,0 +1,320 @@
+//! Deterministic fault injection for the fleet DES.
+//!
+//! Real CXL pools fail in two ways the failure-free simulation never
+//! exercised: a node drops out (taking its in-flight invocations and
+//! its donated snapshots with it) and a link's effective bandwidth
+//! degrades under fabric contention or partial failure. This module
+//! models both as a **virtual-time-ordered schedule** of
+//! [`FaultEvent`]s, applied from the epoch loop's *sequential*
+//! admission phase — exactly like the autoscaler interleave — so any
+//! `--shards K` run replays the same outage at the same instant and
+//! stays bit-identical (the PR 7 invariant).
+//!
+//! Two ways to build a schedule:
+//!
+//! * [`FaultSchedule::parse`] — a scripted comma-separated DSL
+//!   (`down@0.02:1,up@0.04:1,degrade@0.01:0:0.5,restore@0.03:0`),
+//!   what `porter-cli cluster --faults <spec|file>` accepts;
+//! * [`FaultSchedule::seeded`] — a PRNG-seeded generator over the run
+//!   horizon (`[faults]` knobs: `seed`, `downs`, `degrades`,
+//!   `derate`), for benches and property tests that want *some*
+//!   deterministic outage without hand-writing one.
+//!
+//! The schedule itself is pure data; the cluster applies each event
+//! (routing exclusion, in-flight failure accounting, orphaned-snapshot
+//! eviction, pool link derate) and mixes it into the determinism
+//! token. With `[faults]` disabled nothing here runs and a cluster run
+//! is bit-identical to one built before this module existed.
+
+use crate::util::prng::Rng;
+
+/// What happens to a node at a scheduled virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// The node crashes: the balancer stops routing to it, its
+    /// in-flight invocations are accounted as failed (and retried on a
+    /// live node), and snapshots it donated are evicted from the store.
+    NodeDown,
+    /// The node rejoins with empty queues — the autoscaler sees the
+    /// returned capacity immediately.
+    NodeUp,
+    /// The node's CXL link delivers only `derate` of its nominal
+    /// bandwidth (0 < derate ≤ 1) until a [`FaultAction::LinkRestore`].
+    LinkDegrade {
+        /// Fraction of nominal link bandwidth still available.
+        derate: f64,
+    },
+    /// The link returns to full nominal bandwidth.
+    LinkRestore,
+}
+
+impl FaultAction {
+    /// Stable small code: the schedule sort tiebreak, the determinism
+    /// token contribution, and the telemetry `action` arg.
+    pub fn code(&self) -> u64 {
+        match self {
+            FaultAction::NodeDown => 0,
+            FaultAction::NodeUp => 1,
+            FaultAction::LinkDegrade { .. } => 2,
+            FaultAction::LinkRestore => 3,
+        }
+    }
+
+    /// Stable name, used as the telemetry event label and in greps.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultAction::NodeDown => "node_down",
+            FaultAction::NodeUp => "node_up",
+            FaultAction::LinkDegrade { .. } => "link_degrade",
+            FaultAction::LinkRestore => "link_restore",
+        }
+    }
+}
+
+/// One scheduled fault: `action` strikes `node` at virtual time `t_ns`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t_ns: u64,
+    /// Index into the cluster's node vector (node id == index).
+    pub node: usize,
+    pub action: FaultAction,
+}
+
+/// A virtual-time-ordered fault schedule with a drain cursor.
+///
+/// Construction sorts events by `(t_ns, node, action code)` so the
+/// application order is a pure function of the schedule contents —
+/// never of spec-string order or generator call order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl FaultSchedule {
+    /// Build a schedule from arbitrary-order events (sorted here).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by_key(|e| (e.t_ns, e.node, e.action.code()));
+        FaultSchedule { events, cursor: 0 }
+    }
+
+    /// Parse the scripted DSL: comma-separated entries of
+    ///
+    /// ```text
+    /// down@<t_s>:<node>
+    /// up@<t_s>:<node>
+    /// degrade@<t_s>:<node>:<derate>
+    /// restore@<t_s>:<node>
+    /// ```
+    ///
+    /// with `<t_s>` in virtual seconds (fractions allowed) and
+    /// `<derate>` in (0, 1]. Empty entries are skipped, so a trailing
+    /// comma is harmless.
+    pub fn parse(spec: &str) -> Result<FaultSchedule, String> {
+        let mut events = Vec::new();
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry {entry:?}: missing '@'"))?;
+            let mut parts = rest.split(':');
+            let t_s: f64 = parts
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| format!("fault entry {entry:?}: missing time"))?
+                .parse()
+                .map_err(|_| format!("fault entry {entry:?}: bad time"))?;
+            if !t_s.is_finite() || t_s < 0.0 {
+                return Err(format!("fault entry {entry:?}: time must be >= 0 seconds"));
+            }
+            let node: usize = parts
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| format!("fault entry {entry:?}: missing node"))?
+                .parse()
+                .map_err(|_| format!("fault entry {entry:?}: bad node index"))?;
+            let action = match kind {
+                "down" => FaultAction::NodeDown,
+                "up" => FaultAction::NodeUp,
+                "restore" => FaultAction::LinkRestore,
+                "degrade" => {
+                    let derate: f64 = parts
+                        .next()
+                        .ok_or_else(|| format!("fault entry {entry:?}: missing derate"))?
+                        .parse()
+                        .map_err(|_| format!("fault entry {entry:?}: bad derate"))?;
+                    if !(derate > 0.0 && derate <= 1.0) {
+                        return Err(format!(
+                            "fault entry {entry:?}: derate must be in (0, 1], got {derate}"
+                        ));
+                    }
+                    FaultAction::LinkDegrade { derate }
+                }
+                _ => {
+                    return Err(format!(
+                        "fault entry {entry:?}: unknown kind {kind:?} (down|up|degrade|restore)"
+                    ))
+                }
+            };
+            if parts.next().is_some() {
+                return Err(format!("fault entry {entry:?}: trailing fields"));
+            }
+            events.push(FaultEvent { t_ns: (t_s * 1e9).round() as u64, node, action });
+        }
+        Ok(FaultSchedule::new(events))
+    }
+
+    /// Generate a seeded schedule over `[0, horizon_ns)`: `downs`
+    /// down/up pairs (down lands in the 20–50% window of the horizon,
+    /// the rejoin in 55–90%) and `degrades` degrade/restore pairs at
+    /// `derate` (degrade in 10–40%, restore in 55–95%). Node 0 is never
+    /// taken down so routing always has a live fallback, which also
+    /// means a 1-node fleet gets link faults only.
+    pub fn seeded(
+        seed: u64,
+        nodes: usize,
+        horizon_ns: u64,
+        downs: u32,
+        degrades: u32,
+        derate: f64,
+    ) -> FaultSchedule {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let horizon = horizon_ns as f64;
+        let mut events = Vec::new();
+        if nodes > 1 {
+            for _ in 0..downs {
+                let node = 1 + rng.gen_range((nodes - 1) as u64) as usize;
+                let down = (horizon * rng.f64_in(0.20, 0.50)) as u64;
+                let up = (horizon * rng.f64_in(0.55, 0.90)) as u64;
+                events.push(FaultEvent { t_ns: down, node, action: FaultAction::NodeDown });
+                events.push(FaultEvent { t_ns: up, node, action: FaultAction::NodeUp });
+            }
+        }
+        for _ in 0..degrades {
+            let node = rng.gen_range(nodes.max(1) as u64) as usize;
+            let start = (horizon * rng.f64_in(0.10, 0.40)) as u64;
+            let end = (horizon * rng.f64_in(0.55, 0.95)) as u64;
+            events.push(FaultEvent {
+                t_ns: start,
+                node,
+                action: FaultAction::LinkDegrade { derate: derate.clamp(1e-6, 1.0) },
+            });
+            events.push(FaultEvent { t_ns: end, node, action: FaultAction::LinkRestore });
+        }
+        FaultSchedule::new(events)
+    }
+
+    /// Pop the next event due at or before `t_ns`, advancing the
+    /// cursor. The cluster loops this at each sequential interleave
+    /// point, so every due fault applies exactly once, in order.
+    pub fn pop_due(&mut self, t_ns: u64) -> Option<FaultEvent> {
+        let ev = *self.events.get(self.cursor)?;
+        if ev.t_ns > t_ns {
+            return None;
+        }
+        self.cursor += 1;
+        Some(ev)
+    }
+
+    /// All scheduled events, in application order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events not yet drained by [`FaultSchedule::pop_due`]. Faults
+    /// scheduled after the last arrival never apply (the DES has no
+    /// later interleave point), which this exposes for diagnostics.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sorts_and_round_trips_times() {
+        let s = FaultSchedule::parse("up@0.04:1, down@0.02:1,degrade@0.01:0:0.5,restore@0.03:0,")
+            .unwrap();
+        assert_eq!(s.len(), 4);
+        let order: Vec<(u64, usize, u64)> =
+            s.events().iter().map(|e| (e.t_ns, e.node, e.action.code())).collect();
+        assert_eq!(
+            order,
+            vec![(10_000_000, 0, 2), (20_000_000, 1, 0), (30_000_000, 0, 3), (40_000_000, 1, 1)]
+        );
+        assert_eq!(s.events()[0].action, FaultAction::LinkDegrade { derate: 0.5 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "down0.02:1",          // missing '@'
+            "down@:1",             // missing time
+            "down@0.02",           // missing node
+            "down@-1.0:0",         // negative time
+            "down@x:0",            // bad time
+            "down@0.02:x",         // bad node
+            "degrade@0.01:0",      // missing derate
+            "degrade@0.01:0:0",    // derate out of range
+            "degrade@0.01:0:1.5",  // derate out of range
+            "down@0.02:1:extra",   // trailing field
+            "explode@0.02:1",      // unknown kind
+        ] {
+            assert!(FaultSchedule::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        assert!(FaultSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_is_deterministic_sorted_and_spares_node_zero() {
+        let a = FaultSchedule::seeded(42, 4, 1_000_000_000, 2, 2, 0.5);
+        let b = FaultSchedule::seeded(42, 4, 1_000_000_000, 2, 2, 0.5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.events().windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        for e in a.events() {
+            assert!(e.node < 4);
+            assert!(e.t_ns < 1_000_000_000);
+            if matches!(e.action, FaultAction::NodeDown | FaultAction::NodeUp) {
+                assert_ne!(e.node, 0, "node 0 must stay up");
+            }
+        }
+        let c = FaultSchedule::seeded(43, 4, 1_000_000_000, 2, 2, 0.5);
+        assert_ne!(a, c, "different seeds must differ");
+        // a 1-node fleet never loses its only node
+        let solo = FaultSchedule::seeded(42, 1, 1_000_000_000, 3, 1, 0.5);
+        for e in solo.events() {
+            assert!(
+                matches!(e.action, FaultAction::LinkDegrade { .. } | FaultAction::LinkRestore),
+                "1-node fleet must only get link faults"
+            );
+        }
+    }
+
+    #[test]
+    fn pop_due_drains_in_virtual_time_order() {
+        let mut s = FaultSchedule::parse("down@0.002:1,up@0.004:1").unwrap();
+        assert_eq!(s.remaining(), 2);
+        assert!(s.pop_due(1_999_999).is_none());
+        let first = s.pop_due(2_000_000).unwrap();
+        assert_eq!((first.t_ns, first.node), (2_000_000, 1));
+        assert!(s.pop_due(2_000_000).is_none(), "second event is not due yet");
+        let second = s.pop_due(u64::MAX).unwrap();
+        assert_eq!(second.action, FaultAction::NodeUp);
+        assert_eq!(s.remaining(), 0);
+        assert!(s.pop_due(u64::MAX).is_none());
+    }
+}

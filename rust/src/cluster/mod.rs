@@ -14,7 +14,10 @@
 //!   diurnal, Azure-style trace replay), PRNG-seeded and deterministic;
 //! * [`balancer`] — two-level routing with hint- and sandbox-locality
 //!   awareness;
-//! * [`autoscaler`] — node add/drain on queue-depth and SLO signals.
+//! * [`autoscaler`] — node add/drain on queue-depth and SLO signals;
+//! * [`faults`] — deterministic fault injection (node loss/rejoin, CXL
+//!   link derating) applied on the sequential epoch phases, with the
+//!   availability rollup in the report.
 //!
 //! With `[lifecycle] enabled = true` the warm path is modeled
 //! explicitly (see [`crate::lifecycle`]): every arrival is classified
@@ -35,10 +38,12 @@
 pub mod arrivals;
 pub mod autoscaler;
 pub mod balancer;
+pub mod faults;
 pub mod node;
 pub mod pool;
 
-use std::collections::{HashMap, HashSet};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::config::Config;
 use crate::lifecycle::{AdmitOutcome, Sandbox, SnapshotStore, StartKind};
@@ -55,6 +60,7 @@ use crate::workloads::registry::{build, Scale};
 use arrivals::{ArrivalSpec, AzureTrace, Shape};
 use autoscaler::{Autoscaler, FleetSignal, ScaleDirection, ScaleEvent};
 use balancer::{ClusterBalancer, NodeView};
+use faults::{FaultAction, FaultEvent, FaultSchedule};
 use node::{Dispatch, Node, PreparedShape, ServiceShape};
 use pool::CxlPool;
 
@@ -229,6 +235,25 @@ pub struct ClusterReport {
     pub snapshot_peak_leased_bytes: u64,
     pub snapshot_lease_denied: u64,
     pub snapshot_evicted: u64,
+    /// Fault-injection availability rollup (`[faults]` enabled). A
+    /// fault-free run reports zero counters and availability 1.0.
+    pub faults_enabled: bool,
+    pub fault_downs: u64,
+    pub fault_rejoins: u64,
+    pub fault_degrades: u64,
+    /// In-flight invocations voided by a node loss. Each one already
+    /// counted toward `completed` when it settled, so availability is
+    /// `1 − failed / completed`.
+    pub fault_failed: u64,
+    /// Failed invocations re-admitted on a surviving node.
+    pub fault_retried: u64,
+    /// Epoch barriers crossed while any node was down or any link
+    /// degraded.
+    pub degraded_epochs: u64,
+    pub availability: f64,
+    /// p99 end-to-end latency over completions settled while a fault
+    /// was active (0 when no completion overlapped a fault).
+    pub degraded_p99_ns: u64,
     pub node_seconds: f64,
     /// DRAM + pooled-CXL provisioning cost (relative units; see
     /// [`DRAM_COST_PER_GIB_S`]).
@@ -349,6 +374,28 @@ impl ClusterReport {
                 ),
             ]);
         }
+        if self.faults_enabled {
+            t.row(vec![
+                "faults".into(),
+                format!(
+                    "{} downs / {} rejoins / {} degrades, {} failed ({} retried)",
+                    self.fault_downs,
+                    self.fault_rejoins,
+                    self.fault_degrades,
+                    self.fault_failed,
+                    self.fault_retried
+                ),
+            ]);
+            t.row(vec![
+                "availability".into(),
+                format!(
+                    "{:.4} ({} degraded epochs, degraded p99 {})",
+                    self.availability,
+                    self.degraded_epochs,
+                    fmt_ns(self.degraded_p99_ns as f64)
+                ),
+            ]);
+        }
         t.row(vec!["node-seconds".into(), format!("{:.3}", self.node_seconds)]);
         t.row(vec!["cost proxy".into(), format!("{:.1} units", self.cost_units)]);
         t.row(vec![
@@ -408,6 +455,27 @@ pub struct Cluster {
     /// Functions whose image can never fit the snapshot store — stop
     /// retrying admission for them on every arrival.
     snapshot_skip: HashSet<String>,
+    /// Fault schedule (`None` when `[faults]` is disabled — the entire
+    /// subsystem then adds one branch per interleave point and the run
+    /// stays bit-identical to a build without it). Events apply on the
+    /// sequential phase-A path, so shard count never changes them.
+    faults: Option<FaultSchedule>,
+    /// Per-node in-flight completions `(finish_ns, function)` —
+    /// maintained only while fault injection is on, so a `NodeDown` can
+    /// fail and retry exactly the work that was running there.
+    inflight: Vec<BinaryHeap<Reverse<(u64, usize)>>>,
+    /// Links currently derated (guards double-counting on repeated
+    /// degrade events for one node).
+    degraded_links: HashSet<usize>,
+    /// Nodes currently down (O(1) fault-active check in `settle`).
+    down_now: usize,
+    fault_downs: u64,
+    fault_rejoins: u64,
+    fault_degrades: u64,
+    fault_failed: u64,
+    fault_retried: u64,
+    degraded_epochs: u64,
+    degraded_hist: Histogram,
     slo: SloTracker,
     fleet_hist: Histogram,
     cold_hist: Histogram,
@@ -544,6 +612,25 @@ impl Cluster {
         } else {
             None
         };
+        let fl = &cfg.faults;
+        let fault_schedule = if fl.enabled {
+            Some(if fl.spec.is_empty() {
+                FaultSchedule::seeded(
+                    fl.seed,
+                    cl.nodes,
+                    (cl.duration_s * 1e9) as u64,
+                    fl.downs,
+                    fl.degrades,
+                    fl.derate,
+                )
+            } else {
+                // validate() already parsed the spec; re-parse for the
+                // owned schedule
+                FaultSchedule::parse(&fl.spec)?
+            })
+        } else {
+            None
+        };
         let tl = &cfg.telemetry;
         Ok(Cluster {
             telemetry: if tl.enabled {
@@ -567,6 +654,17 @@ impl Cluster {
             snapshots,
             snapshot_shapes: HashMap::new(),
             snapshot_skip: HashSet::new(),
+            faults: fault_schedule,
+            inflight: Vec::new(),
+            degraded_links: HashSet::new(),
+            down_now: 0,
+            fault_downs: 0,
+            fault_rejoins: 0,
+            fault_degrades: 0,
+            fault_failed: 0,
+            fault_retried: 0,
+            degraded_epochs: 0,
+            degraded_hist: Histogram::default(),
             slo: SloTracker::default(),
             fleet_hist: Histogram::default(),
             cold_hist: Histogram::default(),
@@ -732,13 +830,16 @@ impl Cluster {
                 warm: n.knows(&spec.name),
                 sandbox_warm: lifecycle && n.sandbox_warm_for(&spec.name, t),
                 draining: n.draining || n.retired(),
+                down: n.down,
             })
             .collect();
         let ni = match self.balancer.pick(&views, bonus, startup_penalty) {
             Some(i) => i,
             // defensive: everything draining (should not happen — the
-            // autoscaler keeps min_nodes active); use any live node
-            None => self.nodes.iter().position(|n| !n.retired())?,
+            // autoscaler keeps min_nodes active); use any live node.
+            // `None` here with every node down means the arrival is
+            // dropped — the fleet is fully dark
+            None => self.nodes.iter().position(|n| !n.retired() && !n.down)?,
         };
         let node_id = self.nodes[ni].id;
         let (kind, startup_ns) = self.classify(ni, &spec.name, t);
@@ -876,6 +977,16 @@ impl Cluster {
         let e2e_ns = d.finish_ns - t;
         self.fleet_hist.record(e2e_ns);
         self.node_hists[ni].record(e2e_ns);
+        if self.faults.is_some() {
+            if self.down_now > 0 || !self.degraded_links.is_empty() {
+                self.degraded_hist.record(e2e_ns);
+            }
+            // remember the completion so a later NodeDown can void it
+            while self.inflight.len() <= ni {
+                self.inflight.push(BinaryHeap::new());
+            }
+            self.inflight[ni].push(Reverse((d.finish_ns, p.function)));
+        }
         match kind {
             StartKind::Warm => self.warm_hist.record(e2e_ns),
             StartKind::Restored => self.restore_hist.record(e2e_ns),
@@ -979,7 +1090,10 @@ impl Cluster {
             }
         }
         let active: Vec<usize> = (0..self.nodes.len())
-            .filter(|&i| !self.nodes[i].draining && !self.nodes[i].retired())
+            .filter(|&i| {
+                let n = &self.nodes[i];
+                !n.draining && !n.retired() && !n.down
+            })
             .collect();
         let sig = FleetSignal {
             t_ns: t,
@@ -989,6 +1103,7 @@ impl Cluster {
             interval_ns: self.cfg.cluster.autoscale_interval_ns,
             window_judged: self.window_judged,
             window_violations: self.window_violations,
+            down_nodes: self.down_now,
         };
         self.window_judged = 0;
         self.window_violations = 0;
@@ -1024,6 +1139,106 @@ impl Cluster {
         }
     }
 
+    /// Apply every fault due at or before `t` — called on the
+    /// sequential phase-A path (and drained once more after the last
+    /// arrival), so transitions, token mixes, and retries happen at the
+    /// same virtual instant for every `--shards` setting. Retried
+    /// arrivals are admitted immediately and join the current epoch's
+    /// batch.
+    fn apply_due_faults(&mut self, t: u64, batch: &mut Vec<PreparedArrival>) {
+        while let Some(ev) = self.faults.as_mut().and_then(|s| s.pop_due(t)) {
+            self.apply_fault(ev, batch);
+        }
+    }
+
+    /// One fault transition. No-op transitions (downing a node that is
+    /// already down or retired, rejoining a healthy node, restoring an
+    /// underated link, out-of-range node ids) return before any state
+    /// or token change, so sloppy specs stay deterministic instead of
+    /// corrupting the counters.
+    fn apply_fault(&mut self, ev: FaultEvent, batch: &mut Vec<PreparedArrival>) {
+        let mut orphaned = 0u64;
+        let mut failed = 0u64;
+        match ev.action {
+            FaultAction::NodeDown => {
+                let Some(n) = self.nodes.get_mut(ev.node) else { return };
+                if n.down || n.retired() {
+                    return;
+                }
+                n.down = true;
+                self.down_now += 1;
+                self.fault_downs += 1;
+                // orphan the dead node's snapshot donations: their pool
+                // leases are released and later arrivals fall back to a
+                // cold start instead of restoring from lost memory
+                if let Some(st) = self.snapshots.as_mut() {
+                    orphaned = st.evict_donor(ev.node, ev.t_ns, &mut self.pool);
+                }
+                // void the work that was still running there (ascending
+                // finish order out of the heap keeps retries ordered)
+                let mut lost: Vec<usize> = Vec::new();
+                if let Some(heap) = self.inflight.get_mut(ev.node) {
+                    while let Some(Reverse((finish_ns, function))) = heap.pop() {
+                        if finish_ns > ev.t_ns {
+                            lost.push(function);
+                        }
+                    }
+                }
+                failed = lost.len() as u64;
+                self.fault_failed += failed;
+                // retry on the survivors, if any node is still up
+                if self.nodes.iter().any(|n| !n.retired() && !n.down) {
+                    for function in lost {
+                        let retry = arrivals::Arrival { t_ns: ev.t_ns, function };
+                        if let Some(p) = self.admit(retry) {
+                            batch.push(p);
+                            self.fault_retried += 1;
+                        }
+                    }
+                }
+            }
+            FaultAction::NodeUp => {
+                let Some(n) = self.nodes.get_mut(ev.node) else { return };
+                if !n.down {
+                    return;
+                }
+                n.down = false;
+                self.down_now -= 1;
+                self.fault_rejoins += 1;
+            }
+            FaultAction::LinkDegrade { derate } => {
+                if ev.node >= self.nodes.len() {
+                    return;
+                }
+                self.pool.set_link_derate(ev.node, derate);
+                if self.degraded_links.insert(ev.node) {
+                    self.fault_degrades += 1;
+                }
+            }
+            FaultAction::LinkRestore => {
+                if !self.degraded_links.remove(&ev.node) {
+                    return;
+                }
+                self.pool.set_link_derate(ev.node, 1.0);
+            }
+        }
+        self.token = mix(self.token, ev.t_ns);
+        self.token = mix(self.token, ev.node as u64);
+        self.token = mix(self.token, ev.action.code());
+        if self.telemetry.is_enabled() {
+            let mut tev = TelemetryEvent::new(EventKind::Fault, ev.t_ns)
+                .on_node(ev.node as u64)
+                .tag(ev.action.name());
+            if let FaultAction::LinkDegrade { derate } = ev.action {
+                tev = tev.arg("derate_pct", (derate * 100.0).round() as u64);
+            }
+            if failed > 0 || orphaned > 0 {
+                tev = tev.arg("failed", failed).arg("orphaned", orphaned);
+            }
+            self.telemetry.push(tev);
+        }
+    }
+
     /// Snapshot of fleet-wide state for the per-epoch sampler. Pure
     /// read: sums node counters and pool gauges at virtual time `t_ns`.
     fn fleet_sample(&self, t_ns: u64) -> FleetSample {
@@ -1044,8 +1259,11 @@ impl Cluster {
                 .map(|n| n.backlog_ns(t_ns))
                 .sum(),
             warm_pool_bytes: self.nodes.iter().map(|n| n.warm_pool_used_bytes()).sum(),
-            active_nodes: self.nodes.iter().filter(|n| !n.draining && !n.retired()).count()
-                as u64,
+            active_nodes: self
+                .nodes
+                .iter()
+                .filter(|n| !n.draining && !n.retired() && !n.down)
+                .count() as u64,
             completed: self.completed,
             promotions: self.promotions,
             demotions: self.demotions,
@@ -1098,6 +1316,9 @@ impl Cluster {
                         next_check += interval;
                     }
                 }
+                if self.faults.is_some() {
+                    self.apply_due_faults(a.t_ns, &mut batch);
+                }
                 assert!(
                     a.function < self.specs.len(),
                     "arrival references function {} outside the population",
@@ -1115,7 +1336,25 @@ impl Cluster {
             }
             self.merges += 1;
             self.sim_events += batch.len() as u64;
+            if self.faults.is_some() && (self.down_now > 0 || !self.degraded_links.is_empty()) {
+                self.degraded_epochs += 1;
+            }
             i = end;
+        }
+        // drain faults scheduled after the last arrival so the report's
+        // counters cover the whole schedule (downs pair with rejoins);
+        // retries from a tail NodeDown run through one final epoch
+        if self.faults.is_some() {
+            batch.clear();
+            self.apply_due_faults(u64::MAX, &mut batch);
+            if !batch.is_empty() {
+                let dispatched = self.dispatch_batch(&batch);
+                for (p, d) in batch.iter().zip(&dispatched) {
+                    self.settle(p, d);
+                }
+                self.merges += 1;
+                self.sim_events += batch.len() as u64;
+            }
         }
         self.finish(started.elapsed().as_secs_f64())
     }
@@ -1218,6 +1457,19 @@ impl Cluster {
             snapshot_peak_leased_bytes: snap.map(|s| s.metrics.peak_leased_bytes).unwrap_or(0),
             snapshot_lease_denied: snap.map(|s| s.metrics.lease_denied).unwrap_or(0),
             snapshot_evicted: snap.map(|s| s.metrics.evicted).unwrap_or(0),
+            faults_enabled: self.cfg.faults.enabled,
+            fault_downs: self.fault_downs,
+            fault_rejoins: self.fault_rejoins,
+            fault_degrades: self.fault_degrades,
+            fault_failed: self.fault_failed,
+            fault_retried: self.fault_retried,
+            degraded_epochs: self.degraded_epochs,
+            availability: if self.fault_failed == 0 {
+                1.0
+            } else {
+                1.0 - self.fault_failed as f64 / self.completed.max(1) as f64
+            },
+            degraded_p99_ns: self.degraded_hist.percentile(99.0),
             node_seconds,
             cost_units,
             nodes,
@@ -1575,5 +1827,102 @@ mod tests {
             t4.to_chrome_json(vec![]).to_string_compact(),
             "Chrome-trace export depends on shard count"
         );
+    }
+
+    #[test]
+    fn faults_disabled_stays_bit_identical() {
+        // the [faults] section is default-off; tweaking its knobs (and
+        // even setting a parseable spec) must not change a run at all
+        let base = simulate(&small_cfg()).unwrap();
+        let mut cfg = small_cfg();
+        cfg.faults.seed = 99;
+        cfg.faults.downs = 3;
+        cfg.faults.degrades = 2;
+        cfg.faults.derate = 0.25;
+        cfg.faults.spec = "down@0.01:1,up@0.03:1".into();
+        let tweaked = simulate(&cfg).unwrap();
+        assert_eq!(base.determinism_token, tweaked.determinism_token);
+        assert_eq!(base, tweaked);
+        assert!(!base.faults_enabled);
+        assert_eq!(base.fault_downs, 0);
+        assert_eq!(base.fault_failed, 0);
+        assert!(base.availability == 1.0);
+        assert!(!base.render().contains("availability"));
+    }
+
+    #[test]
+    fn node_loss_fails_inflight_and_retries_on_survivors() {
+        // 50 ms cold starts guarantee work admitted before the outage
+        // is still in flight when node 0 dies at 20 ms
+        let mut cfg = small_cfg();
+        cfg.cluster.rate_per_s = 2000.0;
+        cfg.cluster.cold_start_ns = 50_000_000;
+        cfg.faults.enabled = true;
+        cfg.faults.spec = "down@0.02:0".into();
+        let r = simulate(&cfg).unwrap();
+        assert!(r.faults_enabled);
+        assert_eq!(r.fault_downs, 1);
+        assert_eq!(r.fault_rejoins, 0);
+        assert!(r.fault_failed >= 1, "in-flight work on node 0 must fail");
+        assert_eq!(r.fault_retried, r.fault_failed, "node 1 survives: every failure retries");
+        assert!(r.availability < 1.0, "failed work must dent availability");
+        let expect = 1.0 - r.fault_failed as f64 / r.completed as f64;
+        assert!((r.availability - expect).abs() < 1e-12);
+        assert!(r.degraded_epochs > 0, "epochs after the down must count as degraded");
+        assert!(r.degraded_p99_ns > 0, "completions during the outage feed the hist");
+        let rendered = r.render();
+        assert!(rendered.contains("availability"));
+        assert!(rendered.contains("faults"));
+    }
+
+    #[test]
+    fn node_loss_orphans_snapshots_without_leaks_or_panics() {
+        // lifecycle + snapshots on, then node 1 (first donor of the
+        // second function's snapshot) dies mid-run: its donations are
+        // orphaned — leases released, restores fall back to cold starts
+        let mut cfg = lifecycle_cfg(0, true);
+        cfg.cluster.rate_per_s = 1000.0;
+        cfg.faults.enabled = true;
+        cfg.faults.spec = "down@0.02:1".into();
+        let r = simulate(&cfg).unwrap();
+        assert_eq!(r.fault_downs, 1);
+        assert!(r.snapshot_evicted >= 1, "dead donor's snapshots must evict");
+        // start-kind accounting stays exhaustive across the fallback
+        assert_eq!(r.cold_starts + r.warm_starts + r.restores, r.completed);
+        assert!(r.availability > 0.0 && r.availability <= 1.0);
+        // deterministic under faults: replaying reproduces the report
+        let again = simulate(&cfg).unwrap();
+        assert_eq!(r.determinism_token, again.determinism_token);
+        assert_eq!(r, again);
+    }
+
+    #[test]
+    fn fault_injection_is_shard_invariant() {
+        // scripted node loss + link degrade, lifecycle on: every
+        // --shards K must produce the identical report and token
+        let mut cfg = lifecycle_cfg(64 * 1024 * 1024, true);
+        cfg.cluster.rate_per_s = 1000.0;
+        cfg.cluster.cold_start_ns = 10_000_000;
+        cfg.faults.enabled = true;
+        cfg.faults.spec = "degrade@0.012:0:0.5,down@0.02:1,up@0.035:1,restore@0.04:0".into();
+        let base = simulate(&cfg).unwrap();
+        assert_eq!(base.fault_downs, 1);
+        assert_eq!(base.fault_rejoins, 1);
+        assert_eq!(base.fault_degrades, 1);
+        for k in [2, 4] {
+            let mut sharded = cfg.clone();
+            sharded.sim.shards = k;
+            let r = simulate(&sharded).unwrap();
+            assert_eq!(r.determinism_token, base.determinism_token, "shards={k} token");
+            assert_eq!(r, base, "shards={k} faulted report diverged");
+        }
+        // the seeded generator rides the same sequential path, so it is
+        // shard-invariant too
+        let mut seeded = small_cfg();
+        seeded.faults.enabled = true;
+        let s1 = simulate(&seeded).unwrap();
+        let mut wide = seeded.clone();
+        wide.sim.shards = 4;
+        assert_eq!(s1, simulate(&wide).unwrap(), "seeded faults diverged across shards");
     }
 }

@@ -160,6 +160,11 @@ pub struct Node {
     /// Drain mode: the balancer stops routing here; the node retires
     /// once its backlog empties.
     pub draining: bool,
+    /// Fault injection (`cluster::faults`): the node is down — the
+    /// balancer excludes it and its in-flight work is failed. Unlike
+    /// [`Node::retire`] this is reversible: a `NodeUp` event clears it
+    /// and the node rejoins with its servers intact.
+    pub down: bool,
     pub joined_ns: u64,
     pub retired_ns: Option<u64>,
     pub invocations: u64,
@@ -216,6 +221,7 @@ impl Node {
             warm_shapes: HashMap::new(),
             warm_pool,
             draining: false,
+            down: false,
             joined_ns,
             retired_ns: None,
             invocations: 0,

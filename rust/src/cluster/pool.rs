@@ -33,6 +33,9 @@ pub struct CxlPool {
     releases: BinaryHeap<Reverse<(u64, u64)>>,
     backplane: BandwidthModel,
     links: Vec<BandwidthModel>,
+    /// Per-node link derate from fault injection: the fraction of
+    /// nominal bandwidth still delivered (1.0 = healthy).
+    derates: Vec<f64>,
     link_params: TierParams,
     window_ns: f64,
     /// Times the pool could not grant a full lease even after draining
@@ -65,6 +68,7 @@ impl CxlPool {
             releases: BinaryHeap::new(),
             backplane: BandwidthModel::with_window(&mk(backplane_bw_gbps), window_ns),
             links: Vec::new(),
+            derates: Vec::new(),
             link_params,
             window_ns,
             shortages: 0,
@@ -80,7 +84,16 @@ impl CxlPool {
     pub fn ensure_nodes(&mut self, n: usize) {
         while self.links.len() < n {
             self.links.push(BandwidthModel::with_window(&self.link_params, self.window_ns));
+            self.derates.push(1.0);
         }
+    }
+
+    /// Fault injection: `node`'s link delivers only `derate` of its
+    /// nominal bandwidth until restored with `derate = 1.0`. Clamped to
+    /// (0, 1]; the config layer rejects out-of-range values up front.
+    pub fn set_link_derate(&mut self, node: usize, derate: f64) {
+        self.ensure_nodes(node + 1);
+        self.derates[node] = derate.clamp(1e-6, 1.0);
     }
 
     /// Apply every pending release scheduled at or before `t_ns`.
@@ -176,10 +189,14 @@ impl CxlPool {
     }
 
     /// Latency-inflation factor a node currently sees: the worse of its
-    /// own link and the shared backplane.
+    /// own link and the shared backplane, divided by the link's fault
+    /// derate (half the bandwidth doubles the inflation) — so migration
+    /// throttling and provisioning re-allocation react to a degraded
+    /// link through the same signal as organic contention.
     pub fn factor(&self, node: usize) -> f64 {
         let link = self.links.get(node).map(|l| l.factor()).unwrap_or(1.0);
-        link.max(self.backplane.factor())
+        let derate = self.derates.get(node).copied().unwrap_or(1.0);
+        link.max(self.backplane.factor()) / derate
     }
 
     /// Current occupancy, clamped to [0, 1] — `used` can transiently
@@ -319,6 +336,20 @@ mod tests {
         assert!(p.factor(0) > 1.5, "factor={}", p.factor(0));
         // node 1's link is idle, but the shared backplane is not
         assert!(p.factor(1) >= 1.0);
+    }
+
+    #[test]
+    fn link_derate_inflates_factor_and_restores() {
+        let mut p = pool(1 << 30);
+        assert!((p.factor(0) - 1.0).abs() < 1e-9);
+        p.set_link_derate(0, 0.5);
+        assert!((p.factor(0) - 2.0).abs() < 1e-9, "half bandwidth doubles inflation");
+        assert!((p.factor(1) - 1.0).abs() < 1e-9, "other links unaffected");
+        p.set_link_derate(0, 1.0);
+        assert!((p.factor(0) - 1.0).abs() < 1e-9, "restore returns to nominal");
+        // derate applies to a node the pool has not seen yet (autoscale)
+        p.set_link_derate(5, 0.25);
+        assert!((p.factor(5) - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -569,6 +569,43 @@ impl Default for SimConfig {
     }
 }
 
+/// Fault-injection knobs (`[faults]` — `cluster::faults`).
+///
+/// Default-off: with `enabled = false` the cluster builds no schedule,
+/// every fault hook is a single branch, and runs are bit-identical to
+/// a build without the subsystem (determinism token included).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Master switch for fault injection.
+    pub enabled: bool,
+    /// Scripted schedule DSL (see `FaultSchedule::parse`), e.g.
+    /// `"down@0.02:1,up@0.04:1"`. Empty = generate a seeded schedule
+    /// from the knobs below.
+    pub spec: String,
+    /// PRNG seed for the generated schedule (independent of the
+    /// arrival seed so the two can vary separately).
+    pub seed: u64,
+    /// Node down/up pairs in a generated schedule.
+    pub downs: u32,
+    /// Link degrade/restore pairs in a generated schedule.
+    pub degrades: u32,
+    /// Fraction of nominal link bandwidth left while degraded, (0, 1].
+    pub derate: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            spec: String::new(),
+            seed: 0xFA17,
+            downs: 1,
+            degrades: 1,
+            derate: 0.5,
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -582,6 +619,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub telemetry: TelemetryConfig,
     pub sim: SimConfig,
+    pub faults: FaultsConfig,
 }
 
 impl Config {
@@ -721,6 +759,12 @@ impl Config {
                 "telemetry.out" => cfg.telemetry.out = value.as_str()?.to_string(),
                 "sim.shards" => cfg.sim.shards = value.as_u64()? as usize,
                 "sim.batch_ns" => cfg.sim.batch_ns = value.as_u64()?,
+                "faults.enabled" => cfg.faults.enabled = value.as_bool()?,
+                "faults.spec" => cfg.faults.spec = value.as_str()?.to_string(),
+                "faults.seed" => cfg.faults.seed = value.as_u64()?,
+                "faults.downs" => cfg.faults.downs = value.as_u64()? as u32,
+                "faults.degrades" => cfg.faults.degrades = value.as_u64()? as u32,
+                "faults.derate" => cfg.faults.derate = value.as_f64()?,
                 _ => return Err(format!("unknown config key: {path}")),
             }
         }
@@ -914,6 +958,17 @@ impl Config {
         }
         if s.batch_ns == 0 {
             return Err("sim.batch_ns must be > 0".into());
+        }
+        let f = &self.faults;
+        if f.enabled {
+            if !(f.derate > 0.0 && f.derate <= 1.0) {
+                return Err(format!("faults.derate must be in (0, 1], got {}", f.derate));
+            }
+            // fail at config time, not mid-run: a scripted schedule must
+            // parse (the cluster re-parses the validated spec when it
+            // builds the schedule)
+            crate::cluster::faults::FaultSchedule::parse(&f.spec)
+                .map_err(|e| format!("faults.spec: {e}"))?;
         }
         Ok(())
     }
@@ -1176,6 +1231,47 @@ out = "trace.json"
         assert!(Config::from_toml_str("[telemetry]\nnonsense = 1\n").is_err());
         // a small buffer is fine while disabled (validated only when on)
         assert!(Config::from_toml_str("[telemetry]\nbuffer = \"100\"\n").is_ok());
+    }
+
+    #[test]
+    fn parses_faults_section() {
+        let text = r#"
+[faults]
+enabled = true
+spec = "down@0.02:1,up@0.04:1"
+seed = 99
+downs = 2
+degrades = 3
+derate = 0.25
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.spec, "down@0.02:1,up@0.04:1");
+        assert_eq!(c.faults.seed, 99);
+        assert_eq!(c.faults.downs, 2);
+        assert_eq!(c.faults.degrades, 3);
+        assert!((c.faults.derate - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faults_disabled_by_default() {
+        let c = Config::default();
+        assert!(!c.faults.enabled, "fault injection must be opt-in");
+        assert!(c.faults.spec.is_empty());
+        assert_eq!(c.faults.downs, 1);
+        assert_eq!(c.faults.degrades, 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_faults_values() {
+        assert!(Config::from_toml_str("[faults]\nenabled = true\nderate = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[faults]\nenabled = true\nderate = 1.5\n").is_err());
+        let bad_spec = "[faults]\nenabled = true\nspec = \"explode@0.1:0\"\n";
+        assert!(Config::from_toml_str(bad_spec).is_err());
+        assert!(Config::from_toml_str("[faults]\nnonsense = 1\n").is_err());
+        // a bad spec is fine while disabled (validated only when on)
+        assert!(Config::from_toml_str("[faults]\nspec = \"explode@0.1:0\"\n").is_ok());
     }
 
     #[test]

@@ -34,6 +34,10 @@ pub struct Snapshot {
     pub image: Arc<SandboxImage>,
     /// Pool capacity leased (the image's full resident set).
     pub lease_bytes: u64,
+    /// Node whose memory segments back the image. If that node dies,
+    /// the snapshot is orphaned — [`SnapshotStore::evict_donor`] drops
+    /// it and later restores fall back to a cold start.
+    pub donor_node: usize,
     pub taken_ns: u64,
     pub last_used_ns: u64,
     pub restores: u64,
@@ -184,6 +188,7 @@ impl SnapshotStore {
             function: sb.function.clone(),
             image: sb.image.clone(),
             lease_bytes: lease,
+            donor_node: node,
             taken_ns: t_ns,
             last_used_ns: t_ns,
             restores: 0,
@@ -196,6 +201,21 @@ impl SnapshotStore {
         self.leased_bytes -= s.lease_bytes;
         pool.release_at(t_ns, s.lease_bytes);
         self.metrics.evicted += 1;
+    }
+
+    /// Evict every snapshot donated by `node` — the node died, so the
+    /// memory segments backing those images are gone. Returns the
+    /// number evicted; each lease is released back to the pool (the
+    /// lease-leak property holds across faults), and later restores of
+    /// the affected functions miss the store and fall back to a cold
+    /// start with a profile run instead of panicking.
+    pub fn evict_donor(&mut self, node: usize, t_ns: u64, pool: &mut CxlPool) -> u64 {
+        let mut evicted = 0;
+        while let Some(i) = self.snaps.iter().position(|s| s.donor_node == node) {
+            self.evict_at(i, t_ns, pool);
+            evicted += 1;
+        }
+        evicted
     }
 
     /// Evict `function`'s snapshot (if any), releasing its lease.
@@ -331,6 +351,26 @@ mod tests {
             AdmitOutcome::BelowMinUses
         );
         assert!(store.admit(&sandbox("f", 100, 0, 3), 0, 0, &mut p).admitted());
+    }
+
+    #[test]
+    fn evict_donor_orphans_snapshots_without_leaking_leases() {
+        let mut p = pool(100_000);
+        let mut store = SnapshotStore::new(50_000, 1, 0);
+        // node 0 donates a and b, node 1 donates c
+        assert!(store.admit(&sandbox("a", 1_000, 0, 1), 10, 0, &mut p).admitted());
+        assert!(store.admit(&sandbox("b", 2_000, 0, 1), 20, 0, &mut p).admitted());
+        assert!(store.admit(&sandbox("c", 4_000, 0, 1), 30, 1, &mut p).admitted());
+        assert_eq!(store.evict_donor(0, 40, &mut p), 2);
+        assert!(!store.has("a") && !store.has("b"), "node 0's snapshots orphaned");
+        assert!(store.has("c"), "node 1's snapshot survives");
+        assert_eq!(store.leased_bytes(), 4_000);
+        // orphaned leases returned to the pool — the PR 3 no-leak shape
+        p.advance(41);
+        assert!((p.occupancy() - 0.04).abs() < 1e-9, "orphaned leases must release");
+        // restores of orphaned functions miss instead of panicking
+        assert!(store.restore("a", 50, 1, &mut p, 30.0, 1.0).is_none());
+        assert_eq!(store.evict_donor(0, 60, &mut p), 0, "idempotent");
     }
 
     #[test]

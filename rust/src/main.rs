@@ -31,7 +31,10 @@
 //!           event file (+ sibling F.csv time series);
 //!           [--shards K] shard the nodes across K worker threads —
 //!           bit-identical report/token for any K (greppable SHARDS
-//!           counter line)
+//!           counter line);
+//!           [--faults seeded|<spec>|<file>] deterministic fault
+//!           injection — node loss/rejoin and CXL-link derating with
+//!           graceful degradation (greppable FAULTS counter line)
 //!   telemetry summarize <trace.json>     roll up an exported trace:
 //!           per-kind event counts/durations, series stats
 //!   list                                 workload registry
@@ -720,6 +723,22 @@ fn cmd_cluster(args: &Args) -> i32 {
             cfg.telemetry.enabled = true;
             cfg.telemetry.out = path.to_string();
         }
+        // fault injection: "seeded" uses the generator from [faults]
+        // knobs, a readable path loads a spec file, anything else is
+        // the inline DSL (down@t:n, up@t:n, degrade@t:n:f, restore@t:n)
+        if let Some(spec) = args.opt("faults") {
+            cfg.faults.enabled = true;
+            cfg.faults.spec = if spec == "seeded" {
+                String::new()
+            } else if std::path::Path::new(spec).is_file() {
+                std::fs::read_to_string(spec)
+                    .map_err(|e| format!("read faults spec {spec}: {e}"))?
+                    .trim()
+                    .to_string()
+            } else {
+                spec.to_string()
+            };
+        }
         Ok(())
     })();
     if let Err(e) = parse_result {
@@ -766,6 +785,17 @@ fn cmd_cluster(args: &Args) -> i32 {
                 report.shards.merges,
                 report.shards.events_per_sec,
                 report.determinism_token
+            );
+            println!(
+                "FAULTS downs={} rejoins={} degrades={} failed={} availability={:.4} \
+                 retried={} degraded_epochs={}",
+                report.fault_downs,
+                report.fault_rejoins,
+                report.fault_degrades,
+                report.fault_failed,
+                report.availability,
+                report.fault_retried,
+                report.degraded_epochs
             );
             if tele.is_enabled() {
                 println!("{}", tele.counter_line());

@@ -44,6 +44,10 @@ pub enum EventKind {
     /// Machine-level aggregation tick that applied migrations, labeled
     /// with the migrator name.
     MachineEpoch,
+    /// Fault injection applied a node or link transition (label: the
+    /// [`crate::cluster::faults::FaultAction`] name — node_down,
+    /// node_up, link_degrade, link_restore).
+    Fault,
 }
 
 impl EventKind {
@@ -61,6 +65,7 @@ impl EventKind {
             EventKind::PoolContention => "pool_contention",
             EventKind::Phase => "phase",
             EventKind::MachineEpoch => "machine_epoch",
+            EventKind::Fault => "fault",
         }
     }
 }

@@ -26,6 +26,7 @@ fn lane(kind: EventKind) -> u64 {
         EventKind::WarmEvict | EventKind::SnapshotWrite | EventKind::SnapshotRestore => 3,
         EventKind::Provision | EventKind::Autoscale | EventKind::PoolContention => 4,
         EventKind::Phase => 5,
+        EventKind::Fault => 6,
     }
 }
 
@@ -35,7 +36,8 @@ fn lane_name(tid: u64) -> &'static str {
         2 => "migration",
         3 => "lifecycle",
         4 => "placement",
-        _ => "phases",
+        5 => "phases",
+        _ => "faults",
     }
 }
 

@@ -15,9 +15,9 @@ Hard failures (exit 1 — schema drift):
   * fresh series empty, or rows missing keys the baseline promises
     (either the placeholder's ``schema.series[]`` spec or, once a
     measured baseline is committed, the keys of its first series row);
-  * NaN/Infinity anywhere, negative counts/sizes, rates or occupancies
-    outside [0, 1], p50 > p99, or all-zero metric rows (a silently-dead
-    metric must fail, not pass vacuously).
+  * NaN/Infinity anywhere, negative counts/sizes, rates, occupancies,
+    or availabilities outside [0, 1], p50 > p99, or all-zero metric
+    rows (a silently-dead metric must fail, not pass vacuously).
 
 Perf deltas stay advisory: when the baseline carries measured rows, the
 script prints per-row latency deltas (and writes them to
@@ -121,6 +121,14 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
         # not squeezed into [0,1]
         if float(value) <= 0.0:
             fail(f"{path}: {row_id}.{key} = {value} is not a positive rate")
+        return
+    if "availability" in lk:
+        # availability = 1 - failed/completed: a fraction by
+        # construction, and 1.0 (no failures) is the common case —
+        # checked BEFORE the generic "rate/frac" rule so the dedicated
+        # message names the metric
+        if not 0.0 <= float(value) <= 1.0 + 1e-9:
+            fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
         return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
@@ -229,6 +237,10 @@ def self_test() -> int:
         ("speedup", 0.0, True),
         ("dram_saved_mb", -1.0, True),
         ("overhead_frac", -0.05, False),
+        ("availability", 0.97, False),
+        ("availability", 1.0, False),  # fault-free runs report exactly 1.0
+        ("availability", 1.5, True),
+        ("availability", -0.1, True),
         ("p99_ns", -1, True),
         ("delta_pct", -40.0, False),
         ("p50_ns", float("inf"), True),
