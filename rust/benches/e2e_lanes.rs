@@ -1,0 +1,225 @@
+//! End-to-end lane-scheduler bench: lane count × stride prefetch × DRAM
+//! ratio on `txn_bench`, against the pure-migration arms at the same
+//! DRAM budget.
+//!
+//! The contract under test: with most of the working set CXL-resident,
+//! independent-transaction lanes overlap CXL stalls with other lanes'
+//! compute — `lanes=4 --prefetch` must strictly beat the serial
+//! `lanes=1` wall at ≤25% DRAM — while a fleet run with lanes on stays
+//! bit-identical across `--shards 1` and `--shards 4`. Writes
+//! `BENCH_lanes.json` at the repo root.
+//!
+//! Quick run: PORTER_BENCH_QUICK=1 cargo bench --bench e2e_lanes
+
+use porter::bench::{fmt_ns, BenchSuite, FigureReport};
+use porter::config::Config;
+use porter::mem::migrate::MigrationEngine;
+use porter::placement::policies::FirstTouchDram;
+use porter::sim::machine::RunReport;
+use porter::sim::Machine;
+use porter::trace::{record_workload, AccessTrace};
+use porter::util::json::Json;
+use porter::workloads::txn_bench::TxnBench;
+use porter::workloads::Workload;
+
+const LANE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const DRAM_RATIOS: [f64; 2] = [0.125, 0.25];
+
+/// One machine cell: DRAM capped at `ratio` × footprint, first-touch
+/// placement, lanes/prefetcher per the cell, the recorded stream
+/// replayed. `policy` attaches the epoch migration engine instead (the
+/// pure-migration arm runs serial: lanes = 1, no prefetch).
+fn run_cell(
+    trace: &AccessTrace,
+    footprint: u64,
+    cfg: &Config,
+    ratio: f64,
+    lanes: usize,
+    prefetch: bool,
+    policy: Option<&str>,
+) -> RunReport {
+    let mut mcfg = cfg.machine.clone();
+    let footprint = footprint.max(mcfg.page_bytes);
+    mcfg.dram_bytes =
+        ((footprint as f64 * ratio) as u64 / mcfg.page_bytes).max(4) * mcfg.page_bytes;
+    let mut machine = Machine::new(&mcfg, Box::new(FirstTouchDram::default()));
+    if let Some(policy) = policy {
+        let mut migration = cfg.migration.clone();
+        migration.policy = policy.to_string();
+        migration.enabled = true;
+        if let Some(engine) = MigrationEngine::from_config(&migration) {
+            machine.set_migrator(Box::new(engine));
+        }
+        machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    }
+    if lanes > 1 {
+        machine.set_lanes(lanes);
+    }
+    if prefetch {
+        machine.set_prefetcher(cfg.lanes.prefetch_degree, cfg.lanes.prefetch_distance);
+    }
+    machine.replay(trace);
+    machine.report()
+}
+
+/// Stall time hidden as a fraction of the serial-equivalent wall — the
+/// `*overlap*` metric bench_check bounds to [0, 1].
+fn overlap_frac(r: &RunReport) -> f64 {
+    let serial = r.wall_ns + r.overlapped_ns;
+    if serial <= 0.0 {
+        0.0
+    } else {
+        r.overlapped_ns / serial
+    }
+}
+
+fn main() {
+    let quick = porter::bench::quick_mode();
+    let cfg = Config::default();
+    let mut suite = BenchSuite::new("e2e: lane-based latency hiding (sim/lanes + sim/prefetch)");
+
+    // the stock table must exceed the 19.25 MB LLC even in quick mode —
+    // a cache-resident instance has no stalls to hide
+    let w = if quick {
+        TxnBench::new(400_000, 40_000)
+    } else {
+        TxnBench::new(400_000, 200_000)
+    };
+    let footprint = w.footprint_hint();
+    let trace = record_workload(&w, cfg.machine.page_bytes);
+    eprintln!(
+        "txn_bench: footprint {} trace {} events",
+        porter::util::bytes::fmt_bytes(footprint),
+        trace.len()
+    );
+
+    let mut fig = FigureReport::new(
+        "lane-sweep",
+        "wall vs serial (%) per (DRAM ratio, lanes, prefetch) + migration arms",
+        &["wall_ms", "speedup_vs_serial_pct", "overlap_frac", "prefetch_useful"],
+    );
+    let mut series = Vec::new();
+    for &ratio in &DRAM_RATIOS {
+        // serial baseline and the pure-migration arms at this budget
+        let serial = run_cell(&trace, footprint, &cfg, ratio, 1, false, None);
+        let mut cells: Vec<(String, RunReport)> = Vec::new();
+        for &lanes in &LANE_COUNTS {
+            for prefetch in [false, true] {
+                if lanes == 1 && !prefetch {
+                    cells.push(("lanes=1".into(), serial.clone()));
+                    continue;
+                }
+                let r = run_cell(&trace, footprint, &cfg, ratio, lanes, prefetch, None);
+                let label = format!("lanes={lanes}{}", if prefetch { "+prefetch" } else { "" });
+                cells.push((label, r));
+            }
+        }
+        for policy in ["tpp", "hybrid"] {
+            let r = run_cell(&trace, footprint, &cfg, ratio, 1, false, Some(policy));
+            cells.push((format!("mig:{policy}"), r));
+        }
+        for (label, r) in &cells {
+            let speedup_pct = (1.0 - r.wall_ns / serial.wall_ns) * 100.0;
+            eprintln!(
+                "  dram={ratio}/{label}: wall {} ({:+.1}% vs serial) overlap {} \
+                 pf {}/{} useful",
+                fmt_ns(r.wall_ns),
+                -speedup_pct,
+                fmt_ns(r.overlapped_ns),
+                r.prefetch_useful,
+                r.prefetch_issued
+            );
+            fig.row(
+                &format!("dram={ratio}/{label}"),
+                vec![
+                    r.wall_ns / 1e6,
+                    speedup_pct,
+                    overlap_frac(r),
+                    r.prefetch_useful as f64,
+                ],
+            );
+            series.push(Json::obj(vec![
+                ("workload", Json::str("txn_bench")),
+                ("dram_ratio", Json::num(ratio)),
+                ("config", Json::str(label.clone())),
+                ("wall_ns", Json::num(r.wall_ns)),
+                ("speedup_vs_serial_pct", Json::num(speedup_pct)),
+                ("stall_ns", Json::num(r.stall_ns)),
+                ("overlapped_ns", Json::num(r.overlapped_ns)),
+                ("overlap_frac", Json::num(overlap_frac(r))),
+                ("lane_switches", Json::num(r.lane_switches as f64)),
+                ("prefetch_issued", Json::num(r.prefetch_issued as f64)),
+                ("prefetch_useful", Json::num(r.prefetch_useful as f64)),
+            ]));
+        }
+        // the acceptance bar: pipelining must strictly beat serial
+        // execution when the working set is mostly CXL-resident
+        let laned = &cells.iter().find(|(l, _)| l == "lanes=4+prefetch").expect("cell").1;
+        assert!(
+            laned.wall_ns < serial.wall_ns,
+            "dram={ratio}: lanes=4+prefetch ({}) must beat lanes=1 ({})",
+            laned.wall_ns,
+            serial.wall_ns
+        );
+        assert!(laned.overlapped_ns > 0.0, "dram={ratio}: lanes must overlap stalls");
+        assert!(laned.lane_switches > 0);
+        let f = overlap_frac(laned);
+        assert!((0.0..=1.0).contains(&f), "overlap_frac {f} out of range");
+    }
+
+    // fleet arm: lanes + prefetch on across a 2-node cluster must stay
+    // bit-identical across shard counts (report AND token)
+    let mut fleet = Config::default();
+    fleet.cluster.nodes = 2;
+    fleet.cluster.functions = 2;
+    fleet.cluster.rate_per_s = 300.0;
+    fleet.cluster.duration_s = 0.05;
+    fleet.cluster.autoscale = false;
+    fleet.cluster.seed = 0x1A9E;
+    fleet.lanes.enabled = true;
+    fleet.lanes.prefetch = true;
+    let r1 = porter::cluster::simulate(&fleet).expect("fleet run");
+    let mut sharded = fleet.clone();
+    sharded.sim.shards = 4;
+    let r4 = porter::cluster::simulate(&sharded).expect("sharded fleet run");
+    assert_eq!(
+        r1.determinism_token, r4.determinism_token,
+        "laned fleet token diverged across shard counts"
+    );
+    assert_eq!(r1, r4, "laned fleet report diverged across shard counts");
+    assert!(r1.lanes_enabled);
+    assert!(r1.overlapped_ns > 0.0, "fleet lanes must overlap stalls");
+    eprintln!(
+        "fleet: {} invocations, overlap {} across shards 1 and 4 (token {:#018x})",
+        r1.completed,
+        fmt_ns(r1.overlapped_ns),
+        r1.determinism_token
+    );
+    series.push(Json::obj(vec![
+        ("workload", Json::str("fleet(2 nodes)")),
+        ("config", Json::str("cluster lanes+prefetch shards 1==4")),
+        ("completed", Json::num(r1.completed as f64)),
+        ("overlapped_ns", Json::num(r1.overlapped_ns)),
+        ("lane_switches", Json::num(r1.lane_switches as f64)),
+        ("fleet_p50_ns", Json::num(r1.fleet_p50_ns as f64)),
+        ("determinism_token", Json::str(format!("{:#018x}", r1.determinism_token))),
+    ]));
+
+    suite.section(fig.render());
+
+    let out = Json::obj(vec![
+        ("suite", Json::str("e2e_lanes")),
+        ("quick", Json::Bool(quick)),
+        ("lane_counts", Json::arr(LANE_COUNTS.iter().map(|l| Json::num(*l as f64)))),
+        ("dram_ratios", Json::arr(DRAM_RATIOS.iter().map(|r| Json::num(*r)))),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = std::env::var("PORTER_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_lanes.json").into());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    suite.run();
+}

@@ -92,6 +92,34 @@ fn main() {
         hits
     });
 
+    // 5b. byte-span path: one-line accesses take the first==last
+    //     early-out in Cache::access; straddling accesses walk the
+    //     two-line loop. The pair tracks the fast path's win.
+    bench.bench_with_throughput("cache_access_bytes_one_line", N_ACCESS as f64, "access", || {
+        let mut c = Cache::new(cfg.machine.l3_bytes, 64, 11);
+        let mut rng = Rng::new(9);
+        let mut hits = 0u64;
+        for _ in 0..N_ACCESS {
+            // line-aligned 8-byte reads: never straddle
+            let addr = rng.gen_range(1 << 20) * 64;
+            let (h, _) = c.access(addr, 8, |_| {});
+            hits += h as u64;
+        }
+        hits
+    });
+    bench.bench_with_throughput("cache_access_bytes_straddle", N_ACCESS as f64, "access", || {
+        let mut c = Cache::new(cfg.machine.l3_bytes, 64, 11);
+        let mut rng = Rng::new(9);
+        let mut hits = 0u64;
+        for _ in 0..N_ACCESS {
+            // 8-byte reads crossing every line boundary: two-line loop
+            let addr = rng.gen_range(1 << 20) * 64 + 60;
+            let (h, _) = c.access(addr, 8, |_| {});
+            hits += h as u64;
+        }
+        hits
+    });
+
     // 6. trace record + replay
     bench.bench_with_throughput("trace_record", N_ACCESS as f64, "event", || {
         let mut rec = TraceRecorder::new();

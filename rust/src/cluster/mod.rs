@@ -73,9 +73,9 @@ pub const CXL_COST_PER_GIB_S: f64 = 0.33;
 
 /// Serving-oriented default population, lightest functions first (rank 0
 /// is the Zipf-hottest).
-const POPULATION_ORDER: [&str; 13] = [
+const POPULATION_ORDER: [&str; 14] = [
     "json", "kvstore", "chameleon", "image", "compression", "sort", "matmul", "bfs", "cc",
-    "pagerank", "linpack", "dl_serve", "dl_train",
+    "pagerank", "linpack", "dl_serve", "dl_train", "txn_bench",
 ];
 
 /// The first `n` registry functions of the serving population.
@@ -195,6 +195,15 @@ pub struct ClusterReport {
     pub demotions: u64,
     pub ping_pongs: u64,
     pub migration_bytes: u64,
+    /// Lane-scheduler rollup (`[lanes]` enabled): CXL stall time hidden
+    /// under other lanes' compute, summed over every settled dispatch
+    /// (replayed shapes included), plus scheduler/prefetcher counters.
+    /// All zero with the section off.
+    pub lanes_enabled: bool,
+    pub overlapped_ns: f64,
+    pub lane_switches: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
     /// Trace-IR rollup over the fleet's real engine runs: canonical
     /// recordings, replays served from the process-wide store (a node
     /// replaying a peer's profile run counts here), and recorded bytes.
@@ -354,6 +363,18 @@ impl ClusterReport {
                 fmt_bytes(self.migration_bytes)
             ),
         ]);
+        if self.lanes_enabled {
+            t.row(vec![
+                "lane overlap".into(),
+                format!(
+                    "{} hidden ({} switches, prefetch {}/{} useful)",
+                    fmt_ns(self.overlapped_ns),
+                    self.lane_switches,
+                    self.prefetch_useful,
+                    self.prefetch_issued
+                ),
+            ]);
+        }
         t.row(vec![
             "trace IR".into(),
             format!(
@@ -492,6 +513,10 @@ pub struct Cluster {
     demotions: u64,
     ping_pongs: u64,
     migration_bytes: u64,
+    overlapped_ns: f64,
+    lane_switches: u64,
+    prefetch_issued: u64,
+    prefetch_useful: u64,
     end_ns: u64,
     token: u64,
     next_node_id: usize,
@@ -681,6 +706,10 @@ impl Cluster {
             demotions: 0,
             ping_pongs: 0,
             migration_bytes: 0,
+            overlapped_ns: 0.0,
+            lane_switches: 0,
+            prefetch_issued: 0,
+            prefetch_useful: 0,
             end_ns: 0,
             token: 0x0C1A57E5,
             merges: 0,
@@ -973,6 +1002,12 @@ impl Cluster {
         self.demotions += d.demotions;
         self.ping_pongs += d.ping_pongs;
         self.migration_bytes += d.migration_bytes;
+        // f64 sum in settle (arrival) order — identical for every shard
+        // count, so the report stays bit-equal across --shards
+        self.overlapped_ns += d.overlapped_ns;
+        self.lane_switches += d.lane_switches;
+        self.prefetch_issued += d.prefetch_issued;
+        self.prefetch_useful += d.prefetch_useful;
 
         let e2e_ns = d.finish_ns - t;
         self.fleet_hist.record(e2e_ns);
@@ -1432,6 +1467,11 @@ impl Cluster {
             demotions: self.demotions,
             ping_pongs: self.ping_pongs,
             migration_bytes: self.migration_bytes,
+            lanes_enabled: self.cfg.lanes.enabled,
+            overlapped_ns: self.overlapped_ns,
+            lane_switches: self.lane_switches,
+            prefetch_issued: self.prefetch_issued,
+            prefetch_useful: self.prefetch_useful,
             trace_records: self.nodes.iter().map(|n| n.trace_records).sum(),
             trace_replays: self.nodes.iter().map(|n| n.trace_replays).sum(),
             trace_bytes: self.nodes.iter().map(|n| n.trace_bytes).sum(),
@@ -1530,11 +1570,11 @@ mod tests {
 
     #[test]
     fn population_defaults_are_registry_names() {
-        for name in default_population(13) {
+        for name in default_population(14) {
             assert!(build(&name, Scale::Small).is_some(), "{name} missing from registry");
         }
         assert_eq!(default_population(0).len(), 1);
-        assert_eq!(default_population(99).len(), 13);
+        assert_eq!(default_population(99).len(), 14);
     }
 
     #[test]
@@ -1827,6 +1867,58 @@ mod tests {
             t4.to_chrome_json(vec![]).to_string_compact(),
             "Chrome-trace export depends on shard count"
         );
+    }
+
+    #[test]
+    fn lanes_disabled_stays_bit_identical() {
+        // the [lanes] section is default-off; flipping its knobs while
+        // disabled must not change a run at all — report AND token
+        let base = simulate(&small_cfg()).unwrap();
+        let mut cfg = small_cfg();
+        cfg.lanes.max_lanes = 8;
+        cfg.lanes.prefetch_degree = 16;
+        cfg.lanes.prefetch_distance = 7;
+        let tweaked = simulate(&cfg).unwrap();
+        assert_eq!(base.determinism_token, tweaked.determinism_token);
+        assert_eq!(base, tweaked);
+        assert!(!base.lanes_enabled);
+        assert_eq!(base.overlapped_ns, 0.0);
+        assert_eq!(base.lane_switches, 0);
+        assert_eq!(base.prefetch_issued, 0);
+        assert!(!base.render().contains("lane overlap"));
+    }
+
+    #[test]
+    fn lanes_overlap_stalls_fleet_wide() {
+        // kvstore + txn_bench both annotate lanes; with the scheduler on
+        // the fleet must hide stall time, deterministically
+        let mut cfg = small_cfg();
+        cfg.cluster.functions = 2; // json + kvstore
+        cfg.lanes.enabled = true;
+        cfg.lanes.prefetch = true;
+        let a = simulate(&cfg).unwrap();
+        assert!(a.lanes_enabled);
+        assert!(a.overlapped_ns > 0.0, "kvstore lanes must overlap stalls");
+        assert!(a.lane_switches > 0);
+        assert!(a.render().contains("lane overlap"));
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.determinism_token, b.determinism_token);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn laned_runs_are_shard_invariant() {
+        // acceptance bar: lanes + prefetch on, --shards 4 produces the
+        // identical report and token as --shards 1
+        let mut cfg = small_cfg();
+        cfg.lanes.enabled = true;
+        cfg.lanes.prefetch = true;
+        let base = simulate(&cfg).unwrap();
+        let mut sharded = cfg.clone();
+        sharded.sim.shards = 4;
+        let r = simulate(&sharded).unwrap();
+        assert_eq!(r.determinism_token, base.determinism_token, "laned token diverged");
+        assert_eq!(r, base, "laned report diverged across shard counts");
     }
 
     #[test]

@@ -63,6 +63,12 @@ pub struct ServiceShape {
     pub peak_dram_bytes: u64,
     /// Peak CXL residency (leased from the shared pool while running).
     pub peak_cxl_bytes: u64,
+    /// Lane-scheduler overlap: serial stall time hidden under other
+    /// lanes' compute (0 when `[lanes]` is off).
+    pub overlapped_ns: f64,
+    pub lane_switches: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
     /// Shim-captured sandbox image (object list + per-tier residency) —
     /// what the warm pool keeps and the snapshot store persists.
     /// `Arc`-shared: shapes are cloned on every replayed dispatch, and
@@ -89,6 +95,10 @@ impl ServiceShape {
             ping_pongs: out.report.ping_pongs,
             peak_dram_bytes: out.report.peak_dram_bytes,
             peak_cxl_bytes: out.report.peak_cxl_bytes,
+            overlapped_ns: out.report.overlapped_ns,
+            lane_switches: out.report.lane_switches,
+            prefetch_issued: out.report.prefetch_issued,
+            prefetch_useful: out.report.prefetch_useful,
             image: Arc::new(out.sandbox.clone()),
             checksum: out.checksum,
         }
@@ -143,6 +153,12 @@ pub struct Dispatch {
     pub promotions: u64,
     pub demotions: u64,
     pub ping_pongs: u64,
+    /// Lane-scheduler counters of the replayed shape (see
+    /// [`ServiceShape::overlapped_ns`]).
+    pub overlapped_ns: f64,
+    pub lane_switches: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
     pub checksum: u64,
 }
 
@@ -394,6 +410,10 @@ impl Node {
             promotions: shape.promotions,
             demotions: shape.demotions,
             ping_pongs: shape.ping_pongs,
+            overlapped_ns: shape.overlapped_ns,
+            lane_switches: shape.lane_switches,
+            prefetch_issued: shape.prefetch_issued,
+            prefetch_useful: shape.prefetch_useful,
             checksum: shape.checksum,
         }
     }

@@ -606,6 +606,39 @@ impl Default for FaultsConfig {
     }
 }
 
+/// Lane-scheduler knobs (`[lanes]` — `sim::lanes` + `sim::prefetch`).
+///
+/// Default-off: with `enabled = false` the machine keeps its scalar
+/// clock, every lane hook is a single branch, and runs are bit-identical
+/// to a build without the subsystem (determinism token included).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LanesConfig {
+    /// Master switch for lane-based latency hiding.
+    pub enabled: bool,
+    /// In-flight lanes per invocation (K). The effective lane count is
+    /// `min(max_lanes, workload.lane_hints())`, so sequential workloads
+    /// stay serial no matter how high this is set. 1..=64.
+    pub max_lanes: usize,
+    /// Enable the stride prefetcher alongside the lanes.
+    pub prefetch: bool,
+    /// Lines issued per confirmed-stride miss, 1..=64.
+    pub prefetch_degree: usize,
+    /// Strides of lead the first issued line gets over the miss, >= 1.
+    pub prefetch_distance: usize,
+}
+
+impl Default for LanesConfig {
+    fn default() -> Self {
+        LanesConfig {
+            enabled: false,
+            max_lanes: 4,
+            prefetch: false,
+            prefetch_degree: 4,
+            prefetch_distance: 2,
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -620,6 +653,7 @@ pub struct Config {
     pub telemetry: TelemetryConfig,
     pub sim: SimConfig,
     pub faults: FaultsConfig,
+    pub lanes: LanesConfig,
 }
 
 impl Config {
@@ -765,6 +799,15 @@ impl Config {
                 "faults.downs" => cfg.faults.downs = value.as_u64()? as u32,
                 "faults.degrades" => cfg.faults.degrades = value.as_u64()? as u32,
                 "faults.derate" => cfg.faults.derate = value.as_f64()?,
+                "lanes.enabled" => cfg.lanes.enabled = value.as_bool()?,
+                "lanes.max_lanes" => cfg.lanes.max_lanes = value.as_u64()? as usize,
+                "lanes.prefetch" => cfg.lanes.prefetch = value.as_bool()?,
+                "lanes.prefetch_degree" => {
+                    cfg.lanes.prefetch_degree = value.as_u64()? as usize
+                }
+                "lanes.prefetch_distance" => {
+                    cfg.lanes.prefetch_distance = value.as_u64()? as usize
+                }
                 _ => return Err(format!("unknown config key: {path}")),
             }
         }
@@ -969,6 +1012,21 @@ impl Config {
             // builds the schedule)
             crate::cluster::faults::FaultSchedule::parse(&f.spec)
                 .map_err(|e| format!("faults.spec: {e}"))?;
+        }
+        let l = &self.lanes;
+        if l.enabled {
+            if l.max_lanes == 0 || l.max_lanes > 64 {
+                return Err(format!("lanes.max_lanes must be in 1..=64, got {}", l.max_lanes));
+            }
+            if l.prefetch_degree == 0 || l.prefetch_degree > 64 {
+                return Err(format!(
+                    "lanes.prefetch_degree must be in 1..=64, got {}",
+                    l.prefetch_degree
+                ));
+            }
+            if l.prefetch_distance == 0 {
+                return Err("lanes.prefetch_distance must be >= 1".into());
+            }
         }
         Ok(())
     }
@@ -1272,6 +1330,50 @@ derate = 0.25
         assert!(Config::from_toml_str("[faults]\nnonsense = 1\n").is_err());
         // a bad spec is fine while disabled (validated only when on)
         assert!(Config::from_toml_str("[faults]\nspec = \"explode@0.1:0\"\n").is_ok());
+    }
+
+    #[test]
+    fn parses_lanes_section() {
+        let text = r#"
+[lanes]
+enabled = true
+max_lanes = 8
+prefetch = true
+prefetch_degree = 2
+prefetch_distance = 3
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.lanes.enabled);
+        assert_eq!(c.lanes.max_lanes, 8);
+        assert!(c.lanes.prefetch);
+        assert_eq!(c.lanes.prefetch_degree, 2);
+        assert_eq!(c.lanes.prefetch_distance, 3);
+    }
+
+    #[test]
+    fn lanes_disabled_by_default() {
+        let c = Config::default();
+        assert!(!c.lanes.enabled, "lane scheduling must be opt-in");
+        assert!(!c.lanes.prefetch);
+        assert_eq!(c.lanes.max_lanes, 4);
+        assert_eq!(c.lanes.prefetch_degree, 4);
+        assert_eq!(c.lanes.prefetch_distance, 2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_lanes_values() {
+        assert!(Config::from_toml_str("[lanes]\nenabled = true\nmax_lanes = 0\n").is_err());
+        assert!(Config::from_toml_str("[lanes]\nenabled = true\nmax_lanes = 65\n").is_err());
+        assert!(
+            Config::from_toml_str("[lanes]\nenabled = true\nprefetch_degree = 0\n").is_err()
+        );
+        assert!(
+            Config::from_toml_str("[lanes]\nenabled = true\nprefetch_distance = 0\n").is_err()
+        );
+        assert!(Config::from_toml_str("[lanes]\nnonsense = 1\n").is_err());
+        // invalid knobs are fine while disabled (validated only when on)
+        assert!(Config::from_toml_str("[lanes]\nmax_lanes = 0\n").is_ok());
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //!   run     <workload> [--tier dram|cxl] [--policy tpp|hybrid|naive|none]
 //!           [--keep-warm] run one workload on one tier; with a migration
 //!           policy (from the `[migration]` config section or --policy)
-//!           the epoch engine promotes/demotes pages at runtime; with
+//!           the epoch engine promotes/demotes pages at runtime;
+//!           [--lanes K] [--prefetch] enable the lane scheduler (+ stride
+//!           prefetcher) so annotated workloads overlap CXL stalls with
+//!           compute (greppable LANES counter line); with
 //!           --keep-warm the shim's sandbox capture + warm-pool replay
 //!           report what keep-alive amortizes; with the Trace-IR on
 //!           (default) the run records its stream and verifies replay
@@ -34,7 +37,9 @@
 //!           counter line);
 //!           [--faults seeded|<spec>|<file>] deterministic fault
 //!           injection — node loss/rejoin and CXL-link derating with
-//!           graceful degradation (greppable FAULTS counter line)
+//!           graceful degradation (greppable FAULTS counter line);
+//!           [--lanes K] [--prefetch] lane-based latency hiding on every
+//!           engine run (greppable LANES counter line)
 //!   telemetry summarize <trace.json>     roll up an exported trace:
 //!           per-kind event counts/durations, series stats
 //!   list                                 workload registry
@@ -192,11 +197,44 @@ fn apply_policy_arg(cfg: &mut Config, args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `--lanes K` / `--prefetch`: turn the `[lanes]` section on from the
+/// command line (either flag enables the scheduler).
+fn apply_lanes_args(cfg: &mut Config, args: &Args) -> Result<(), String> {
+    if let Some(n) = args.opt("lanes") {
+        cfg.lanes.max_lanes =
+            n.parse().map_err(|_| format!("--lanes expects an integer, got {n:?}"))?;
+        cfg.lanes.enabled = true;
+    }
+    if args.flag("prefetch") {
+        cfg.lanes.prefetch = true;
+        cfg.lanes.enabled = true;
+    }
+    if cfg.lanes.enabled {
+        cfg.validate()?;
+    }
+    Ok(())
+}
+
+/// Attach the lane scheduler (+ prefetcher) per `[lanes]`, capped by the
+/// workload's annotated parallelism. Returns the effective lane count.
+fn apply_lanes(cfg: &Config, machine: &mut porter::sim::Machine, hints: usize) -> usize {
+    if !cfg.lanes.enabled {
+        return 1;
+    }
+    let k = cfg.lanes.max_lanes.min(hints).max(1);
+    machine.set_lanes(k);
+    if cfg.lanes.prefetch {
+        machine.set_prefetcher(cfg.lanes.prefetch_degree, cfg.lanes.prefetch_distance);
+    }
+    k
+}
+
 fn cmd_run(args: &Args) -> i32 {
     let mut cfg = load_config(args);
     let Some(w) = workload_arg(args, scale_of(args)) else { return 2 };
     let Some(tier) = tier_arg(args) else { return 2 };
-    if let Err(e) = apply_policy_arg(&mut cfg, args) {
+    if let Err(e) = apply_policy_arg(&mut cfg, args).and_then(|()| apply_lanes_args(&mut cfg, args))
+    {
         eprintln!("config error: {e}");
         return 2;
     }
@@ -205,6 +243,7 @@ fn cmd_run(args: &Args) -> i32 {
     // knobs bridge in exactly as on the serving path, so `run` numbers
     // stay comparable to `serve`/`cluster` for the same config file.
     let (mut machine, policy_name) = build_run_machine(&cfg, tier);
+    let eff_lanes = apply_lanes(&cfg, &mut machine, w.lane_hints());
     let tele_out = telemetry_out(args, &cfg);
     if tele_out.is_some() || cfg.telemetry.enabled {
         machine
@@ -267,12 +306,24 @@ fn cmd_run(args: &Args) -> i32 {
         report.ping_pongs,
         report.migration_bytes
     );
+    // stable machine-readable lane line (CI smoke greps this)
+    println!(
+        "LANES enabled={} lanes={} overlapped_ns={:.0} lane_switches={} prefetch_issued={} \
+         prefetch_useful={}",
+        cfg.lanes.enabled,
+        eff_lanes,
+        report.overlapped_ns,
+        report.lane_switches,
+        report.prefetch_issued,
+        report.prefetch_useful
+    );
     // replay verification: drive an identically configured machine from
     // the recording and require a field-for-field identical report —
     // the replay-identity invariant, checked on every `run` (CI greps
     // the TRACE counter line so a silently-dead replay path fails)
     if let Some(trace) = &trace {
         let (mut m2, _) = build_run_machine(&cfg, tier);
+        apply_lanes(&cfg, &mut m2, w.lane_hints());
         m2.replay(trace);
         let replayed = m2.report();
         let identical = replayed == report && trace.checksum == checksum;
@@ -451,11 +502,17 @@ fn cmd_trace(args: &Args) -> i32 {
         }
         Some("replay") => {
             let Some(tier) = tier_arg(args) else { return 2 };
-            if let Err(e) = apply_policy_arg(&mut cfg, args) {
+            if let Err(e) =
+                apply_policy_arg(&mut cfg, args).and_then(|()| apply_lanes_args(&mut cfg, args))
+            {
                 eprintln!("config error: {e}");
                 return 2;
             }
             let (mut machine, policy_name) = build_run_machine(&cfg, tier);
+            // no workload body here (the trace may come from a file), so
+            // the lane cap is [lanes] max_lanes; LANE events in the
+            // stream fold modulo that count either way
+            apply_lanes(&cfg, &mut machine, usize::MAX);
             let t0 = std::time::Instant::now();
             machine.replay(&trace);
             let report = machine.report();
@@ -739,6 +796,7 @@ fn cmd_cluster(args: &Args) -> i32 {
                 spec.to_string()
             };
         }
+        apply_lanes_args(&mut cfg, args)?;
         Ok(())
     })();
     if let Err(e) = parse_result {
@@ -796,6 +854,15 @@ fn cmd_cluster(args: &Args) -> i32 {
                 report.availability,
                 report.fault_retried,
                 report.degraded_epochs
+            );
+            println!(
+                "LANES enabled={} overlapped_ns={:.0} lane_switches={} prefetch_issued={} \
+                 prefetch_useful={}",
+                report.lanes_enabled,
+                report.overlapped_ns,
+                report.lane_switches,
+                report.prefetch_issued,
+                report.prefetch_useful
             );
             if tele.is_enabled() {
                 println!("{}", tele.counter_line());

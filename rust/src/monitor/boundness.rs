@@ -72,6 +72,10 @@ mod tests {
             migration_bytes: 0,
             peak_dram_bytes: 0,
             peak_cxl_bytes: 0,
+            overlapped_ns: 0.0,
+            lane_switches: 0,
+            prefetch_issued: 0,
+            prefetch_useful: 0,
         }
     }
 

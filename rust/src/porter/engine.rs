@@ -12,8 +12,8 @@
 use std::time::Instant;
 
 use crate::config::{
-    Config, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig, TelemetryConfig,
-    TraceConfig,
+    Config, LanesConfig, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig,
+    TelemetryConfig, TraceConfig,
 };
 use crate::mem::migrate::MigrationEngine;
 use crate::mem::tier::TierKind;
@@ -34,6 +34,7 @@ pub struct EngineConfig {
     pub migration: MigrationConfig,
     pub trace: TraceConfig,
     pub telemetry: TelemetryConfig,
+    pub lanes: LanesConfig,
 }
 
 impl From<&Config> for EngineConfig {
@@ -45,6 +46,7 @@ impl From<&Config> for EngineConfig {
             migration: cfg.migration.clone(),
             trace: cfg.trace.clone(),
             telemetry: cfg.telemetry.clone(),
+            lanes: cfg.lanes.clone(),
         }
     }
 }
@@ -136,6 +138,16 @@ pub fn run_invocation(
         }
     };
     machine.set_tick_interval_ns(cfg.monitor.aggregation_interval_ns as f64);
+    // `[lanes]`: per-invocation lane scheduler + optional prefetcher.
+    // The effective lane count is capped by the workload's annotated
+    // parallelism, so sequential functions stay on the scalar path's
+    // arithmetic shape (K lanes with no switches = serial).
+    if cfg.lanes.enabled {
+        machine.set_lanes(cfg.lanes.max_lanes.min(spec.body.lane_hints()).max(1));
+        if cfg.lanes.prefetch {
+            machine.set_prefetcher(cfg.lanes.prefetch_degree, cfg.lanes.prefetch_distance);
+        }
+    }
     if profiled {
         machine.attach_observer(Box::new(Damon::new(
             &cfg.monitor,

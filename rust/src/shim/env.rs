@@ -103,6 +103,17 @@ impl<'s> Env<'s> {
         }
     }
 
+    /// Lane annotation: subsequent events run on `lane`, after every
+    /// event previously charged to a lane in `after`'s mask. Sinks
+    /// without a lane model (and machines with `[lanes]` off) ignore it.
+    #[inline]
+    pub fn lane(&mut self, lane: u8, after: u64) {
+        self.sink.lane(lane, after);
+        if let Some(r) = &mut self.recorder {
+            r.lane(lane, after);
+        }
+    }
+
     #[inline]
     pub(crate) fn emit(&mut self, addr: u64, bytes: u32, write: bool) {
         self.accesses += 1;

@@ -1,0 +1,208 @@
+//! Lane-based latency hiding: per-lane virtual clocks with a max merge.
+//!
+//! The scalar clock in [`crate::sim::Machine`] charges every access and
+//! compute cost in program order — a CXL miss stalls *everything* that
+//! follows it. Real functions are not that serial: independent request
+//! handling, parallel gathers, and decoupled streaming all let compute
+//! drain while a slow-tier miss is outstanding. The [`LaneScheduler`]
+//! models that slack with K in-flight *lanes* per invocation: the
+//! workload annotates its stream with lane ids plus happens-after masks
+//! (see the `Sink::lane` hook), every cost is charged to the current
+//! lane's clock, and wall time is the max over lanes instead of the sum.
+//! A miss on lane A only stalls lanes whose mask includes A.
+//!
+//! The scheduler never touches the disabled path: a machine without one
+//! performs bit-identical arithmetic to the pre-lane simulator, which is
+//! what keeps the `[lanes]`-off determinism guarantees (report + fleet
+//! token) intact.
+
+/// Per-invocation lane state: K virtual clocks, a current lane, and the
+/// serial-vs-overlapped accounting the `LANES` counters report.
+#[derive(Debug, Clone)]
+pub struct LaneScheduler {
+    /// Per-lane virtual clocks (ns). Lane ids from annotations fold into
+    /// this range by modulo, so workloads can annotate up to 64 logical
+    /// lanes regardless of the configured K.
+    clocks: Vec<f64>,
+    /// Running max over the clocks — the lane-merged wall frontier.
+    wall: f64,
+    /// Lane the next access/compute cost is charged to.
+    cur: usize,
+    /// Sum of every charged cost: what the scalar clock would have
+    /// accumulated for the same stream.
+    serial_ns: f64,
+    /// Wall advance attributable to lane execution (excludes barriers).
+    lane_wall_ns: f64,
+    /// Lane-switch annotations applied.
+    switches: u64,
+}
+
+impl LaneScheduler {
+    pub fn new(lanes: usize) -> LaneScheduler {
+        let lanes = lanes.max(1);
+        LaneScheduler {
+            clocks: vec![0.0; lanes],
+            wall: 0.0,
+            cur: 0,
+            serial_ns: 0.0,
+            lane_wall_ns: 0.0,
+            switches: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Current lane's clock: the timestamp subsequent costs extend and
+    /// the time observers/bandwidth debits should be stamped with.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.clocks[self.cur]
+    }
+
+    /// Lane-merged wall frontier (max over lanes).
+    #[inline]
+    pub fn wall_ns(&self) -> f64 {
+        self.wall
+    }
+
+    /// Latency hidden by the lanes so far: the serial-sum cost minus the
+    /// wall advance it actually produced. Zero with one lane.
+    pub fn overlapped_ns(&self) -> f64 {
+        (self.serial_ns - self.lane_wall_ns).max(0.0)
+    }
+
+    /// Apply a lane annotation: events now run on `lane`, after every
+    /// event previously charged to a lane in `after_mask` (bit i = lane
+    /// i; ids and mask bits beyond K fold by modulo). The happens-after
+    /// edge is a clock merge — the target lane can never start before
+    /// the lanes it depends on have drained.
+    #[inline]
+    pub fn switch(&mut self, lane: u8, after_mask: u64) {
+        let k = self.clocks.len();
+        self.cur = lane as usize % k;
+        let mut t = self.clocks[self.cur];
+        let mut mask = after_mask;
+        while mask != 0 {
+            let bit = mask.trailing_zeros() as usize;
+            t = t.max(self.clocks[bit % k]);
+            mask &= mask - 1;
+        }
+        self.clocks[self.cur] = t;
+        self.switches += 1;
+    }
+
+    /// Charge `ns` of cost to the current lane.
+    #[inline]
+    pub fn advance(&mut self, ns: f64) {
+        let c = self.clocks[self.cur] + ns;
+        self.clocks[self.cur] = c;
+        if c > self.wall {
+            self.lane_wall_ns += c - self.wall;
+            self.wall = c;
+        }
+        self.serial_ns += ns;
+    }
+
+    /// Synchronization barrier (alloc/free syscalls, migration stalls):
+    /// every lane joins at `t` — no lane may run past a point the whole
+    /// invocation is known to have reached.
+    #[inline]
+    pub fn barrier(&mut self, t: f64) {
+        for c in &mut self.clocks {
+            if *c < t {
+                *c = t;
+            }
+        }
+        if t > self.wall {
+            self.wall = t;
+        }
+    }
+
+    /// Hard reset of every lane clock to `t` (colocation restores a
+    /// stream's clock, possibly backward; overlap accounting keeps its
+    /// history).
+    pub fn reset_to(&mut self, t: f64) {
+        for c in &mut self.clocks {
+            *c = t;
+        }
+        self.wall = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_lane_is_serial() {
+        let mut s = LaneScheduler::new(1);
+        s.advance(10.0);
+        s.switch(3, 0xFF); // folds to lane 0; merge is a no-op
+        s.advance(5.0);
+        assert_eq!(s.wall_ns(), 15.0);
+        assert_eq!(s.overlapped_ns(), 0.0);
+    }
+
+    #[test]
+    fn independent_lanes_overlap() {
+        let mut s = LaneScheduler::new(2);
+        s.switch(0, 0b01);
+        s.advance(100.0);
+        s.switch(1, 0b10); // independent of lane 0
+        s.advance(80.0);
+        // wall is the max, not the sum; 80ns hid under the 100ns stall
+        assert_eq!(s.wall_ns(), 100.0);
+        assert_eq!(s.overlapped_ns(), 80.0);
+    }
+
+    #[test]
+    fn happens_after_mask_serializes() {
+        let mut s = LaneScheduler::new(4);
+        s.switch(0, 0b0001);
+        s.advance(100.0);
+        s.switch(1, 0b0011); // lane 1 waits for lane 0
+        s.advance(50.0);
+        assert_eq!(s.wall_ns(), 150.0);
+        assert_eq!(s.overlapped_ns(), 0.0);
+    }
+
+    #[test]
+    fn barrier_joins_all_lanes() {
+        let mut s = LaneScheduler::new(2);
+        s.switch(0, 0);
+        s.advance(100.0);
+        s.barrier(100.0);
+        s.switch(1, 0b10);
+        s.advance(10.0);
+        // lane 1 starts at the barrier, not at 0
+        assert_eq!(s.wall_ns(), 110.0);
+        assert_eq!(s.overlapped_ns(), 0.0);
+    }
+
+    #[test]
+    fn lane_ids_fold_modulo_k() {
+        let mut s = LaneScheduler::new(2);
+        s.switch(5, 0); // 5 % 2 == 1
+        s.advance(7.0);
+        assert_eq!(s.now(), 7.0);
+        s.switch(0, 1 << 7); // mask bit 7 folds to lane 1
+        assert_eq!(s.now(), 7.0, "merge pulled lane 0 up to lane 1's clock");
+    }
+
+    #[test]
+    fn overlap_never_negative() {
+        let mut s = LaneScheduler::new(3);
+        for i in 0..30u8 {
+            s.switch(i % 3, 1 << (i % 3));
+            s.advance((i as f64) * 1.5);
+        }
+        assert!(s.overlapped_ns() >= 0.0);
+        assert!(s.wall_ns() <= 30.0 * 29.0 / 2.0 * 1.5);
+    }
+}

@@ -8,8 +8,12 @@
 
 pub mod cache;
 pub mod colocate;
+pub mod lanes;
 pub mod machine;
+pub mod prefetch;
 
 pub use cache::Cache;
 pub use colocate::{colocate, ColocationReport};
+pub use lanes::LaneScheduler;
 pub use machine::{Machine, RunReport};
+pub use prefetch::StridePrefetcher;

@@ -29,8 +29,8 @@ use crate::trace::Sink;
 use crate::util::json::Json;
 
 /// Serialization-format version; [`AccessTrace::from_json`] rejects
-/// anything else.
-pub const TRACE_IR_VERSION: u64 = 1;
+/// anything else. v2 added LANE events (lane id + happens-after mask).
+pub const TRACE_IR_VERSION: u64 = 2;
 
 pub(crate) const KIND_READ: u8 = 0;
 pub(crate) const KIND_WRITE: u8 = 1;
@@ -39,10 +39,12 @@ pub(crate) const KIND_ALLOC: u8 = 3;
 pub(crate) const KIND_FREE: u8 = 4;
 pub(crate) const KIND_PHASE: u8 = 5;
 pub(crate) const KIND_TICK: u8 = 6;
+pub(crate) const KIND_LANE: u8 = 7;
 
 /// One packed event, 16 bytes. For READ/WRITE `a` is the address and
 /// `b` the byte count; for COMPUTE `a` is the cycle count; for
-/// ALLOC/FREE/PHASE `a` indexes the side tables; TICK carries nothing.
+/// ALLOC/FREE/PHASE `a` indexes the side tables; TICK carries nothing;
+/// for LANE `a` is the happens-after mask and `b` the lane id.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PackedEvent {
     pub(crate) a: u64,
@@ -160,6 +162,15 @@ impl AccessTrace {
         self.events.push(PackedEvent { a: 0, b: 0, kind: KIND_TICK });
     }
 
+    /// Lane annotation (v2): subsequent events run on `lane`, after the
+    /// lanes in `after_mask`. Sinks without a lane model replay it as a
+    /// no-op, so v2 traces stay replay-identical on the scalar clock.
+    /// Masks must stay under 2^53 (the f64-backed JSON codec) — lane
+    /// ids are capped at 64 well before that matters.
+    pub fn push_lane(&mut self, lane: u8, after_mask: u64) {
+        self.events.push(PackedEvent { a: after_mask, b: lane as u32, kind: KIND_LANE });
+    }
+
     // ---- replay ----
 
     /// Replay the whole recording into a sink.
@@ -201,6 +212,7 @@ impl AccessTrace {
                 }
                 KIND_PHASE => sink.phase(&self.phases[e.a as usize]),
                 KIND_TICK => {}
+                KIND_LANE => sink.lane(e.b as u8, e.a),
                 _ => unreachable!(),
             }
         }
@@ -352,6 +364,11 @@ impl AccessTrace {
                     ])
                 }
                 KIND_TICK => Json::arr([Json::num(e.kind as f64)]),
+                KIND_LANE => Json::arr([
+                    Json::num(e.kind as f64),
+                    Json::num(e.b as f64),
+                    Json::num(e.a as f64),
+                ]),
                 _ => Json::arr([Json::num(e.kind as f64), Json::num(e.a as f64)]),
             };
             events.push(ev);
@@ -479,6 +496,9 @@ impl AccessTrace {
                     PackedEvent { a: idx, b: 0, kind }
                 }
                 KIND_TICK => PackedEvent { a: 0, b: 0, kind },
+                KIND_LANE => {
+                    PackedEvent { a: num_at(2)? as u64, b: num_at(1)? as u32, kind }
+                }
                 other => return Err(format!("trace: events[{i}] unknown kind {other}")),
             };
             events.push(e);
@@ -556,6 +576,7 @@ pub fn interleave(traces: &[&AccessTrace], chunk: usize, page_bytes: u64) -> Acc
                         out.push_phase(&format!("t{i}/{}", t.phases[e.a as usize]));
                     }
                     KIND_TICK => out.push_tick(),
+                    KIND_LANE => out.push_lane(e.b as u8, e.a),
                     _ => unreachable!(),
                 }
             }
@@ -637,6 +658,11 @@ impl Sink for TraceRecorder {
     fn phase(&mut self, name: &str) {
         self.flush_compute();
         self.trace.push_phase(name);
+    }
+
+    fn lane(&mut self, lane: u8, after_mask: u64) {
+        self.flush_compute();
+        self.trace.push_lane(lane, after_mask);
     }
 }
 
@@ -774,6 +800,25 @@ mod tests {
         let t = rec.finish();
         assert_eq!(t.events.len(), 3, "exact mode must not merge computes");
         assert_eq!(t.compute_cycles(), 30);
+    }
+
+    #[test]
+    fn lane_survives_roundtrip_and_replays_as_noop() {
+        let mut t = AccessTrace::default();
+        t.push_lane(3, 0b1011);
+        t.push_access(0x10, 4, false);
+        t.push_lane(0, 0);
+        let back = AccessTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        // sinks without a lane model (NullSink) replay it as a no-op
+        let mut sink = NullSink::default();
+        back.replay(&mut sink);
+        assert_eq!(sink.accesses, 1);
+        // the exact recorder re-captures the annotation
+        let mut rec = TraceRecorder::exact();
+        back.replay(&mut rec);
+        let again = rec.finish();
+        assert_eq!(again.events, t.events);
     }
 
     #[test]

@@ -42,6 +42,12 @@ pub trait Sink {
     fn compute(&mut self, cycles: u64);
     /// Named phase marker (e.g. "build", "iterate") for heatmap axes.
     fn phase(&mut self, _name: &str) {}
+    /// Lane annotation: subsequent events run on `lane`, after every
+    /// event previously charged to a lane in `after_mask` (bit i = lane
+    /// i). Sinks without a lane model ignore it — the default no-op is
+    /// what keeps lane-annotated streams bit-identical on the scalar
+    /// clock when `[lanes]` is disabled.
+    fn lane(&mut self, _lane: u8, _after_mask: u64) {}
 }
 
 /// A sink that discards everything — used to measure workload-side
@@ -101,6 +107,11 @@ impl<'a> Sink for TeeSink<'a> {
     fn phase(&mut self, name: &str) {
         self.a.phase(name);
         self.b.phase(name);
+    }
+
+    fn lane(&mut self, lane: u8, after_mask: u64) {
+        self.a.lane(lane, after_mask);
+        self.b.lane(lane, after_mask);
     }
 }
 

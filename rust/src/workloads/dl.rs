@@ -53,6 +53,10 @@ impl Workload for DlTrain {
         (self.param_count() * 12 + self.batch * self.layers.iter().sum::<usize>() * 4) as u64
     }
 
+    fn lane_hints(&self) -> usize {
+        4
+    }
+
     fn trace_fingerprint(&self) -> u64 {
         let h = self.layers.iter().fold(0xD17, |h, &l| mix(h, l as u64));
         mix(mix(mix(h, self.batch as u64), self.steps as u64), self.flops_per_cycle)
@@ -102,13 +106,21 @@ impl Workload for DlTrain {
                 a_off = a_off.saturating_sub(self.batch * din);
             }
             env.phase("update");
-            // SGD+momentum: stream weights, grads, momentum
-            weights.touch_range(0, p, false, env);
-            grads.touch_range(0, p, false, env);
-            moment.touch_range(0, p, false, env);
-            moment.touch_range(0, p, true, env);
-            weights.touch_range(0, p, true, env);
-            env.compute(3 * p as u64 / self.flops_per_cycle);
+            // SGD+momentum is embarrassingly parallel over parameter
+            // chunks: each quarter streams weights/grads/momentum on its
+            // own lane (the phase marker already joined the backward
+            // pass, so 1<<c masks carry no stale history)
+            let chunk = p / 4;
+            for c in 0..4usize {
+                let (lo, hi) = (c * chunk, if c == 3 { p } else { (c + 1) * chunk });
+                env.lane(c as u8, 1 << c);
+                weights.touch_range(lo, hi, false, env);
+                grads.touch_range(lo, hi, false, env);
+                moment.touch_range(lo, hi, false, env);
+                moment.touch_range(lo, hi, true, env);
+                weights.touch_range(lo, hi, true, env);
+                env.compute(3 * (hi - lo) as u64 / self.flops_per_cycle);
+            }
             h = mix(h, step as u64);
         }
         mix(h, p as u64)

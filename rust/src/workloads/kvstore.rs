@@ -45,6 +45,10 @@ impl Workload for KvStore {
         (self.capacity() * (8 + self.value_words * 8)) as u64
     }
 
+    fn lane_hints(&self) -> usize {
+        4
+    }
+
     fn trace_fingerprint(&self) -> u64 {
         let h = mix(mix(0x52, self.keys as u64), self.ops as u64);
         let h = mix_bits(mix_bits(h, self.theta), self.write_frac);
@@ -81,10 +85,15 @@ impl Workload for KvStore {
         let mut rng = crate::util::prng::Rng::new(self.seed);
         let mut h = 0u64;
         let mut found = 0u64;
-        for _ in 0..self.ops {
+        for op in 0..self.ops {
             // zipf rank → key (rank 0 = hottest)
             let k = rng.zipf(self.keys as u64, self.theta);
             let is_write = rng.chance(self.write_frac);
+            // independent request handling: reads round-robin over 4
+            // lanes and depend only on their own lane's history; writes
+            // serialize against every lane (store mutation ordering)
+            let lane = (op % 4) as u8;
+            env.lane(lane, if is_write { 0b1111 } else { 1 << lane });
             // per-request server work: parse, hash, build response
             env.compute(110);
             let mut idx = khash(k) & mask;

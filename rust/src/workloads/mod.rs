@@ -26,6 +26,7 @@ pub mod matmul;
 pub mod pagerank;
 pub mod registry;
 pub mod sort;
+pub mod txn_bench;
 
 use crate::shim::env::Env;
 
@@ -41,6 +42,14 @@ pub trait Workload {
     /// Rough live-data footprint in bytes (for scaling decisions).
     fn footprint_hint(&self) -> u64 {
         0
+    }
+
+    /// Independent lanes this workload's stream annotates (`env.lane`).
+    /// 1 = sequential (the default): no useful overlap, the lane
+    /// scheduler degenerates to the scalar clock. The machine runs
+    /// `min(lanes.max_lanes, lane_hints())` lanes.
+    fn lane_hints(&self) -> usize {
+        1
     }
 
     /// Stable identity of this instance's *access stream*, the

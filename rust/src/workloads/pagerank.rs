@@ -53,6 +53,10 @@ impl Workload for PageRank {
         (self.graph.n() * (8 + 8 + 4 + 4) + self.graph.m() * 4) as u64
     }
 
+    fn lane_hints(&self) -> usize {
+        4
+    }
+
     fn trace_fingerprint(&self) -> u64 {
         let h = mix(0x9A6E, self.graph.fingerprint());
         let h = mix(h, self.iterations as u64);
@@ -74,16 +78,20 @@ impl Workload for PageRank {
         env.phase("iterate");
         let base = (1.0 - self.damping) / n as f64;
         for _ in 0..self.iterations {
-            // contribution pass: sequential
+            // contribution pass: sequential, and it must see every
+            // gather of the previous iteration — join all lanes
+            env.lane(0, 0b1111);
             for v in 0..n {
                 let d = out_deg.get(v, env);
                 let r = rank.get(v, env);
                 env.compute(4);
                 contrib.set(v, if d > 0 { r / d as f64 } else { 0.0 }, env);
             }
-            // gather pass: sequential CSR walk (neighbor lists stream at
-            // line granularity), random per-element contrib reads
+            // gather pass: per-vertex gathers are independent (read
+            // contrib, write rank[v]) — round-robin over 4 lanes, each
+            // joining lane 0 so no gather precedes the contribution pass
             for v in 0..n {
+                env.lane((v % 4) as u8, 0b0001 | (1 << (v % 4)));
                 let lo = tg.offsets.get(v, env) as usize;
                 let hi = tg.offsets.get(v + 1, env) as usize;
                 tg.targets.touch_range(lo, hi, false, env);

@@ -14,6 +14,7 @@ use crate::workloads::linpack::Linpack;
 use crate::workloads::matmul::MatMul;
 use crate::workloads::pagerank::PageRank;
 use crate::workloads::sort::Sort;
+use crate::workloads::txn_bench::TxnBench;
 use crate::workloads::Workload;
 
 /// Instance scale.
@@ -32,9 +33,9 @@ pub enum Scale {
 pub const GRAPH_SEED: u64 = 0x7417E2;
 
 /// All registry names, in the order benches iterate them.
-pub const NAMES: [&str; 13] = [
+pub const NAMES: [&str; 14] = [
     "pagerank", "bfs", "cc", "kvstore", "linpack", "dl_train", "sort", "compression",
-    "dl_serve", "matmul", "image", "chameleon", "json",
+    "dl_serve", "matmul", "image", "chameleon", "json", "txn_bench",
 ];
 
 /// Instantiate a workload by registry name.
@@ -96,6 +97,16 @@ pub fn build(name: &str, scale: Scale) -> Option<Box<dyn Workload + Send + Sync>
                     steps: 10,
                     flops_per_cycle: 16,
                 }
+            })
+        }
+        "txn_bench" => {
+            // Default: 8-partition stock table 25.6MiB (> LLC), so CXL
+            // residency stalls every new-order line — the lane
+            // scheduler's frontier workload.
+            Box::new(if small {
+                TxnBench::new(2_000, 2_000)
+            } else {
+                TxnBench::new(400_000, 200_000)
             })
         }
         "dl_serve" => Box::new(if small {

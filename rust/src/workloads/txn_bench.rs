@@ -1,0 +1,170 @@
+//! TPC-C-flavoured transaction bench: warehouse-partitioned new-order
+//! transactions over stock/customer/order tables. Each transaction is
+//! confined to one partition and annotated onto its own lane
+//! (`env.lane`), so transactions on different partitions are genuinely
+//! independent — the workload built to stress the lane scheduler's
+//! throughput-vs-latency frontier. A small fraction of "remote"
+//! transactions touch a second partition and serialize against both
+//! lanes, like TPC-C's remote payments.
+
+use crate::shim::env::Env;
+use crate::workloads::{mix, mix_bits, Workload};
+
+pub struct TxnBench {
+    /// Warehouse partitions (= annotated lanes, capped at 8).
+    pub parts: usize,
+    /// Stock items per partition.
+    pub items_per_part: usize,
+    /// Customers per partition.
+    pub customers_per_part: usize,
+    /// Transactions to run.
+    pub txns: usize,
+    /// Stock lines read+updated per transaction.
+    pub lines_per_txn: usize,
+    /// Fraction of transactions that also touch a remote partition.
+    pub remote_frac: f64,
+    pub seed: u64,
+}
+
+impl TxnBench {
+    pub fn new(items_per_part: usize, txns: usize) -> TxnBench {
+        TxnBench {
+            parts: 8,
+            items_per_part,
+            customers_per_part: (items_per_part / 16).max(64),
+            txns,
+            lines_per_txn: 10,
+            remote_frac: 0.05,
+            seed: 0x7C2C,
+        }
+    }
+
+    fn lanes(&self) -> usize {
+        self.parts.clamp(1, 8)
+    }
+}
+
+impl Workload for TxnBench {
+    fn name(&self) -> &str {
+        "txn_bench"
+    }
+
+    fn footprint_hint(&self) -> u64 {
+        let stock = self.parts * self.items_per_part * 8;
+        let customers = self.parts * self.customers_per_part * 8;
+        let orders = self.txns * 2 * 8;
+        (stock + customers + orders) as u64
+    }
+
+    fn lane_hints(&self) -> usize {
+        self.lanes()
+    }
+
+    fn trace_fingerprint(&self) -> u64 {
+        let h = mix(mix(0x7C2C, self.parts as u64), self.items_per_part as u64);
+        let h = mix(mix(h, self.customers_per_part as u64), self.txns as u64);
+        let h = mix_bits(mix(h, self.lines_per_txn as u64), self.remote_frac);
+        mix(h, self.seed)
+    }
+
+    fn run(&self, env: &mut Env) -> u64 {
+        let lanes = self.lanes();
+        let n_stock = self.parts * self.items_per_part;
+        let n_cust = self.parts * self.customers_per_part;
+        env.phase("load");
+        let mut stock = env.tvec::<u64>(n_stock, 0, "txn/stock");
+        let mut customers = env.tvec::<u64>(n_cust, 0, "txn/customers");
+        let mut orders = env.tvec::<u64>(self.txns * 2, 0, "txn/orders");
+        // seed initial inventory and balances (traced: the function
+        // materializes its tables from the payload)
+        for i in 0..n_stock {
+            stock.set(i, 100 + (i as u64 % 50), env);
+            env.compute(2);
+        }
+        for c in 0..n_cust {
+            customers.set(c, 1_000, env);
+            env.compute(2);
+        }
+
+        env.phase("serve");
+        let mut rng = crate::util::prng::Rng::new(self.seed);
+        let mut h = 0u64;
+        for t in 0..self.txns {
+            // home partition round-robins → perfectly balanced lanes
+            let p = t % self.parts;
+            let lane = (p % lanes) as u8;
+            let remote = rng.chance(self.remote_frac);
+            let other = (p + 1 + rng.next_u64() as usize % (self.parts - 1).max(1)) % self.parts;
+            // draw all randomness before annotating so the stream shape
+            // is independent of lane folding
+            let cust = p * self.customers_per_part
+                + rng.next_u64() as usize % self.customers_per_part;
+            if remote && self.parts > 1 {
+                // remote txn: serialize against both partitions' lanes
+                env.lane(lane, (1 << lane) | (1 << (other % lanes)));
+            } else {
+                // local txn: depends only on its own partition's history
+                env.lane(lane, 1 << lane);
+            }
+            // read the customer, then read+decrement stock lines
+            let mut total = customers.get(cust, env);
+            env.compute(150); // parse + begin + index lookups
+            for l in 0..self.lines_per_txn {
+                let part = if remote && l == 0 { other } else { p };
+                let item =
+                    part * self.items_per_part + rng.next_u64() as usize % self.items_per_part;
+                let qty = stock.get(item, env);
+                env.compute(40);
+                stock.set(item, if qty > 0 { qty - 1 } else { 90 }, env);
+                total = total.wrapping_add(qty);
+            }
+            customers.set(cust, total, env);
+            // append the order record
+            orders.set(t * 2, cust as u64, env);
+            orders.set(t * 2 + 1, total, env);
+            env.compute(80); // commit bookkeeping
+            h = mix(h, total);
+        }
+        mix(h, self.txns as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn runs_and_is_deterministic() {
+        let w = TxnBench::new(2_000, 1_000);
+        let mut sink = NullSink::default();
+        let mut env = Env::new(4096, &mut sink);
+        let c = w.run(&mut env);
+        assert_ne!(c, 0);
+        let mut sink2 = NullSink::default();
+        let mut env2 = Env::new(4096, &mut sink2);
+        assert_eq!(c, w.run(&mut env2));
+    }
+
+    #[test]
+    fn annotates_independent_lanes() {
+        use crate::sim::Machine;
+        use crate::config::MachineConfig;
+        use crate::mem::tier::TierKind;
+        let w = TxnBench::new(2_000, 1_000);
+        assert_eq!(w.lane_hints(), 8);
+        let mut m = Machine::all_in(&MachineConfig::default(), TierKind::Cxl);
+        m.set_lanes(w.lane_hints());
+        let mut env = Env::new(4096, &mut m);
+        w.run(&mut env);
+        let r = m.report();
+        assert!(r.lane_switches > 0, "stream must carry lane annotations");
+        assert!(r.overlapped_ns > 0.0, "independent txns must overlap");
+    }
+
+    #[test]
+    fn footprint_scales_with_partitions() {
+        let big = TxnBench { parts: 16, ..TxnBench::new(10_000, 1) };
+        assert!(big.footprint_hint() > TxnBench::new(10_000, 1).footprint_hint());
+    }
+}

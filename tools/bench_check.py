@@ -130,6 +130,19 @@ def check_value(path: str, row_id: str, key: str, value) -> None:
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
         return
+    if "overlap" in lk:
+        # lane-scheduler overlap: *_ns keys are absolute hidden
+        # nanoseconds (non-negative, unbounded), everything else
+        # (overlap_frac) is hidden/(hidden + wall) — a fraction by
+        # construction. Checked BEFORE the generic "frac" rule so the
+        # dedicated message names the metric and overlapped_ns is not
+        # squeezed into [0,1]
+        if lk.endswith("_ns"):
+            if float(value) < 0.0:
+                fail(f"{path}: {row_id}.{key} = {value} negative overlap time")
+        elif not 0.0 <= float(value) <= 1.0 + 1e-9:
+            fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
+        return
     if any(tag in lk for tag in ("rate", "occupancy", "frac")):
         if not 0.0 <= float(value) <= 1.0 + 1e-9:
             fail(f"{path}: {row_id}.{key} = {value} outside [0,1]")
@@ -241,6 +254,11 @@ def self_test() -> int:
         ("availability", 1.0, False),  # fault-free runs report exactly 1.0
         ("availability", 1.5, True),
         ("availability", -0.1, True),
+        ("overlap_frac", 0.42, False),
+        ("overlap_frac", 0.0, False),  # serial runs hide nothing
+        ("overlap_frac", 1.2, True),
+        ("overlapped_ns", 3.1e9, False),  # absolute ns: unbounded above
+        ("overlapped_ns", -1.0, True),
         ("p99_ns", -1, True),
         ("delta_pct", -40.0, False),
         ("p50_ns", float("inf"), True),
