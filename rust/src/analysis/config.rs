@@ -1,0 +1,138 @@
+//! `detlint.toml` — configuration for the determinism lints.
+//!
+//! Parsed with the in-crate TOML subset ([`crate::config::toml`]), which
+//! has no arrays, so every list is a comma-separated string (the same
+//! idiom as `[provision] ladder`). Path entries are prefixes of
+//! forward-slash paths relative to the directory holding the config file
+//! (the repo root for the checked-in `detlint.toml`).
+
+use crate::config::toml::TomlDoc;
+
+/// Everything the lint pass needs to know beyond the source text.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetlintConfig {
+    /// Skip `#[cfg(test)]` items: tests may time themselves and iterate
+    /// freely — the lints defend *simulation decision paths*.
+    pub skip_test_code: bool,
+    /// Directory roots to walk for `.rs` files.
+    pub scan: Vec<String>,
+    /// Path prefixes excluded from the walk (the lint's own fixture
+    /// corpus is deliberately full of violations).
+    pub exclude: Vec<String>,
+    /// D1: module prefixes whose hash-map iteration order is declared
+    /// harmless (none today — per-site allows carry the reasons).
+    pub d1_order_insensitive: Vec<String>,
+    /// D2: the only paths allowed to read host time.
+    pub d2_host_time_ok: Vec<String>,
+    /// D3: functions that run in deterministic merge order, where f64
+    /// accumulation across shard results is sound.
+    pub d3_settle_fns: Vec<String>,
+    /// D4: modules that own the seeded generators.
+    pub d4_seeded_modules: Vec<String>,
+    /// D5: functions allowed to mix the determinism token.
+    pub d5_mix_fns: Vec<String>,
+}
+
+impl Default for DetlintConfig {
+    fn default() -> DetlintConfig {
+        DetlintConfig {
+            skip_test_code: true,
+            scan: list("rust/src,rust/benches"),
+            exclude: list("rust/src/analysis/fixtures"),
+            d1_order_insensitive: Vec::new(),
+            d2_host_time_ok: list(
+                "rust/src/bench,rust/src/cli,rust/src/main.rs,\
+                 rust/src/util/hosttime.rs,rust/benches",
+            ),
+            d3_settle_fns: list("settle,finish"),
+            d4_seeded_modules: list("rust/src/util/prng.rs,rust/src/testing"),
+            d5_mix_fns: list("settle,apply_fault"),
+        }
+    }
+}
+
+fn list(csv: &str) -> Vec<String> {
+    csv.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+impl DetlintConfig {
+    pub fn from_toml(text: &str) -> Result<DetlintConfig, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = DetlintConfig::default();
+        for (section, key, value) in doc.entries() {
+            let slot = match (section, key) {
+                ("detlint", "skip_test_code") => {
+                    cfg.skip_test_code = value.as_bool()?;
+                    continue;
+                }
+                ("paths", "scan") => &mut cfg.scan,
+                ("paths", "exclude") => &mut cfg.exclude,
+                ("d1", "order_insensitive") => &mut cfg.d1_order_insensitive,
+                ("d2", "host_time_ok") => &mut cfg.d2_host_time_ok,
+                ("d3", "settle_fns") => &mut cfg.d3_settle_fns,
+                ("d4", "seeded_modules") => &mut cfg.d4_seeded_modules,
+                ("d5", "mix_fns") => &mut cfg.d5_mix_fns,
+                _ => return Err(format!("detlint.toml: unknown key [{section}] {key}")),
+            };
+            *slot = list(value.as_str()?);
+        }
+        if cfg.scan.is_empty() {
+            return Err("detlint.toml: [paths] scan must name at least one root".into());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<DetlintConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        DetlintConfig::from_toml(&text)
+    }
+}
+
+/// Does a normalized relative path fall under one of the prefixes?
+pub fn path_matches(path: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| path == p || path.starts_with(&format!("{p}/")))
+}
+
+/// Normalize a path for matching: forward slashes, no leading `./`.
+pub fn normalize(path: &str) -> String {
+    let p = path.replace('\\', "/");
+    p.strip_prefix("./").unwrap_or(&p).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn committed_config_parses_and_covers_the_defaults() {
+        let text = include_str!("../../../detlint.toml");
+        let cfg = DetlintConfig::from_toml(text).expect("checked-in detlint.toml must parse");
+        assert!(cfg.skip_test_code);
+        assert!(cfg.scan.contains(&"rust/src".to_string()));
+        assert!(cfg.exclude.iter().any(|e| e.contains("fixtures")));
+        assert!(cfg.d2_host_time_ok.iter().any(|p| p.contains("hosttime")));
+        assert!(cfg.d3_settle_fns.contains(&"settle".to_string()));
+        assert!(cfg.d5_mix_fns.contains(&"apply_fault".to_string()));
+    }
+
+    #[test]
+    fn unknown_keys_fail_loudly() {
+        let e = DetlintConfig::from_toml("[detlint]\ntypo_key = true\n").unwrap_err();
+        assert!(e.contains("unknown key"), "{e}");
+    }
+
+    #[test]
+    fn prefix_matching_is_component_wise() {
+        let pre = vec!["rust/src/bench".to_string(), "rust/src/main.rs".to_string()];
+        assert!(path_matches("rust/src/bench/mod.rs", &pre));
+        assert!(path_matches("rust/src/main.rs", &pre));
+        assert!(!path_matches("rust/src/benchmarks.rs", &pre));
+        assert!(!path_matches("rust/src/bench.rs", &pre));
+    }
+
+    #[test]
+    fn normalize_strips_dot_prefix() {
+        assert_eq!(normalize("./rust/src/lib.rs"), "rust/src/lib.rs");
+    }
+}

@@ -1,0 +1,16 @@
+//! A suppression without a reason is a hard error, not a warning — the
+//! whole point of the directive grammar is that every allow documents
+//! *why* the site is safe. Expected: one directive error.
+
+use std::collections::HashMap;
+
+pub struct Shapes {
+    by_key: HashMap<u64, u64>,
+}
+
+impl Shapes {
+    pub fn total(&self) -> u64 {
+        // detlint: allow(D1)
+        self.by_key.values().fold(0, |a, v| a.wrapping_add(*v))
+    }
+}

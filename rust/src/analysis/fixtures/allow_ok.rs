@@ -1,0 +1,26 @@
+//! Allow-directive round trip: real violations, each suppressed with a
+//! written reason — one own-line directive, one trailing. Expected: no
+//! findings, no errors, `allows_used == 2`, nothing stale.
+
+use std::collections::HashMap;
+
+pub struct Shapes {
+    by_key: HashMap<u64, u64>,
+}
+
+impl Shapes {
+    pub fn total(&self) -> u64 {
+        let mut acc = 0u64;
+        // detlint: allow(D1, reason = "wrapping u64 fold is order-insensitive")
+        for v in self.by_key.values() {
+            acc = acc.wrapping_add(*v);
+        }
+        acc
+    }
+
+    pub fn host_probe(&self) -> u64 {
+        let t0 = std::time::Instant::now(); // detlint: allow(D2, reason = "host metric only; excluded from report equality")
+        drop(t0);
+        0
+    }
+}

@@ -1,0 +1,29 @@
+//! D1 known-bad: iterating hash collections on a decision path.
+//! Expected: D1 fires on the `.iter()`, `.keys()`, and `for … in` sites.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Registry {
+    by_name: HashMap<String, u64>,
+    resident: HashSet<u64>,
+}
+
+impl Registry {
+    pub fn total(&self) -> u64 {
+        // BAD: visit order is per-process random; any order-sensitive
+        // consumer (first-wins, tie-break, float sum) diverges per run
+        self.by_name.iter().map(|(_, v)| *v).fold(0, u64::wrapping_add)
+    }
+
+    pub fn first_name(&self) -> Option<String> {
+        // BAD: "first" key is nondeterministic
+        self.by_name.keys().next().cloned()
+    }
+
+    pub fn evict_all(&mut self, out: &mut Vec<u64>) {
+        // BAD: eviction order drives downstream placement decisions
+        for page in &self.resident {
+            out.push(*page);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! D1 known-good twin: lookup-only maps and sorted iteration.
+//! Expected: no findings — point lookups and inserts are always legal,
+//! and order-sensitive walks go through a sorted `Vec`.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Registry {
+    by_name: HashMap<String, u64>,
+    resident: HashSet<u64>,
+    /// Insertion-ordered mirror for deterministic walks.
+    order: Vec<String>,
+}
+
+impl Registry {
+    pub fn insert(&mut self, name: String, v: u64) {
+        if self.by_name.insert(name.clone(), v).is_none() {
+            self.order.push(name);
+        }
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<u64> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn is_resident(&self, page: u64) -> bool {
+        self.resident.contains(&page)
+    }
+
+    pub fn total(&self) -> u64 {
+        // GOOD: the walk follows the deterministic insertion order
+        self.order.iter().filter_map(|n| self.by_name.get(n)).fold(0, |a, v| a.wrapping_add(*v))
+    }
+}

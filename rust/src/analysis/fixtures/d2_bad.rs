@@ -1,0 +1,19 @@
+//! D2 known-bad: host-clock reads on a simulation path.
+//! Expected: D2 fires on the `Instant::now()`, `SystemTime`, and
+//! `.elapsed()` sites.
+
+use std::time::Instant;
+
+pub fn run_epoch(work: impl Fn()) -> u64 {
+    // BAD: wall-clock read feeding a value a report could observe
+    let started = Instant::now();
+    work();
+    // BAD: and reading it back
+    started.elapsed().as_micros() as u64
+}
+
+pub fn stamp() -> u64 {
+    // BAD: wall-clock epoch on a decision path
+    let t = std::time::SystemTime::now();
+    t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}

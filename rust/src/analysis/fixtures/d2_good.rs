@@ -1,0 +1,23 @@
+//! D2 known-good twin: virtual time only; `Duration` the value type is
+//! fine anywhere. Expected: no findings.
+
+use std::time::Duration;
+
+pub struct Clock {
+    now_ns: u64,
+}
+
+impl Clock {
+    pub fn advance(&mut self, by: Duration) {
+        // GOOD: simulation time is a counter, not a wall-clock read
+        self.now_ns += by.as_nanos() as u64;
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    pub fn budget() -> Duration {
+        Duration::from_micros(250)
+    }
+}

@@ -1,0 +1,32 @@
+//! D3 known-bad: float accumulation in a thread-spawning file, outside
+//! settle-ordered code. Expected: D3 fires on the `+=` and the
+//! `.sum::<f64>()`.
+
+pub struct ShardStat {
+    wait_sum_ns: f64,
+    pub events: u64,
+}
+
+pub fn fan_out(shards: &mut [ShardStat]) {
+    std::thread::scope(|scope| {
+        for shard in shards.iter_mut() {
+            scope.spawn(move || {
+                shard.events += 1;
+            });
+        }
+    });
+}
+
+impl ShardStat {
+    pub fn absorb(&mut self, other: &ShardStat) {
+        // BAD: merge order is shard-completion order → bits differ per run
+        self.wait_sum_ns += other.wait_sum_ns;
+        self.events += other.events;
+    }
+}
+
+pub fn grand_total(stats: &[ShardStat]) -> f64 {
+    // BAD: f64 addition is not associative; slice order is fine but this
+    // file's stats arrive in completion order upstream
+    stats.iter().map(|s| s.wait_sum_ns).sum::<f64>()
+}

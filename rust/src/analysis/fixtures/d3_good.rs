@@ -1,0 +1,34 @@
+//! D3 known-good twin: the same accumulation, but inside `settle()` —
+//! the epoch-barrier merge that visits shards in index order — plus
+//! integer accumulation, which is associative and always legal.
+//! Expected: no findings.
+
+pub struct ShardStat {
+    wait_sum_ns: f64,
+    pub events: u64,
+}
+
+pub fn fan_out(shards: &mut [ShardStat]) {
+    std::thread::scope(|scope| {
+        for shard in shards.iter_mut() {
+            scope.spawn(move || {
+                shard.events += 1;
+            });
+        }
+    });
+}
+
+pub fn settle(stats: &mut [ShardStat]) -> f64 {
+    // GOOD: settle() runs after the barrier, walking shards 0..K in
+    // index order, so the float sum is bit-stable for any K
+    let mut total = 0.0f64;
+    for s in stats.iter() {
+        total += s.wait_sum_ns;
+    }
+    stats.iter().map(|s| s.wait_sum_ns).sum::<f64>()
+}
+
+pub fn event_count(stats: &[ShardStat]) -> u64 {
+    // GOOD: integer accumulation is order-insensitive
+    stats.iter().map(|s| s.events).sum::<u64>()
+}

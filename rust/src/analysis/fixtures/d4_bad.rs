@@ -1,0 +1,21 @@
+//! D4 known-bad: unseeded randomness / hashing feeding decisions.
+//! Expected: D4 fires on the `DefaultHasher` and `RandomState` sites.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{BuildHasher, Hasher};
+
+pub fn bucket_of(addr: u64, buckets: u64) -> u64 {
+    // BAD: DefaultHasher is SipHash with a per-process random key —
+    // the same address lands in different buckets every run
+    let mut h = DefaultHasher::new();
+    h.write_u64(addr);
+    h.finish() % buckets
+}
+
+pub fn probe(addr: u64) -> u64 {
+    // BAD: RandomState reseeds per process
+    let state = std::collections::hash_map::RandomState::new();
+    let mut h = state.build_hasher();
+    h.write_u64(addr);
+    h.finish()
+}

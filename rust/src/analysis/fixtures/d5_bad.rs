@@ -1,0 +1,21 @@
+//! D5 known-bad: mixing the determinism token from dispatch code.
+//! Expected: D5 fires on the `self.token = mix(...)` in `dispatch`.
+
+fn mix(h: u64, v: u64) -> u64 {
+    let z = h.rotate_left(13) ^ v;
+    z.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+pub struct Cluster {
+    token: u64,
+    inflight: u64,
+}
+
+impl Cluster {
+    pub fn dispatch(&mut self, invocation_id: u64) {
+        self.inflight += 1;
+        // BAD: phase-B dispatch order is worker-completion order under
+        // --shards, so mixing here makes the token shard-dependent
+        self.token = mix(self.token, invocation_id);
+    }
+}

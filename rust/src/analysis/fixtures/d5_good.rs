@@ -1,0 +1,31 @@
+//! D5 known-good twin: the token is mixed only in `settle` and
+//! `apply_fault` — phase-A code that runs in deterministic index order
+//! after the epoch barrier. Expected: no findings.
+
+fn mix(h: u64, v: u64) -> u64 {
+    let z = h.rotate_left(13) ^ v;
+    z.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+pub struct Cluster {
+    token: u64,
+    events: u64,
+}
+
+impl Cluster {
+    pub fn settle(&mut self, epoch: u64) {
+        // GOOD: settle() walks shards 0..K in index order
+        self.token = mix(self.token, epoch);
+    }
+
+    pub fn apply_fault(&mut self, fault_id: u64) {
+        // GOOD: fault application is epoch-barrier-ordered too
+        self.token = mix(self.token, fault_id);
+    }
+
+    pub fn checksum(&self) -> u64 {
+        // GOOD: mixing plain values (not the token) is unconstrained
+        let h = mix(self.events, 17);
+        mix(h, 23)
+    }
+}

@@ -1,0 +1,30 @@
+//! `#[cfg(test)]` code is exempt by default (`skip_test_code = true`):
+//! tests may time themselves and iterate maps freely — the lints defend
+//! simulation decision paths, not test scaffolding.
+//! Expected: no findings with the default config.
+
+use std::collections::HashMap;
+
+pub struct Registry {
+    by_name: HashMap<String, u64>,
+}
+
+impl Registry {
+    pub fn lookup(&self, name: &str) -> Option<u64> {
+        self.by_name.get(name).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_and_iteration_are_fine_in_tests() {
+        let t0 = std::time::Instant::now();
+        let r = Registry { by_name: HashMap::new() };
+        let total: u64 = r.by_name.values().sum();
+        assert_eq!(total, 0);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

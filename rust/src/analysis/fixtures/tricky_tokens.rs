@@ -1,0 +1,51 @@
+//! Lexer stress: every bad pattern appears here — but only inside
+//! strings, comments, raw strings, or as harmless look-alikes. A lint
+//! that matches text instead of tokens fires all over this file.
+//! Expected: no findings, no directive errors.
+//!
+//! Prose mention of the directive syntax (not a directive): the
+//! detlint allow(D1, reason = "...") form is documented in DESIGN.md.
+
+use std::collections::HashMap;
+
+/* block comment: HashMap.iter() Instant::now() SystemTime RandomState
+   /* nested: for k in &map { } DefaultHasher .sum::<f64>() */
+   still inside the outer comment */
+
+pub struct Doc<'a> {
+    pub title: &'a str,
+    store: HashMap<String, u64>,
+}
+
+pub fn render(doc: &Doc<'_>) -> String {
+    // line comment: self.token = mix(self.token, 1) — never fires
+    let help = "usage: .keys() .values() .drain() Instant::now() thread_rng()";
+    let raw = r#"raw string with "quotes" and HashMap.iter() inside"#;
+    let bytes = b"SystemTime::now() in a byte string";
+    let sep = '\'';
+    let nl = '\n';
+    let plain = 'x';
+    format!("{help}{raw}{:?}{sep}{nl}{plain}{}", bytes, doc.title)
+}
+
+pub fn look_alikes(doc: &Doc<'_>, pipe: &mut Vec<u64>) -> u64 {
+    // `values` as a plain variable, not a map method
+    let values = [1u64, 2, 3];
+    // `.drain()` on a Vec — receiver is not a hash collection
+    let drained: u64 = pipe.drain(..).sum();
+    // `.elapsed_micros()` is the audited hosttime accessor, not `.elapsed()`
+    // lookups on the real map stay legal
+    let hit = doc.store.get("k").copied().unwrap_or(0);
+    // ranges and float method chains keep their tokens separate
+    let mut acc = 0u64;
+    for i in 0..values.len() {
+        acc = acc.wrapping_add(values[i]);
+    }
+    let clamped = 1.5f64.max(0.5).min(2.0);
+    acc + drained + hit + clamped as u64
+}
+
+pub fn nested_generics(m: &Vec<HashMap<u64, Vec<u8>>>) -> usize {
+    // a HashMap in a parameter's generic position registers no binding
+    m.len()
+}

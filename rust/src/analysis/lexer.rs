@@ -1,0 +1,403 @@
+//! Hand-rolled Rust token scanner for the determinism lints.
+//!
+//! Same spirit as the in-crate TOML/JSON parsers: a small, dependency-free
+//! scanner that understands exactly as much Rust as the lints need — line
+//! and nested block comments, string / raw-string / byte-string / char
+//! literals, lifetimes, identifiers, numbers, and single-character
+//! punctuation (multi-character operators like `::`, `+=`, or `>>` arrive
+//! as consecutive punct tokens; the lint patterns match the sequences).
+//!
+//! The scanner also extracts suppression directives from line comments:
+//!
+//! ```text
+//!     // detlint: allow(D1, reason = "keys are sorted before use")
+//! ```
+//!
+//! A directive suppresses matching findings on its own line (trailing
+//! comment) or the line directly below (own-line comment). The `reason`
+//! is mandatory — a directive without one is a hard error, not a warning,
+//! so suppressions always document *why* the site is safe.
+
+/// Token classes the lints distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// A parsed `// detlint: allow(...)` directive.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// Scanner output: tokens, suppression directives, and directive syntax
+/// errors (line, message).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub allows: Vec<Allow>,
+    pub errors: Vec<(u32, String)>,
+}
+
+/// Rule names a directive may reference.
+pub const RULE_NAMES: [&str; 5] = ["D1", "D2", "D3", "D4", "D5"];
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            scan_directive(&text, line, &mut out);
+            i = j;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // nested block comment; directives are line-comment-only
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+        } else if c == '"' {
+            i = scan_string(&chars, i, &mut line, &mut out);
+        } else if c == '\'' {
+            i = scan_quote(&chars, i, line, &mut out);
+        } else if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n {
+                if chars[j].is_ascii_alphanumeric() || chars[j] == '_' {
+                    j += 1;
+                } else if chars[j] == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    // `1.5` continues the number; `0..n` and `1.0.max(x)`
+                    // stop so ranges and method calls keep their tokens
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Num,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            // raw / byte string prefixes: r"..", r#".."#, b"..", br#".."#
+            let raw_start = matches!(text.as_str(), "r" | "b" | "br" | "rb")
+                && j < n
+                && (chars[j] == '"' || (chars[j] == '#' && text != "b"));
+            if raw_start && text == "b" {
+                // plain byte string b".." — ordinary escape rules
+                i = scan_string(&chars, j, &mut line, &mut out);
+            } else if raw_start {
+                i = scan_raw_string(&chars, j, &mut line, &mut out);
+            } else if text == "b" && j < n && chars[j] == '\'' {
+                // byte char b'x'
+                i = scan_quote(&chars, j, line, &mut out);
+            } else {
+                out.tokens.push(Tok { kind: TokKind::Ident, text, line });
+                i = j;
+            }
+        } else {
+            out.tokens.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Scan a `"..."` literal starting at the opening quote; returns the
+/// index past the closing quote. Tracks embedded newlines.
+fn scan_string(chars: &[char], open: usize, line: &mut u32, out: &mut Lexed) -> usize {
+    let start_line = *line;
+    let n = chars.len();
+    let mut j = open + 1;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            _ => j += 1,
+        }
+    }
+    out.tokens.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+    j
+}
+
+/// Scan `#*"` ... `"#*` after a raw-string prefix ident; `open` points at
+/// the first `#` or the quote.
+fn scan_raw_string(chars: &[char], open: usize, line: &mut u32, out: &mut Lexed) -> usize {
+    let start_line = *line;
+    let n = chars.len();
+    let mut hashes = 0usize;
+    let mut j = open;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        j += 1;
+    }
+    while j < n {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+        } else if chars[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                j += 1 + hashes;
+                break;
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out.tokens.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+    j
+}
+
+/// Disambiguate a `'` into a char literal or a lifetime.
+fn scan_quote(chars: &[char], open: usize, line: u32, out: &mut Lexed) -> usize {
+    let n = chars.len();
+    if open + 1 < n && chars[open + 1] == '\\' {
+        // escaped char literal: the escaped character itself may be a
+        // quote (`'\''`), so the closing-quote search starts after it
+        let mut j = open + 3;
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        out.tokens.push(Tok { kind: TokKind::Char, text: String::new(), line });
+        return (j + 1).min(n);
+    }
+    if open + 2 < n && chars[open + 2] == '\'' {
+        out.tokens.push(Tok { kind: TokKind::Char, text: String::new(), line });
+        return open + 3;
+    }
+    // lifetime: 'ident
+    let mut j = open + 1;
+    while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+        j += 1;
+    }
+    let text: String = chars[open + 1..j].iter().collect();
+    out.tokens.push(Tok { kind: TokKind::Lifetime, text, line });
+    j
+}
+
+/// Parse a line comment's text for a `detlint: allow(...)` directive.
+/// Only comments that *start* with `detlint:` (after trimming) count, so
+/// prose that mentions the syntax never parses as a directive.
+fn scan_directive(text: &str, line: u32, out: &mut Lexed) {
+    let t = text.trim();
+    let Some(rest) = t.strip_prefix("detlint:") else {
+        return;
+    };
+    let rest = rest.trim();
+    let Some(inner) = rest.strip_prefix("allow(").and_then(|r| r.rfind(')').map(|p| &r[..p]))
+    else {
+        out.errors.push((line, format!("malformed detlint directive: {t:?} (expected `detlint: allow(D*, reason = \"...\")`)")));
+        return;
+    };
+    let (rules_part, reason) = match inner.find("reason") {
+        None => {
+            out.errors.push((line, "detlint allow without a reason — every suppression must say why the site is safe".to_string()));
+            return;
+        }
+        Some(pos) => {
+            let after = inner[pos + "reason".len()..].trim_start();
+            let Some(val) = after.strip_prefix('=') else {
+                out.errors.push((line, "detlint allow: expected `reason = \"...\"`".to_string()));
+                return;
+            };
+            let val = val.trim();
+            let stripped = val
+                .strip_prefix('"')
+                .and_then(|v| v.rfind('"').map(|p| &v[..p]))
+                .map(str::to_string);
+            let Some(reason) = stripped else {
+                out.errors.push((line, "detlint allow: reason must be a quoted string".to_string()));
+                return;
+            };
+            (inner[..pos].trim_end().trim_end_matches(','), reason)
+        }
+    };
+    if reason.trim().is_empty() {
+        out.errors.push((line, "detlint allow: empty reason".to_string()));
+        return;
+    }
+    let mut rules = Vec::new();
+    for r in rules_part.split(',') {
+        let r = r.trim();
+        if r.is_empty() {
+            continue;
+        }
+        if !RULE_NAMES.contains(&r) {
+            out.errors.push((line, format!("detlint allow: unknown rule {r:?} (known: D1..D5)")));
+            return;
+        }
+        rules.push(r.to_string());
+    }
+    if rules.is_empty() {
+        out.errors.push((line, "detlint allow: no rules named".to_string()));
+        return;
+    }
+    out.allows.push(Allow { line, rules, reason });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_tokens() {
+        let src = r##"
+let a = "HashMap .iter() Instant::now()"; // HashSet in a comment
+/* block DefaultHasher /* nested SystemTime */ still comment */
+let b = r#"raw "quoted" Instant"#;
+"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_track_lines() {
+        let src = "let s = r#\"one\ntwo\nthree\"#;\nlet t = b\"bytes\";\nlet u = 1;";
+        let lexed = lex(src);
+        let u = lexed.tokens.iter().find(|t| t.is_ident("u")).unwrap();
+        assert_eq!(u.line, 4, "line counting must survive embedded newlines");
+        assert_eq!(lexed.tokens.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a u32) { let c = 'x'; let d = '\\n'; let e = '\\''; }";
+        let lexed = lex(src);
+        let lifetimes: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lifetimes.iter().all(|t| t.text == "a"));
+        assert_eq!(lexed.tokens.iter().filter(|t| t.kind == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn nested_generics_tokenize_without_confusion() {
+        let src = "let m: Vec<HashMap<u64, Vec<u8>>> = make();";
+        let ids = idents(src);
+        assert!(ids.contains(&"HashMap".to_string()));
+        let lexed = lex(src);
+        // `>>>` arrives as three single-char puncts
+        let gt = lexed.tokens.iter().filter(|t| t.is_punct('>')).count();
+        assert_eq!(gt, 3);
+    }
+
+    #[test]
+    fn directive_round_trip() {
+        let src = "let x = 1; // detlint: allow(D1, reason = \"sorted, then consumed\")\n\
+                   // detlint: allow(D2, D4, reason = \"a, reason with, commas\")\n";
+        let lexed = lex(src);
+        assert!(lexed.errors.is_empty(), "{:?}", lexed.errors);
+        assert_eq!(lexed.allows.len(), 2);
+        assert_eq!(lexed.allows[0].line, 1);
+        assert_eq!(lexed.allows[0].rules, vec!["D1"]);
+        assert_eq!(lexed.allows[1].rules, vec!["D2", "D4"]);
+        assert_eq!(lexed.allows[1].reason, "a, reason with, commas");
+    }
+
+    #[test]
+    fn directive_without_reason_is_an_error() {
+        let lexed = lex("// detlint: allow(D1)\n");
+        assert!(lexed.allows.is_empty());
+        assert_eq!(lexed.errors.len(), 1);
+        assert!(lexed.errors[0].1.contains("reason"), "{}", lexed.errors[0].1);
+    }
+
+    #[test]
+    fn directive_with_unknown_rule_is_an_error() {
+        let lexed = lex("// detlint: allow(D9, reason = \"nope\")\n");
+        assert!(lexed.allows.is_empty());
+        assert_eq!(lexed.errors.len(), 1);
+        assert!(lexed.errors[0].1.contains("unknown rule"), "{}", lexed.errors[0].1);
+    }
+
+    #[test]
+    fn prose_mentioning_detlint_is_not_a_directive() {
+        let lexed = lex("// the detlint: allow(...) syntax is documented in DESIGN.md\n");
+        assert!(lexed.allows.is_empty());
+        assert!(lexed.errors.is_empty());
+    }
+}

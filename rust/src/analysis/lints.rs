@@ -1,0 +1,711 @@
+//! The determinism lints D1–D5 over the token stream.
+//!
+//! Every headline invariant of this reproduction — replay identity
+//! (PR 4), `--shards K` bit-identity (PR 7), disabled-path bit-identity
+//! (every feature since) — dies silently if a decision path iterates a
+//! hash map, reads host time, or accumulates floats in a
+//! shard-dependent order. These lints make those rules machine-checked:
+//!
+//! * **D1** — no iteration over `HashMap`/`HashSet` (`.iter()`,
+//!   `.keys()`, `.values()`, `.drain()`, `for … in &map`) outside
+//!   modules declared order-insensitive. Lookup-only maps stay legal.
+//! * **D2** — no `Instant::now` / `SystemTime` / `std::time` reads
+//!   outside the bench harness, the CLI front-ends, and the audited
+//!   `util::hosttime` chokepoint (`Duration` the value type is fine).
+//! * **D3** — no `f64`/`f32` accumulation (`.sum::<f64>()`, `+=` on a
+//!   float field) in files that also spawn threads, except inside
+//!   `settle()`-ordered functions.
+//! * **D4** — no unseeded RNG or hashing (`DefaultHasher`,
+//!   `RandomState`, `thread_rng`, …) outside the seeded-generator
+//!   modules.
+//! * **D5** — the determinism token is mixed only from phase-A/settle
+//!   code (`settle`, `apply_fault`).
+//!
+//! The pass is a token-level heuristic, not a type checker: it tracks
+//! identifiers *declared* as hash collections or float fields in the
+//! same file and flags operations on those names. That trades a few
+//! false negatives (an alias through `let m = &self.map;` escapes) for
+//! zero build-graph cost and total independence from rustc internals —
+//! the fixture corpus in `fixtures/` pins exactly what fires.
+
+use crate::analysis::config::{path_matches, DetlintConfig};
+use crate::analysis::lexer::{lex, Tok, TokKind};
+
+/// One finding, keyed for rustc-style rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Lint result for one file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    /// Directive syntax errors (missing reason, unknown rule) — always
+    /// fatal, never suppressible.
+    pub errors: Vec<Violation>,
+    pub allows_used: usize,
+    /// Directives that matched nothing (stale suppressions) — surfaced
+    /// as warnings, not failures.
+    pub allows_unused: Vec<(u32, String)>,
+}
+
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "extract_if",
+];
+
+const UNSEEDED: [&str; 8] = [
+    "DefaultHasher",
+    "RandomState",
+    "thread_rng",
+    "from_entropy",
+    "StdRng",
+    "SmallRng",
+    "OsRng",
+    "getrandom",
+];
+
+/// Lint one file's source; `path` is the normalized repo-relative path
+/// used for zone matching and reporting.
+pub fn lint_source(path: &str, source: &str, cfg: &DetlintConfig) -> FileReport {
+    let lexed = lex(source);
+    let mut report = FileReport::default();
+    for (line, msg) in &lexed.errors {
+        report.errors.push(Violation { file: path.to_string(), line: *line, rule: "allow", msg: msg.clone() });
+    }
+    let toks = &lexed.tokens;
+    let ctx = Context::build(toks);
+    let maps = collect_hash_bindings(toks);
+    let floats = collect_float_fields(toks);
+    let has_threads = (0..toks.len())
+        .any(|i| toks[i].is_ident("thread") && i + 1 < toks.len() && toks[i + 1].is_punct(':'));
+
+    let d1_zone = !path_matches(path, &cfg.d1_order_insensitive);
+    let d2_zone = !path_matches(path, &cfg.d2_host_time_ok);
+    let d4_zone = !path_matches(path, &cfg.d4_seeded_modules);
+
+    let mut raw: Vec<Violation> = Vec::new();
+    let mut push = |line: u32, rule: &'static str, msg: String| {
+        raw.push(Violation { file: path.to_string(), line, rule, msg });
+    };
+
+    for i in 0..toks.len() {
+        if cfg.skip_test_code && ctx.in_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+
+        // ---- D1: hash-collection iteration --------------------------------
+        if d1_zone {
+            if ITER_METHODS.contains(&t.text.as_str())
+                && i >= 2
+                && toks[i - 1].is_punct('.')
+                && toks[i - 2].kind == TokKind::Ident
+                && maps.contains(&toks[i - 2].text)
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(')
+            {
+                push(
+                    t.line,
+                    "D1",
+                    format!(
+                        "iteration over hash collection `{}` via `.{}()` — order is \
+                         nondeterministic; iterate a sorted Vec or allowlist with a reason",
+                        toks[i - 2].text, t.text
+                    ),
+                );
+            }
+            if t.is_ident("for") {
+                if let Some((name, line)) = for_loop_over(toks, i, &maps) {
+                    push(
+                        line,
+                        "D1",
+                        format!(
+                            "`for … in` over hash collection `{name}` — order is \
+                             nondeterministic; iterate a sorted Vec or allowlist with a reason"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // ---- D2: host-time reads ------------------------------------------
+        if d2_zone {
+            if t.is_ident("Instant") && path_seq(toks, i + 1, &["now"]) {
+                push(t.line, "D2", "`Instant::now()` on a simulation path — host time \
+                     must flow through util::hosttime and land only in host-metrics \
+                     fields excluded from report equality".into());
+            }
+            if t.is_ident("SystemTime") {
+                push(t.line, "D2", "`SystemTime` on a simulation path — wall-clock \
+                     reads poison replay identity".into());
+            }
+            if t.is_ident("std") && path_seq(toks, i + 1, &["time"]) {
+                // std :: time :: <what>
+                for what in time_path_idents(toks, i) {
+                    if what.text != "Duration" {
+                        push(
+                            what.line,
+                            "D2",
+                            format!(
+                                "`std::time::{}` on a simulation path — only `Duration` \
+                                 (a value type) is allowed outside host-time zones",
+                                what.text
+                            ),
+                        );
+                    }
+                }
+            }
+            if t.is_ident("elapsed")
+                && i >= 1
+                && toks[i - 1].is_punct('.')
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(')
+            {
+                push(t.line, "D2", "`.elapsed()` on a simulation path — host time must \
+                     flow through util::hosttime".into());
+            }
+        }
+
+        // ---- D3: float accumulation in threaded files ---------------------
+        if has_threads {
+            let settle_ok = ctx
+                .enclosing_fn(i)
+                .map(|f| cfg.d3_settle_fns.iter().any(|s| s == f))
+                .unwrap_or(false);
+            if !settle_ok {
+                if t.is_ident("sum")
+                    && i >= 1
+                    && toks[i - 1].is_punct('.')
+                    && ident_at(toks, i + 4, &["f64", "f32"])
+                    && toks[i + 1].is_punct(':')
+                    && toks[i + 2].is_punct(':')
+                {
+                    // `.sum::<f64>` — the `<` sits between `::` and the type
+                    push(t.line, "D3", "float `.sum::<f64>()` in a thread-spawning file \
+                         outside settle-ordered code — summation order is \
+                         shard-dependent".into());
+                }
+                if maps_contains(&floats, &t.text)
+                    && i >= 1
+                    && toks[i - 1].is_punct('.')
+                    && i + 2 < toks.len()
+                    && toks[i + 1].is_punct('+')
+                    && toks[i + 2].is_punct('=')
+                {
+                    push(
+                        t.line,
+                        "D3",
+                        format!(
+                            "`+=` on float field `{}` in a thread-spawning file outside \
+                             settle-ordered code — accumulation order is shard-dependent",
+                            t.text
+                        ),
+                    );
+                }
+            }
+        }
+
+        // ---- D4: unseeded RNG / hashing -----------------------------------
+        if d4_zone {
+            if UNSEEDED.contains(&t.text.as_str()) {
+                push(
+                    t.line,
+                    "D4",
+                    format!(
+                        "`{}` — unseeded randomness/hashing feeds address-dependent \
+                         decisions; use the seeded util::prng generators",
+                        t.text
+                    ),
+                );
+            }
+            if t.is_ident("rand") && i + 1 < toks.len() && toks[i + 1].is_punct(':') {
+                push(t.line, "D4", "`rand::` path — the crate is zero-dependency and \
+                     all randomness is seeded via util::prng".into());
+            }
+        }
+
+        // ---- D5: determinism-token mixing ---------------------------------
+        if t.text.starts_with("mix")
+            && i >= 2
+            && toks[i - 1].is_punct('=')
+            && toks[i - 2].is_ident("token")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+        {
+            let fn_ok = ctx
+                .enclosing_fn(i)
+                .map(|f| cfg.d5_mix_fns.iter().any(|s| s == f))
+                .unwrap_or(false);
+            if !fn_ok {
+                let fn_name = ctx.enclosing_fn(i).unwrap_or("<top level>");
+                push(
+                    t.line,
+                    "D5",
+                    format!(
+                        "determinism token mixed in `{fn_name}` — token mixes are only \
+                         legal in phase-A/settle code ({})",
+                        cfg.d5_mix_fns.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+
+    // de-duplicate overlapping patterns (e.g. `std::time::Instant::now()`
+    // fires both the path rule and the now rule on the same line)
+    raw.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+    raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+
+    // apply suppression directives: an allow on line L covers findings
+    // on L (trailing comment) and L+1 (own-line comment above)
+    let mut used = vec![false; lexed.allows.len()];
+    for v in raw {
+        let mut suppressed = false;
+        for (ai, a) in lexed.allows.iter().enumerate() {
+            if (a.line == v.line || a.line + 1 == v.line) && a.rules.iter().any(|r| r == v.rule)
+            {
+                used[ai] = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            report.violations.push(v);
+        }
+    }
+    report.allows_used = used.iter().filter(|u| **u).count();
+    for (ai, a) in lexed.allows.iter().enumerate() {
+        if !used[ai] {
+            report.allows_unused.push((a.line, a.rules.join(",")));
+        }
+    }
+    report
+}
+
+fn maps_contains(set: &[String], name: &str) -> bool {
+    set.iter().any(|s| s == name)
+}
+
+fn ident_at(toks: &[Tok], i: usize, any_of: &[&str]) -> bool {
+    // used for `.sum::<f64>`: toks[i] is the type ident after `::<`
+    i < toks.len()
+        && toks[i].kind == TokKind::Ident
+        && any_of.contains(&toks[i].text.as_str())
+        && i >= 1
+        && toks[i - 1].is_punct('<')
+}
+
+/// Does `toks[start..]` spell `:: seg1 [:: seg2 …]`?
+fn path_seq(toks: &[Tok], start: usize, segs: &[&str]) -> bool {
+    let mut i = start;
+    for seg in segs {
+        if i + 2 >= toks.len()
+            || !toks[i].is_punct(':')
+            || !toks[i + 1].is_punct(':')
+            || !toks[i + 2].is_ident(seg)
+        {
+            return false;
+        }
+        i += 3;
+    }
+    true
+}
+
+/// For a `std :: time ::` path at `i` (pointing at `std`), return the
+/// idents it resolves to — the single next segment, or every ident in a
+/// `{...}` use-group.
+fn time_path_idents(toks: &[Tok], i: usize) -> Vec<Tok> {
+    // i: std, i+1,2: '::', i+3: time, i+4,5: '::', i+6: ident or '{'
+    let j = i + 6;
+    if j >= toks.len() || !toks[i + 4].is_punct(':') || !toks[i + 5].is_punct(':') {
+        return Vec::new();
+    }
+    if toks[j].kind == TokKind::Ident {
+        return vec![toks[j].clone()];
+    }
+    let mut out = Vec::new();
+    if toks[j].is_punct('{') {
+        let mut k = j + 1;
+        while k < toks.len() && !toks[k].is_punct('}') {
+            if toks[k].kind == TokKind::Ident && !toks[k].is_ident("self") {
+                out.push(toks[k].clone());
+            }
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Match `for … in [&|mut]* ident[.ident]* {` and return the last ident
+/// of the chain if it names a hash collection.
+fn for_loop_over(toks: &[Tok], for_idx: usize, maps: &[String]) -> Option<(String, u32)> {
+    let limit = (for_idx + 40).min(toks.len());
+    let mut i = for_idx + 1;
+    while i < limit && !toks[i].is_ident("in") {
+        // a `{` before `in` means this wasn't a loop header after all
+        if toks[i].is_punct('{') {
+            return None;
+        }
+        i += 1;
+    }
+    if i >= limit {
+        return None;
+    }
+    i += 1;
+    while i < toks.len() && (toks[i].is_punct('&') || toks[i].is_ident("mut")) {
+        i += 1;
+    }
+    if i >= toks.len() || toks[i].kind != TokKind::Ident {
+        return None;
+    }
+    let mut last = i;
+    while last + 2 < toks.len()
+        && toks[last + 1].is_punct('.')
+        && toks[last + 2].kind == TokKind::Ident
+    {
+        last += 2;
+    }
+    let name = &toks[last];
+    if maps_contains(maps, &name.text)
+        && last + 1 < toks.len()
+        && toks[last + 1].is_punct('{')
+    {
+        return Some((name.text.clone(), name.line));
+    }
+    None
+}
+
+/// Identifiers declared with a `HashMap`/`HashSet` type in this file:
+/// struct fields (`name: HashMap<…>`), typed params, and `let` bindings
+/// (`let mut name = HashMap::new()`; `let name: Mutex<HashMap<…>> = …`).
+fn collect_hash_bindings(toks: &[Tok]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        if let Some(name) = binding_name_before(toks, i) {
+            if !maps_contains(&out, &name) {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+/// Identifiers declared `: f64` / `: f32` (struct fields, params, let
+/// ascriptions) — the candidates for D3's `+=` check.
+fn collect_float_fields(toks: &[Tok]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for i in 2..toks.len() {
+        if (toks[i].is_ident("f64") || toks[i].is_ident("f32"))
+            && toks[i - 1].is_punct(':')
+            && !toks[i - 2].is_punct(':')
+            && toks[i - 2].kind == TokKind::Ident
+        {
+            let name = toks[i - 2].text.clone();
+            if !maps_contains(&out, &name) {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+/// Walk backwards from a `HashMap`/`HashSet` token to the identifier it
+/// is bound to. Stops at statement / grouping boundaries, so a map in a
+/// return type or a call argument registers nothing.
+fn binding_name_before(toks: &[Tok], map_idx: usize) -> Option<String> {
+    let floor = map_idx.saturating_sub(40);
+    let mut j = map_idx;
+    while j > floor {
+        j -= 1;
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                ";" | "{" | "}" | "," | "(" | ")" | "[" | "]" => return None,
+                ":" => {
+                    // skip `::` path separators; a single `:` is a binding
+                    if j > floor && toks[j - 1].is_punct(':') {
+                        j -= 1;
+                        continue;
+                    }
+                    if j + 1 < toks.len() && toks[j + 1].is_punct(':') {
+                        continue;
+                    }
+                    if j > 0 && toks[j - 1].kind == TokKind::Ident {
+                        return Some(toks[j - 1].text.clone());
+                    }
+                    return None;
+                }
+                "=" => {
+                    // `=>` match arm: boundary. `==` comparison: boundary.
+                    if j + 1 < toks.len() && toks[j + 1].is_punct('>') {
+                        return None;
+                    }
+                    if j > 0 && toks[j - 1].is_punct('=') {
+                        return None;
+                    }
+                    // `let [mut] name = …` / `lvalue = …`
+                    if j > 0 && toks[j - 1].kind == TokKind::Ident {
+                        let name = &toks[j - 1];
+                        if name.is_ident("let") || name.is_ident("mut") {
+                            return None;
+                        }
+                        return Some(name.text.clone());
+                    }
+                    return None;
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Per-token context: enclosing function name and `#[cfg(test)]` state.
+struct Context {
+    in_test: Vec<bool>,
+    fn_idx: Vec<Option<usize>>,
+    names: Vec<String>,
+}
+
+impl Context {
+    fn enclosing_fn(&self, i: usize) -> Option<&str> {
+        self.fn_idx[i].map(|n| self.names[n].as_str())
+    }
+
+    fn build(toks: &[Tok]) -> Context {
+        let mut in_test = vec![false; toks.len()];
+        let mut fn_idx = vec![None; toks.len()];
+        let mut names: Vec<String> = Vec::new();
+        let mut depth: i64 = 0;
+        let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+        let mut test_stack: Vec<i64> = Vec::new();
+        let mut pending_fn: Option<usize> = None;
+        let mut pending_test = false;
+        for i in 0..toks.len() {
+            in_test[i] = !test_stack.is_empty();
+            fn_idx[i] = fn_stack.last().map(|&(n, _)| n);
+            let t = &toks[i];
+            if t.is_punct('#')
+                && i + 5 < toks.len()
+                && toks[i + 1].is_punct('[')
+                && toks[i + 2].is_ident("cfg")
+                && toks[i + 3].is_punct('(')
+                && toks[i + 4].is_ident("test")
+                && toks[i + 5].is_punct(')')
+            {
+                pending_test = true;
+            } else if t.is_ident("fn") && i + 1 < toks.len() && toks[i + 1].kind == TokKind::Ident
+            {
+                let name = toks[i + 1].text.clone();
+                let idx = names.iter().position(|n| *n == name).unwrap_or_else(|| {
+                    names.push(name);
+                    names.len() - 1
+                });
+                pending_fn = Some(idx);
+            } else if t.is_punct('{') {
+                depth += 1;
+                if pending_test {
+                    test_stack.push(depth);
+                    pending_test = false;
+                }
+                if let Some(idx) = pending_fn.take() {
+                    fn_stack.push((idx, depth));
+                }
+            } else if t.is_punct('}') {
+                if test_stack.last() == Some(&depth) {
+                    test_stack.pop();
+                }
+                if fn_stack.last().map(|&(_, d)| d) == Some(depth) {
+                    fn_stack.pop();
+                }
+                depth -= 1;
+            } else if t.is_punct(';') {
+                // `fn f(…);` trait decl or `#[cfg(test)] use …;`
+                pending_fn = None;
+                pending_test = false;
+            }
+        }
+        Context { in_test, fn_idx, names }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> FileReport {
+        lint_source("some/module.rs", src, &DetlintConfig::default())
+    }
+
+    fn rules(r: &FileReport) -> Vec<&'static str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn d1_flags_map_iteration_but_not_lookups() {
+        let src = "struct S { m: HashMap<String, u32> }\n\
+                   impl S {\n\
+                   fn bad(&self) -> u32 { self.m.values().sum() }\n\
+                   fn good(&self) -> Option<&u32> { self.m.get(\"k\") }\n\
+                   fn also_good(&mut self) { self.m.insert(String::new(), 1); }\n\
+                   }\n";
+        let r = lint(src);
+        assert_eq!(rules(&r), vec!["D1"]);
+        assert_eq!(r.violations[0].line, 3);
+    }
+
+    #[test]
+    fn d1_flags_for_loops_over_maps() {
+        let src = "struct S { m: HashSet<u64> }\n\
+                   impl S { fn f(&self) { for x in &self.m { drop(x); } } }\n";
+        let r = lint(src);
+        assert_eq!(rules(&r), vec!["D1"]);
+    }
+
+    #[test]
+    fn d1_ignores_vec_iteration() {
+        let src = "fn f(v: &Vec<u64>, w: &[u64]) -> u64 {\n\
+                   let m: HashMap<u64, u64> = HashMap::new();\n\
+                   let _ = m.get(&1);\n\
+                   v.iter().chain(w.iter()).sum()\n\
+                   }\n";
+        assert!(lint(src).violations.is_empty());
+    }
+
+    #[test]
+    fn d2_flags_time_and_honors_zones() {
+        let src = "use std::time::Instant;\n\
+                   fn f() -> u64 { let t = Instant::now(); t.elapsed().as_micros() as u64 }\n";
+        let r = lint(src);
+        // line 1: `use std::time::Instant`; line 2: `Instant::now()` and
+        // `.elapsed()` dedupe to a single finding (same line, same rule)
+        assert_eq!(rules(&r), vec!["D2", "D2"]);
+        let mut cfg = DetlintConfig::default();
+        cfg.d2_host_time_ok.push("some/module.rs".to_string());
+        assert!(lint_source("some/module.rs", src, &cfg).violations.is_empty());
+    }
+
+    #[test]
+    fn d2_allows_duration_the_value_type() {
+        let src = "use std::time::Duration;\nfn f() -> Duration { Duration::from_secs(1) }\n";
+        assert!(lint(src).violations.is_empty());
+    }
+
+    #[test]
+    fn d3_only_fires_in_threaded_files_outside_settle() {
+        let threaded = "struct R { wall_ns: f64 }\n\
+                        fn run() { std::thread::scope(|s| { let _ = s; }); }\n\
+                        fn merge(rs: &[R]) -> f64 { rs.iter().map(|r| r.wall_ns).sum::<f64>() }\n";
+        let r = lint(threaded);
+        assert_eq!(rules(&r), vec!["D3"]);
+        // the same accumulation inside settle() is legal
+        let settled = threaded.replace("fn merge", "fn settle");
+        assert!(lint(&settled).violations.is_empty());
+        // and a single-threaded file is out of scope entirely
+        let unthreaded = threaded.replace("std::thread::scope(|s| { let _ = s; });", "");
+        assert!(lint(&unthreaded).violations.is_empty());
+    }
+
+    #[test]
+    fn d3_flags_float_field_accumulation() {
+        let src = "struct R { wait_sum_ns: f64, count: u64 }\n\
+                   fn spawn_all() { std::thread::spawn(|| {}); }\n\
+                   impl R { fn absorb(&mut self, d: &R) {\n\
+                   self.wait_sum_ns += d.wait_sum_ns;\n\
+                   self.count += d.count;\n\
+                   } }\n";
+        let r = lint(src);
+        assert_eq!(rules(&r), vec!["D3"], "u64 += must not fire");
+        assert_eq!(r.violations[0].line, 4);
+    }
+
+    #[test]
+    fn d4_flags_unseeded_sources() {
+        let src = "use std::collections::hash_map::DefaultHasher;\n\
+                   fn f() { let s = RandomState::new(); drop(s); }\n";
+        let r = lint(src);
+        assert_eq!(rules(&r), vec!["D4", "D4"]);
+        let mut cfg = DetlintConfig::default();
+        cfg.d4_seeded_modules.push("some/module.rs".to_string());
+        assert!(lint_source("some/module.rs", src, &cfg).violations.is_empty());
+    }
+
+    #[test]
+    fn d5_constrains_token_mixes_to_settle_code() {
+        let bad = "impl C { fn dispatch(&mut self) { self.token = mix(self.token, 1); } }\n";
+        let r = lint(bad);
+        assert_eq!(rules(&r), vec!["D5"]);
+        assert!(r.violations[0].msg.contains("dispatch"));
+        let good = bad.replace("fn dispatch", "fn settle");
+        assert!(lint(&good).violations.is_empty());
+        // checksum mixes on ordinary variables never fire
+        let checksum = "fn hash(h: u64) -> u64 { let h = mix(h, 7); h }\n";
+        assert!(lint(checksum).violations.is_empty());
+    }
+
+    #[test]
+    fn allows_suppress_same_and_next_line() {
+        let src = "struct S { m: HashMap<u64, u64> }\n\
+                   impl S {\n\
+                   fn a(&self) -> u64 {\n\
+                   // detlint: allow(D1, reason = \"sum of u64 is order-insensitive\")\n\
+                   self.m.values().sum()\n\
+                   }\n\
+                   fn b(&self) -> usize { self.m.keys().count() // detlint: allow(D1, reason = \"count only\")\n\
+                   }\n\
+                   }\n";
+        let r = lint(src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.allows_used, 2);
+        assert!(r.allows_unused.is_empty());
+    }
+
+    #[test]
+    fn wrong_rule_allow_does_not_suppress() {
+        let src = "struct S { m: HashMap<u64, u64> }\n\
+                   impl S { fn a(&self) -> u64 {\n\
+                   // detlint: allow(D2, reason = \"wrong rule\")\n\
+                   self.m.values().sum()\n\
+                   } }\n";
+        let r = lint(src);
+        assert_eq!(rules(&r), vec!["D1"]);
+        assert_eq!(r.allows_used, 0);
+        assert_eq!(r.allows_unused.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped_by_default() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n\
+                   }\n";
+        assert!(lint(src).violations.is_empty());
+        let cfg = DetlintConfig { skip_test_code: false, ..DetlintConfig::default() };
+        let r = lint_source("some/module.rs", src, &cfg);
+        assert!(!r.violations.is_empty());
+    }
+
+    #[test]
+    fn directive_errors_surface_as_errors() {
+        let r = lint("// detlint: allow(D1)\nfn f() {}\n");
+        assert_eq!(r.errors.len(), 1);
+        assert_eq!(r.errors[0].rule, "allow");
+    }
+}

@@ -1,0 +1,330 @@
+//! detlint — static analysis for the simulator's determinism invariants.
+//!
+//! Every headline claim of this reproduction is a determinism claim:
+//! live == replay (Trace-IR replay identity), `--shards K` bit-identity,
+//! and disabled-path bit-identity for each optional feature. Those were
+//! defended by hand-audits and property tests; this subsystem makes them
+//! machine-checked on every push, before any bench number is believed.
+//!
+//! Layout:
+//! * [`lexer`] — hand-rolled Rust token scanner (same spirit as the
+//!   in-crate TOML/JSON parsers) + `detlint: allow(...)` directives
+//! * [`lints`] — the D1–D5 rules over the token stream
+//! * [`config`] — `detlint.toml`, parsed by the in-crate TOML subset
+//! * `fixtures/` — known-bad / known-good corpus pinning each rule's
+//!   behavior (excluded from the tree walk; exercised by tests here)
+//!
+//! Entry points: the `detlint` binary (`src/bin/detlint.rs`) and the
+//! `porter-cli detlint` subcommand both land in [`cli_main`]. Output is
+//! a rustc-style `file:line: D2: ...` report plus one greppable line:
+//!
+//! ```text
+//! DETLINT files=93 violations=0 allows=4
+//! ```
+//!
+//! Exit status: 0 clean, 1 violations or directive errors, 2 usage /
+//! configuration errors. Unused allows are warnings, not failures —
+//! they surface stale suppressions without blocking CI on refactors.
+
+pub mod config;
+pub mod lexer;
+pub mod lints;
+
+use std::path::{Path, PathBuf};
+
+use self::config::{normalize, path_matches, DetlintConfig};
+use self::lints::Violation;
+
+/// Aggregate result of linting a tree.
+#[derive(Debug, Default)]
+pub struct RunSummary {
+    /// Files scanned (after exclusions).
+    pub files: usize,
+    /// Surviving findings, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Directive syntax errors — never suppressible.
+    pub errors: Vec<Violation>,
+    /// Suppressions that matched a finding.
+    pub allows_used: usize,
+    /// Stale suppressions: (file, line, rules-csv).
+    pub allows_unused: Vec<(String, u32, String)>,
+}
+
+impl RunSummary {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.errors.is_empty()
+    }
+
+    /// The greppable counter line (CI greps `violations=0`).
+    pub fn counter_line(&self) -> String {
+        format!(
+            "DETLINT files={} violations={} allows={}",
+            self.files,
+            self.violations.len() + self.errors.len(),
+            self.allows_used
+        )
+    }
+}
+
+/// Walk the configured scan roots under `base` (the directory holding
+/// `detlint.toml`) and lint every `.rs` file. Deterministic: directory
+/// entries are sorted, so reports never depend on readdir order.
+pub fn run(base: &Path, cfg: &DetlintConfig) -> Result<RunSummary, String> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for root in &cfg.scan {
+        let abs = base.join(root);
+        if abs.is_file() {
+            files.push((normalize(root), abs));
+        } else if abs.is_dir() {
+            walk(&abs, root, &cfg.exclude, &mut files)?;
+        } else {
+            return Err(format!(
+                "scan root `{root}` not found under {} — fix [paths] scan in detlint.toml",
+                base.display()
+            ));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut sum = RunSummary::default();
+    for (rel, abs) in &files {
+        let src = std::fs::read_to_string(abs)
+            .map_err(|e| format!("read {}: {e}", abs.display()))?;
+        let rep = lints::lint_source(rel, &src, cfg);
+        sum.files += 1;
+        sum.violations.extend(rep.violations);
+        sum.errors.extend(rep.errors);
+        sum.allows_used += rep.allows_used;
+        for (line, rules) in rep.allows_unused {
+            sum.allows_unused.push((rel.clone(), line, rules));
+        }
+    }
+    Ok(sum)
+}
+
+fn walk(
+    dir: &Path,
+    rel: &str,
+    exclude: &[String],
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<(), String> {
+    let mut entries: Vec<(String, PathBuf)> = Vec::new();
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        entries.push((name, entry.path()));
+    }
+    entries.sort();
+    for (name, path) in entries {
+        let child_rel = normalize(&format!("{rel}/{name}"));
+        if path_matches(&child_rel, exclude) {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, &child_rel, exclude, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((child_rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Render the full report: rustc-style findings, stale-allow warnings,
+/// and the counter line last (so `tail -1` is always the summary).
+pub fn render(sum: &RunSummary) -> String {
+    let mut out = String::new();
+    let mut findings: Vec<&Violation> = sum.errors.iter().chain(sum.violations.iter()).collect();
+    findings.sort_by_key(|v| (v.file.clone(), v.line, v.rule));
+    for v in &findings {
+        out.push_str(&format!("{}:{}: {}: {}\n", v.file, v.line, v.rule, v.msg));
+    }
+    for (file, line, rules) in &sum.allows_unused {
+        out.push_str(&format!(
+            "{file}:{line}: warning: unused detlint allow({rules}) — remove the stale suppression\n"
+        ));
+    }
+    out.push_str(&sum.counter_line());
+    out.push('\n');
+    out
+}
+
+/// Shared entry point for the `detlint` binary and `porter-cli detlint`.
+/// `config_opt` is an explicit `--config` path; otherwise the tool looks
+/// for `detlint.toml` in `.` then `..` (so it works both from the repo
+/// root and from `rust/`, CI's working directory). Prints the report and
+/// returns the process exit code.
+pub fn cli_main(config_opt: Option<&str>) -> i32 {
+    let found = match config_opt {
+        Some(p) => Some(PathBuf::from(p)),
+        None => ["detlint.toml", "../detlint.toml"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_file()),
+    };
+    let (base, cfg) = match found {
+        Some(path) => {
+            let cfg = match DetlintConfig::from_file(&path) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("detlint: {e}");
+                    return 2;
+                }
+            };
+            let base = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+            let base = if base.as_os_str().is_empty() { PathBuf::from(".") } else { base };
+            (base, cfg)
+        }
+        None => {
+            eprintln!(
+                "detlint: no detlint.toml in . or .. — run from the repo root (or rust/), \
+                 or pass --config <path>"
+            );
+            return 2;
+        }
+    };
+    match run(&base, &cfg) {
+        Ok(sum) => {
+            print!("{}", render(&sum));
+            if sum.clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lints::lint_source;
+
+    fn cfg() -> DetlintConfig {
+        DetlintConfig::default()
+    }
+
+    /// Lint a fixture as if it lived on a simulation path (no zone).
+    fn fixture(src: &str) -> lints::FileReport {
+        lint_source("rust/src/cluster/fixture.rs", src, &cfg())
+    }
+
+    fn rules(r: &lints::FileReport) -> Vec<&'static str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn corpus_d1_fires_on_bad_and_not_on_good() {
+        let bad = fixture(include_str!("fixtures/d1_bad.rs"));
+        assert!(rules(&bad).iter().all(|r| *r == "D1"), "{:?}", bad.violations);
+        assert!(rules(&bad).len() >= 3, "iter/keys/for-loop must all fire: {:?}", bad.violations);
+        let good = fixture(include_str!("fixtures/d1_good.rs"));
+        assert!(good.violations.is_empty(), "{:?}", good.violations);
+    }
+
+    #[test]
+    fn corpus_d2_fires_on_bad_and_not_on_good() {
+        let bad = fixture(include_str!("fixtures/d2_bad.rs"));
+        assert!(rules(&bad).iter().all(|r| *r == "D2"), "{:?}", bad.violations);
+        assert!(rules(&bad).len() >= 2, "{:?}", bad.violations);
+        let good = fixture(include_str!("fixtures/d2_good.rs"));
+        assert!(good.violations.is_empty(), "{:?}", good.violations);
+        // the same bad file is legal inside a host-time zone
+        let zoned =
+            lint_source("rust/src/bench/fixture.rs", include_str!("fixtures/d2_bad.rs"), &cfg());
+        assert!(zoned.violations.is_empty(), "{:?}", zoned.violations);
+    }
+
+    #[test]
+    fn corpus_d3_fires_on_bad_and_not_on_good() {
+        let bad = fixture(include_str!("fixtures/d3_bad.rs"));
+        assert_eq!(rules(&bad), vec!["D3", "D3"], "{:?}", bad.violations);
+        let good = fixture(include_str!("fixtures/d3_good.rs"));
+        assert!(good.violations.is_empty(), "{:?}", good.violations);
+    }
+
+    #[test]
+    fn corpus_d4_fires_on_bad_and_not_on_good() {
+        let bad = fixture(include_str!("fixtures/d4_bad.rs"));
+        assert!(rules(&bad).iter().all(|r| *r == "D4"), "{:?}", bad.violations);
+        assert!(rules(&bad).len() >= 2, "{:?}", bad.violations);
+        let good = fixture(include_str!("fixtures/d4_good.rs"));
+        assert!(good.violations.is_empty(), "{:?}", good.violations);
+    }
+
+    #[test]
+    fn corpus_d5_fires_on_bad_and_not_on_good() {
+        let bad = fixture(include_str!("fixtures/d5_bad.rs"));
+        assert_eq!(rules(&bad), vec!["D5"], "{:?}", bad.violations);
+        let good = fixture(include_str!("fixtures/d5_good.rs"));
+        assert!(good.violations.is_empty(), "{:?}", good.violations);
+    }
+
+    #[test]
+    fn corpus_allow_directives_suppress_with_reasons() {
+        let r = fixture(include_str!("fixtures/allow_ok.rs"));
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(r.errors.is_empty(), "{:?}", r.errors);
+        assert_eq!(r.allows_used, 2);
+        assert!(r.allows_unused.is_empty(), "{:?}", r.allows_unused);
+    }
+
+    #[test]
+    fn corpus_allow_without_reason_is_fatal() {
+        let r = fixture(include_str!("fixtures/allow_missing_reason.rs"));
+        assert!(!r.errors.is_empty());
+        assert!(r.errors[0].msg.contains("reason"), "{}", r.errors[0].msg);
+    }
+
+    #[test]
+    fn corpus_tricky_tokens_stay_silent() {
+        let r = fixture(include_str!("fixtures/tricky_tokens.rs"));
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(r.errors.is_empty(), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn corpus_cfg_test_code_is_skipped() {
+        let r = fixture(include_str!("fixtures/tests_skipped.rs"));
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn counter_line_is_greppable() {
+        let sum = RunSummary { files: 93, allows_used: 4, ..RunSummary::default() };
+        assert_eq!(sum.counter_line(), "DETLINT files=93 violations=0 allows=4");
+        assert!(render(&sum).ends_with("allows=4\n"));
+    }
+
+    #[test]
+    fn walk_excludes_the_fixture_corpus() {
+        // lint the real tree in-place: src/analysis is three levels below
+        // the repo root where detlint.toml and the scan roots live
+        let base = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+        let cfg = DetlintConfig::from_file(&base.join("detlint.toml")).unwrap();
+        let mut files: Vec<(String, PathBuf)> = Vec::new();
+        walk(&base.join("rust/src"), "rust/src", &cfg.exclude, &mut files).unwrap();
+        assert!(files.iter().any(|(rel, _)| rel == "rust/src/analysis/mod.rs"));
+        assert!(
+            !files.iter().any(|(rel, _)| rel.contains("fixtures")),
+            "fixture corpus must be excluded from the walk"
+        );
+    }
+
+    #[test]
+    fn full_tree_is_clean() {
+        // The enforced CI gate in miniature: the committed tree must lint
+        // clean under the committed config, with no stale allows.
+        let base = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+        let cfg = DetlintConfig::from_file(&base.join("detlint.toml")).unwrap();
+        let sum = run(&base, &cfg).unwrap();
+        assert!(sum.files > 50, "walk found only {} files", sum.files);
+        assert!(sum.clean(), "{}", render(&sum));
+        assert!(sum.allows_unused.is_empty(), "{}", render(&sum));
+    }
+}

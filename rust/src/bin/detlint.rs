@@ -1,0 +1,35 @@
+//! detlint — standalone driver for the determinism lints.
+//!
+//! Usage:
+//!   detlint [--config <detlint.toml>]
+//!
+//! Without `--config`, looks for `detlint.toml` in `.` then `..`, so it
+//! works from the repo root and from `rust/` (CI's working directory).
+//! `porter-cli detlint` is the same entry point. Exit status: 0 clean,
+//! 1 violations or directive errors, 2 usage/config errors.
+
+fn main() {
+    let mut config: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--config" => match args.next() {
+                Some(p) => config = Some(p),
+                None => {
+                    eprintln!("detlint: --config requires a path");
+                    std::process::exit(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: detlint [--config <detlint.toml>]");
+                println!("checks rust/src and rust/benches against the determinism lints D1-D5");
+                std::process::exit(0);
+            }
+            other => {
+                eprintln!("detlint: unknown argument {other:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    std::process::exit(porter::analysis::cli_main(config.as_deref()));
+}

@@ -1329,7 +1329,10 @@ impl Cluster {
     /// shard count, so any `--shards K` produces a bit-identical report
     /// and determinism token (see `sharded_runs_are_bit_identical`).
     pub fn run(&mut self, spec: &ArrivalSpec) -> ClusterReport {
-        let started = std::time::Instant::now();
+        // Host stopwatch, NOT simulation time: feeds only the
+        // `events_per_sec` throughput metric, which ShardStats'
+        // always-true PartialEq excludes from report equality.
+        let started = crate::util::hosttime::HostTimer::start();
         let interval = self.cfg.cluster.autoscale_interval_ns;
         let batch_ns = self.cfg.sim.batch_ns.max(1);
         let mut next_check = interval;
@@ -1391,7 +1394,7 @@ impl Cluster {
                 self.sim_events += batch.len() as u64;
             }
         }
-        self.finish(started.elapsed().as_secs_f64())
+        self.finish(started.elapsed_secs())
     }
 
     fn finish(&mut self, elapsed_s: f64) -> ClusterReport {

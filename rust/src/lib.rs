@@ -40,9 +40,25 @@
 //! restore a peer's snapshot instead of paying a full cold start +
 //! profile run: try `porter-cli cluster --warm-pool-mb 512 --snapshot`.
 //!
+//! ## Determinism, machine-checked
+//!
+//! The headline claims are determinism claims — Trace-IR replay identity,
+//! `--shards K` bit-identity, disabled-path bit-identity — so the repo
+//! carries its own static-analysis pass: [`analysis`] (the `detlint`
+//! binary, also `porter-cli detlint`) lints every decision path for
+//! hash-map iteration, host-clock reads, cross-shard float accumulation,
+//! unseeded randomness, and determinism-token hygiene. It runs as an
+//! enforced CI gate; see `DESIGN.md` § "Static analysis".
+//!
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// The simulator is pure safe Rust (zero `unsafe` as of PR 10) — lock it
+// in so the advisory miri CI job stays trivially green and any future
+// unsafe block must argue its case by loosening this.
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod cluster;

@@ -42,6 +42,9 @@
 //!           engine run (greppable LANES counter line)
 //!   telemetry summarize <trace.json>     roll up an exported trace:
 //!           per-kind event counts/durations, series stats
+//!   detlint [--config detlint.toml]      run the determinism lints
+//!           (D1-D5) over rust/src + rust/benches; greppable DETLINT
+//!           counter line; exit 1 on violations (the CI gate)
 //!   list                                 workload registry
 //!
 //! The figure benches live under `cargo bench` (see rust/benches/).
@@ -73,10 +76,11 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("telemetry") => cmd_telemetry(&args),
+        Some("detlint") => porter::analysis::cli_main(args.opt("config")),
         _ => {
             eprintln!(
                 "usage: porter-cli \
-                 <config|list|run|trace|profile|place|provision|serve|cluster|telemetry> \
+                 <config|list|run|trace|profile|place|provision|serve|cluster|telemetry|detlint> \
                  [options]\n\
                  see `cargo bench` for the paper-figure harnesses"
             );

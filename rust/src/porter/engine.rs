@@ -9,8 +9,6 @@
 //!   for the best SLO guarantee, load permitting (③), and attach the
 //!   shim + DAMON profiler; metrics ship to the offline tuner (④).
 
-use std::time::Instant;
-
 use crate::config::{
     Config, LanesConfig, MachineConfig, MigrationConfig, MonitorConfig, PorterConfig,
     TelemetryConfig, TraceConfig,
@@ -24,6 +22,7 @@ use crate::porter::sysload::SystemLoad;
 use crate::porter::tuner::{OfflineTuner, ProfileData};
 use crate::sim::machine::{Machine, RunReport};
 use crate::trace::{TraceKey, TraceStore};
+use crate::util::hosttime::HostTimer;
 
 /// Engine-side slice of the config (cloneable into worker threads).
 #[derive(Debug, Clone)]
@@ -95,7 +94,9 @@ pub fn run_invocation(
     sysload: &SystemLoad,
     tuner: &OfflineTuner,
 ) -> InvocationOutcome {
-    let started = Instant::now();
+    // Host stopwatch, NOT simulation time: feeds only `host_micros`,
+    // which RunReport equality and the determinism token never see.
+    let started = HostTimer::start();
     let slo_target_ns = tuner.hints().best_wall(&spec.name).map(|w| w * spec.slo_factor);
     let hint = tuner.hints().get(&spec.name);
     let footprint = spec.body.footprint_hint().max(cfg.machine.page_bytes);
@@ -265,7 +266,7 @@ pub fn run_invocation(
         sandbox,
         trace_replayed,
         trace_recorded_bytes,
-        host_micros: started.elapsed().as_micros() as u64,
+        host_micros: started.elapsed_micros(),
         telemetry: machine.take_telemetry(),
     }
 }

@@ -185,6 +185,7 @@ impl ProvisionState {
         metrics: &ProvisionMetrics,
     ) -> Vec<String> {
         self.since_realloc = 0;
+        // detlint: allow(D1, reason = "keys are sorted before any consumer sees them")
         let mut names: Vec<String> = self.curves.keys().cloned().collect();
         names.sort();
         let demands: Vec<FunctionDemand> = names

@@ -1,0 +1,57 @@
+//! The audited host-clock chokepoint.
+//!
+//! The simulator's results are functions of virtual time only — every
+//! latency, every report field the determinism token or a report-equality
+//! assert can see derives from the deterministic event clock. But two
+//! *host-side* throughput metrics are worth reporting (how long did the
+//! host take to churn through the simulation): `InvocationOutcome::
+//! host_micros` (excluded from `RunReport`'s `PartialEq`) and
+//! `ShardStats::events_per_sec` (behind an always-true `PartialEq`).
+//!
+//! Those are the only legitimate consumers of the host clock outside the
+//! bench harness and the CLI, and this module is the only simulation-path
+//! code allowed to read it — `detlint.toml` lists exactly this file under
+//! `[d2] host_time_ok`, so any new `Instant::now()` elsewhere fails the
+//! D2 gate. The accessor names (`elapsed_micros`, `elapsed_secs`)
+//! deliberately avoid the bare `.elapsed()` spelling D2 flags.
+//!
+//! Adding a caller? The value must land in a field excluded from report
+//! equality (document which), or the D2 gate is defending nothing.
+
+use std::time::Instant;
+
+/// A started host stopwatch for host-metrics fields.
+#[derive(Debug, Clone, Copy)]
+pub struct HostTimer {
+    started: Instant,
+}
+
+impl HostTimer {
+    pub fn start() -> HostTimer {
+        HostTimer { started: Instant::now() }
+    }
+
+    /// Whole microseconds since `start()` (for `host_micros` fields).
+    pub fn elapsed_micros(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    /// Seconds since `start()` (for `events_per_sec`-style rates).
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotonic_and_nonnegative() {
+        let t = HostTimer::start();
+        let a = t.elapsed_micros();
+        let b = t.elapsed_micros();
+        assert!(b >= a);
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+}

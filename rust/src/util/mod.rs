@@ -9,6 +9,7 @@
 
 pub mod bytes;
 pub mod error;
+pub mod hosttime;
 pub mod json;
 pub mod prng;
 pub mod stats;
